@@ -1,0 +1,58 @@
+//! Microbenchmarks of the hardware substrate (shift-add simulator).
+//! Run via `cargo bench --bench bench_hw` (custom harness, see
+//! util::timer). Regenerates the engine-side numbers behind Table VI and
+//! Fig. 5 and guards against hot-path regressions.
+
+use sigmaquant::hw::shift_add::{multiply_exact, weight_cycles, CycleCounter, ShiftAddConfig};
+use sigmaquant::quant::quantize_to_int;
+use sigmaquant::util::rng::Rng;
+use sigmaquant::util::timer::bench;
+
+fn main() {
+    println!("# bench_hw — shift-add MAC simulator hot paths");
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = (0..262_144).map(|_| rng.normal() as f32).collect();
+    let ql = quantize_to_int(&w, 64, 8);
+
+    // 1. direct per-weight cycle computation (pre-optimization path)
+    let cfg = ShiftAddConfig::default();
+    let t_direct = bench(20, 300.0, || {
+        let total: u64 = ql.codes.iter().map(|&c| weight_cycles(c, cfg) as u64).sum();
+        std::hint::black_box(total);
+    });
+    println!("weight_cycles direct  : {:>10.1} us/262k-weights ({:.0} Mweights/s)",
+             t_direct.median_us(), 262_144.0 / t_direct.median_ns * 1e3);
+
+    // 2. LUT-based CycleCounter (the optimized hot path)
+    let cc = CycleCounter::new(cfg);
+    let t_lut = bench(20, 300.0, || {
+        std::hint::black_box(cc.layer_cycles(&ql.codes, 16.0));
+    });
+    println!("CycleCounter LUT      : {:>10.1} us/262k-weights ({:.0} Mweights/s, {:.2}x vs direct)",
+             t_lut.median_us(), 262_144.0 / t_lut.median_ns * 1e3,
+             t_direct.median_ns / t_lut.median_ns);
+
+    // 3. CSD recoding variant
+    let cc_csd = CycleCounter::new(ShiftAddConfig { csd: true, ..Default::default() });
+    let t_csd = bench(20, 300.0, || {
+        std::hint::black_box(cc_csd.layer_cycles(&ql.codes, 16.0));
+    });
+    println!("CycleCounter LUT (CSD): {:>10.1} us/262k-weights", t_csd.median_us());
+
+    // 4. bit-exact serial multiply (reference path used in tests)
+    let t_mul = bench(20, 300.0, || {
+        let mut acc = 0i64;
+        for &c in ql.codes.iter().take(4096) {
+            acc += multiply_exact(77, c, cfg).0;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("multiply_exact        : {:>10.1} us/4k-MACs", t_mul.median_us());
+
+    // 5. full-layer quantize + cycle count (the Fig. 5 inner loop)
+    let t_full = bench(10, 300.0, || {
+        let q = quantize_to_int(&w, 64, 4);
+        std::hint::black_box(cc.layer_cycles(&q.codes, 16.0));
+    });
+    println!("quantize+count 262k   : {:>10.1} us", t_full.median_us());
+}

@@ -1,0 +1,47 @@
+//! End-to-end runtime benchmarks over the real AOT artifacts: per-arch
+//! train-step and eval latency — the quantities that dominate every
+//! table's wall-clock (QAT loops, Alg. 1 lines 10/25).
+//!
+//! Requires `make artifacts`; prints a note and exits cleanly otherwise.
+
+use sigmaquant::data::SynthDataset;
+use sigmaquant::quant::BitAssignment;
+use sigmaquant::runtime::{ModelSession, Runtime};
+use sigmaquant::util::timer::bench;
+use std::time::Instant;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    println!("# bench_runtime — PJRT execution latency per architecture");
+    let rt = Runtime::new("artifacts").expect("runtime");
+    let data = SynthDataset::new(rt.manifest.dataset.clone(), 1);
+    // single-core CPU budget: the deep variants compile in minutes and
+    // are covered by the experiment runs; bench the fast trio
+    let archs = ["alexnet_mini", "resnet18_mini", "inception_mini"];
+    for arch in archs {
+        let t0 = Instant::now();
+        let mut s = ModelSession::load(&rt, arch, 1).expect("load");
+        let compile_s = t0.elapsed().as_secs_f64();
+        let l = s.num_qlayers();
+        let w8 = BitAssignment::uniform(l, 8);
+        let b = rt.manifest.dataset.train_batch;
+        let (x, y) = data.train_batch(0, b);
+        let t_step = bench(5, 2000.0, || {
+            s.train_step(&x, &y, &w8, &w8, 0.02).expect("step");
+        });
+        let (xs, ys) = data.eval_set(rt.manifest.dataset.eval_batch);
+        let t_eval = bench(3, 2000.0, || {
+            s.evaluate(&xs, &ys, &w8, &w8).expect("eval");
+        });
+        println!(
+            "{:<16} compile {:>6.2}s | train_step {:>8.1} ms | eval/256 {:>8.1} ms",
+            arch,
+            compile_s,
+            t_step.mean_ms(),
+            t_eval.mean_ms()
+        );
+    }
+}

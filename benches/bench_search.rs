@@ -1,0 +1,51 @@
+//! End-to-end search benchmark: a complete (budget-reduced) two-phase
+//! SigmaQuant run on alexnet_mini — the Table II/III/IV inner loop.
+//! Also times the individual phases so regressions localize.
+
+use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
+use sigmaquant::coordinator::zones::Targets;
+use sigmaquant::coordinator::{SearchConfig, SigmaQuant};
+use sigmaquant::data::SynthDataset;
+use sigmaquant::quant::int8_size_bytes;
+use sigmaquant::runtime::{ModelSession, Runtime};
+use std::time::Instant;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    println!("# bench_search — end-to-end two-phase search (alexnet_mini)");
+    let rt = Runtime::new("artifacts").expect("runtime");
+    let data = SynthDataset::new(rt.manifest.dataset.clone(), 1);
+    let mut s = ModelSession::load(&rt, "alexnet_mini", 1).expect("load");
+    let mut cursor = TrainCursor::default();
+    let t0 = Instant::now();
+    pretrain(&mut s, &data, &mut cursor, 0.05, 60, 0).expect("pretrain");
+    println!("pretrain 60 steps     : {:>8.2} s", t0.elapsed().as_secs_f64());
+
+    let int8 = int8_size_bytes(&s.arch);
+    let targets = Targets {
+        acc_target: 0.30,
+        size_target: int8 * 0.5,
+        acc_buffer: 0.05,
+        size_buffer: int8 * 0.05,
+        abandon_factor: 8.0,
+    };
+    let mut cfg = SearchConfig::defaults(targets);
+    cfg.qat_steps_p1 = 8;
+    cfg.qat_steps_p2 = 4;
+    cfg.max_phase2_iters = 6;
+    cfg.eval_samples = 256;
+    let sq = SigmaQuant::new(cfg, &data);
+    let t1 = Instant::now();
+    let o = sq.run(&mut s, &data, &mut cursor).expect("search");
+    let total = t1.elapsed().as_secs_f64();
+    println!("two-phase search      : {:>8.2} s ({} trajectory points, met={})",
+             total, o.trajectory.len(), o.met);
+    println!("  phase1 rounds       : {}", o.phase1.rounds);
+    println!("  phase2 rounds       : {}", o.phase2_rounds);
+    println!("  final bits          : [{}]", o.wbits.summary());
+    println!("  per-round wall-clock: {:>8.2} s",
+             total / (o.phase1.rounds + o.phase2_rounds).max(1) as f64);
+}

@@ -1,0 +1,56 @@
+//! Microbenchmarks of the statistics substrate: histogram, KL, σ,
+//! adaptive k-means, regression — the per-round bookkeeping of the
+//! coordinator (Phase 1/2 decision costs).
+
+use sigmaquant::coordinator::kmeans::adaptive_kmeans;
+use sigmaquant::quant::quantize_dequantize;
+use sigmaquant::stats::{kl_divergence, stddev, Histogram, LinearFit};
+use sigmaquant::util::rng::Rng;
+use sigmaquant::util::timer::bench;
+
+fn main() {
+    println!("# bench_stats — coordinator bookkeeping hot paths");
+    let mut rng = Rng::new(2);
+    let w: Vec<f32> = (0..131_072).map(|_| rng.normal() as f32).collect();
+
+    let t_std = bench(30, 200.0, || {
+        std::hint::black_box(stddev(&w));
+    });
+    println!("stddev 128k           : {:>9.1} us", t_std.median_us());
+
+    let t_hist = bench(30, 200.0, || {
+        std::hint::black_box(Histogram::symmetric(&w, 512));
+    });
+    println!("histogram 128k/512b   : {:>9.1} us", t_hist.median_us());
+
+    let p = Histogram::symmetric(&w, 512);
+    let dq = quantize_dequantize(&w, 64, 4);
+    let q = Histogram::with_range(&dq, p.lo, p.hi, 512);
+    let t_kl = bench(100, 200.0, || {
+        std::hint::black_box(kl_divergence(&p, &q));
+    });
+    println!("kl_divergence 512b    : {:>9.1} us", t_kl.median_us());
+
+    // the full per-layer sensitivity block: quantize + 2 histograms + 2 KL
+    let t_sens = bench(10, 300.0, || {
+        let dq4 = quantize_dequantize(&w, 64, 4);
+        let h4 = Histogram::with_range(&dq4, p.lo, p.hi, 512);
+        let dq8 = quantize_dequantize(&w, 64, 8);
+        let h8 = Histogram::with_range(&dq8, p.lo, p.hi, 512);
+        std::hint::black_box((kl_divergence(&p, &h4), kl_divergence(&p, &h8)));
+    });
+    println!("layer sensitivity 128k: {:>9.1} us", t_sens.median_us());
+
+    let feats: Vec<f64> = (0..160).map(|_| rng.uniform() * 0.1).collect();
+    let t_km = bench(50, 200.0, || {
+        std::hint::black_box(adaptive_kmeans(&feats, 4, 0.3, 42));
+    });
+    println!("adaptive_kmeans 160pts: {:>9.1} us", t_km.median_us());
+
+    let xs: Vec<f64> = (0..64).map(|i| i as f64).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| 1.0 + 0.1 * x).collect();
+    let t_fit = bench(200, 100.0, || {
+        std::hint::black_box(LinearFit::fit(&xs, &ys));
+    });
+    println!("linear fit 64pts      : {:>9.2} us", t_fit.median_us());
+}

@@ -1,0 +1,85 @@
+//! End-to-end driver (DESIGN.md §6): float pre-train on the synthetic
+//! workload with the loss curve logged, quantize with SigmaQuant, then
+//! map the quantized model onto the shift-add MAC simulator and report
+//! the full PPA story. The run recorded in EXPERIMENTS.md §E2E.
+//!
+//!     cargo run --release --example e2e_train [arch] [pretrain_steps]
+
+use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
+use sigmaquant::coordinator::zones::Targets;
+use sigmaquant::coordinator::{SearchConfig, SigmaQuant};
+use sigmaquant::data::SynthDataset;
+use sigmaquant::hw::mac_models::area_saving_vs;
+use sigmaquant::hw::ppa::model_ppa;
+use sigmaquant::hw::shift_add::ShiftAddConfig;
+use sigmaquant::quant::{int8_size_bytes, BitAssignment};
+use sigmaquant::runtime::{ModelSession, Runtime};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arch = args.first().map(|s| s.as_str()).unwrap_or("resnet18_mini");
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let rt = Runtime::new("artifacts")?;
+    let data = SynthDataset::new(rt.manifest.dataset.clone(), 11);
+    println!("=== E2E: {arch}, {steps} pre-training steps ===");
+    let t0 = Instant::now();
+    let mut session = ModelSession::load(&rt, arch, 11)?;
+    println!("[1/4] artifacts compiled in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // ---- stage 1: float training with loss curve -----------------------
+    let mut cursor = TrainCursor::default();
+    let t1 = Instant::now();
+    let curve = pretrain(&mut session, &data, &mut cursor, 0.05, steps, 10)?;
+    let train_s = t1.elapsed().as_secs_f64();
+    println!("[2/4] loss curve ({} steps, {:.1}s, {:.0} ms/step):",
+             steps, train_s, train_s * 1000.0 / steps as f64);
+    for (step, loss) in &curve {
+        let bar = "#".repeat((loss * 20.0).min(60.0) as usize);
+        println!("  {step:>5} {loss:>7.3} {bar}");
+    }
+    let l = session.num_qlayers();
+    let fb = BitAssignment::raw(vec![32; l]);
+    let (xs, ys) = data.eval_set(1024);
+    let float = session.evaluate(&xs, &ys, &fb, &fb)?;
+    println!("  float eval: acc {:.2}%, loss {:.3}", float.accuracy * 100.0, float.loss);
+
+    // ---- stage 2: SigmaQuant search ------------------------------------
+    let int8 = int8_size_bytes(&session.arch);
+    let targets = Targets {
+        acc_target: float.accuracy - 0.02,
+        size_target: int8 * 0.40,
+        acc_buffer: 0.02,
+        size_buffer: int8 * 0.05,
+        abandon_factor: 8.0,
+    };
+    let mut cfg = SearchConfig::defaults(targets);
+    cfg.eval_samples = 512;
+    let sq = SigmaQuant::new(cfg, &data);
+    let t2 = Instant::now();
+    let o = sq.run(&mut session, &data, &mut cursor)?;
+    println!(
+        "[3/4] search: {:.1}s, P1 {} rounds + P2 {} rounds, met={}",
+        t2.elapsed().as_secs_f64(), o.phase1.rounds, o.phase2_rounds, o.met
+    );
+    println!("  bits [{}]", o.wbits.summary());
+    println!("  acc {:.2}% (float {:.2}%, int8 {:.2}%), size {:.1} KiB ({:.0}% of INT8)",
+             o.accuracy * 100.0, float.accuracy * 100.0, o.int8_accuracy * 100.0,
+             o.resource / 1024.0, 100.0 * o.resource / int8);
+
+    // ---- stage 3: hardware mapping -------------------------------------
+    let weights = session.all_qlayer_weights();
+    let cfg_hw = ShiftAddConfig::default();
+    let sigma = model_ppa(&session.arch, &weights, &o.wbits, cfg_hw);
+    let w8 = BitAssignment::uniform(l, 8);
+    let w8_ppa = model_ppa(&session.arch, &weights, &w8, cfg_hw);
+    println!("[4/4] shift-add MAC mapping (vs INT8 implementation):");
+    println!("  area      : -{:.1}%", area_saving_vs("INT8").unwrap() * 100.0);
+    println!("  A8W8      : energy {:.3}, cycles {:.2}x", w8_ppa.energy_vs_int8, w8_ppa.cycles_vs_int8);
+    println!("  SigmaQuant: energy {:.3} ({:+.1}%), cycles {:.2}x",
+             sigma.energy_vs_int8, (sigma.energy_vs_int8 - 1.0) * 100.0,
+             sigma.cycles_vs_int8);
+    println!("=== E2E complete in {:.1}s ===", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Adaptivity demo (the paper's headline property): ONE model, THREE
+//! device profiles — the same code adapts the bit allocation to each
+//! device's memory budget and accuracy requirement (Sec. I's boundary
+//! conditions), where a fixed mixed-precision scheme would need three
+//! hand-tuned configurations.
+//!
+//!     cargo run --release --example edge_profiles
+
+use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
+use sigmaquant::coordinator::zones::Targets;
+use sigmaquant::coordinator::{SearchConfig, SigmaQuant};
+use sigmaquant::data::SynthDataset;
+use sigmaquant::quant::{int8_size_bytes, BitAssignment};
+use sigmaquant::runtime::{ModelSession, Runtime};
+
+struct Device {
+    name: &'static str,
+    /// memory budget as a fraction of the INT8 model size
+    size_frac: f64,
+    /// tolerated accuracy drop from float
+    acc_drop: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let devices = [
+        Device { name: "IoT sensor (tight memory)", size_frac: 0.30, acc_drop: 0.05 },
+        Device { name: "Wearable (balanced)", size_frac: 0.45, acc_drop: 0.03 },
+        Device { name: "Mobile (accuracy-first)", size_frac: 0.70, acc_drop: 0.01 },
+    ];
+
+    let rt = Runtime::new("artifacts")?;
+    let data = SynthDataset::new(rt.manifest.dataset.clone(), 21);
+    let arch = "resnet34_mini";
+    println!("adapting {arch} to {} device profiles\n", devices.len());
+
+    // shared float pre-training (one checkpoint, many deployments)
+    let mut base = ModelSession::load(&rt, arch, 21)?;
+    let mut cursor = TrainCursor::default();
+    pretrain(&mut base, &data, &mut cursor, 0.05, 200, 0)?;
+    let l = base.num_qlayers();
+    let fb = BitAssignment::raw(vec![32; l]);
+    let (xs, ys) = data.eval_set(512);
+    let float_acc = base.evaluate(&xs, &ys, &fb, &fb)?.accuracy;
+    let int8 = int8_size_bytes(&base.arch);
+    let checkpoint: Vec<Vec<f32>> = base.params().to_vec();
+    println!("shared float checkpoint: acc {:.2}%, INT8 size {:.1} KiB\n",
+             float_acc * 100.0, int8 / 1024.0);
+
+    for dev in &devices {
+        // fresh session state from the shared checkpoint
+        base.set_params(checkpoint.clone())?;
+        let mut cur = cursor.clone();
+        let targets = Targets {
+            acc_target: float_acc - dev.acc_drop,
+            size_target: int8 * dev.size_frac,
+            acc_buffer: 0.02,
+            size_buffer: int8 * 0.05,
+            abandon_factor: 8.0,
+        };
+        let mut cfg = SearchConfig::defaults(targets);
+        cfg.eval_samples = 512;
+        let sq = SigmaQuant::new(cfg, &data);
+        let o = sq.run(&mut base, &data, &mut cur)?;
+        println!("== {} ==", dev.name);
+        println!("  budget: {:.1} KiB ({:.0}% INT8), drop <= {:.0}pp",
+                 targets.size_target / 1024.0, dev.size_frac * 100.0,
+                 dev.acc_drop * 100.0);
+        println!("  result: acc {:.2}% | size {:.1} KiB | met={} | bits [{}]\n",
+                 o.accuracy * 100.0, o.resource / 1024.0, o.met, o.wbits.summary());
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Hardware trade-off explorer: sweep uniform and SigmaQuant models
+//! through the cycle-accurate shift-add MAC simulator and print the
+//! Fig. 5-style energy/latency/accuracy frontier, plus the CSD ablation
+//! the paper mentions as future headroom (Sec. VI-E).
+//!
+//!     cargo run --release --example hw_tradeoff [arch]
+
+use sigmaquant::baselines::run_uniform;
+use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
+use sigmaquant::coordinator::zones::Targets;
+use sigmaquant::coordinator::{SearchConfig, SigmaQuant};
+use sigmaquant::data::SynthDataset;
+use sigmaquant::hw::ppa::model_ppa;
+use sigmaquant::hw::shift_add::ShiftAddConfig;
+use sigmaquant::quant::{int8_size_bytes, BitAssignment};
+use sigmaquant::runtime::{ModelSession, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let arch = std::env::args().nth(1).unwrap_or_else(|| "resnet18_mini".into());
+    let rt = Runtime::new("artifacts")?;
+    let data = SynthDataset::new(rt.manifest.dataset.clone(), 31);
+    let mut s = ModelSession::load(&rt, &arch, 31)?;
+    let mut cursor = TrainCursor::default();
+    pretrain(&mut s, &data, &mut cursor, 0.05, 200, 0)?;
+    let l = s.num_qlayers();
+    let fb = BitAssignment::raw(vec![32; l]);
+    let (xs, ys) = data.eval_set(512);
+    let float_acc = s.evaluate(&xs, &ys, &fb, &fb)?.accuracy;
+    let checkpoint: Vec<Vec<f32>> = s.params().to_vec();
+    let plain = ShiftAddConfig { csd: false, ..Default::default() };
+    let csd = ShiftAddConfig { csd: true, ..Default::default() };
+
+    println!("{arch}: float acc {:.2}% — shift-add frontier (vs INT8 impl)\n", float_acc * 100.0);
+    println!("{:<14} {:>9} {:>9} {:>9} {:>10} {:>10}",
+             "scheme", "acc", "drop", "energy", "cycles", "cyc(CSD)");
+
+    for bits in [8u8, 6, 4, 2] {
+        s.set_params(checkpoint.clone())?;
+        let mut cur = cursor.clone();
+        let r = run_uniform(&mut s, &data, &mut cur, bits, 16, 0.02, &xs, &ys)?;
+        let w = s.all_qlayer_weights();
+        let p = model_ppa(&s.arch, &w, &r.assignment, plain);
+        let pc = model_ppa(&s.arch, &w, &r.assignment, csd);
+        println!("{:<14} {:>8.2}% {:>8.2}p {:>9.3} {:>9.2}x {:>9.2}x",
+                 format!("A8W{bits}"), r.accuracy * 100.0,
+                 (float_acc - r.accuracy) * 100.0,
+                 p.energy_vs_int8, p.cycles_vs_int8, pc.cycles_vs_int8);
+    }
+
+    for size_frac in [0.35f64, 0.50] {
+        s.set_params(checkpoint.clone())?;
+        let mut cur = cursor.clone();
+        let int8 = int8_size_bytes(&s.arch);
+        let targets = Targets {
+            acc_target: float_acc - 0.03,
+            size_target: int8 * size_frac,
+            acc_buffer: 0.02,
+            size_buffer: int8 * 0.05,
+            abandon_factor: 8.0,
+        };
+        let mut cfg = SearchConfig::defaults(targets);
+        cfg.eval_samples = 512;
+        let sq = SigmaQuant::new(cfg, &data);
+        let o = sq.run(&mut s, &data, &mut cur)?;
+        let w = s.all_qlayer_weights();
+        let p = model_ppa(&s.arch, &w, &o.wbits, plain);
+        let pc = model_ppa(&s.arch, &w, &o.wbits, csd);
+        println!("{:<14} {:>8.2}% {:>8.2}p {:>9.3} {:>9.2}x {:>9.2}x",
+                 format!("Sigma@{:.0}%", size_frac * 100.0), o.accuracy * 100.0,
+                 (float_acc - o.accuracy) * 100.0,
+                 p.energy_vs_int8, p.cycles_vs_int8, pc.cycles_vs_int8);
+    }
+    println!("\nINT8 implementation baseline: energy 1.000, cycles 1.00x");
+    Ok(())
+}

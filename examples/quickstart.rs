@@ -1,0 +1,76 @@
+//! Quickstart: quantize one model under explicit boundary conditions.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Loads resnet18_mini, float pre-trains briefly, then runs the two-phase
+//! SigmaQuant search for "at most 2% accuracy drop at 40% of the INT8
+//! size" and prints the resulting per-layer bit assignment.
+
+use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
+use sigmaquant::coordinator::zones::Targets;
+use sigmaquant::coordinator::{SearchConfig, SigmaQuant};
+use sigmaquant::data::SynthDataset;
+use sigmaquant::quant::{int8_size_bytes, BitAssignment};
+use sigmaquant::runtime::{ModelSession, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // 1. runtime over the AOT artifacts (HLO text, compiled via PJRT)
+    let rt = Runtime::new("artifacts")?;
+    let data = SynthDataset::new(rt.manifest.dataset.clone(), 7);
+    let mut session = ModelSession::load(&rt, "resnet18_mini", 7)?;
+    let mut cursor = TrainCursor::default();
+
+    // 2. float pre-training (stand-in for the paper's torchvision weights)
+    println!("pre-training (float)...");
+    let curve = pretrain(&mut session, &data, &mut cursor, 0.05, 150, 25)?;
+    for (step, loss) in &curve {
+        println!("  step {step:>4}: loss {loss:.3}");
+    }
+    let l = session.num_qlayers();
+    let float_bits = BitAssignment::raw(vec![32; l]);
+    let (xs, ys) = data.eval_set(512);
+    let float_acc = session.evaluate(&xs, &ys, &float_bits, &float_bits)?.accuracy;
+    println!("float accuracy: {:.2}%", float_acc * 100.0);
+
+    // 3. the paper's boundary conditions
+    let int8 = int8_size_bytes(&session.arch);
+    let targets = Targets {
+        acc_target: float_acc - 0.02,
+        size_target: int8 * 0.40,
+        acc_buffer: 0.02,
+        size_buffer: int8 * 0.05,
+        abandon_factor: 8.0,
+    };
+    println!(
+        "targets: accuracy >= {:.2}%, size <= {:.1} KiB (40% of INT8)",
+        targets.acc_target * 100.0,
+        targets.size_target / 1024.0
+    );
+
+    // 4. two-phase search
+    let cfg = SearchConfig::defaults(targets);
+    let sq = SigmaQuant::new(cfg, &data);
+    let outcome = sq.run(&mut session, &data, &mut cursor)?;
+
+    // 5. results
+    println!("\nzone trace:");
+    for p in &outcome.trajectory.points {
+        println!(
+            "  [{:<6}] acc {:>6.2}%  size {:>7.1} KiB  {:<12} {}",
+            p.phase, p.accuracy * 100.0, p.size_bytes / 1024.0,
+            p.zone.to_string(), p.action
+        );
+    }
+    println!("\nper-layer bits:");
+    for (q, &b) in session.arch.qlayers.iter().zip(&outcome.wbits.bits) {
+        println!("  {:<16} {b}-bit", q.name);
+    }
+    println!(
+        "\nresult: met={} | accuracy {:.2}% | size {:.1} KiB ({:.0}% of INT8)",
+        outcome.met,
+        outcome.accuracy * 100.0,
+        outcome.resource / 1024.0,
+        100.0 * outcome.resource / int8
+    );
+    Ok(())
+}

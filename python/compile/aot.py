@@ -1,0 +1,203 @@
+"""AOT pipeline: lower every entry point of every architecture to HLO text
+and emit the manifest that the Rust runtime consumes.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--archs resnet18_mini,...]
+
+`make artifacts` is incremental: this module skips an architecture whose
+HLO files already exist unless --force is given, and always rewrites the
+manifest from the in-source zoo (cheap, no tracing needed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .arch import INPUT_C, INPUT_H, INPUT_W, NUM_CLASSES, Arch, zoo
+from . import model
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_structs(arch: Arch):
+    return [jax.ShapeDtypeStruct(p.shape, F32) for p in arch.params]
+
+
+def lower_entries(arch: Arch) -> dict:
+    """Lower init/train_step/eval_batch; returns {entry_name: hlo_text}."""
+    p = _param_structs(arch)
+    L = arch.num_qlayers
+    x_tr = jax.ShapeDtypeStruct((TRAIN_BATCH, INPUT_H, INPUT_W, INPUT_C), F32)
+    y_tr = jax.ShapeDtypeStruct((TRAIN_BATCH,), jnp.int32)
+    x_ev = jax.ShapeDtypeStruct((EVAL_BATCH, INPUT_H, INPUT_W, INPUT_C), F32)
+    y_ev = jax.ShapeDtypeStruct((EVAL_BATCH,), jnp.int32)
+    bits = jax.ShapeDtypeStruct((L,), F32)
+    lr = jax.ShapeDtypeStruct((), F32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    out = {}
+    t0 = time.time()
+    out["init"] = to_hlo_text(jax.jit(model.make_init(arch)).lower(key))
+    t1 = time.time()
+    out["train_step"] = to_hlo_text(
+        jax.jit(model.make_train_step(arch)).lower(
+            p, p, x_tr, y_tr, bits, bits, lr))
+    t2 = time.time()
+    out["eval_batch"] = to_hlo_text(
+        jax.jit(model.make_eval_batch(arch)).lower(p, x_ev, y_ev, bits, bits))
+    t3 = time.time()
+    print(f"  lowered {arch.name}: init {t1-t0:.1f}s, "
+          f"train {t2-t1:.1f}s, eval {t3-t2:.1f}s")
+    return out
+
+
+def manifest_entry(arch: Arch, files: dict) -> dict:
+    P = len(arch.params)
+    return {
+        "artifacts": files,
+        "params": [
+            {
+                "name": p.name,
+                "shape": list(p.shape),
+                "size": p.size,
+                "kind": p.kind,
+                "qlayer": p.qlayer,
+                "fanin": p.fanin,
+            }
+            for p in arch.params
+        ],
+        "num_params": P,
+        "num_qlayers": arch.num_qlayers,
+        "qlayers": [
+            {
+                "name": q.name,
+                "param_idx": q.param_idx,
+                "kind": q.kind,
+                "macs": q.macs,
+                "weight_count": q.weight_count,
+                "fanin": q.fanin,
+                "out_channels": q.out_channels,
+            }
+            for q in arch.qlayers
+        ],
+        "total_params": arch.total_params,
+        "total_weight_params": arch.total_weight_params,
+        "total_macs": arch.total_macs,
+        # Flat argument layouts, in HLO parameter order.
+        "entries": {
+            "init": {"inputs": ["key:u32[2]"], "outputs": [f"params:{P}"]},
+            "train_step": {
+                "inputs": [f"params:{P}", f"mom:{P}", "x:train", "y:train",
+                           "wbits", "abits", "lr"],
+                "outputs": [f"params:{P}", f"mom:{P}", "loss", "acc"],
+            },
+            "eval_batch": {
+                "inputs": [f"params:{P}", "x:eval", "y:eval", "wbits", "abits"],
+                "outputs": ["correct", "loss"],
+            },
+        },
+    }
+
+
+def write_fixture(out_dir: str) -> None:
+    """Cross-language parity fixture: the Pallas kernel's exact output on
+    a seeded input, consumed by rust/tests/quantizer_parity.rs to prove
+    the Rust quantizer mirrors the L1 kernel bit-for-bit."""
+    import numpy as np
+
+    from .kernels.fake_quant import fake_quant_2d
+
+    rng = np.random.default_rng(20260710)
+    fanin, cout = 48, 12
+    w = rng.normal(0, 0.7, (fanin, cout)).astype(np.float32)
+    cases = []
+    for bits in (2.0, 4.0, 6.0, 8.0):
+        out = np.asarray(fake_quant_2d(jnp.asarray(w), jnp.float32(bits)))
+        cases.append({"bits": bits, "output": out.flatten().tolist()})
+    fixture = {
+        "fanin": fanin,
+        "cout": cout,
+        "weights": w.flatten().tolist(),
+        "cases": cases,
+    }
+    path = os.path.join(out_dir, "fq_fixture.json")
+    with open(path, "w") as f:
+        json.dump(fixture, f)
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--archs", default="",
+                    help="comma-separated subset (default: all)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    all_archs = zoo()
+    names = [n for n in args.archs.split(",") if n] or list(all_archs)
+
+    manifest = {
+        "dataset": {
+            "height": INPUT_H,
+            "width": INPUT_W,
+            "channels": INPUT_C,
+            "classes": NUM_CLASSES,
+            "train_batch": TRAIN_BATCH,
+            "eval_batch": EVAL_BATCH,
+        },
+        "archs": {},
+    }
+
+    for name in all_archs:
+        arch = all_archs[name]
+        files = {e: f"{name}.{e}.hlo.txt" for e in
+                 ("init", "train_step", "eval_batch")}
+        manifest["archs"][name] = manifest_entry(arch, files)
+        if name not in names:
+            continue
+        paths = {e: os.path.join(args.out_dir, f) for e, f in files.items()}
+        if not args.force and all(os.path.exists(p) for p in paths.values()):
+            print(f"  {name}: artifacts exist, skipping (use --force)")
+            continue
+        texts = lower_entries(arch)
+        for entry, text in texts.items():
+            with open(paths[entry], "w") as f:
+                f.write(text)
+            print(f"    wrote {paths[entry]} ({len(text)} chars)")
+
+    write_fixture(args.out_dir)
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,312 @@
+"""Architecture IR and the model zoo.
+
+Each architecture is a flat SSA graph of typed nodes plus an ordered list
+of parameter specs. The ordering is the *contract* with the Rust runtime:
+params are passed to the lowered entry points as a flat list in exactly
+this order, and `aot.py` serializes the same order into
+artifacts/manifest.json. The graph also records, per quantizable layer,
+the MAC count at the reference input size -- the Rust side uses these for
+model-size/BOPs accounting and for mapping layers onto the shift-add MAC
+simulator, and never re-derives model structure.
+
+Zoo (DESIGN.md Sec. 4 -- width-reduced "mini" variants with the true block
+structure of the paper's models):
+  alexnet_mini                     5 conv + 3 fc (Table I layout)
+  resnet18_mini / resnet34_mini    BasicBlock stacks [2,2,2,2] / [3,4,6,3]
+  resnet50/101/152_mini            Bottleneck stacks [3,4,6,3] / [3,4,23,3] / [3,8,36,3]
+  inception_mini                   stem + 3 mixed blocks (1x1 / 3x3 / dbl-3x3 / pool)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+# Reference input geometry (synthetic dataset, DESIGN.md Sec. 4).
+INPUT_H = 16
+INPUT_W = 16
+INPUT_C = 3
+NUM_CLASSES = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor in the flat parameter list."""
+
+    name: str
+    shape: tuple
+    kind: str  # conv_kernel | dense_kernel | bias | bn_scale | bn_bias
+    qlayer: Optional[int]  # quantizable-layer index, or None
+    fanin: int  # fan-in used for He init (0 for non-kernels)
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class QLayer:
+    """One quantizable layer (conv or dense kernel)."""
+
+    name: str
+    param_idx: int
+    kind: str  # conv | dense
+    macs: int  # multiply-accumulates per example at the reference input
+    weight_count: int
+    fanin: int  # per-output-channel fan-in (kh*kw*cin or in_features)
+    out_channels: int
+
+
+@dataclasses.dataclass
+class Arch:
+    """A complete architecture: parameters + SSA node graph."""
+
+    name: str
+    params: list  # [ParamSpec]
+    qlayers: list  # [QLayer]
+    nodes: list  # [dict] SSA graph; value id i is produced by nodes[i]
+    out_id: int  # id of the logits tensor
+
+    @property
+    def num_qlayers(self) -> int:
+        return len(self.qlayers)
+
+    @property
+    def total_params(self) -> int:
+        return sum(p.size for p in self.params)
+
+    @property
+    def total_weight_params(self) -> int:
+        return sum(q.weight_count for q in self.qlayers)
+
+    @property
+    def total_macs(self) -> int:
+        return sum(q.macs for q in self.qlayers)
+
+
+class Builder:
+    """Shape-tracking graph builder.
+
+    Tracks the activation shape (h, w, c) through the network so MAC
+    counts (per example) are exact for the reference input size.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.params: list = []
+        self.qlayers: list = []
+        self.nodes: list = [{"op": "input"}]
+        self.shapes: dict = {0: (INPUT_H, INPUT_W, INPUT_C)}
+
+    # -- internals ---------------------------------------------------------
+
+    def _emit(self, node: dict, shape) -> int:
+        self.nodes.append(node)
+        vid = len(self.nodes) - 1
+        self.shapes[vid] = shape
+        return vid
+
+    def _param(self, name, shape, kind, qlayer=None, fanin=0) -> int:
+        self.params.append(ParamSpec(name, tuple(shape), kind, qlayer, fanin))
+        return len(self.params) - 1
+
+    # -- layers ------------------------------------------------------------
+
+    def conv(self, x: int, name: str, cout: int, k: int = 3, stride: int = 1,
+             pad: str = "SAME", bias: bool = False) -> int:
+        h, w, cin = self.shapes[x]
+        if pad == "SAME":
+            oh, ow = math.ceil(h / stride), math.ceil(w / stride)
+        else:
+            oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+        fanin = k * k * cin
+        qidx = len(self.qlayers)
+        kp = self._param(f"{name}.kernel", (k, k, cin, cout), "conv_kernel",
+                         qlayer=qidx, fanin=fanin)
+        self.qlayers.append(QLayer(
+            name=name, param_idx=kp, kind="conv",
+            macs=oh * ow * fanin * cout,
+            weight_count=fanin * cout, fanin=fanin, out_channels=cout,
+        ))
+        bp = self._param(f"{name}.bias", (cout,), "bias") if bias else None
+        node = {"op": "conv", "in": x, "k": kp, "b": bp,
+                "stride": stride, "pad": pad, "q": qidx}
+        return self._emit(node, (oh, ow, cout))
+
+    def dense(self, x: int, name: str, cout: int) -> int:
+        shape = self.shapes[x]
+        assert len(shape) == 1, f"dense input must be flat, got {shape}"
+        cin = shape[0]
+        qidx = len(self.qlayers)
+        kp = self._param(f"{name}.kernel", (cin, cout), "dense_kernel",
+                         qlayer=qidx, fanin=cin)
+        self.qlayers.append(QLayer(
+            name=name, param_idx=kp, kind="dense",
+            macs=cin * cout, weight_count=cin * cout,
+            fanin=cin, out_channels=cout,
+        ))
+        bp = self._param(f"{name}.bias", (cout,), "bias")
+        node = {"op": "dense", "in": x, "k": kp, "b": bp, "q": qidx}
+        return self._emit(node, (cout,))
+
+    def bn(self, x: int, name: str) -> int:
+        shape = self.shapes[x]
+        c = shape[-1]
+        sp = self._param(f"{name}.scale", (c,), "bn_scale")
+        bp = self._param(f"{name}.bias", (c,), "bn_bias")
+        return self._emit({"op": "bn", "in": x, "scale": sp, "bias": bp}, shape)
+
+    def relu(self, x: int) -> int:
+        return self._emit({"op": "relu", "in": x}, self.shapes[x])
+
+    def add(self, a: int, b: int) -> int:
+        assert self.shapes[a] == self.shapes[b], \
+            f"residual mismatch {self.shapes[a]} vs {self.shapes[b]}"
+        return self._emit({"op": "add", "a": a, "b": b}, self.shapes[a])
+
+    def concat(self, xs: list) -> int:
+        h, w, _ = self.shapes[xs[0]]
+        c = sum(self.shapes[x][2] for x in xs)
+        return self._emit({"op": "concat", "ins": list(xs)}, (h, w, c))
+
+    def maxpool(self, x: int, window: int = 2, stride: int = 2) -> int:
+        h, w, c = self.shapes[x]
+        oh, ow = (h - window) // stride + 1, (w - window) // stride + 1
+        return self._emit(
+            {"op": "maxpool", "in": x, "w": window, "s": stride}, (oh, ow, c))
+
+    def avgpool_same(self, x: int, window: int = 3) -> int:
+        return self._emit(
+            {"op": "avgpool", "in": x, "w": window, "s": 1}, self.shapes[x])
+
+    def gap(self, x: int) -> int:
+        _, _, c = self.shapes[x]
+        return self._emit({"op": "gap", "in": x}, (c,))
+
+    def flatten(self, x: int) -> int:
+        shape = self.shapes[x]
+        return self._emit({"op": "flatten", "in": x}, (math.prod(shape),))
+
+    def finish(self, out_id: int) -> Arch:
+        assert self.shapes[out_id] == (NUM_CLASSES,)
+        return Arch(self.name, self.params, self.qlayers, self.nodes, out_id)
+
+    # -- composite helpers ---------------------------------------------------
+
+    def conv_bn_relu(self, x, name, cout, k=3, stride=1, pad="SAME"):
+        x = self.conv(x, name, cout, k=k, stride=stride, pad=pad)
+        x = self.bn(x, f"{name}.bn")
+        return self.relu(x)
+
+
+# ---------------------------------------------------------------------------
+# Zoo builders
+# ---------------------------------------------------------------------------
+
+
+def alexnet_mini() -> Arch:
+    """CIFAR-style AlexNet: 5 conv + 3 fc, matching Table I's layer layout."""
+    b = Builder("alexnet_mini")
+    x = 0
+    x = b.relu(b.conv(x, "conv1", 16, k=3, bias=True))
+    x = b.maxpool(x)  # 16 -> 8
+    x = b.relu(b.conv(x, "conv2", 24, k=3, bias=True))
+    x = b.maxpool(x)  # 8 -> 4
+    x = b.relu(b.conv(x, "conv3", 32, k=3, bias=True))
+    x = b.relu(b.conv(x, "conv4", 32, k=3, bias=True))
+    x = b.relu(b.conv(x, "conv5", 24, k=3, bias=True))
+    x = b.maxpool(x)  # 4 -> 2
+    x = b.flatten(x)  # 96
+    x = b.relu(b.dense(x, "fc1", 64))
+    x = b.relu(b.dense(x, "fc2", 48))
+    x = b.dense(x, "fc3", NUM_CLASSES)
+    return b.finish(x)
+
+
+def _basic_block(b: Builder, x: int, name: str, cout: int, stride: int) -> int:
+    """ResNet BasicBlock: two 3x3 convs + identity/projection shortcut."""
+    _, _, cin = b.shapes[x]
+    shortcut = x
+    if stride != 1 or cin != cout:
+        shortcut = b.bn(b.conv(x, f"{name}.down", cout, k=1, stride=stride),
+                        f"{name}.down.bn")
+    y = b.conv_bn_relu(x, f"{name}.conv1", cout, k=3, stride=stride)
+    y = b.bn(b.conv(y, f"{name}.conv2", cout, k=3), f"{name}.conv2.bn")
+    return b.relu(b.add(y, shortcut))
+
+
+def _bottleneck_block(b: Builder, x: int, name: str, width: int,
+                      stride: int, expansion: int = 4) -> int:
+    """ResNet Bottleneck: 1x1 reduce, 3x3, 1x1 expand + shortcut."""
+    cout = width * expansion
+    _, _, cin = b.shapes[x]
+    shortcut = x
+    if stride != 1 or cin != cout:
+        shortcut = b.bn(b.conv(x, f"{name}.down", cout, k=1, stride=stride),
+                        f"{name}.down.bn")
+    y = b.conv_bn_relu(x, f"{name}.conv1", width, k=1)
+    y = b.conv_bn_relu(y, f"{name}.conv2", width, k=3, stride=stride)
+    y = b.bn(b.conv(y, f"{name}.conv3", cout, k=1), f"{name}.conv3.bn")
+    return b.relu(b.add(y, shortcut))
+
+
+def resnet_mini(name: str, layers, bottleneck: bool, base: int = 8) -> Arch:
+    """CIFAR-style ResNet: 3x3 stem (no maxpool), 4 stages, GAP + fc."""
+    b = Builder(name)
+    x = b.conv_bn_relu(0, "stem", base, k=3)
+    widths = [base, base * 2, base * 4, base * 8]
+    for stage, (n, w) in enumerate(zip(layers, widths)):
+        for i in range(n):
+            stride = 2 if (stage > 0 and i == 0) else 1
+            blk = f"s{stage + 1}.b{i + 1}"
+            if bottleneck:
+                x = _bottleneck_block(b, x, blk, w, stride)
+            else:
+                x = _basic_block(b, x, blk, w, stride)
+    x = b.gap(x)
+    x = b.dense(x, "fc", NUM_CLASSES)
+    return b.finish(x)
+
+
+def _inception_block(b: Builder, x: int, name: str, c1: int, c3r: int,
+                     c3: int, cd3r: int, cd3: int, cp: int) -> int:
+    """InceptionV3-style mixed block: 1x1 / 1x1-3x3 / 1x1-3x3-3x3 / pool-1x1."""
+    br1 = b.conv_bn_relu(x, f"{name}.b1x1", c1, k=1)
+    br2 = b.conv_bn_relu(x, f"{name}.b3x3r", c3r, k=1)
+    br2 = b.conv_bn_relu(br2, f"{name}.b3x3", c3, k=3)
+    br3 = b.conv_bn_relu(x, f"{name}.bd3r", cd3r, k=1)
+    br3 = b.conv_bn_relu(br3, f"{name}.bd3a", cd3, k=3)
+    br3 = b.conv_bn_relu(br3, f"{name}.bd3b", cd3, k=3)
+    br4 = b.avgpool_same(x, 3)
+    br4 = b.conv_bn_relu(br4, f"{name}.bpool", cp, k=1)
+    return b.concat([br1, br2, br3, br4])
+
+
+def inception_mini() -> Arch:
+    """Width-reduced InceptionV3: stem convs + 3 mixed blocks + GAP/fc."""
+    b = Builder("inception_mini")
+    x = b.conv_bn_relu(0, "stem1", 8, k=3)
+    x = b.conv_bn_relu(x, "stem2", 16, k=3)
+    x = _inception_block(b, x, "mixed1", 8, 8, 12, 8, 12, 8)   # 40ch @16x16
+    x = b.maxpool(x)  # 16 -> 8
+    x = _inception_block(b, x, "mixed2", 12, 12, 16, 8, 16, 12)  # 56ch
+    x = b.maxpool(x)  # 8 -> 4
+    x = _inception_block(b, x, "mixed3", 16, 12, 24, 12, 24, 16)  # 80ch
+    x = b.gap(x)
+    x = b.dense(x, "fc", NUM_CLASSES)
+    return b.finish(x)
+
+
+def zoo() -> dict:
+    """All architectures, keyed by name. Order is the manifest order."""
+    archs = [
+        alexnet_mini(),
+        resnet_mini("resnet18_mini", [2, 2, 2, 2], bottleneck=False),
+        resnet_mini("resnet34_mini", [3, 4, 6, 3], bottleneck=False),
+        resnet_mini("resnet50_mini", [3, 4, 6, 3], bottleneck=True),
+        resnet_mini("resnet101_mini", [3, 4, 23, 3], bottleneck=True),
+        resnet_mini("resnet152_mini", [3, 8, 36, 3], bottleneck=True),
+        inception_mini(),
+    ]
+    return {a.name: a for a in archs}

@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernel: per-output-channel symmetric fake quantization.
+
+This is the compute hot-spot of SigmaQuant's QAT path: every conv/dense
+weight tensor passes through quantize->dequantize on every forward, with
+the bitwidth supplied *at runtime* (an f32 scalar input), so a single AOT
+artifact serves every bit assignment the Rust coordinator explores.
+
+Scheme (paper Sec. III-A / IV-C): symmetric min-max (abs-max) range per
+output channel, signed levels in [-Q, Q] with Q = 2^(b-1) - 1, i.e. the
+Brevitas-style weight quantizer. bits >= 31 is the float passthrough used
+for pre-training.
+
+TPU adaptation (DESIGN.md Sec. 3): the kernel is tiled over output
+channels with BlockSpec so the channel reduction (abs-max) and the
+round/clip happen on a VMEM-resident (fanin, block_c) tile; the grid walks
+channel blocks. interpret=True everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Channel-block width used when the channel count is divisible by it.
+# 128 matches the TPU lane dimension; on the interpret path it simply
+# bounds the VMEM-resident tile.
+_BLOCK_C = 128
+
+
+def _fq_kernel(w_ref, bits_ref, o_ref):
+    """Quantize-dequantize one (fanin, block_c) tile in VMEM.
+
+    w_ref:    (fanin, block_c) float32 tile of the weight matrix
+    bits_ref: (1,) float32 bitwidth (runtime value; 32 => passthrough)
+    o_ref:    (fanin, block_c) float32 output tile
+    """
+    w = w_ref[...]
+    bits = bits_ref[0]
+    # Q = 2^(b-1) - 1 signed symmetric levels.
+    q = jnp.exp2(bits - 1.0) - 1.0
+    # Per-output-channel abs-max scale (channel = trailing dim).
+    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    delta = jnp.maximum(amax, 1e-8) / q
+    wq = jnp.clip(jnp.round(w / delta), -q, q) * delta
+    # Float passthrough for b >= 31 (pre-training / FP32 reference arm).
+    o_ref[...] = jnp.where(bits >= 31.0, w, wq)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _noop(w):  # pragma: no cover - trivial
+    return w
+
+
+def fake_quant_2d(w: jax.Array, bits: jax.Array) -> jax.Array:
+    """Fake-quantize a (fanin, cout) matrix per output channel.
+
+    `bits` is a scalar f32 array. Returns an array of the same shape/dtype.
+    The channel grid uses _BLOCK_C-wide tiles when cout divides evenly,
+    otherwise a single whole-tensor block (mini models have small couts).
+    """
+    assert w.ndim == 2, f"fake_quant_2d expects 2D, got {w.shape}"
+    fanin, cout = w.shape
+    bits = bits.reshape(1).astype(jnp.float32)
+
+    if cout % _BLOCK_C == 0 and cout > _BLOCK_C:
+        grid = (cout // _BLOCK_C,)
+        return pl.pallas_call(
+            _fq_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((fanin, _BLOCK_C), lambda i: (0, i)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((fanin, _BLOCK_C), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+            interpret=True,
+        )(w, bits)
+
+    return pl.pallas_call(
+        _fq_kernel,
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=True,
+    )(w, bits)
+
+
+def fake_quant_weight(w: jax.Array, bits: jax.Array) -> jax.Array:
+    """Fake-quantize a weight tensor of any rank per output channel.
+
+    The output channel is the trailing dimension (HWIO conv kernels and
+    (in, out) dense kernels both satisfy this). Leading dims are flattened
+    into the fan-in axis, the 2D Pallas kernel runs, and the shape is
+    restored. Gradient flows via the straight-through estimator applied by
+    the caller (layers.ste) -- the Pallas call itself is not differentiated.
+    """
+    shape = w.shape
+    w2 = w.reshape(-1, shape[-1])
+    return fake_quant_2d(w2, bits).reshape(shape)

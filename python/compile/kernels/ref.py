@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest asserts the Pallas kernel
+output matches these bit-for-bit (same float ops, different execution
+path), and the Rust quantizer (rust/src/quant/quantizer.rs) re-implements
+the same math for the coordinator's KL bookkeeping, cross-checked by the
+integration tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_quant_weight_ref(w: jax.Array, bits: jax.Array) -> jax.Array:
+    """Symmetric per-output-channel abs-max fake quantization (reference).
+
+    Matches kernels.fake_quant.fake_quant_weight: Q = 2^(b-1)-1 signed
+    levels, scale = abs-max over all non-channel dims, bits >= 31 is a
+    float passthrough.
+    """
+    bits = jnp.asarray(bits, jnp.float32).reshape(())
+    q = jnp.exp2(bits - 1.0) - 1.0
+    red_axes = tuple(range(w.ndim - 1))
+    amax = jnp.max(jnp.abs(w), axis=red_axes, keepdims=True)
+    delta = jnp.maximum(amax, 1e-8) / q
+    wq = jnp.clip(jnp.round(w / delta), -q, q) * delta
+    return jnp.where(bits >= 31.0, w, wq)
+
+
+def fake_quant_act_ref(a: jax.Array, bits: jax.Array) -> jax.Array:
+    """Asymmetric per-tensor fake quantization for activations (reference).
+
+    Uses the batch min/max as the clipping range (the paper's
+    99.9th-percentile clip degenerates to min/max at our tensor sizes --
+    DESIGN.md Sec. 4). Unsigned grid with 2^b - 1 steps and a rounded
+    zero-point, as in standard asymmetric activation quantizers.
+    """
+    bits = jnp.asarray(bits, jnp.float32).reshape(())
+    levels = jnp.exp2(bits) - 1.0
+    amin = jnp.min(a)
+    amax = jnp.max(a)
+    scale = jnp.maximum(amax - amin, 1e-8) / levels
+    zp = jnp.round(-amin / scale)
+    aq = (jnp.clip(jnp.round(a / scale) + zp, 0.0, levels) - zp) * scale
+    return jnp.where(bits >= 31.0, a, aq)

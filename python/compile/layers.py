@@ -1,0 +1,123 @@
+"""Layer-2 building blocks: STE fake-quant wrappers and NN primitives.
+
+Everything here is traced into the AOT artifacts; nothing runs at
+inference time in Python. Bitwidths are runtime f32 scalars so a single
+lowered HLO serves every bit assignment the Rust coordinator explores.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.fake_quant import fake_quant_weight
+from .kernels.ref import fake_quant_act_ref
+
+
+def ste(x: jax.Array, xq: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward xq, gradient of identity on x.
+
+    QAT differentiates *around* the quantizer (round has zero gradient);
+    this is the standard trick the paper's Brevitas setup uses.
+    """
+    return x + lax.stop_gradient(xq - x)
+
+
+@jax.custom_vjp
+def quant_weight(w: jax.Array, bits: jax.Array) -> jax.Array:
+    """Fake-quantize a weight tensor (Pallas kernel) with STE.
+
+    custom_vjp keeps autodiff away from the (non-differentiable) Pallas
+    call entirely: the backward pass is the straight-through identity on w
+    and zero on bits.
+    """
+    return fake_quant_weight(w, bits)
+
+
+def _qw_fwd(w, bits):
+    return fake_quant_weight(w, bits), bits
+
+
+def _qw_bwd(bits, g):
+    return g, jnp.zeros_like(bits)
+
+
+quant_weight.defvjp(_qw_fwd, _qw_bwd)
+
+
+def quant_act(a: jax.Array, bits: jax.Array) -> jax.Array:
+    """Fake-quantize an activation tensor (asymmetric, per tensor) with STE."""
+    return ste(a, fake_quant_act_ref(a, bits))
+
+
+def conv2d(x: jax.Array, k: jax.Array, stride: int, padding: str) -> jax.Array:
+    """NHWC x HWIO conv. padding: 'SAME' or 'VALID'."""
+    return lax.conv_general_dilated(
+        x,
+        k,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def batchnorm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    """BatchNorm over N,H,W with batch statistics.
+
+    Batch statistics are used in both train and eval (DESIGN.md Sec. 4:
+    the paper's calibration step re-estimates BN stats; with batch stats
+    the estimate is implicit and the train/eval graphs coincide, which
+    keeps the artifact count down without changing what the search sees).
+    """
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes, keepdims=True)
+    var = jnp.var(x, axis=axes, keepdims=True)
+    inv = lax.rsqrt(var + 1e-5)
+    return (x - mean) * inv * scale + bias
+
+
+def maxpool(x: jax.Array, window: int, stride: int) -> jax.Array:
+    """NHWC max pooling, VALID padding."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def avgpool(x: jax.Array, window: int, stride: int) -> jax.Array:
+    """NHWC average pooling, SAME padding (Inception pool branch)."""
+    summed = lax.reduce_window(
+        x,
+        0.0,
+        lax.add,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="SAME",
+    )
+    ones = jnp.ones_like(x)
+    counts = lax.reduce_window(
+        ones,
+        0.0,
+        lax.add,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="SAME",
+    )
+    return summed / counts
+
+
+def global_avgpool(x: jax.Array) -> jax.Array:
+    """NHWC -> NC global average pooling."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; labels are int32 class indices."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)

@@ -1,0 +1,144 @@
+"""Layer-2 JAX model: graph interpreter + AOT entry points.
+
+All entry points take *flat lists* of parameter arrays, in exactly the
+order of Arch.params; jax flattens positional lists in order, so the HLO
+parameter numbering is deterministic and is recorded in the manifest for
+the Rust runtime.
+
+Per-layer bitwidths (wbits, abits: f32[num_qlayers]) are runtime inputs:
+one compiled artifact per architecture serves every bit assignment the
+SigmaQuant search explores. Value 32.0 means float passthrough (used for
+pre-training and the FP32 reference arm).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .arch import Arch
+
+
+def forward(arch: Arch, params: list, x: jax.Array,
+            wbits: jax.Array, abits: jax.Array) -> jax.Array:
+    """Run the SSA graph; returns logits [B, NUM_CLASSES].
+
+    Every conv/dense quantizes its weight (per-channel symmetric, Pallas
+    kernel) with wbits[q] and its input activation (per-tensor asymmetric)
+    with abits[q], both through the STE.
+    """
+    vals = {0: x}
+    for vid, node in enumerate(arch.nodes):
+        op = node["op"]
+        if op == "input":
+            continue
+        elif op == "conv":
+            q = node["q"]
+            a = layers.quant_act(vals[node["in"]], abits[q])
+            k = layers.quant_weight(params[node["k"]], wbits[q])
+            y = layers.conv2d(a, k, node["stride"], node["pad"])
+            if node["b"] is not None:
+                y = y + params[node["b"]]
+            vals[vid] = y
+        elif op == "dense":
+            q = node["q"]
+            a = layers.quant_act(vals[node["in"]], abits[q])
+            k = layers.quant_weight(params[node["k"]], wbits[q])
+            vals[vid] = a @ k + params[node["b"]]
+        elif op == "bn":
+            vals[vid] = layers.batchnorm(
+                vals[node["in"]], params[node["scale"]], params[node["bias"]])
+        elif op == "relu":
+            vals[vid] = jax.nn.relu(vals[node["in"]])
+        elif op == "add":
+            vals[vid] = vals[node["a"]] + vals[node["b"]]
+        elif op == "concat":
+            vals[vid] = jnp.concatenate([vals[i] for i in node["ins"]], axis=-1)
+        elif op == "maxpool":
+            vals[vid] = layers.maxpool(vals[node["in"]], node["w"], node["s"])
+        elif op == "avgpool":
+            vals[vid] = layers.avgpool(vals[node["in"]], node["w"], node["s"])
+        elif op == "gap":
+            vals[vid] = layers.global_avgpool(vals[node["in"]])
+        elif op == "flatten":
+            v = vals[node["in"]]
+            vals[vid] = v.reshape(v.shape[0], -1)
+        else:  # pragma: no cover - builder only emits the ops above
+            raise ValueError(f"unknown op {op}")
+    return vals[arch.out_id]
+
+
+# ---------------------------------------------------------------------------
+# Entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+MOMENTUM = 0.9
+GRAD_CLIP = 1.0
+
+
+def make_train_step(arch: Arch):
+    """SGD-with-momentum QAT step.
+
+    (params, mom, x, y, wbits, abits, lr) ->
+        (*new_params, *new_mom, loss, acc)
+    """
+
+    def train_step(params, mom, x, y, wbits, abits, lr):
+        def loss_fn(ps):
+            logits = forward(arch, ps, x, wbits, abits)
+            loss = layers.cross_entropy(logits, y)
+            acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        # global-norm gradient clipping keeps the un-normalized stacks
+        # (AlexNet) stable across the whole QAT schedule
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+        scale = jnp.minimum(1.0, GRAD_CLIP / gnorm)
+        grads = [g * scale for g in grads]
+        new_mom = [MOMENTUM * m + g for m, g in zip(mom, grads)]
+        new_params = [p - lr * m for p, m in zip(params, new_mom)]
+        return tuple(new_params) + tuple(new_mom) + (loss, acc)
+
+    return train_step
+
+
+def make_eval_batch(arch: Arch):
+    """(params, x, y, wbits, abits) -> (correct_count, loss)."""
+
+    def eval_batch(params, x, y, wbits, abits):
+        logits = forward(arch, params, x, wbits, abits)
+        loss = layers.cross_entropy(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return correct, loss
+
+    return eval_batch
+
+
+def make_init(arch: Arch):
+    """(key u32[2]) -> params (He-normal kernels, zero biases, unit BN)."""
+
+    # One flat normal draw sliced per kernel keeps the lowered HLO small
+    # (a single threefry expansion instead of one per parameter tensor).
+    kernel_specs = [p for p in arch.params
+                    if p.kind in ("conv_kernel", "dense_kernel")]
+    flat_total = sum(p.size for p in kernel_specs)
+
+    def init(key):
+        flat = jax.random.normal(key, (flat_total,), jnp.float32)
+        out = []
+        off = 0
+        for spec in arch.params:
+            if spec.kind in ("conv_kernel", "dense_kernel"):
+                std = jnp.sqrt(2.0 / spec.fanin)
+                chunk = flat[off:off + spec.size]
+                off += spec.size
+                out.append(std * chunk.reshape(spec.shape))
+            elif spec.kind == "bn_scale":
+                out.append(jnp.ones(spec.shape, jnp.float32))
+            else:  # bias / bn_bias
+                out.append(jnp.zeros(spec.shape, jnp.float32))
+        return tuple(out)
+
+    return init

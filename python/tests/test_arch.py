@@ -1,0 +1,110 @@
+"""Structural invariants of the architecture zoo (the manifest contract)."""
+
+import math
+
+import pytest
+
+from compile.arch import NUM_CLASSES, zoo
+
+ZOO = zoo()
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_param_qlayer_cross_references(name):
+    arch = ZOO[name]
+    for qi, q in enumerate(arch.qlayers):
+        spec = arch.params[q.param_idx]
+        assert spec.qlayer == qi
+        assert spec.kind in ("conv_kernel", "dense_kernel")
+        assert q.weight_count == spec.size
+        assert q.fanin == spec.fanin
+        assert q.out_channels == spec.shape[-1]
+    # every quantizable kernel appears exactly once in qlayers
+    kernel_params = [i for i, p in enumerate(arch.params)
+                     if p.kind in ("conv_kernel", "dense_kernel")]
+    assert sorted(q.param_idx for q in arch.qlayers) == kernel_params
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_macs_positive_and_consistent(name):
+    arch = ZOO[name]
+    for q in arch.qlayers:
+        assert q.macs > 0
+        if q.kind == "dense":
+            assert q.macs == q.weight_count
+        else:
+            # conv MACs = weight_count * output positions (>= 1)
+            assert q.macs % q.weight_count == 0 or q.macs >= q.weight_count
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_graph_is_ssa(name):
+    """Every node only references earlier value ids."""
+    arch = ZOO[name]
+    for vid, node in enumerate(arch.nodes):
+        refs = []
+        for key in ("in", "a", "b"):
+            if key in node and isinstance(node[key], int) and key != "b":
+                refs.append(node[key])
+        if node["op"] in ("conv", "dense"):
+            refs = [node["in"]]
+        if node["op"] == "add":
+            refs = [node["a"], node["b"]]
+        if node["op"] == "concat":
+            refs = node["ins"]
+        for r in refs:
+            assert 0 <= r < vid, f"{name} node {vid} refs future value {r}"
+    assert arch.out_id < len(arch.nodes)
+
+
+def test_alexnet_matches_table1_layout():
+    """Table I lists 5 conv + 3 fc quantizable layers."""
+    a = ZOO["alexnet_mini"]
+    kinds = [q.kind for q in a.qlayers]
+    assert kinds.count("conv") == 5
+    assert kinds.count("dense") == 3
+
+
+def test_resnet_depths():
+    """Quantizable conv counts follow the paper's block structure."""
+    # resnet18: stem + 2*2*4 block convs + 3 downsample 1x1 + fc = 21 qlayers
+    expected = {
+        "resnet18_mini": 1 + 2 * (2 + 2 + 2 + 2) + 3 + 1,
+        "resnet34_mini": 1 + 2 * (3 + 4 + 6 + 3) + 3 + 1,
+        "resnet50_mini": 1 + 3 * (3 + 4 + 6 + 3) + 4 + 1,
+        "resnet101_mini": 1 + 3 * (3 + 4 + 23 + 3) + 4 + 1,
+        "resnet152_mini": 1 + 3 * (3 + 8 + 36 + 3) + 4 + 1,
+    }
+    for name, want in expected.items():
+        assert ZOO[name].num_qlayers == want, name
+
+
+def test_model_size_ordering():
+    """Weight-parameter counts must increase with depth within a family."""
+    sizes = [ZOO[n].total_weight_params for n in
+             ("resnet18_mini", "resnet34_mini", "resnet50_mini",
+              "resnet101_mini", "resnet152_mini")]
+    assert sizes == sorted(sizes)
+    assert all(s > 0 for s in sizes)
+
+
+def test_macs_ordering():
+    macs = [ZOO[n].total_macs for n in
+            ("resnet18_mini", "resnet34_mini", "resnet101_mini",
+             "resnet152_mini")]
+    assert macs == sorted(macs)
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_shapes_well_formed(name):
+    arch = ZOO[name]
+    for p in arch.params:
+        assert all(d > 0 for d in p.shape)
+        assert p.size == math.prod(p.shape)
+        if p.kind == "conv_kernel":
+            assert len(p.shape) == 4
+        if p.kind == "dense_kernel":
+            assert len(p.shape) == 2
+    # final layer emits NUM_CLASSES
+    last_dense = [q for q in arch.qlayers if q.kind == "dense"][-1]
+    assert last_dense.out_channels == NUM_CLASSES

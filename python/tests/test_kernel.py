@@ -1,0 +1,138 @@
+"""L1 correctness: Pallas fake-quant kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel that sits on every
+conv/dense weight in every AOT artifact. Hypothesis sweeps shapes and
+bitwidths; the oracle comparison is exact (same float ops).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fake_quant import fake_quant_2d, fake_quant_weight
+from compile.kernels.ref import fake_quant_act_ref, fake_quant_weight_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+BITS = [2.0, 4.0, 6.0, 8.0]
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("shape", [(8, 4), (27, 16), (3, 3, 3, 8), (64, 10)])
+def test_kernel_matches_ref(bits, shape):
+    w = _rand(shape, seed=hash((bits, shape)) % 2**31)
+    got = fake_quant_weight(w, jnp.float32(bits))
+    want = fake_quant_weight_ref(w, jnp.float32(bits))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_passthrough_at_32_bits():
+    w = _rand((16, 8), seed=3)
+    out = fake_quant_weight(w, jnp.float32(32.0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_level_count_bounded(bits):
+    """Quantized values per channel use at most 2^b - 1 distinct levels."""
+    w = _rand((256, 4), seed=11)
+    out = np.asarray(fake_quant_2d(w, jnp.float32(bits)))
+    for c in range(out.shape[1]):
+        levels = np.unique(out[:, c])
+        assert len(levels) <= 2 ** int(bits) - 1
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_idempotent(bits):
+    """fq(fq(w)) == fq(w): quantized weights are a fixed point."""
+    w = _rand((64, 8), seed=7)
+    b = jnp.float32(bits)
+    once = fake_quant_weight(w, b)
+    twice = fake_quant_weight(once, b)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+def test_per_channel_independence():
+    """Scaling one channel must not change the others' quantization."""
+    w = _rand((32, 4), seed=5)
+    b = jnp.float32(4.0)
+    base = np.asarray(fake_quant_2d(w, b))
+    w2 = w.at[:, 0].multiply(100.0)
+    pert = np.asarray(fake_quant_2d(w2, b))
+    np.testing.assert_allclose(base[:, 1:], pert[:, 1:], atol=0)
+
+
+def test_abs_max_preserved():
+    """Symmetric abs-max scaling maps the per-channel max to itself."""
+    w = _rand((128, 8), seed=13)
+    out = np.asarray(fake_quant_2d(w, jnp.float32(8.0)))
+    wn = np.asarray(w)
+    for c in range(8):
+        i = np.argmax(np.abs(wn[:, c]))
+        np.testing.assert_allclose(out[i, c], wn[i, c], rtol=1e-5)
+
+
+def test_blocked_path_matches_unblocked():
+    """cout divisible by the 128-lane block triggers the gridded kernel."""
+    w = _rand((16, 256), seed=17)
+    b = jnp.float32(4.0)
+    got = np.asarray(fake_quant_2d(w, b))
+    want = np.asarray(fake_quant_weight_ref(w, b))
+    np.testing.assert_allclose(got, want, atol=0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    fanin=st.integers(1, 48),
+    cout=st.integers(1, 24),
+    bits=st.sampled_from([2.0, 4.0, 6.0, 8.0, 32.0]),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_hypothesis_kernel_vs_ref(fanin, cout, bits, seed, scale):
+    w = _rand((fanin, cout), seed=seed, scale=scale)
+    b = jnp.float32(bits)
+    got = np.asarray(fake_quant_2d(w, b))
+    want = np.asarray(fake_quant_weight_ref(w, b))
+    np.testing.assert_allclose(got, want, atol=0)
+    # quantization error is bounded by delta/2 = amax/q per channel
+    if bits < 31:
+        q = 2.0 ** (bits - 1) - 1
+        amax = np.maximum(np.abs(np.asarray(w)).max(axis=0), 1e-8)
+        err = np.abs(got - np.asarray(w))
+        bound = (amax / q) * 0.5 + 1e-6 * amax
+        assert (err <= bound[None, :] + 1e-30).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 512),
+    bits=st.sampled_from([2.0, 4.0, 8.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_act_quant_range(n, bits, seed):
+    """Activation fake-quant output stays inside [min, max] of the input."""
+    a = _rand((n,), seed=seed, scale=3.0)
+    out = np.asarray(fake_quant_act_ref(a, jnp.float32(bits)))
+    an = np.asarray(a)
+    # zero-point rounding can shift the representable grid by up to
+    # scale/2 beyond [min, max] — that slack is part of the scheme.
+    scale = max(an.max() - an.min(), 1e-8) / (2.0 ** bits - 1.0)
+    eps = 0.5 * scale + 1e-4 * (an.max() - an.min() + 1)
+    assert out.min() >= an.min() - eps
+    assert out.max() <= an.max() + eps
+
+
+def test_zero_channel_no_nan():
+    """An all-zero channel must not produce NaN (delta floor at 1e-8)."""
+    w = jnp.zeros((16, 4), jnp.float32)
+    out = np.asarray(fake_quant_2d(w, jnp.float32(4.0)))
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out, np.zeros((16, 4), np.float32))

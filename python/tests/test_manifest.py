@@ -1,0 +1,68 @@
+"""Manifest/artifact consistency: the contract consumed by the Rust side."""
+
+import json
+import os
+
+import pytest
+
+from compile.arch import zoo
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built")
+
+
+def _manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_zoo():
+    m = _manifest()
+    assert set(m["archs"]) == set(zoo())
+
+
+def test_manifest_matches_arch_objects():
+    m = _manifest()
+    for name, arch in zoo().items():
+        e = m["archs"][name]
+        assert e["num_params"] == len(arch.params)
+        assert e["num_qlayers"] == arch.num_qlayers
+        assert e["total_params"] == arch.total_params
+        assert e["total_weight_params"] == arch.total_weight_params
+        assert e["total_macs"] == arch.total_macs
+        for spec, je in zip(arch.params, e["params"]):
+            assert je["name"] == spec.name
+            assert tuple(je["shape"]) == spec.shape
+            assert je["kind"] == spec.kind
+
+
+def test_dataset_geometry():
+    d = _manifest()["dataset"]
+    assert d["height"] == 16 and d["width"] == 16 and d["channels"] == 3
+    assert d["classes"] == 10
+    assert d["train_batch"] > 0 and d["eval_batch"] > 0
+
+
+def test_hlo_artifacts_exist_and_parse_header():
+    m = _manifest()
+    for name, e in m["archs"].items():
+        for entry, fname in e["artifacts"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), f"missing {path}"
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head, f"{path} is not HLO text"
+
+
+def test_entry_signatures():
+    m = _manifest()
+    for name, e in m["archs"].items():
+        P = e["num_params"]
+        tr = e["entries"]["train_step"]
+        assert tr["inputs"][0] == f"params:{P}"
+        assert tr["outputs"][-2:] == ["loss", "acc"]
+        ev = e["entries"]["eval_batch"]
+        assert ev["outputs"] == ["correct", "loss"]

@@ -1,0 +1,133 @@
+"""L2 model checks: shapes, STE gradients, QAT learning signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.arch import INPUT_C, INPUT_H, INPUT_W, NUM_CLASSES, zoo
+
+jax.config.update("jax_platform_name", "cpu")
+
+ZOO = zoo()
+SMALL = ["alexnet_mini", "resnet18_mini", "inception_mini"]
+
+
+def _setup(name, batch=4, seed=0):
+    arch = ZOO[name]
+    key = jax.random.PRNGKey(seed)
+    params = list(model.make_init(arch)(key))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (batch, INPUT_H, INPUT_W, INPUT_C))
+                    .astype(np.float32))
+    y = jnp.asarray(rng.integers(0, NUM_CLASSES, batch).astype(np.int32))
+    L = arch.num_qlayers
+    bits8 = jnp.full((L,), 8.0, jnp.float32)
+    bits32 = jnp.full((L,), 32.0, jnp.float32)
+    return arch, params, x, y, bits8, bits32
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_forward_shape(name):
+    arch, params, x, y, b8, b32 = _setup(name)
+    logits = model.forward(arch, params, x, b8, b8)
+    assert logits.shape == (4, NUM_CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_float_vs_8bit_close_but_2bit_differs(name):
+    arch, params, x, y, b8, b32 = _setup(name)
+    lf = np.asarray(model.forward(arch, params, x, b32, b32))
+    l8 = np.asarray(model.forward(arch, params, x, b8, b8))
+    b2 = jnp.full((arch.num_qlayers,), 2.0, jnp.float32)
+    l2 = np.asarray(model.forward(arch, params, x, b2, b2))
+    err8 = np.abs(lf - l8).mean()
+    err2 = np.abs(lf - l2).mean()
+    assert err2 > err8, "2-bit must distort more than 8-bit"
+
+
+def test_train_step_reduces_loss():
+    """A few QAT steps on one repeated batch must reduce the loss."""
+    arch, params, x, y, b8, _ = _setup("alexnet_mini", batch=64, seed=1)
+    mom = [jnp.zeros_like(p) for p in params]
+    step = jax.jit(model.make_train_step(arch))
+    lr = jnp.float32(0.05)
+    losses = []
+    for _ in range(8):
+        out = step(params, mom, x, y, b8, b8, lr)
+        P = len(params)
+        params = list(out[:P])
+        mom = list(out[P:2 * P])
+        losses.append(float(out[2 * P]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_eval_batch_counts():
+    arch, params, x, y, b8, _ = _setup("alexnet_mini", batch=16)
+    correct, loss = model.make_eval_batch(arch)(params, x, y, b8, b8)
+    c = float(correct)
+    assert 0.0 <= c <= 16.0 and c == int(c)
+    assert np.isfinite(float(loss))
+
+
+def test_ste_gradient_flows():
+    """d loss / d params must be nonzero through the quantizers."""
+    arch, params, x, y, b8, _ = _setup("alexnet_mini", batch=8)
+
+    def loss_fn(ps):
+        logits = model.forward(arch, ps, x, b8, b8)
+        from compile import layers
+        return layers.cross_entropy(logits, y)
+
+    grads = jax.grad(loss_fn)(params)
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in grads)
+    assert total > 0.0
+    # the first conv kernel specifically must receive gradient
+    g0 = grads[0]
+    assert float(jnp.max(jnp.abs(g0))) > 0.0
+
+
+def test_bits_are_runtime_inputs():
+    """Same params, different bits vector => different logits (no baking)."""
+    arch, params, x, y, b8, b32 = _setup("resnet18_mini")
+    f = jax.jit(lambda wb: model.forward(arch, params, x, wb, b8))
+    l8 = np.asarray(f(b8))
+    b2 = jnp.full((arch.num_qlayers,), 2.0, jnp.float32)
+    l2 = np.asarray(f(b2))
+    assert not np.allclose(l8, l2)
+
+
+def test_mixed_bits_per_layer():
+    """Heterogeneous assignment quantizes exactly the targeted layers."""
+    arch, params, x, y, b8, b32 = _setup("alexnet_mini")
+    wb = np.full(arch.num_qlayers, 32.0, np.float32)
+    wb[0] = 2.0  # only conv1 quantized
+    lmix = np.asarray(model.forward(arch, params, x, jnp.asarray(wb), b32))
+    lfloat = np.asarray(model.forward(arch, params, x, b32, b32))
+    assert not np.allclose(lmix, lfloat)
+
+
+def test_init_deterministic():
+    arch = ZOO["alexnet_mini"]
+    p1 = model.make_init(arch)(jax.random.PRNGKey(0))
+    p2 = model.make_init(arch)(jax.random.PRNGKey(0))
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    p3 = model.make_init(arch)(jax.random.PRNGKey(1))
+    assert any(not np.allclose(np.asarray(a), np.asarray(b))
+               for a, b in zip(p1, p3))
+
+
+def test_init_statistics():
+    """He init: kernel std ~ sqrt(2/fanin); BN scales exactly one."""
+    arch = ZOO["resnet18_mini"]
+    params = model.make_init(arch)(jax.random.PRNGKey(0))
+    for spec, p in zip(arch.params, params):
+        if spec.kind in ("conv_kernel", "dense_kernel") and spec.size > 500:
+            want = np.sqrt(2.0 / spec.fanin)
+            got = float(jnp.std(p))
+            assert abs(got - want) / want < 0.25, spec.name
+        if spec.kind == "bn_scale":
+            np.testing.assert_array_equal(np.asarray(p), 1.0)

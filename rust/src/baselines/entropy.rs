@@ -1,0 +1,117 @@
+//! Entropy-based layerwise bit allocation (Zhu et al. [22]):
+//! layers whose weight distribution carries more entropy get more bits.
+//!
+//! Allocation: rank layers by histogram entropy, then assign bits from
+//! the valid set so that the weighted-average bitwidth meets the size
+//! budget — a greedy water-filling from the top of the entropy ranking.
+
+use crate::manifest::ArchSpec;
+use crate::quant::{model_size_bytes, BitAssignment, VALID_BITS};
+use crate::stats::Histogram;
+
+/// Shannon entropy (nats) of a layer's weight histogram.
+pub fn layer_entropy(w: &[f32], bins: usize) -> f64 {
+    let h = Histogram::symmetric(w, bins);
+    let mut e = 0.0;
+    for &m in &h.mass {
+        if m > 0.0 {
+            e -= m * m.ln();
+        }
+    }
+    e
+}
+
+/// Entropy-guided assignment under a size budget (bytes).
+///
+/// Start everything at 8 bits, then repeatedly lower the *lowest-entropy*
+/// layer one step until the budget is met (or nothing can be lowered).
+pub fn entropy_assignment(
+    arch: &ArchSpec,
+    weights: &[Vec<f32>],
+    size_budget_bytes: f64,
+) -> BitAssignment {
+    let l = arch.num_qlayers();
+    let entropies: Vec<f64> =
+        weights.iter().map(|w| layer_entropy(w, 256)).collect();
+    let mut bits = BitAssignment::uniform(l, 8);
+    while model_size_bytes(arch, &bits) > size_budget_bytes {
+        // always lower the currently lowest-entropy layer that still can;
+        // ties broken toward the larger layer (more bytes saved per step)
+        let mut pick: Option<usize> = None;
+        for qi in 0..l {
+            if bits.bits[qi] <= VALID_BITS[0] {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(p) => entropies[qi] < entropies[p]
+                    || (entropies[qi] == entropies[p]
+                        && arch.qlayers[qi].weight_count > arch.qlayers[p].weight_count),
+            };
+            if better {
+                pick = Some(qi);
+            }
+        }
+        match pick {
+            Some(qi) => {
+                bits.step(qi, -1);
+            }
+            None => break,
+        }
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::size::tests::toy_arch;
+    use crate::util::rng::Rng;
+
+    fn weights(counts: &[usize], spreads: &[f64]) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(5);
+        counts
+            .iter()
+            .zip(spreads)
+            .map(|(&n, &s)| (0..n).map(|_| (rng.normal() * s) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn entropy_orders_by_spread_with_fixed_bins() {
+        // same bins, wider distribution with more distinct mass -> higher entropy
+        let narrow: Vec<f32> = vec![0.5; 4096];
+        let mut rng = Rng::new(1);
+        let wide: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        assert!(layer_entropy(&wide, 256) > layer_entropy(&narrow, 256));
+    }
+
+    #[test]
+    fn budget_met_when_feasible() {
+        let arch = toy_arch(&[1000, 1000, 1000]);
+        let ws = weights(&[1000, 1000, 1000], &[0.1, 1.0, 2.0]);
+        let int8 = model_size_bytes(&arch, &BitAssignment::uniform(3, 8));
+        let bits = entropy_assignment(&arch, &ws, int8 * 0.5);
+        assert!(model_size_bytes(&arch, &bits) <= int8 * 0.5);
+        assert!(bits.is_valid());
+    }
+
+    #[test]
+    fn infeasible_budget_bottoms_out_at_2bit() {
+        let arch = toy_arch(&[100, 100]);
+        let ws = weights(&[100, 100], &[1.0, 1.0]);
+        let bits = entropy_assignment(&arch, &ws, 1.0); // impossible
+        assert_eq!(bits.bits, vec![2, 2]);
+    }
+
+    #[test]
+    fn low_entropy_layers_lose_bits_first() {
+        let arch = toy_arch(&[1000, 1000]);
+        // layer 0: almost-constant weights (low entropy); layer 1: spread
+        let mut ws = weights(&[1000, 1000], &[1.0, 1.0]);
+        ws[0] = vec![0.3; 1000];
+        let int8 = model_size_bytes(&arch, &BitAssignment::uniform(2, 8));
+        let bits = entropy_assignment(&arch, &ws, int8 * 0.8);
+        assert!(bits.bits[0] < bits.bits[1]);
+    }
+}

@@ -1,0 +1,108 @@
+//! BOP-greedy heuristic — the "Init Bits" baseline of Table I.
+//!
+//! Starting from uniform 8-bit, repeatedly lower the layer with the
+//! largest current BOPs contribution, subject to a per-layer KL guard:
+//! a step is skipped if it would push that layer's normalized KL above
+//! `kl_ceiling`. This reproduces the paper's observation that a pure
+//! BOP-minimizing heuristic leaves high-σ layers at higher precision only
+//! if a distribution guard is in place.
+
+use crate::manifest::ArchSpec;
+use crate::quant::{quantize_dequantize, total_bops, BitAssignment, VALID_BITS};
+use crate::stats::{kl_divergence, normalized_kl, Histogram};
+
+const BINS: usize = 512;
+
+/// Normalized KL of layer `qi` at bitwidth `bits`.
+fn layer_kl_norm(arch: &ArchSpec, weights: &[Vec<f32>], qi: usize, bits: u8) -> f64 {
+    let w = &weights[qi];
+    let cout = arch.qlayers[qi].out_channels;
+    let p = Histogram::symmetric(w, BINS);
+    let hq = |b: u8| {
+        let dq = quantize_dequantize(w, cout, b);
+        Histogram::with_range(&dq, p.lo, p.hi, BINS)
+    };
+    let cur = kl_divergence(&p, &hq(bits));
+    let base = kl_divergence(&p, &hq(8));
+    normalized_kl(cur, base)
+}
+
+/// Greedy BOPs reduction to a target fraction of the A8W8 BOPs.
+pub fn bop_greedy_assignment(
+    arch: &ArchSpec,
+    weights: &[Vec<f32>],
+    bops_budget_fraction: f64,
+    kl_ceiling: f64,
+) -> BitAssignment {
+    let l = arch.num_qlayers();
+    let a8 = BitAssignment::uniform(l, 8);
+    let mut bits = BitAssignment::uniform(l, 8);
+    let budget = total_bops(arch, &a8, &a8) * bops_budget_fraction;
+    let mut frozen = vec![false; l];
+    while total_bops(arch, &bits, &a8) > budget {
+        // largest BOPs contributor that can still step down
+        let mut best: Option<(usize, f64)> = None;
+        for qi in 0..l {
+            if frozen[qi] || bits.bits[qi] <= VALID_BITS[0] {
+                continue;
+            }
+            let contrib = arch.qlayers[qi].macs as f64 * bits.bits[qi] as f64 * 8.0;
+            if best.map_or(true, |(_, c)| contrib > c) {
+                best = Some((qi, contrib));
+            }
+        }
+        let Some((qi, _)) = best else { break };
+        let mut trial = bits.clone();
+        trial.step(qi, -1);
+        if layer_kl_norm(arch, weights, qi, trial.bits[qi]) > kl_ceiling {
+            frozen[qi] = true; // distribution guard: this layer stays
+            continue;
+        }
+        bits = trial;
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::size::tests::toy_arch;
+    use crate::util::rng::Rng;
+
+    fn weights(counts: &[usize], spreads: &[f64], seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        counts
+            .iter()
+            .zip(spreads)
+            .map(|(&n, &s)| (0..n).map(|_| (rng.normal() * s) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn reduces_bops_to_budget() {
+        let arch = toy_arch(&[4096, 4096]);
+        let ws = weights(&[4096, 4096], &[1.0, 1.0], 3);
+        let bits = bop_greedy_assignment(&arch, &ws, 0.5, 1.1);
+        let a8 = BitAssignment::uniform(2, 8);
+        let got = total_bops(&arch, &bits, &a8);
+        let full = total_bops(&arch, &a8, &a8);
+        assert!(got <= full * 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn kl_guard_freezes_layers() {
+        let arch = toy_arch(&[4096]);
+        let ws = weights(&[4096], &[1.0], 5);
+        // ceiling 0 freezes immediately: assignment stays at 8 bits
+        let bits = bop_greedy_assignment(&arch, &ws, 0.1, 0.0);
+        assert_eq!(bits.bits, vec![8]);
+    }
+
+    #[test]
+    fn no_guard_reaches_2bit() {
+        let arch = toy_arch(&[4096]);
+        let ws = weights(&[4096], &[1.0], 7);
+        let bits = bop_greedy_assignment(&arch, &ws, 0.1, 10.0);
+        assert_eq!(bits.bits, vec![2]);
+    }
+}

@@ -1,0 +1,110 @@
+//! HAWQ-style second-order sensitivity baseline.
+//!
+//! HAWQ ranks layers by Hessian spectrum; the AOT artifacts expose no
+//! Hessian, so the proxy measures each layer's *empirical loss increase*
+//! when that layer alone is quantized to the probe bitwidth (all others
+//! float). This is the standard "perturbation sensitivity" surrogate the
+//! HAWQ papers validate against, and it requires only eval_batch calls.
+//! DESIGN.md §4 records the substitution.
+
+use crate::manifest::ArchSpec;
+use crate::quant::{model_size_bytes, BitAssignment, VALID_BITS};
+use crate::runtime::ModelSession;
+use anyhow::Result;
+
+/// Per-layer empirical sensitivity: loss(layer ℓ at `probe_bits`) − loss(float).
+pub fn perturbation_sensitivities(
+    session: &ModelSession,
+    eval_xs: &[f32],
+    eval_ys: &[i32],
+    probe_bits: u8,
+) -> Result<Vec<f64>> {
+    let l = session.num_qlayers();
+    let float = BitAssignment::raw(vec![32; l]);
+    let a8 = BitAssignment::uniform(l, 8);
+    let base = session.evaluate(eval_xs, eval_ys, &float, &a8)?.loss;
+    let mut out = Vec::with_capacity(l);
+    for qi in 0..l {
+        let mut probe = BitAssignment::raw(vec![32; l]);
+        probe.bits[qi] = probe_bits;
+        let loss = session.evaluate(eval_xs, eval_ys, &probe, &a8)?.loss;
+        out.push((loss - base).max(0.0));
+    }
+    Ok(out)
+}
+
+/// Sensitivity-guided assignment under a size budget: start at 8 bits,
+/// repeatedly lower the *least sensitive per byte saved* layer (the
+/// greedy solution of HAWQ-V3's ILP relaxation).
+pub fn hessian_proxy_assignment(
+    arch: &ArchSpec,
+    sensitivities: &[f64],
+    size_budget_bytes: f64,
+) -> BitAssignment {
+    let l = arch.num_qlayers();
+    assert_eq!(sensitivities.len(), l);
+    let mut bits = BitAssignment::uniform(l, 8);
+    while model_size_bytes(arch, &bits) > size_budget_bytes {
+        // candidate = argmin sensitivity / bytes_saved among lowerable
+        let mut best: Option<(usize, f64)> = None;
+        for qi in 0..l {
+            if bits.bits[qi] > VALID_BITS[0] {
+                let bytes_saved = arch.qlayers[qi].weight_count as f64 * 2.0 / 8.0;
+                let cost = sensitivities[qi] / bytes_saved;
+                if best.map_or(true, |(_, c)| cost < c) {
+                    best = Some((qi, cost));
+                }
+            }
+        }
+        match best {
+            Some((qi, _)) => {
+                bits.step(qi, -1);
+            }
+            None => break,
+        }
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::size::tests::toy_arch;
+    use crate::quant::model_size_bytes;
+
+    #[test]
+    fn budget_respected() {
+        let arch = toy_arch(&[1000, 1000, 1000]);
+        let sens = vec![0.5, 0.1, 0.9];
+        let int8 = model_size_bytes(&arch, &BitAssignment::uniform(3, 8));
+        let bits = hessian_proxy_assignment(&arch, &sens, int8 * 0.6);
+        assert!(model_size_bytes(&arch, &bits) <= int8 * 0.6);
+    }
+
+    #[test]
+    fn least_sensitive_layer_cut_first() {
+        let arch = toy_arch(&[1000, 1000, 1000]);
+        let sens = vec![0.5, 0.01, 0.9];
+        let int8 = model_size_bytes(&arch, &BitAssignment::uniform(3, 8));
+        let bits = hessian_proxy_assignment(&arch, &sens, int8 * 0.9);
+        assert!(bits.bits[1] < bits.bits[0]);
+        assert!(bits.bits[1] < bits.bits[2]);
+    }
+
+    #[test]
+    fn bytes_saved_weighting_prefers_big_layers() {
+        // equal sensitivity: the larger layer saves more bytes per step
+        let arch = toy_arch(&[10_000, 100]);
+        let sens = vec![0.5, 0.5];
+        let int8 = model_size_bytes(&arch, &BitAssignment::uniform(2, 8));
+        let bits = hessian_proxy_assignment(&arch, &sens, int8 * 0.95);
+        assert!(bits.bits[0] < bits.bits[1]);
+    }
+
+    #[test]
+    fn infeasible_budget_terminates() {
+        let arch = toy_arch(&[100]);
+        let bits = hessian_proxy_assignment(&arch, &[1.0], 0.0);
+        assert_eq!(bits.bits, vec![2]);
+    }
+}

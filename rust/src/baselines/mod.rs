@@ -1,0 +1,18 @@
+//! Comparator quantization schemes (paper Sec. II / Table III).
+//!
+//! * [`uniform`] — the A8W{2,4,6,8} uniform baselines.
+//! * [`entropy`] — Zhu-style entropy-based layerwise allocation [22].
+//! * [`hessian_proxy`] — HAWQ-style second-order sensitivity, realized as
+//!   an empirical per-layer perturbation probe (no Hessian available
+//!   through the AOT artifacts; DESIGN.md §4 documents the substitution).
+//! * [`greedy`] — the BOP-greedy heuristic used as Table I's "Init Bits".
+
+pub mod entropy;
+pub mod greedy;
+pub mod hessian_proxy;
+pub mod uniform;
+
+pub use entropy::entropy_assignment;
+pub use greedy::bop_greedy_assignment;
+pub use hessian_proxy::hessian_proxy_assignment;
+pub use uniform::run_uniform;

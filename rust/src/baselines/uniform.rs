@@ -1,0 +1,37 @@
+//! Uniform quantization baseline: all layers share one bitwidth
+//! (the A8W2/A8W4/A8W6/A8W8 arms of Figs. 4-5).
+
+use crate::coordinator::qat::{run_qat, TrainCursor};
+use crate::data::SynthDataset;
+use crate::quant::{model_size_bytes, BitAssignment};
+use crate::runtime::ModelSession;
+use anyhow::Result;
+
+/// Result of one uniform-quantization arm.
+#[derive(Debug, Clone)]
+pub struct UniformResult {
+    pub bits: u8,
+    pub accuracy: f64,
+    pub size_bytes: f64,
+    pub assignment: BitAssignment,
+}
+
+/// QAT-finetune at uniform `bits` and evaluate.
+pub fn run_uniform(
+    session: &mut ModelSession,
+    data: &SynthDataset,
+    cursor: &mut TrainCursor,
+    bits: u8,
+    qat_steps: usize,
+    lr: f32,
+    eval_xs: &[f32],
+    eval_ys: &[i32],
+) -> Result<UniformResult> {
+    let l = session.num_qlayers();
+    let w = BitAssignment::uniform(l, bits);
+    let a = BitAssignment::uniform(l, 8);
+    run_qat(session, data, cursor, &w, &a, lr, qat_steps)?;
+    let accuracy = session.evaluate(eval_xs, eval_ys, &w, &a)?.accuracy;
+    let size_bytes = model_size_bytes(&session.arch, &w);
+    Ok(UniformResult { bits, accuracy, size_bytes, assignment: w })
+}

@@ -1,0 +1,230 @@
+//! Adaptive 1-D k-means with a cluster-size penalty (paper Eq. 2):
+//!
+//!   min Σ_j [ Σ_{x∈C_j} (x − μ_j)² + λ (|C_j| − N/K)² ]
+//!
+//! λ = 0 is plain k-means; growing λ pushes cluster sizes toward N/K,
+//! which is exactly the knob Phase 1 turns when the initial assignment
+//! misses both boundary conditions.
+
+use crate::util::rng::Rng;
+
+/// Result of a clustering run.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Cluster index per point, relabeled so centroids ascend
+    /// (cluster 0 = smallest feature values).
+    pub assignment: Vec<usize>,
+    /// Ascending centroids.
+    pub centroids: Vec<f64>,
+    /// Objective value (Eq. 2).
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+/// Run adaptive k-means on 1-D features.
+///
+/// Deterministic given `seed`. Points are assigned greedily in random
+/// order each round; the marginal size-penalty of joining cluster j with
+/// current size n_j is λ·(2(n_j − N/K) + 1), which follows from expanding
+/// the quadratic penalty.
+pub fn adaptive_kmeans(features: &[f64], k: usize, lambda: f64, seed: u64) -> Clustering {
+    let n = features.len();
+    assert!(k >= 1, "k must be positive");
+    if n == 0 {
+        return Clustering { assignment: vec![], centroids: vec![0.0; k], objective: 0.0, iterations: 0 };
+    }
+    let mut rng = Rng::new(seed ^ 0x5EED_C1u64);
+    // init: quantile centroids over the sorted features (stable + spread)
+    let mut sorted = features.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut centroids: Vec<f64> = (0..k)
+        .map(|j| sorted[((j as f64 + 0.5) / k as f64 * n as f64) as usize % n])
+        .collect();
+
+    let target = n as f64 / k as f64;
+    let mut assignment = vec![0usize; n];
+    let mut iterations = 0;
+    let max_iters = 100;
+    let mut order: Vec<usize> = (0..n).collect();
+
+    loop {
+        iterations += 1;
+        // greedy sequential assignment with running sizes
+        let mut sizes = vec![0usize; k];
+        let mut new_assign = vec![0usize; n];
+        rng.shuffle(&mut order);
+        for &i in &order {
+            let x = features[i];
+            let mut best = 0usize;
+            let mut best_cost = f64::INFINITY;
+            for j in 0..k {
+                let d = x - centroids[j];
+                let marginal = lambda * (2.0 * (sizes[j] as f64 - target) + 1.0);
+                let cost = d * d + marginal;
+                if cost < best_cost {
+                    best_cost = cost;
+                    best = j;
+                }
+            }
+            new_assign[i] = best;
+            sizes[best] += 1;
+        }
+        // update centroids
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0usize; k];
+        for (i, &j) in new_assign.iter().enumerate() {
+            sums[j] += features[i];
+            counts[j] += 1;
+        }
+        for j in 0..k {
+            if counts[j] > 0 {
+                centroids[j] = sums[j] / counts[j] as f64;
+            }
+        }
+        let stable = new_assign == assignment;
+        assignment = new_assign;
+        if stable || iterations >= max_iters {
+            break;
+        }
+    }
+
+    // relabel clusters so centroid order is ascending
+    let mut order_idx: Vec<usize> = (0..k).collect();
+    order_idx.sort_by(|&a, &b| centroids[a].partial_cmp(&centroids[b]).unwrap());
+    let mut relabel = vec![0usize; k];
+    for (new_id, &old_id) in order_idx.iter().enumerate() {
+        relabel[old_id] = new_id;
+    }
+    let assignment: Vec<usize> = assignment.iter().map(|&j| relabel[j]).collect();
+    let mut sorted_centroids = vec![0.0; k];
+    for (new_id, &old_id) in order_idx.iter().enumerate() {
+        sorted_centroids[new_id] = centroids[old_id];
+    }
+
+    let objective = objective_value(features, &assignment, &sorted_centroids, lambda);
+    Clustering { assignment, centroids: sorted_centroids, objective, iterations }
+}
+
+/// Eq. 2 objective for a given partition.
+pub fn objective_value(
+    features: &[f64],
+    assignment: &[usize],
+    centroids: &[f64],
+    lambda: f64,
+) -> f64 {
+    let k = centroids.len();
+    let n = features.len();
+    let target = n as f64 / k as f64;
+    let mut sizes = vec![0usize; k];
+    let mut sse = 0.0;
+    for (i, &j) in assignment.iter().enumerate() {
+        let d = features[i] - centroids[j];
+        sse += d * d;
+        sizes[j] += 1;
+    }
+    let penalty: f64 = sizes.iter().map(|&s| {
+        let d = s as f64 - target;
+        lambda * d * d
+    }).sum();
+    sse + penalty
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, UsizeIn};
+    use crate::util::rng::Rng;
+
+    fn two_blobs(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| if i % 2 == 0 { 0.1 + 0.01 * rng.normal() } else { 1.0 + 0.01 * rng.normal() })
+            .collect()
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let xs = two_blobs(40, 1);
+        let c = adaptive_kmeans(&xs, 2, 0.0, 7);
+        for (i, &a) in c.assignment.iter().enumerate() {
+            assert_eq!(a, i % 2 * 1, "point {i} ({}) in cluster {a}", xs[i]);
+        }
+        assert!(c.centroids[0] < c.centroids[1]);
+    }
+
+    #[test]
+    fn centroids_ascend() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..100).map(|_| rng.uniform()).collect();
+        for lambda in [0.0, 0.1, 1.0] {
+            let c = adaptive_kmeans(&xs, 4, lambda, 11);
+            for w in c.centroids.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn large_lambda_balances_cluster_sizes() {
+        // heavily skewed data: plain k-means puts most mass in one cluster
+        let mut xs = vec![0.01; 30];
+        xs.extend([1.0, 1.01, 0.99, 5.0]);
+        let plain = adaptive_kmeans(&xs, 4, 0.0, 5);
+        let balanced = adaptive_kmeans(&xs, 4, 10.0, 5);
+        let spread = |c: &Clustering| {
+            let mut sizes = [0usize; 4];
+            for &a in &c.assignment {
+                sizes[a] += 1;
+            }
+            *sizes.iter().max().unwrap() - *sizes.iter().min().unwrap()
+        };
+        assert!(spread(&balanced) <= spread(&plain),
+            "balanced {:?} vs plain {:?}", balanced.assignment, plain.assignment);
+    }
+
+    #[test]
+    fn assignment_is_valid_partition_property() {
+        check(13, 50, &UsizeIn(1, 60), |&n| {
+            let mut rng = Rng::new(n as u64);
+            let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let c = adaptive_kmeans(&xs, 4, 0.3, 99);
+            if c.assignment.len() != n {
+                return Err("assignment length".into());
+            }
+            if c.assignment.iter().any(|&a| a >= 4) {
+                return Err("cluster id out of range".into());
+            }
+            if c.centroids.len() != 4 {
+                return Err("centroid count".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let xs = two_blobs(30, 2);
+        let a = adaptive_kmeans(&xs, 4, 0.2, 42);
+        let b = adaptive_kmeans(&xs, 4, 0.2, 42);
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn empty_and_single_point() {
+        let c = adaptive_kmeans(&[], 4, 0.1, 1);
+        assert!(c.assignment.is_empty());
+        let c1 = adaptive_kmeans(&[0.5], 4, 0.1, 1);
+        assert_eq!(c1.assignment.len(), 1);
+    }
+
+    #[test]
+    fn objective_decreases_with_balance_when_lambda_high() {
+        let xs = vec![0.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0];
+        let balanced = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let skewed = vec![0, 0, 0, 0, 0, 0, 0, 1];
+        let cents = vec![0.0, 1.0];
+        let ob = objective_value(&xs, &balanced, &cents, 5.0);
+        let os = objective_value(&xs, &skewed, &cents, 5.0);
+        assert!(ob < os);
+    }
+}

@@ -1,0 +1,24 @@
+//! Layer-3 coordinator — the paper's contribution (Alg. 1):
+//! a two-phase, constraint-driven, per-layer bitwidth search.
+//!
+//! * [`kmeans`] — adaptive k-means with cluster-size penalty (Eq. 2).
+//! * [`zones`] — the decision regions of Fig. 2.
+//! * [`sensitivity`] — σ_ℓ + normalized-KL layer scores (Sec. IV-C).
+//! * [`phase1`] — cluster-based initial assignment.
+//! * [`phase2`] — iterative KL-based refinement with reversion.
+//! * [`qat`] — QAT loop driver over the PJRT train_step artifact.
+//! * [`search`] — the end-to-end SigmaQuant driver + config.
+//! * [`trajectory`] — Fig. 3 trace recording.
+
+pub mod kmeans;
+pub mod phase1;
+pub mod phase2;
+pub mod qat;
+pub mod search;
+pub mod sensitivity;
+pub mod trajectory;
+pub mod zones;
+
+pub use search::{Objective, SearchConfig, SearchOutcome, SigmaQuant};
+pub use trajectory::{TrajPoint, Trajectory};
+pub use zones::Zone;

@@ -1,0 +1,148 @@
+//! Phase 1 — cluster-based initial bitwidth assignment (Alg. 1 lines 4-20).
+//!
+//! Layers are clustered by weight standard deviation with the adaptive
+//! k-means of Eq. 2; clusters map to the bit-set {2,4,6,8} (ascending σ →
+//! ascending bits, per the Table I observation that high-σ layers need
+//! more bits). The cluster→bits mapping is shifted up or down according
+//! to the current Fig. 2 zone, and λ grows each round until at least one
+//! boundary condition lands inside its buffer.
+
+use super::kmeans::adaptive_kmeans;
+use super::qat::{run_qat, TrainCursor};
+use super::search::{Objective, SigmaQuant};
+use super::trajectory::{TrajPoint, Trajectory};
+use super::zones::{classify, Zone};
+use crate::data::SynthDataset;
+use crate::quant::{BitAssignment, VALID_BITS};
+use crate::runtime::ModelSession;
+use crate::stats::stddev;
+use anyhow::Result;
+
+/// Phase-1 summary (also reported standalone in Table II's "Phase I"
+/// columns).
+#[derive(Debug, Clone)]
+pub struct Phase1Result {
+    pub bits: BitAssignment,
+    pub abits: BitAssignment,
+    pub accuracy: f64,
+    pub resource: f64,
+    pub lambda: f64,
+    pub rounds: usize,
+    pub zone: Zone,
+    /// σ feature per layer (for Table I / diagnostics).
+    pub sigmas: Vec<f64>,
+}
+
+/// Cluster→bits mapping, optionally shifted by the zone direction.
+fn cluster_bits(cluster: usize, shift: i32) -> u8 {
+    let idx = (cluster as i32 + shift).clamp(0, VALID_BITS.len() as i32 - 1);
+    VALID_BITS[idx as usize]
+}
+
+pub fn run_phase1(
+    sq: &SigmaQuant,
+    session: &mut ModelSession,
+    data: &SynthDataset,
+    cursor: &mut TrainCursor,
+    traj: &mut Trajectory,
+) -> Result<Phase1Result> {
+    let cfg = &sq.cfg;
+    let l = session.num_qlayers();
+    let a8 = BitAssignment::uniform(l, 8);
+
+    // σ features from the (pre-trained, INT8-QAT-warmed) weights
+    let sigmas: Vec<f64> =
+        (0..l).map(|qi| stddev(session.qlayer_weights(qi))).collect();
+
+    let mut lambda = cfg.lambda0;
+    let mut best: Option<Phase1Result> = None;
+    let mut acc = 0.0;
+    let mut resource;
+    let mut bits = BitAssignment::uniform(l, 8);
+    let mut abits = a8.clone();
+    let mut zone = Zone::Iteration;
+
+    for round in 1..=cfg.max_phase1_iters {
+        // zone of the *current* point decides the mapping shift
+        resource = sq.resource(session, &bits, &abits);
+        let cur_zone = if round == 1 {
+            // start point was just recorded by the caller
+            classify(acc, resource, &cfg.targets)
+        } else {
+            zone
+        };
+        let shift = match cur_zone {
+            Zone::BitIncrease => 1,
+            Zone::BitDecrease => -1,
+            _ => 0,
+        };
+
+        let clustering = adaptive_kmeans(&sigmas, VALID_BITS.len(), lambda, cfg.seed);
+        bits = BitAssignment::raw(
+            clustering.assignment.iter().map(|&c| cluster_bits(c, shift)).collect(),
+        );
+        debug_assert!(bits.is_valid());
+        if cfg.objective == Objective::Bops {
+            // activations follow the weight clusters one notch higher
+            abits = BitAssignment::raw(
+                bits.bits.iter().map(|&b| (b + 2).min(8)).collect(),
+            );
+        }
+
+        run_qat(session, data, cursor, &bits, &abits, cfg.lr, cfg.qat_steps_p1)?;
+        acc = sq.eval_acc(session, &bits, &abits)?;
+        resource = sq.resource(session, &bits, &abits);
+        zone = classify(acc, resource, &cfg.targets);
+        traj.push(TrajPoint {
+            phase: "phase1",
+            iter: round,
+            accuracy: acc,
+            size_bytes: resource,
+            zone,
+            action: format!("adaptive k-means λ={lambda:.1} shift={shift}"),
+            bits_summary: bits.summary(),
+        });
+
+        let result = Phase1Result {
+            bits: bits.clone(),
+            abits: abits.clone(),
+            accuracy: acc,
+            resource,
+            lambda,
+            rounds: round,
+            zone,
+            sigmas: sigmas.clone(),
+        };
+        let acceptable = cfg.targets.acc_in_buffer(acc) || cfg.targets.size_in_buffer(resource);
+        if acceptable {
+            // Alg. 1 line 12-13: one metric inside its buffer — Phase 1 done
+            return Ok(result);
+        }
+        best = Some(result);
+        lambda += cfg.lambda_step;
+    }
+
+    // Alg. 1 line 18: both metrics still outside every buffer — abandon
+    let mut r = best.expect("at least one phase-1 round runs");
+    if !(cfg.targets.acc_in_buffer(r.accuracy) || cfg.targets.size_in_buffer(r.resource)) {
+        r.zone = Zone::Abandon;
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_bits_mapping() {
+        assert_eq!(cluster_bits(0, 0), 2);
+        assert_eq!(cluster_bits(3, 0), 8);
+        // shift up: everything one notch higher, clamped at 8
+        assert_eq!(cluster_bits(0, 1), 4);
+        assert_eq!(cluster_bits(3, 1), 8);
+        // shift down: clamped at 2
+        assert_eq!(cluster_bits(0, -1), 2);
+        assert_eq!(cluster_bits(3, -1), 6);
+    }
+}

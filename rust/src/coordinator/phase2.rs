@@ -1,0 +1,143 @@
+//! Phase 2 — iterative KL-based refinement (Alg. 1 lines 21-31, Sec. IV-C).
+//!
+//! Each round adjusts `m` layers by one step of the valid bit-set (±2
+//! bits), chosen by the σ/KL sensitivity score: most-sensitive layers go
+//! up when accuracy is the unmet metric, least-sensitive layers go down
+//! when the resource budget is the unmet metric. A short QAT cycle
+//! re-stabilizes the model after every move; moves that break the
+//! already-satisfied metric (beyond its buffer) or fail to improve the
+//! unmet one are reverted (step 4, "Early Stopping / Reversion").
+
+use super::phase1::Phase1Result;
+use super::qat::{run_qat, TrainCursor};
+use super::search::{Objective, SigmaQuant};
+use super::sensitivity::{
+    layer_sensitivities, least_sensitive_downgradable, most_sensitive_upgradable,
+};
+use super::trajectory::{TrajPoint, Trajectory};
+use super::zones::classify;
+use crate::data::SynthDataset;
+use crate::quant::BitAssignment;
+use crate::runtime::ModelSession;
+use anyhow::Result;
+
+/// Phase-2 summary.
+#[derive(Debug, Clone)]
+pub struct Phase2Result {
+    pub wbits: BitAssignment,
+    pub abits: BitAssignment,
+    pub accuracy: f64,
+    pub resource: f64,
+    pub met: bool,
+    pub rounds: usize,
+    pub reverted_moves: usize,
+}
+
+pub fn run_phase2(
+    sq: &SigmaQuant,
+    session: &mut ModelSession,
+    data: &SynthDataset,
+    cursor: &mut TrainCursor,
+    p1: &Phase1Result,
+    traj: &mut Trajectory,
+) -> Result<Phase2Result> {
+    let cfg = &sq.cfg;
+    let t = &cfg.targets;
+    let mut wbits = p1.bits.clone();
+    let mut abits = p1.abits.clone();
+    let mut acc = p1.accuracy;
+    let mut resource = p1.resource;
+    let mut fails = 0usize;
+    let mut reverted = 0usize;
+    let mut rounds = 0usize;
+
+    while rounds < cfg.max_phase2_iters {
+        if t.acc_met(acc) && resource <= t.size_target {
+            return Ok(Phase2Result {
+                wbits, abits, accuracy: acc, resource,
+                met: true, rounds, reverted_moves: reverted,
+            });
+        }
+        if fails >= cfg.patience {
+            break; // early stop: too many consecutive rejected moves
+        }
+        rounds += 1;
+
+        // -- step 1: measure sensitivity --------------------------------
+        let weights = session.all_qlayer_weights();
+        let sens = layer_sensitivities(&session.arch, &weights, &wbits, cfg.sigma_weight);
+
+        // -- step 2: pick layers and direction ---------------------------
+        let acc_unmet = !t.acc_met(acc);
+        let res_unmet = resource > t.size_target;
+        // When both are unmet (possible inside buffers), fix accuracy
+        // first — raising bits cannot break the size buffer by much with
+        // m small, and the size move follows next round.
+        let (targets_idx, dir, what) = if acc_unmet {
+            (most_sensitive_upgradable(&sens, cfg.layers_per_round), 1i8, "raise")
+        } else if res_unmet {
+            (least_sensitive_downgradable(&sens, cfg.layers_per_round), -1i8, "lower")
+        } else {
+            unreachable!("loop guard ensures one metric is unmet");
+        };
+        if targets_idx.is_empty() {
+            break; // no legal move remains in this direction
+        }
+
+        // -- step 3: apply, calibrate (QAT), re-evaluate ------------------
+        let snapshot = session.snapshot();
+        let prev = (wbits.clone(), abits.clone(), acc, resource);
+        let mut moved = Vec::new();
+        for &qi in &targets_idx {
+            if wbits.step(qi, dir) {
+                moved.push(qi);
+            }
+            if cfg.objective == Objective::Bops {
+                abits.step(qi, dir);
+            }
+        }
+        run_qat(session, data, cursor, &wbits, &abits, cfg.lr, cfg.qat_steps_p2)?;
+        let new_acc = sq.eval_acc(session, &wbits, &abits)?;
+        let new_res = sq.resource(session, &wbits, &abits);
+
+        // -- step 4: accept or revert ------------------------------------
+        let improved = if dir > 0 { new_acc > acc } else { new_res < resource };
+        let kept_other = if dir > 0 {
+            t.size_in_buffer(new_res) || new_res <= prev.3
+        } else {
+            t.acc_in_buffer(new_acc)
+        };
+        let accept = improved && kept_other;
+        if accept {
+            acc = new_acc;
+            resource = new_res;
+            fails = 0;
+        } else {
+            session.restore(&snapshot);
+            wbits = prev.0;
+            abits = prev.1;
+            acc = prev.2;
+            resource = prev.3;
+            reverted += 1;
+            fails += 1;
+        }
+        traj.push(TrajPoint {
+            phase: "phase2",
+            iter: rounds,
+            accuracy: if accept { acc } else { new_acc },
+            size_bytes: if accept { resource } else { new_res },
+            zone: classify(acc, resource, t),
+            action: format!(
+                "{what} bits of layers {moved:?} ({})",
+                if accept { "accepted" } else { "reverted" }
+            ),
+            bits_summary: wbits.summary(),
+        });
+    }
+
+    let met = t.acc_met(acc) && resource <= t.size_target;
+    Ok(Phase2Result {
+        wbits, abits, accuracy: acc, resource,
+        met, rounds, reverted_moves: reverted,
+    })
+}

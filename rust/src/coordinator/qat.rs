@@ -1,0 +1,58 @@
+//! QAT loop driver: runs `steps` train_step executions against the PJRT
+//! artifact, streaming deterministic synthetic batches. The coordinator
+//! calls this after every bitwidth change (Alg. 1 lines 10 & 25).
+
+use crate::data::SynthDataset;
+use crate::quant::BitAssignment;
+use crate::runtime::{ModelSession, StepResult};
+use anyhow::Result;
+
+/// Cursor over the train stream so successive QAT cycles see fresh data.
+#[derive(Debug, Default, Clone)]
+pub struct TrainCursor {
+    pub next_batch: u64,
+}
+
+/// Run `steps` QAT steps; returns the final step's metrics.
+pub fn run_qat(
+    session: &mut ModelSession,
+    data: &SynthDataset,
+    cursor: &mut TrainCursor,
+    wbits: &BitAssignment,
+    abits: &BitAssignment,
+    lr: f32,
+    steps: usize,
+) -> Result<StepResult> {
+    let b = session.rt.manifest.dataset.train_batch;
+    let mut last = StepResult { loss: f32::NAN, acc: 0.0 };
+    for _ in 0..steps {
+        let (x, y) = data.train_batch(cursor.next_batch, b);
+        cursor.next_batch += 1;
+        last = session.train_step(&x, &y, wbits, abits, lr)?;
+    }
+    Ok(last)
+}
+
+/// Float pre-training = QAT with the 32-bit passthrough assignment.
+pub fn pretrain(
+    session: &mut ModelSession,
+    data: &SynthDataset,
+    cursor: &mut TrainCursor,
+    lr: f32,
+    steps: usize,
+    log_every: usize,
+) -> Result<Vec<(usize, f32)>> {
+    let l = session.num_qlayers();
+    let float_bits = BitAssignment::raw(vec![32; l]);
+    let b = session.rt.manifest.dataset.train_batch;
+    let mut curve = Vec::new();
+    for step in 0..steps {
+        let (x, y) = data.train_batch(cursor.next_batch, b);
+        cursor.next_batch += 1;
+        let r = session.train_step(&x, &y, &float_bits, &float_bits, lr)?;
+        if log_every > 0 && (step % log_every == 0 || step + 1 == steps) {
+            curve.push((step, r.loss));
+        }
+    }
+    Ok(curve)
+}

@@ -1,0 +1,201 @@
+//! The SigmaQuant driver: configuration, objective, and the end-to-end
+//! two-phase search (Alg. 1).
+
+use super::phase1::{self, Phase1Result};
+use super::phase2::{self, Phase2Result};
+use super::qat::TrainCursor;
+use super::trajectory::{TrajPoint, Trajectory};
+use super::zones::{classify, Targets, Zone};
+use crate::data::SynthDataset;
+use crate::quant::{model_size_bytes, total_bops, BitAssignment};
+use crate::runtime::ModelSession;
+use anyhow::Result;
+
+/// What the resource constraint is written in (paper Sec. IV-C: model
+/// size by default; BOPs when targeting compute, Table V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Weight-memory objective; activations stay at 8 bits.
+    Memory,
+    /// BOPs objective; weight *and* activation bitwidths adapt.
+    Bops,
+}
+
+/// All knobs of the two-phase search. Field names follow Alg. 1.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub targets: Targets,
+    pub objective: Objective,
+    /// Phase-1 rounds (paper default 2, "configurable for larger models").
+    pub max_phase1_iters: usize,
+    /// Phase-2 refinement rounds (paper: 5..40).
+    pub max_phase2_iters: usize,
+    /// QAT steps after each Phase-1 clustering.
+    pub qat_steps_p1: usize,
+    /// QAT steps after each Phase-2 move.
+    pub qat_steps_p2: usize,
+    /// Layers adjusted per Phase-2 round (paper: m = 2).
+    pub layers_per_round: usize,
+    /// σ-vs-KL mix in the sensitivity score (0 = pure KL).
+    pub sigma_weight: f64,
+    /// Consecutive rejected moves before Phase 2 gives up.
+    pub patience: usize,
+    pub lambda0: f64,
+    pub lambda_step: f64,
+    pub lr: f32,
+    pub seed: u64,
+    /// Eval-set size (multiple of the artifact eval batch).
+    pub eval_samples: usize,
+}
+
+impl SearchConfig {
+    /// Paper-default knobs for a given pair of targets.
+    pub fn defaults(targets: Targets) -> SearchConfig {
+        SearchConfig {
+            targets,
+            objective: Objective::Memory,
+            max_phase1_iters: 3,
+            max_phase2_iters: 12,
+            qat_steps_p1: 24,
+            qat_steps_p2: 12,
+            layers_per_round: 2,
+            sigma_weight: 0.3,
+            patience: 4,
+            lambda0: 0.1,
+            lambda_step: 0.1,
+            lr: 0.02,
+            seed: 7,
+            eval_samples: 512,
+        }
+    }
+}
+
+/// Final outcome of a search.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub wbits: BitAssignment,
+    pub abits: BitAssignment,
+    pub accuracy: f64,
+    /// Resource value (bytes for Memory, bit-ops for Bops).
+    pub resource: f64,
+    pub met: bool,
+    pub zone: Zone,
+    pub trajectory: Trajectory,
+    pub phase1: Phase1Result,
+    pub phase2_rounds: usize,
+    /// INT8 reference measured at the start (Alg. 1 lines 1-3).
+    pub int8_accuracy: f64,
+    pub int8_resource: f64,
+}
+
+/// The coordinator object: owns eval data + cursor, drives both phases.
+pub struct SigmaQuant {
+    pub cfg: SearchConfig,
+    pub eval_xs: Vec<f32>,
+    pub eval_ys: Vec<i32>,
+}
+
+impl SigmaQuant {
+    pub fn new(cfg: SearchConfig, data: &SynthDataset) -> SigmaQuant {
+        let n = cfg.eval_samples;
+        let (eval_xs, eval_ys) = data.eval_set(n);
+        SigmaQuant { cfg, eval_xs, eval_ys }
+    }
+
+    /// Resource value of an assignment under the configured objective.
+    pub fn resource(&self, session: &ModelSession, w: &BitAssignment, a: &BitAssignment) -> f64 {
+        match self.cfg.objective {
+            Objective::Memory => model_size_bytes(&session.arch, w),
+            Objective::Bops => total_bops(&session.arch, w, a),
+        }
+    }
+
+    /// Evaluate accuracy on the held-out eval set.
+    pub fn eval_acc(
+        &self,
+        session: &ModelSession,
+        w: &BitAssignment,
+        a: &BitAssignment,
+    ) -> Result<f64> {
+        Ok(session.evaluate(&self.eval_xs, &self.eval_ys, w, a)?.accuracy)
+    }
+
+    /// Run the full two-phase search (Alg. 1). The session should already
+    /// hold pre-trained float parameters.
+    pub fn run(
+        &self,
+        session: &mut ModelSession,
+        data: &SynthDataset,
+        cursor: &mut TrainCursor,
+    ) -> Result<SearchOutcome> {
+        let l = session.num_qlayers();
+        let mut traj = Trajectory::default();
+
+        // ---- Alg. 1 lines 1-3: uniform INT8 start ----------------------
+        let w8 = BitAssignment::uniform(l, 8);
+        let a8 = BitAssignment::uniform(l, 8);
+        let _ = super::qat::run_qat(
+            session, data, cursor, &w8, &a8, self.cfg.lr, self.cfg.qat_steps_p1,
+        )?;
+        let int8_accuracy = self.eval_acc(session, &w8, &a8)?;
+        let int8_resource = self.resource(session, &w8, &a8);
+        traj.push(TrajPoint {
+            phase: "start",
+            iter: 0,
+            accuracy: int8_accuracy,
+            size_bytes: int8_resource,
+            zone: classify(int8_accuracy, int8_resource, &self.cfg.targets),
+            action: "uniform INT8 start".into(),
+            bits_summary: w8.summary(),
+        });
+
+        // ---- Phase 1: adaptive clustering ------------------------------
+        let p1 = phase1::run_phase1(self, session, data, cursor, &mut traj)?;
+        if p1.zone == Zone::Abandon {
+            let abits = p1.abits.clone();
+            let resource = self.resource(session, &p1.bits, &abits);
+            return Ok(SearchOutcome {
+                wbits: p1.bits.clone(),
+                abits,
+                accuracy: p1.accuracy,
+                resource,
+                met: false,
+                zone: Zone::Abandon,
+                trajectory: traj,
+                phase1: p1,
+                phase2_rounds: 0,
+                int8_accuracy,
+                int8_resource,
+            });
+        }
+
+        // ---- Phase 2: iterative KL refinement --------------------------
+        let p2: Phase2Result =
+            phase2::run_phase2(self, session, data, cursor, &p1, &mut traj)?;
+
+        let zone = classify(p2.accuracy, p2.resource, &self.cfg.targets);
+        traj.push(TrajPoint {
+            phase: "final",
+            iter: p2.rounds,
+            accuracy: p2.accuracy,
+            size_bytes: p2.resource,
+            zone,
+            action: if p2.met { "both targets met".into() } else { "stopped".into() },
+            bits_summary: p2.wbits.summary(),
+        });
+
+        Ok(SearchOutcome {
+            wbits: p2.wbits,
+            abits: p2.abits,
+            accuracy: p2.accuracy,
+            resource: p2.resource,
+            met: p2.met,
+            zone,
+            trajectory: traj,
+            phase1: p1,
+            phase2_rounds: p2.rounds,
+            int8_accuracy,
+            int8_resource,
+        })
+    }
+}

@@ -1,0 +1,181 @@
+//! Layer sensitivity scores (paper Sec. IV-C, Phase 2 step 1).
+//!
+//! σ_ℓ is the first-order proxy (Table I); D̂_KL is the refinement signal:
+//! the KL divergence between the float weight histogram and its quantized
+//! counterpart at the *current* bitwidth, normalized by the INT8 baseline
+//! divergence so scores are comparable across layers. The combined score
+//! is a convex mix controlled by `sigma_weight` (0 = pure KL, 1 = pure σ)
+//! — the ablation bench sweeps this knob.
+
+use crate::manifest::ArchSpec;
+use crate::quant::{quantize_dequantize, BitAssignment};
+use crate::stats::{kl_divergence, normalized_kl, stddev, Histogram};
+
+/// Histogram bins used for all KL computations (power of two, fine enough
+/// to resolve 8-bit grids: 2 bins per INT8 level).
+pub const KL_BINS: usize = 512;
+
+/// Per-layer sensitivity report.
+#[derive(Debug, Clone)]
+pub struct LayerSensitivity {
+    pub qlayer: usize,
+    pub name: String,
+    pub sigma: f64,
+    /// D_KL(p ‖ p̃) at the current bitwidth.
+    pub kl_current: f64,
+    /// D_KL(p ‖ p̃_int8) — the normalization baseline.
+    pub kl_int8: f64,
+    /// Normalized KL in [0, 1].
+    pub kl_norm: f64,
+    /// Combined score used for ranking.
+    pub score: f64,
+    pub bits: u8,
+    pub weight_count: usize,
+}
+
+/// Compute sensitivity for every quantizable layer.
+///
+/// `weights[qi]` is the flat float tensor of layer qi (fanin-major).
+pub fn layer_sensitivities(
+    arch: &ArchSpec,
+    weights: &[Vec<f32>],
+    bits: &BitAssignment,
+    sigma_weight: f64,
+) -> Vec<LayerSensitivity> {
+    assert_eq!(weights.len(), arch.num_qlayers());
+    assert_eq!(bits.len(), arch.num_qlayers());
+    let mut sigmas = Vec::with_capacity(weights.len());
+    let mut raw = Vec::with_capacity(weights.len());
+    for (qi, q) in arch.qlayers.iter().enumerate() {
+        let w = &weights[qi];
+        let p = Histogram::symmetric(w, KL_BINS);
+        let dq_cur = quantize_dequantize(w, q.out_channels, bits.bits[qi]);
+        let p_cur = Histogram::with_range(&dq_cur, p.lo, p.hi, KL_BINS);
+        let dq8 = quantize_dequantize(w, q.out_channels, 8);
+        let p8 = Histogram::with_range(&dq8, p.lo, p.hi, KL_BINS);
+        let kl_current = kl_divergence(&p, &p_cur);
+        let kl_int8 = kl_divergence(&p, &p8);
+        let kl_norm = normalized_kl(kl_current, kl_int8);
+        let sigma = stddev(w);
+        sigmas.push(sigma);
+        raw.push((qi, q.name.clone(), sigma, kl_current, kl_int8, kl_norm, q.weight_count));
+    }
+    let sigma_max = sigmas.iter().cloned().fold(1e-12f64, f64::max);
+    raw.into_iter()
+        .map(|(qi, name, sigma, kl_current, kl_int8, kl_norm, wc)| {
+            let sigma_hat = sigma / sigma_max;
+            LayerSensitivity {
+                qlayer: qi,
+                name,
+                sigma,
+                kl_current,
+                kl_int8,
+                kl_norm,
+                score: (1.0 - sigma_weight) * kl_norm + sigma_weight * sigma_hat,
+                bits: bits.bits[qi],
+                weight_count: wc,
+            }
+        })
+        .collect()
+}
+
+/// Indices of the `m` most sensitive layers that can still go up.
+pub fn most_sensitive_upgradable(sens: &[LayerSensitivity], m: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> =
+        (0..sens.len()).filter(|&i| sens[i].bits < 8).collect();
+    idx.sort_by(|&a, &b| {
+        sens[b]
+            .score
+            .partial_cmp(&sens[a].score)
+            .unwrap()
+            // tie-break: upgrade the cheaper layer first
+            .then(sens[a].weight_count.cmp(&sens[b].weight_count))
+    });
+    idx.truncate(m);
+    idx
+}
+
+/// Indices of the `m` least sensitive layers that can still go down.
+pub fn least_sensitive_downgradable(sens: &[LayerSensitivity], m: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> =
+        (0..sens.len()).filter(|&i| sens[i].bits > 2).collect();
+    idx.sort_by(|&a, &b| {
+        sens[a]
+            .score
+            .partial_cmp(&sens[b].score)
+            .unwrap()
+            // tie-break: downgrade the bigger layer first (more saving)
+            .then(sens[b].weight_count.cmp(&sens[a].weight_count))
+    });
+    idx.truncate(m);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::size::tests::toy_arch;
+    use crate::util::rng::Rng;
+
+    fn weights(arch: &ArchSpec, scales: &[f64]) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(42);
+        arch.qlayers
+            .iter()
+            .zip(scales)
+            .map(|(q, &s)| (0..q.weight_count).map(|_| (rng.normal() * s) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn lower_bits_higher_kl() {
+        let arch = toy_arch(&[2048]);
+        let ws = weights(&arch, &[1.0]);
+        let kl_at = |b: u8| {
+            layer_sensitivities(&arch, &ws, &BitAssignment::uniform(1, b), 0.0)[0].kl_current
+        };
+        assert!(kl_at(2) > kl_at(4));
+        assert!(kl_at(4) > kl_at(6));
+        assert!(kl_at(6) >= kl_at(8));
+    }
+
+    #[test]
+    fn int8_layer_scores_low() {
+        let arch = toy_arch(&[2048]);
+        let ws = weights(&arch, &[1.0]);
+        let s = layer_sensitivities(&arch, &ws, &BitAssignment::uniform(1, 8), 0.0);
+        assert!(s[0].kl_norm <= 1.0);
+        assert!(s[0].score <= 1.0);
+    }
+
+    #[test]
+    fn sigma_recorded_per_layer() {
+        let arch = toy_arch(&[1024, 1024]);
+        let ws = weights(&arch, &[0.1, 2.0]);
+        let s = layer_sensitivities(&arch, &ws, &BitAssignment::uniform(2, 4), 1.0);
+        assert!(s[1].sigma > s[0].sigma);
+        // with sigma_weight=1 the score ranking follows sigma
+        assert!(s[1].score > s[0].score);
+    }
+
+    #[test]
+    fn selection_respects_bit_bounds() {
+        let arch = toy_arch(&[64, 64, 64]);
+        let ws = weights(&arch, &[1.0, 1.0, 1.0]);
+        let bits = BitAssignment::new(vec![8, 2, 4]).unwrap();
+        let s = layer_sensitivities(&arch, &ws, &bits, 0.5);
+        let up = most_sensitive_upgradable(&s, 3);
+        assert!(!up.contains(&0), "8-bit layer cannot upgrade");
+        let down = least_sensitive_downgradable(&s, 3);
+        assert!(!down.contains(&1), "2-bit layer cannot downgrade");
+    }
+
+    #[test]
+    fn selection_counts() {
+        let arch = toy_arch(&[64; 6]);
+        let ws = weights(&arch, &[1.0; 6]);
+        let bits = BitAssignment::uniform(6, 4);
+        let s = layer_sensitivities(&arch, &ws, &bits, 0.5);
+        assert_eq!(most_sensitive_upgradable(&s, 2).len(), 2);
+        assert_eq!(least_sensitive_downgradable(&s, 4).len(), 4);
+    }
+}

@@ -1,0 +1,74 @@
+//! Search trajectory recording — the raw series behind Fig. 3.
+
+use super::zones::Zone;
+
+/// One measured point along the search.
+#[derive(Debug, Clone)]
+pub struct TrajPoint {
+    /// "start" | "phase1" | "phase2" | "final"
+    pub phase: &'static str,
+    pub iter: usize,
+    pub accuracy: f64,
+    pub size_bytes: f64,
+    pub zone: Zone,
+    /// Human-readable description of the move that produced this point.
+    pub action: String,
+    pub bits_summary: String,
+}
+
+/// The full search path.
+#[derive(Debug, Clone, Default)]
+pub struct Trajectory {
+    pub points: Vec<TrajPoint>,
+}
+
+impl Trajectory {
+    pub fn push(&mut self, p: TrajPoint) {
+        self.points.push(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// CSV rows (Fig. 3 regeneration).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("phase,iter,accuracy,size_bytes,zone,action,bits\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{},{:.6},{:.1},{},{},\"{}\"\n",
+                p.phase, p.iter, p.accuracy, p.size_bytes, p.zone,
+                p.action.replace(',', ";"), p.bits_summary
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Trajectory::default();
+        t.push(TrajPoint {
+            phase: "phase1",
+            iter: 1,
+            accuracy: 0.8,
+            size_bytes: 1000.0,
+            zone: Zone::Iteration,
+            action: "cluster, λ=0.1".into(),
+            bits_summary: "8,8".into(),
+        });
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.lines().nth(1).unwrap().starts_with("phase1,1,0.8"));
+        // embedded comma must be escaped
+        assert!(!csv.lines().nth(1).unwrap().contains("cluster, λ"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Decision zones of Fig. 2: where the (accuracy, size) point sits
+//! relative to the user's boundary conditions decides what the algorithm
+//! does next.
+
+/// Search targets + buffers (the paper's A_t, M_t, ΔA, ΔM).
+#[derive(Debug, Clone, Copy)]
+pub struct Targets {
+    /// Required accuracy (fraction, e.g. 0.78).
+    pub acc_target: f64,
+    /// Maximum model size in bytes.
+    pub size_target: f64,
+    /// Accuracy buffer ΔA (fraction).
+    pub acc_buffer: f64,
+    /// Size buffer ΔM (bytes).
+    pub size_buffer: f64,
+    /// How many buffers away counts as hopeless (Abandon zone radius).
+    pub abandon_factor: f64,
+}
+
+impl Targets {
+    pub fn acc_met(&self, acc: f64) -> bool {
+        acc >= self.acc_target
+    }
+    pub fn size_met(&self, size: f64) -> bool {
+        size <= self.size_target
+    }
+    pub fn acc_in_buffer(&self, acc: f64) -> bool {
+        acc >= self.acc_target - self.acc_buffer
+    }
+    pub fn size_in_buffer(&self, size: f64) -> bool {
+        size <= self.size_target + self.size_buffer
+    }
+}
+
+/// Fig. 2 regions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Zone {
+    /// Both strict targets met — done.
+    Target,
+    /// Accuracy too low, size comfortably under budget: raise bits.
+    BitIncrease,
+    /// Accuracy fine, size over budget: lower bits.
+    BitDecrease,
+    /// Exactly one metric inside its buffer: Phase-2 refinement region.
+    Iteration,
+    /// Both metrics hopeless (beyond abandon_factor × buffer): stop.
+    Abandon,
+}
+
+/// Classify a measured (accuracy, size) point.
+pub fn classify(acc: f64, size: f64, t: &Targets) -> Zone {
+    if t.acc_met(acc) && t.size_met(size) {
+        return Zone::Target;
+    }
+    let acc_hopeless = acc < t.acc_target - t.abandon_factor * t.acc_buffer;
+    let size_hopeless = size > t.size_target + t.abandon_factor * t.size_buffer;
+    if acc_hopeless && size_hopeless {
+        return Zone::Abandon;
+    }
+    let acc_ok = t.acc_in_buffer(acc);
+    let size_ok = t.size_in_buffer(size);
+    match (acc_ok, size_ok) {
+        // one metric inside its buffer -> refinement territory
+        (true, false) if t.acc_met(acc) => Zone::BitDecrease,
+        (true, false) => Zone::Iteration,
+        (false, true) if t.size_met(size) => Zone::BitIncrease,
+        (false, true) => Zone::Iteration,
+        (true, true) => Zone::Iteration, // inside both buffers, strict miss
+        (false, false) => {
+            // neither inside buffer, not hopeless: head toward the nearer one
+            if t.size_met(size) {
+                Zone::BitIncrease
+            } else if t.acc_met(acc) {
+                Zone::BitDecrease
+            } else {
+                Zone::Iteration
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Zone {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Zone::Target => "target",
+            Zone::BitIncrease => "bit-increase",
+            Zone::BitDecrease => "bit-decrease",
+            Zone::Iteration => "iteration",
+            Zone::Abandon => "abandon",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Targets {
+        Targets {
+            acc_target: 0.80,
+            size_target: 1000.0,
+            acc_buffer: 0.02,
+            size_buffer: 100.0,
+            abandon_factor: 5.0,
+        }
+    }
+
+    #[test]
+    fn target_zone() {
+        assert_eq!(classify(0.85, 900.0, &t()), Zone::Target);
+        assert_eq!(classify(0.80, 1000.0, &t()), Zone::Target);
+    }
+
+    #[test]
+    fn bit_increase_when_acc_low_size_fine() {
+        assert_eq!(classify(0.70, 800.0, &t()), Zone::BitIncrease);
+    }
+
+    #[test]
+    fn bit_decrease_when_acc_fine_size_high() {
+        assert_eq!(classify(0.85, 1300.0, &t()), Zone::BitDecrease);
+    }
+
+    #[test]
+    fn abandon_when_both_hopeless() {
+        assert_eq!(classify(0.5, 5000.0, &t()), Zone::Abandon);
+    }
+
+    #[test]
+    fn iteration_when_one_in_buffer() {
+        // acc inside buffer but not met, size over budget but within reach
+        assert_eq!(classify(0.79, 1050.0, &t()), Zone::Iteration);
+        // size met but acc inside buffer only
+        assert_eq!(classify(0.79, 900.0, &t()), Zone::Iteration);
+    }
+
+    #[test]
+    fn classification_total_property() {
+        use crate::util::prop::{check, Pair, UsizeIn};
+        // every (acc, size) grid point classifies without panicking and
+        // Target iff both strict constraints hold
+        check(5, 2000, &Pair(UsizeIn(0, 100), UsizeIn(0, 6000)), |&(a, s)| {
+            let acc = a as f64 / 100.0;
+            let size = s as f64;
+            let z = classify(acc, size, &t());
+            let both = acc >= 0.80 && size <= 1000.0;
+            if both != (z == Zone::Target) {
+                return Err(format!("acc={acc} size={size} -> {z}"));
+            }
+            Ok(())
+        });
+    }
+}

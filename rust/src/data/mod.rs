@@ -1,0 +1,6 @@
+//! Synthetic dataset substrate (ImageNet/CIFAR-100 are unavailable —
+//! DESIGN.md §4 documents the substitution).
+
+pub mod synth;
+
+pub use synth::SynthDataset;

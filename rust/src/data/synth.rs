@@ -1,0 +1,235 @@
+//! Deterministic synthetic image-classification dataset.
+//!
+//! Each class is a mixture of low-frequency 2-D sinusoid components with
+//! class-specific frequencies/amplitudes per channel. Samples are drawn by
+//! phase-shifting the components (equivalent to a random translation of
+//! the pattern — translation invariance is what convs exploit) and adding
+//! pixel noise plus a brightness jitter. The task is learnable by the mini
+//! CNNs to high accuracy yet degrades under aggressive quantization, which
+//! is exactly the signal SigmaQuant's search consumes.
+//!
+//! Everything is a pure function of (seed, stream, index): train batches
+//! and the eval set are disjoint deterministic streams, reproducible
+//! across runs and machines.
+
+use crate::manifest::DatasetSpec;
+use crate::util::rng::Rng;
+
+/// Number of sinusoid components per class/channel.
+const COMPONENTS: usize = 4;
+/// Pixel noise stddev (tuned so the float mini models land in the
+/// 80-95% accuracy band — high enough that aggressive quantization
+/// visibly costs accuracy, the regime the paper operates in).
+const NOISE: f64 = 2.2;
+/// Brightness jitter stddev.
+const JITTER: f64 = 0.30;
+/// Fraction of each class pattern shared with a common base pattern —
+/// makes classes mutually confusable instead of orthogonal.
+const SHARED: f64 = 0.72;
+
+#[derive(Debug, Clone, Copy)]
+struct Component {
+    fx: f64,
+    fy: f64,
+    phase: f64,
+    amp: f64,
+}
+
+/// Deterministic synthetic dataset bound to a manifest's geometry.
+pub struct SynthDataset {
+    pub spec: DatasetSpec,
+    seed: u64,
+    /// [class][channel][component]
+    comps: Vec<Vec<Vec<Component>>>,
+}
+
+impl SynthDataset {
+    pub fn new(spec: DatasetSpec, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xDA7A_5EED);
+        // a shared base pattern that every class inherits (weight SHARED)
+        let mut base: Vec<Vec<Component>> = Vec::with_capacity(spec.channels);
+        for _ch in 0..spec.channels {
+            base.push(
+                (0..COMPONENTS)
+                    .map(|_| Component {
+                        fx: rng.range(0.5, 2.5) * std::f64::consts::TAU
+                            / spec.width as f64,
+                        fy: rng.range(0.5, 2.5) * std::f64::consts::TAU
+                            / spec.height as f64,
+                        phase: rng.range(0.0, std::f64::consts::TAU),
+                        amp: rng.range(0.4, 1.0),
+                    })
+                    .collect(),
+            );
+        }
+        let mut comps = Vec::with_capacity(spec.classes);
+        for _class in 0..spec.classes {
+            let mut per_ch = Vec::with_capacity(spec.channels);
+            for (ch, base_ch) in base.iter().enumerate() {
+                let _ = ch;
+                let mut cs = Vec::with_capacity(COMPONENTS);
+                for b in base_ch {
+                    // class pattern = shared base + class-specific delta
+                    cs.push(Component {
+                        fx: SHARED * b.fx
+                            + (1.0 - SHARED)
+                                * rng.range(0.5, 2.5) * std::f64::consts::TAU
+                                / spec.width as f64,
+                        fy: SHARED * b.fy
+                            + (1.0 - SHARED)
+                                * rng.range(0.5, 2.5) * std::f64::consts::TAU
+                                / spec.height as f64,
+                        phase: b.phase + (1.0 - SHARED) * rng.range(0.0, std::f64::consts::TAU),
+                        amp: SHARED * b.amp + (1.0 - SHARED) * rng.range(0.4, 1.0),
+                    });
+                }
+                per_ch.push(cs);
+            }
+            comps.push(per_ch);
+        }
+        SynthDataset { spec, seed, comps }
+    }
+
+    /// Render one sample into `out` (len = H*W*C, NHWC within the sample).
+    fn render(&self, class: usize, rng: &mut Rng, out: &mut [f32]) {
+        let (h, w, c) = (self.spec.height, self.spec.width, self.spec.channels);
+        debug_assert_eq!(out.len(), h * w * c);
+        // translation == per-sample phase offset for every component
+        let dx = rng.range(0.0, std::f64::consts::TAU);
+        let dy = rng.range(0.0, std::f64::consts::TAU);
+        let bright = 1.0 + JITTER * rng.normal();
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    let mut v = 0.0;
+                    for comp in &self.comps[class][ch] {
+                        v += comp.amp
+                            * (comp.fx * x as f64 + dx
+                                + comp.fy * y as f64 + dy
+                                + comp.phase)
+                                .sin();
+                    }
+                    v = v * bright + NOISE * rng.normal();
+                    out[(y * w + x) * c + ch] = v as f32;
+                }
+            }
+        }
+    }
+
+    /// Deterministic training batch `batch_idx` (stream 0).
+    pub fn train_batch(&self, batch_idx: u64, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        self.stream_batch(0x0, batch_idx, batch)
+    }
+
+    /// Deterministic eval set of `n` samples (stream 1, disjoint from train).
+    pub fn eval_set(&self, n: usize) -> (Vec<f32>, Vec<i32>) {
+        self.stream_batch(0x1, 0, n)
+    }
+
+    fn stream_batch(
+        &self,
+        stream: u64,
+        batch_idx: u64,
+        n: usize,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let img = self.spec.image_len();
+        let mut xs = vec![0.0f32; n * img];
+        let mut ys = vec![0i32; n];
+        let mut rng = Rng::new(
+            self.seed
+                ^ stream.wrapping_mul(0xA5A5_A5A5_DEAD_BEEF)
+                ^ batch_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        for i in 0..n {
+            let class = rng.below(self.spec.classes);
+            ys[i] = class as i32;
+            self.render(class, &mut rng, &mut xs[i * img..(i + 1) * img]);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> DatasetSpec {
+        DatasetSpec {
+            height: 16,
+            width: 16,
+            channels: 3,
+            classes: 10,
+            train_batch: 64,
+            eval_batch: 256,
+        }
+    }
+
+    #[test]
+    fn deterministic_batches() {
+        let d1 = SynthDataset::new(spec(), 7);
+        let d2 = SynthDataset::new(spec(), 7);
+        let (x1, y1) = d1.train_batch(3, 16);
+        let (x2, y2) = d2.train_batch(3, 16);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn batches_differ_by_index_and_stream() {
+        let d = SynthDataset::new(spec(), 7);
+        let (x0, _) = d.train_batch(0, 8);
+        let (x1, _) = d.train_batch(1, 8);
+        assert_ne!(x0, x1);
+        let (xe, _) = d.eval_set(8);
+        assert_ne!(x0, xe);
+    }
+
+    #[test]
+    fn labels_in_range_all_classes_hit() {
+        let d = SynthDataset::new(spec(), 7);
+        let (_, ys) = d.eval_set(512);
+        let mut seen = [false; 10];
+        for &y in &ys {
+            assert!((0..10).contains(&y));
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn values_finite_and_bounded() {
+        let d = SynthDataset::new(spec(), 7);
+        let (xs, _) = d.train_batch(0, 32);
+        for &v in &xs {
+            assert!(v.is_finite());
+            // signal ~ +-3 plus NOISE-sigma Gaussian tails
+            assert!(v.abs() < 25.0, "unexpectedly large pixel {v}");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean image of class a must differ from class b well beyond noise
+        let d = SynthDataset::new(spec(), 7);
+        let img = d.spec.image_len();
+        let n = 64;
+        let mut means = vec![vec![0.0f64; img]; 2];
+        let mut rng = Rng::new(123);
+        for (ci, class) in [0usize, 1].iter().enumerate() {
+            let mut buf = vec![0.0f32; img];
+            for _ in 0..n {
+                d.render(*class, &mut rng, &mut buf);
+                for (m, &v) in means[ci].iter_mut().zip(buf.iter()) {
+                    *m += v as f64 / n as f64;
+                }
+            }
+        }
+        let dist: f64 = means[0]
+            .iter()
+            .zip(&means[1])
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist > 1.0, "class means too close: {dist}");
+    }
+}

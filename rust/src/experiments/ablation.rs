@@ -1,0 +1,72 @@
+//! Ablation bench (DESIGN.md §7): the design choices the paper leaves
+//! implicit, swept explicitly.
+//!
+//! * `sigma_weight` — Phase 2's sensitivity score mixes normalized KL and
+//!   normalized σ; 0 = pure KL (paper's Phase-2 definition), 1 = pure σ
+//!   (paper's Phase-1 signal). The sweep quantifies how much the KL
+//!   refinement actually buys over σ alone.
+//! * `layers_per_round` — the paper fixes m=2; sweep 1/2/4.
+//! * CSD recoding on/off for the resulting model's hardware cost.
+
+use super::common::Ctx;
+use crate::coordinator::{SearchConfig, SigmaQuant};
+use crate::hw::ppa::model_ppa;
+use crate::hw::shift_add::ShiftAddConfig;
+use crate::report::csv::CsvWriter;
+use crate::report::table::{pct, Table};
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx, arch: &str, eval_n: usize) -> Result<()> {
+    let (s0, _) = ctx.pretrained_session(arch)?;
+    let float_acc = ctx.float_accuracy(&s0, eval_n)?;
+    drop(s0);
+
+    let mut t = Table::new(
+        &format!("Ablation — sensitivity mix and step size on {arch}"),
+        &["sigma_weight", "m layers/round", "Final Acc", "Size (KiB)",
+          "P2 rounds", "reverted", "Met"],
+    );
+    let mut csv = CsvWriter::new(
+        ctx.results_path(&format!("ablation_{arch}.csv")),
+        &["sigma_weight", "layers_per_round", "acc", "size_bytes",
+          "p2_rounds", "reverted", "met", "energy_vs_int8"],
+    );
+    for sigma_weight in [0.0f64, 0.3, 0.7, 1.0] {
+        for m in [1usize, 2, 4] {
+            // skip off-diagonal combos except around the defaults to
+            // keep the sweep affordable; the CSV marks what ran
+            if sigma_weight != 0.3 && m != 2 {
+                continue;
+            }
+            let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+            let targets = ctx.targets_from(&s, float_acc, 0.02, 0.40);
+            let mut cfg = SearchConfig::defaults(targets);
+            cfg.eval_samples = eval_n;
+            cfg.seed = ctx.seed;
+            cfg.sigma_weight = sigma_weight;
+            cfg.layers_per_round = m;
+            let sq = SigmaQuant::new(cfg, &ctx.data);
+            let o = sq.run(&mut s, &ctx.data, &mut cur)?;
+            let ppa = model_ppa(&s.arch, &s.all_qlayer_weights(), &o.wbits,
+                                ShiftAddConfig::default());
+            let reverted: usize = o
+                .trajectory
+                .points
+                .iter()
+                .filter(|p| p.action.contains("reverted"))
+                .count();
+            t.row(&[format!("{sigma_weight}"), m.to_string(), pct(o.accuracy),
+                    format!("{:.1}", o.resource / 1024.0),
+                    o.phase2_rounds.to_string(), reverted.to_string(),
+                    o.met.to_string()]);
+            csv.row(&[format!("{sigma_weight}"), m.to_string(),
+                      format!("{:.4}", o.accuracy), format!("{:.0}", o.resource),
+                      o.phase2_rounds.to_string(), reverted.to_string(),
+                      o.met.to_string(), format!("{:.4}", ppa.energy_vs_int8)]);
+        }
+    }
+    println!("{}", t.render());
+    let p = csv.flush()?;
+    println!("wrote {}", p.display());
+    Ok(())
+}

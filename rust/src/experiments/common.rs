@@ -1,0 +1,112 @@
+//! Shared experiment scaffolding: runtime construction, float
+//! pre-training with on-disk checkpoint caching, and the standard
+//! target derivation used across tables.
+
+use crate::coordinator::qat::{pretrain, TrainCursor};
+use crate::coordinator::zones::Targets;
+use crate::data::SynthDataset;
+use crate::quant::{int8_size_bytes, BitAssignment};
+use crate::runtime::{load_params, save_params, ModelSession, Runtime};
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Global experiment context.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub data: SynthDataset,
+    pub results_dir: PathBuf,
+    pub seed: u64,
+    /// Float pre-training steps (cached; see `pretrained_session`).
+    pub pretrain_steps: usize,
+    pub pretrain_lr: f32,
+    pub verbose: bool,
+}
+
+impl Ctx {
+    pub fn new(artifacts_dir: &str, results_dir: &str, seed: u64) -> Result<Ctx> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let data = SynthDataset::new(rt.manifest.dataset.clone(), seed);
+        Ok(Ctx {
+            rt,
+            data,
+            results_dir: PathBuf::from(results_dir),
+            seed,
+            pretrain_steps: 300,
+            pretrain_lr: 0.05,
+            verbose: true,
+        })
+    }
+
+    fn checkpoint_path(&self, arch: &str) -> PathBuf {
+        self.results_dir
+            .join("pretrained")
+            .join(format!("{arch}.seed{}.steps{}.bin", self.seed, self.pretrain_steps))
+    }
+
+    /// Load an architecture with float pre-trained parameters, training
+    /// (and caching the checkpoint) on first use.
+    pub fn pretrained_session(&self, arch: &str) -> Result<(ModelSession<'_>, TrainCursor)> {
+        let mut session = ModelSession::load(&self.rt, arch, self.seed)?;
+        // the cursor starts after the pre-training stream so later QAT
+        // sees fresh batches whether or not the checkpoint was cached
+        let mut cursor = TrainCursor { next_batch: self.pretrain_steps as u64 };
+        let ckpt = self.checkpoint_path(arch);
+        if ckpt.exists() {
+            let params = load_params(&ckpt, &session.arch)?;
+            session.set_params(params)?;
+            if self.verbose {
+                eprintln!("[ctx] {arch}: loaded cached float checkpoint");
+            }
+        } else {
+            if self.verbose {
+                eprintln!(
+                    "[ctx] {arch}: float pre-training {} steps...",
+                    self.pretrain_steps
+                );
+            }
+            let mut c0 = TrainCursor::default();
+            let curve =
+                pretrain(&mut session, &self.data, &mut c0, self.pretrain_lr,
+                         self.pretrain_steps, self.pretrain_steps / 10)?;
+            if self.verbose {
+                if let (Some(f), Some(l)) = (curve.first(), curve.last()) {
+                    eprintln!("[ctx] {arch}: loss {:.3} -> {:.3}", f.1, l.1);
+                }
+            }
+            save_params(&ckpt, session.params())?;
+            cursor = c0;
+        }
+        Ok((session, cursor))
+    }
+
+    /// Float-precision accuracy of a session (32-bit passthrough).
+    pub fn float_accuracy(&self, session: &ModelSession, eval_n: usize) -> Result<f64> {
+        let l = session.num_qlayers();
+        let fb = BitAssignment::raw(vec![32; l]);
+        let (xs, ys) = self.data.eval_set(eval_n);
+        Ok(session.evaluate(&xs, &ys, &fb, &fb)?.accuracy)
+    }
+
+    /// Paper-style targets: accuracy >= float_acc - drop, size <=
+    /// fraction × INT8 size.
+    pub fn targets_from(
+        &self,
+        session: &ModelSession,
+        float_acc: f64,
+        acc_drop: f64,
+        size_fraction_of_int8: f64,
+    ) -> Targets {
+        let int8 = int8_size_bytes(&session.arch);
+        Targets {
+            acc_target: float_acc - acc_drop,
+            size_target: int8 * size_fraction_of_int8,
+            acc_buffer: 0.02,
+            size_buffer: int8 * 0.05,
+            abandon_factor: 8.0,
+        }
+    }
+
+    pub fn results_path(&self, name: &str) -> PathBuf {
+        self.results_dir.join(name)
+    }
+}

@@ -1,0 +1,83 @@
+//! Fig. 3 — the two-phase trajectory through the Fig. 2 zones.
+//!
+//! Runs the full search on one model and emits (a) the trajectory CSV and
+//! (b) an ASCII rendering of the accuracy-vs-size path, annotated with
+//! phase and zone per point.
+
+use super::common::Ctx;
+use crate::coordinator::{SearchConfig, SigmaQuant};
+use crate::report::csv::CsvWriter;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx, arch: &str, eval_n: usize) -> Result<()> {
+    let (mut session, mut cursor) = ctx.pretrained_session(arch)?;
+    let float_acc = ctx.float_accuracy(&session, eval_n)?;
+    let targets = ctx.targets_from(&session, float_acc, 0.01, 0.75 * 0.25 / 0.25);
+    // paper setting: memory target = 75% of INT8 size, <=1% drop
+    let targets = crate::coordinator::zones::Targets {
+        size_target: crate::quant::int8_size_bytes(&session.arch) * 0.75,
+        ..targets
+    };
+    let mut cfg = SearchConfig::defaults(targets);
+    cfg.eval_samples = eval_n;
+    cfg.seed = ctx.seed;
+    let sq = SigmaQuant::new(cfg, &ctx.data);
+    let outcome = sq.run(&mut session, &ctx.data, &mut cursor)?;
+
+    // CSV
+    let path = ctx.results_path(&format!("fig3_{arch}.csv"));
+    std::fs::create_dir_all(path.parent().unwrap())?;
+    std::fs::write(&path, outcome.trajectory.to_csv())?;
+    println!("wrote {}", path.display());
+
+    // ASCII path
+    println!(
+        "Fig. 3 — two-phase trajectory for {arch} (targets: acc >= {:.1}%, size <= {:.1} KiB)",
+        sq.cfg.targets.acc_target * 100.0,
+        sq.cfg.targets.size_target / 1024.0
+    );
+    for p in &outcome.trajectory.points {
+        println!(
+            "  [{:<6}] iter {:>2}: acc {:>6.2}%  size {:>8.1} KiB  zone {:<12} {}",
+            p.phase,
+            p.iter,
+            p.accuracy * 100.0,
+            p.size_bytes / 1024.0,
+            p.zone.to_string(),
+            p.action
+        );
+    }
+    println!(
+        "outcome: met={} zone={} bits=[{}]",
+        outcome.met, outcome.zone, outcome.wbits.summary()
+    );
+
+    // ASCII rendering of the trajectory in the (size, accuracy) plane
+    let mut plot = crate::report::plot::ScatterPlot::new(
+        &format!("Fig. 3 — search trajectory ({arch})"),
+        "model size (KiB)", "accuracy");
+    for (phase, glyph) in [("start", 'o'), ("phase1", '1'), ("phase2", '2'), ("final", 'F')] {
+        let pts: Vec<(f64, f64)> = outcome.trajectory.points.iter()
+            .filter(|p| p.phase == phase)
+            .map(|p| (p.size_bytes / 1024.0, p.accuracy)).collect();
+        if !pts.is_empty() {
+            plot.series(glyph, phase, pts);
+        }
+    }
+    println!("{}", plot.render());
+
+    // summary CSV of the landing point
+    let mut csv = CsvWriter::new(
+        ctx.results_path(&format!("fig3_{arch}_summary.csv")),
+        &["arch", "final_acc", "final_size_bytes", "met", "p2_rounds"],
+    );
+    csv.row(&[
+        arch.to_string(),
+        format!("{:.4}", outcome.accuracy),
+        format!("{:.0}", outcome.resource),
+        outcome.met.to_string(),
+        outcome.phase2_rounds.to_string(),
+    ]);
+    csv.flush()?;
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Fig. 4 — accuracy vs model size: uniform quantization vs SigmaQuant
+//! across the ResNet family, with regression fits and ±1σ bands (4b).
+
+use super::common::Ctx;
+use crate::coordinator::{SearchConfig, SigmaQuant};
+use crate::report::csv::CsvWriter;
+use crate::report::table::Table;
+use crate::stats::LinearFit;
+use anyhow::Result;
+
+/// One measured (scheme, size, acc) point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub arch: String,
+    pub scheme: &'static str,
+    pub label: String,
+    pub size_bytes: f64,
+    pub accuracy: f64,
+}
+
+pub fn run(ctx: &Ctx, archs: &[&str], eval_n: usize, qat_steps: usize) -> Result<()> {
+    let mut points: Vec<Point> = Vec::new();
+    let (xs, ys) = ctx.data.eval_set(eval_n);
+
+    for &arch in archs {
+        // uniform arms
+        for bits in [2u8, 4, 6, 8] {
+            let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+            let r = crate::baselines::run_uniform(
+                &mut s, &ctx.data, &mut cur, bits, qat_steps, 0.02, &xs, &ys)?;
+            points.push(Point {
+                arch: arch.into(),
+                scheme: "uniform",
+                label: format!("A8W{bits}"),
+                size_bytes: r.size_bytes,
+                accuracy: r.accuracy,
+            });
+            println!("  {arch} uniform W{bits}: acc {:.2}% size {:.1}KiB",
+                     r.accuracy * 100.0, r.size_bytes / 1024.0);
+        }
+        // sigma operating points: three size budgets
+        let (s0, _) = ctx.pretrained_session(arch)?;
+        let float_acc = ctx.float_accuracy(&s0, eval_n)?;
+        drop(s0);
+        for size_frac in [0.30f64, 0.45, 0.60] {
+            let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+            let targets = ctx.targets_from(&s, float_acc, 0.02, size_frac);
+            let mut cfg = SearchConfig::defaults(targets);
+            cfg.eval_samples = eval_n;
+            cfg.seed = ctx.seed;
+            cfg.qat_steps_p1 = qat_steps;
+            cfg.qat_steps_p2 = qat_steps / 2;
+            let sq = SigmaQuant::new(cfg, &ctx.data);
+            let o = sq.run(&mut s, &ctx.data, &mut cur)?;
+            points.push(Point {
+                arch: arch.into(),
+                scheme: "sigma",
+                label: format!("budget {:.0}%", size_frac * 100.0),
+                size_bytes: o.resource,
+                accuracy: o.accuracy,
+            });
+            println!("  {arch} sigma @{:.0}%: acc {:.2}% size {:.1}KiB met={}",
+                     size_frac * 100.0, o.accuracy * 100.0,
+                     o.resource / 1024.0, o.met);
+        }
+    }
+
+    // ASCII frontier (Fig. 4a): accuracy vs size, both schemes
+    let mut plot = crate::report::plot::ScatterPlot::new(
+        "Fig. 4(a) — Top-1 accuracy vs model size",
+        "model size (KiB)", "accuracy");
+    plot.series('u', "uniform",
+        points.iter().filter(|p| p.scheme == "uniform")
+            .map(|p| (p.size_bytes / 1024.0, p.accuracy)).collect());
+    plot.series('S', "sigma (ours)",
+        points.iter().filter(|p| p.scheme == "sigma")
+            .map(|p| (p.size_bytes / 1024.0, p.accuracy)).collect());
+    println!("{}", plot.render());
+
+    // CSV of all points
+    let mut csv = CsvWriter::new(
+        ctx.results_path("fig4_points.csv"),
+        &["arch", "scheme", "label", "size_bytes", "accuracy"],
+    );
+    for p in &points {
+        csv.row(&[p.arch.clone(), p.scheme.into(), p.label.clone(),
+                  format!("{:.0}", p.size_bytes), format!("{:.4}", p.accuracy)]);
+    }
+    let path = csv.flush()?;
+    println!("wrote {}", path.display());
+
+    // Fig 4(b): regression fits per scheme over normalized size
+    let fit_for = |scheme: &str| -> Option<LinearFit> {
+        let pts: Vec<(f64, f64)> = points
+            .iter()
+            .filter(|p| p.scheme == scheme)
+            .map(|p| ((p.size_bytes / 1024.0).ln(), p.accuracy))
+            .collect();
+        if pts.len() < 2 {
+            return None;
+        }
+        let (fx, fy): (Vec<f64>, Vec<f64>) = pts.into_iter().unzip();
+        Some(LinearFit::fit(&fx, &fy))
+    };
+    let (Some(fu), Some(fs)) = (fit_for("uniform"), fit_for("sigma")) else {
+        println!("not enough points for regression");
+        return Ok(());
+    };
+    let mut t = Table::new(
+        "Fig. 4(b) — regression fits: accuracy vs ln(size KiB)",
+        &["Scheme", "slope", "intercept", "resid sigma", "R^2", "n"],
+    );
+    for (name, f) in [("uniform", &fu), ("sigma", &fs)] {
+        t.row(&[name.into(), format!("{:.4}", f.slope),
+                format!("{:.4}", f.intercept), format!("{:.4}", f.sigma),
+                format!("{:.3}", f.r2), f.n.to_string()]);
+    }
+    println!("{}", t.render());
+
+    // headline gaps at the shared median size
+    let mut sizes: Vec<f64> =
+        points.iter().map(|p| (p.size_bytes / 1024.0).ln()).collect();
+    sizes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = sizes[sizes.len() / 2];
+    let acc_gain = fs.predict(mid) - fu.predict(mid);
+    let acc_mid = (fs.predict(mid) + fu.predict(mid)) / 2.0;
+    let size_saving = (fu.x_at(acc_mid).exp() - fs.x_at(acc_mid).exp())
+        / fu.x_at(acc_mid).exp();
+    println!(
+        "accuracy gain at equal size: {:+.2}pp (paper: ~+4pp)\n\
+         size saving at equal accuracy: {:.1}% (paper: ~40%)\n\
+         band overlap: |gap| vs sigma_u+sigma_s = {:.3} vs {:.3}",
+        acc_gain * 100.0,
+        size_saving * 100.0,
+        acc_gain.abs(),
+        fu.sigma + fs.sigma
+    );
+
+    let mut fcsv = CsvWriter::new(
+        ctx.results_path("fig4_fits.csv"),
+        &["scheme", "slope", "intercept", "sigma", "r2", "acc_gain_pp", "size_saving_pct"],
+    );
+    fcsv.row(&["uniform".into(), format!("{:.5}", fu.slope), format!("{:.5}", fu.intercept),
+               format!("{:.5}", fu.sigma), format!("{:.4}", fu.r2), String::new(), String::new()]);
+    fcsv.row(&["sigma".into(), format!("{:.5}", fs.slope), format!("{:.5}", fs.intercept),
+               format!("{:.5}", fs.sigma), format!("{:.4}", fs.r2),
+               format!("{:.2}", acc_gain * 100.0), format!("{:.1}", size_saving * 100.0)]);
+    fcsv.flush()?;
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Fig. 5 — normalized energy and cycle count vs accuracy drop on the
+//! shift-add MAC, for uniform A8W{2,4,6,8} and SigmaQuant models, all
+//! normalized to the INT8 MAC implementation.
+
+use super::common::Ctx;
+use crate::coordinator::{SearchConfig, SigmaQuant};
+use crate::hw::ppa::model_ppa;
+use crate::hw::shift_add::ShiftAddConfig;
+use crate::quant::BitAssignment;
+use crate::report::csv::CsvWriter;
+use crate::report::table::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx, archs: &[&str], eval_n: usize, qat_steps: usize) -> Result<()> {
+    let (xs, ys) = ctx.data.eval_set(eval_n);
+    let mut csv = CsvWriter::new(
+        ctx.results_path("fig5.csv"),
+        &["arch", "scheme", "acc_drop_pp", "energy_vs_int8", "cycles_vs_int8",
+          "mean_cycles_per_mac"],
+    );
+    let cfg_hw = ShiftAddConfig::default();
+    let mut t = Table::new(
+        "Fig. 5 — shift-add PPA vs accuracy (normalized to INT8 MAC)",
+        &["Model", "Scheme", "Acc drop", "Energy", "Cycles"],
+    );
+
+    for &arch in archs {
+        let (s0, _) = ctx.pretrained_session(arch)?;
+        let float_acc = ctx.float_accuracy(&s0, eval_n)?;
+        drop(s0);
+
+        // uniform arms on the shift-add unit
+        for bits in [2u8, 4, 6, 8] {
+            let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+            let r = crate::baselines::run_uniform(
+                &mut s, &ctx.data, &mut cur, bits, qat_steps, 0.02, &xs, &ys)?;
+            let ppa = model_ppa(&s.arch, &s.all_qlayer_weights(), &r.assignment, cfg_hw);
+            let drop_pp = (float_acc - r.accuracy) * 100.0;
+            t.row(&[arch.into(), format!("A8W{bits}"), format!("{drop_pp:.2}pp"),
+                    format!("{:.3}", ppa.energy_vs_int8),
+                    format!("{:.2}x", ppa.cycles_vs_int8)]);
+            csv.row(&[arch.into(), format!("A8W{bits}"), format!("{drop_pp:.3}"),
+                      format!("{:.4}", ppa.energy_vs_int8),
+                      format!("{:.4}", ppa.cycles_vs_int8),
+                      format!("{:.3}", ppa.mean_cycles_per_mac)]);
+        }
+
+        // SigmaQuant operating points (energy-lean budgets)
+        for size_frac in [0.35f64, 0.50] {
+            let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+            let targets = ctx.targets_from(&s, float_acc, 0.03, size_frac);
+            let mut cfg = SearchConfig::defaults(targets);
+            cfg.eval_samples = eval_n;
+            cfg.seed = ctx.seed;
+            cfg.qat_steps_p1 = qat_steps;
+            cfg.qat_steps_p2 = qat_steps / 2;
+            let sq = SigmaQuant::new(cfg, &ctx.data);
+            let o = sq.run(&mut s, &ctx.data, &mut cur)?;
+            let ppa = model_ppa(&s.arch, &s.all_qlayer_weights(), &o.wbits, cfg_hw);
+            let drop_pp = (float_acc - o.accuracy) * 100.0;
+            let label = format!("Sigma@{:.0}%", size_frac * 100.0);
+            t.row(&[arch.into(), label.clone(), format!("{drop_pp:.2}pp"),
+                    format!("{:.3}", ppa.energy_vs_int8),
+                    format!("{:.2}x", ppa.cycles_vs_int8)]);
+            csv.row(&[arch.into(), label, format!("{drop_pp:.3}"),
+                      format!("{:.4}", ppa.energy_vs_int8),
+                      format!("{:.4}", ppa.cycles_vs_int8),
+                      format!("{:.3}", ppa.mean_cycles_per_mac)]);
+        }
+
+        // INT8 reference row (the normalization base): energy=1, cycles=1
+        let int8 = BitAssignment::uniform(0, 8); // display only
+        let _ = int8;
+        t.row(&[arch.into(), "INT8 impl".into(), "baseline".into(),
+                "1.000".into(), "1.00x".into()]);
+    }
+    println!("{}", t.render());
+    let p = csv.flush()?;
+    println!("wrote {}", p.display());
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! One module per paper table/figure (DESIGN.md §5) plus shared setup.
+
+pub mod ablation;
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;

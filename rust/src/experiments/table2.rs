@@ -1,0 +1,92 @@
+//! Table II — Phase-1 vs final accuracy/size across the ResNet family
+//! under the paper's <=2% accuracy-drop and <=40%-of-INT8-size targets.
+
+use super::common::Ctx;
+use crate::coordinator::{SearchConfig, SigmaQuant, Zone};
+use crate::quant::int8_size_bytes;
+use crate::report::csv::CsvWriter;
+use crate::report::table::{kib, pct, Table};
+use anyhow::Result;
+
+/// Default family for the tables: the three mid-size ResNets. The deep
+/// 101/152 variants work identically but PJRT-compile in tens of minutes
+/// on CPU (EXPERIMENTS.md §Runtime-notes); pass --archs to include them.
+pub const RESNETS: [&str; 3] = [
+    "resnet18_mini",
+    "resnet34_mini",
+    "resnet50_mini",
+];
+
+/// The full paper family (Table II lists all five).
+pub const RESNETS_ALL: [&str; 5] = [
+    "resnet18_mini",
+    "resnet34_mini",
+    "resnet50_mini",
+    "resnet101_mini",
+    "resnet152_mini",
+];
+
+pub fn run(ctx: &Ctx, archs: &[&str], eval_n: usize) -> Result<()> {
+    let mut t = Table::new(
+        "Table II — model sizes and accuracies (<=2% drop, <=40% INT8 size)",
+        &["Model", "Int8 Size(KiB)", "Int8 Acc", "Final Acc", "Final Size(KiB)",
+          "Phase I Acc", "Phase I Size(KiB)", "Next Phase", "Target Met"],
+    );
+    let mut csv = CsvWriter::new(
+        ctx.results_path("table2.csv"),
+        &["arch", "int8_size", "int8_acc", "final_acc", "final_size",
+          "p1_acc", "p1_size", "direction", "met"],
+    );
+    for &arch in archs {
+        let (mut session, mut cursor) = ctx.pretrained_session(arch)?;
+        let float_acc = ctx.float_accuracy(&session, eval_n)?;
+        let targets = ctx.targets_from(&session, float_acc, 0.02, 0.40);
+        let mut cfg = SearchConfig::defaults(targets);
+        cfg.eval_samples = eval_n;
+        cfg.seed = ctx.seed;
+        let sq = SigmaQuant::new(cfg, &ctx.data);
+        let o = sq.run(&mut session, &ctx.data, &mut cursor)?;
+        let int8 = int8_size_bytes(&session.arch);
+        // direction arrow: what Phase 2 had to do after Phase 1
+        let dir = if o.phase2_rounds == 0 {
+            "-"
+        } else if o.phase1.accuracy < sq.cfg.targets.acc_target {
+            "up"
+        } else {
+            "down"
+        };
+        t.row(&[
+            arch.to_string(),
+            kib(int8),
+            pct(o.int8_accuracy),
+            pct(o.accuracy),
+            kib(o.resource),
+            pct(o.phase1.accuracy),
+            kib(o.phase1.resource),
+            dir.to_string(),
+            if o.met { "yes".into() } else if o.zone == Zone::Abandon { "abandoned".into() } else { "no".into() },
+        ]);
+        csv.row(&[
+            arch.to_string(),
+            format!("{int8:.0}"),
+            format!("{:.4}", o.int8_accuracy),
+            format!("{:.4}", o.accuracy),
+            format!("{:.0}", o.resource),
+            format!("{:.4}", o.phase1.accuracy),
+            format!("{:.0}", o.phase1.resource),
+            dir.to_string(),
+            o.met.to_string(),
+        ]);
+        println!(
+            "  {arch}: int8 {:.2}% -> final {:.2}% @ {:.0}% of INT8 size (met={})",
+            o.int8_accuracy * 100.0,
+            o.accuracy * 100.0,
+            100.0 * o.resource / int8,
+            o.met
+        );
+    }
+    println!("{}", t.render());
+    let p = csv.flush()?;
+    println!("wrote {}", p.display());
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Table III — SigmaQuant vs comparator mixed-precision schemes on
+//! ResNet-50 and Inception (model size vs Top-1 accuracy).
+//!
+//! Comparators built in-repo (DESIGN.md §4): uniform A8W{8,4,2}, the
+//! entropy-based allocator [22], the HAWQ-style perturbation-sensitivity
+//! proxy, and the BOP-greedy heuristic. Each gets the same short QAT
+//! budget as SigmaQuant's refinement for a fair comparison.
+
+use super::common::Ctx;
+use crate::baselines::{
+    bop_greedy_assignment, entropy_assignment, hessian_proxy_assignment,
+    hessian_proxy::perturbation_sensitivities, run_uniform,
+};
+use crate::coordinator::qat::run_qat;
+use crate::coordinator::{SearchConfig, SigmaQuant};
+use crate::quant::{int8_size_bytes, model_size_bytes, BitAssignment};
+use crate::report::csv::CsvWriter;
+use crate::report::table::{kib, pct, Table};
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx, archs: &[&str], eval_n: usize, qat_steps: usize) -> Result<()> {
+    let mut csv = CsvWriter::new(
+        ctx.results_path("table3.csv"),
+        &["arch", "method", "bits", "size_bytes", "accuracy"],
+    );
+    for &arch in archs {
+        let mut t = Table::new(
+            &format!("Table III — quantization methods on {arch}"),
+            &["Method", "Bits(W,A)", "Size(KiB)", "Top-1 Acc"],
+        );
+        let (xs, ys) = ctx.data.eval_set(eval_n);
+
+        // float baseline
+        let (session, _) = ctx.pretrained_session(arch)?;
+        let float_acc = ctx.float_accuracy(&session, eval_n)?;
+        let int8 = int8_size_bytes(&session.arch);
+        let l = session.num_qlayers();
+        t.row(&["Baseline (float)".into(), "32,32".into(),
+                kib(int8 * 4.0), pct(float_acc)]);
+        csv.row(&[arch.into(), "float".into(), "32".into(),
+                  format!("{:.0}", int8 * 4.0), format!("{float_acc:.4}")]);
+        drop(session);
+
+        // uniform arms — each from the same pre-trained checkpoint
+        for bits in [8u8, 4, 2] {
+            let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+            let r = run_uniform(&mut s, &ctx.data, &mut cur, bits, qat_steps,
+                                0.02, &xs, &ys)?;
+            t.row(&[format!("Uniform"), format!("{bits},8"),
+                    kib(r.size_bytes), pct(r.accuracy)]);
+            csv.row(&[arch.into(), "uniform".into(), bits.to_string(),
+                      format!("{:.0}", r.size_bytes), format!("{:.4}", r.accuracy)]);
+        }
+
+        // budget shared by all mixed-precision comparators: 45% of INT8
+        let budget = int8 * 0.45;
+
+        // entropy-based allocation [22]
+        {
+            let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+            let w = entropy_assignment(&s.arch, &s.all_qlayer_weights(), budget);
+            let a8 = BitAssignment::uniform(l, 8);
+            run_qat(&mut s, &ctx.data, &mut cur, &w, &a8, 0.02, qat_steps)?;
+            let acc = s.evaluate(&xs, &ys, &w, &a8)?.accuracy;
+            let size = model_size_bytes(&s.arch, &w);
+            t.row(&["Entropy [22]".into(), "mix,8".into(), kib(size), pct(acc)]);
+            csv.row(&[arch.into(), "entropy".into(), w.summary(),
+                      format!("{size:.0}"), format!("{acc:.4}")]);
+        }
+
+        // HAWQ-style sensitivity proxy
+        {
+            let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+            let sens = perturbation_sensitivities(&s, &xs, &ys, 4)?;
+            let w = hessian_proxy_assignment(&s.arch, &sens, budget);
+            let a8 = BitAssignment::uniform(l, 8);
+            run_qat(&mut s, &ctx.data, &mut cur, &w, &a8, 0.02, qat_steps)?;
+            let acc = s.evaluate(&xs, &ys, &w, &a8)?.accuracy;
+            let size = model_size_bytes(&s.arch, &w);
+            t.row(&["HAWQ-proxy".into(), "mix,8".into(), kib(size), pct(acc)]);
+            csv.row(&[arch.into(), "hawq_proxy".into(), w.summary(),
+                      format!("{size:.0}"), format!("{acc:.4}")]);
+        }
+
+        // BOP-greedy heuristic
+        {
+            let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+            let w = bop_greedy_assignment(&s.arch, &s.all_qlayer_weights(), 0.45, 0.8);
+            let a8 = BitAssignment::uniform(l, 8);
+            run_qat(&mut s, &ctx.data, &mut cur, &w, &a8, 0.02, qat_steps)?;
+            let acc = s.evaluate(&xs, &ys, &w, &a8)?.accuracy;
+            let size = model_size_bytes(&s.arch, &w);
+            t.row(&["BOP-greedy".into(), "mix,8".into(), kib(size), pct(acc)]);
+            csv.row(&[arch.into(), "bop_greedy".into(), w.summary(),
+                      format!("{size:.0}"), format!("{acc:.4}")]);
+        }
+
+        // SigmaQuant (ours) — two operating points like the paper
+        for (label, size_frac, drop) in
+            [("Ours (tight)", 0.40f64, 0.02f64), ("Ours (tighter)", 0.35, 0.03)]
+        {
+            let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+            let targets = ctx.targets_from(&s, float_acc, drop, size_frac);
+            let mut cfg = SearchConfig::defaults(targets);
+            cfg.eval_samples = eval_n;
+            cfg.seed = ctx.seed;
+            let sq = SigmaQuant::new(cfg, &ctx.data);
+            let o = sq.run(&mut s, &ctx.data, &mut cur)?;
+            t.row(&[label.into(), "mix,8".into(), kib(o.resource), pct(o.accuracy)]);
+            csv.row(&[arch.into(), label.into(), o.wbits.summary(),
+                      format!("{:.0}", o.resource), format!("{:.4}", o.accuracy)]);
+        }
+        println!("{}", t.render());
+    }
+    let p = csv.flush()?;
+    println!("wrote {}", p.display());
+    Ok(())
+}

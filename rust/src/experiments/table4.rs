@@ -1,0 +1,57 @@
+//! Table IV — buffer (Δ_A, Δ_M) sensitivity of the search on ResNet-34:
+//! conservative / balanced / aggressive settings vs observed rounds and
+//! wall-clock.
+
+use super::common::Ctx;
+use crate::coordinator::{SearchConfig, SigmaQuant};
+use crate::report::csv::CsvWriter;
+use crate::report::table::{pct, Table};
+use anyhow::Result;
+use std::time::Instant;
+
+pub fn run(ctx: &Ctx, arch: &str, eval_n: usize) -> Result<()> {
+    // (label, size target as fraction of INT8)
+    let settings = [
+        ("Conservative", 0.85f64),
+        ("Balanced", 0.75),
+        ("Aggressive", 0.50),
+    ];
+    let mut t = Table::new(
+        &format!("Table IV — buffer sensitivity on {arch} (<=1% drop target)"),
+        &["Setting", "dA", "M target", "Obs. M", "Obs. N", "Time (s)", "Met"],
+    );
+    let mut csv = CsvWriter::new(
+        ctx.results_path("table4.csv"),
+        &["setting", "size_frac", "p1_rounds", "p2_rounds", "seconds", "met",
+          "final_acc", "final_size"],
+    );
+    for (label, frac) in settings {
+        let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+        let float_acc = ctx.float_accuracy(&s, eval_n)?;
+        let targets = ctx.targets_from(&s, float_acc, 0.01, frac);
+        let mut cfg = SearchConfig::defaults(targets);
+        cfg.eval_samples = eval_n;
+        cfg.seed = ctx.seed;
+        let sq = SigmaQuant::new(cfg, &ctx.data);
+        let t0 = Instant::now();
+        let o = sq.run(&mut s, &ctx.data, &mut cur)?;
+        let secs = t0.elapsed().as_secs_f64();
+        t.row(&[label.into(), "1%".into(),
+                format!("{:.0}%", frac * 100.0),
+                o.phase1.rounds.to_string(),
+                o.phase2_rounds.to_string(),
+                format!("{secs:.1}"),
+                if o.met { "yes".into() } else { "no".into() }]);
+        csv.row(&[label.into(), format!("{frac}"),
+                  o.phase1.rounds.to_string(), o.phase2_rounds.to_string(),
+                  format!("{secs:.2}"), o.met.to_string(),
+                  format!("{:.4}", o.accuracy), format!("{:.0}", o.resource)]);
+        println!("  {label}: P1 {} rounds, P2 {} rounds, {secs:.1}s, acc {} size {:.0}% INT8",
+                 o.phase1.rounds, o.phase2_rounds, pct(o.accuracy),
+                 100.0 * o.resource / crate::quant::int8_size_bytes(&s.arch));
+    }
+    println!("{}", t.render());
+    let p = csv.flush()?;
+    println!("wrote {}", p.display());
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Table V — activation reduction under a BOPs target: SigmaQuant with
+//! the compute objective (weights AND activations adapt).
+
+use super::common::Ctx;
+use crate::coordinator::{Objective, SearchConfig, SigmaQuant};
+use crate::quant::bops::int8_bops;
+use crate::report::csv::CsvWriter;
+use crate::report::table::{pct, Table};
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx, archs: &[&str], eval_n: usize) -> Result<()> {
+    let mut t = Table::new(
+        "Table V — activation reduction under a BOPs target (<=2.5% drop)",
+        &["Model", "Accuracy", "BOPs vs A8W8", "W bits (mean)", "A bits (mean)"],
+    );
+    let mut csv = CsvWriter::new(
+        ctx.results_path("table5.csv"),
+        &["arch", "accuracy", "bops_reduction", "wbits", "abits", "met"],
+    );
+    for &arch in archs {
+        let (mut s, mut cur) = ctx.pretrained_session(arch)?;
+        let float_acc = ctx.float_accuracy(&s, eval_n)?;
+        let base = int8_bops(&s.arch);
+        let mut targets = ctx.targets_from(&s, float_acc, 0.025, 1.0);
+        // rewrite the resource constraint in BOPs: 65% of the A8W8 BOPs
+        targets.size_target = base * 0.65;
+        targets.size_buffer = base * 0.05;
+        let mut cfg = SearchConfig::defaults(targets);
+        cfg.objective = Objective::Bops;
+        cfg.eval_samples = eval_n;
+        cfg.seed = ctx.seed;
+        let sq = SigmaQuant::new(cfg, &ctx.data);
+        let o = sq.run(&mut s, &ctx.data, &mut cur)?;
+        let red = 1.0 - o.resource / base;
+        let wmean = o.wbits.mean_bits(&s.arch);
+        let amean = o.abits.mean_bits(&s.arch);
+        t.row(&[arch.into(), pct(o.accuracy), format!("{:+.1}%", -red * 100.0),
+                format!("{wmean:.2}"), format!("{amean:.2}")]);
+        csv.row(&[arch.into(), format!("{:.4}", o.accuracy),
+                  format!("{:.4}", red), o.wbits.summary(), o.abits.summary(),
+                  o.met.to_string()]);
+        println!("  {arch}: acc {:.2}%, BOPs -{:.1}% (met={})",
+                 o.accuracy * 100.0, red * 100.0, o.met);
+    }
+    println!("{}", t.render());
+    let p = csv.flush()?;
+    println!("wrote {}", p.display());
+    Ok(())
+}

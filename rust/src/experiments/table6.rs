@@ -1,0 +1,106 @@
+//! Table VI — MAC implementations: area + energy/cycle characteristics.
+//!
+//! Area values are the paper's post-synthesis constants; the shift-add
+//! cycle statistics are *measured* by the cycle-accurate simulator over
+//! representative weight distributions (Gaussian, as DNN weights are).
+
+use crate::hw::mac_models::{area_saving_vs, shift_add_energy, MAC_IMPLS};
+use crate::hw::shift_add::{weight_cycles, ShiftAddConfig};
+use crate::quant::quantize_to_int;
+use crate::report::csv::CsvWriter;
+use crate::report::table::Table;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Mean cycles/MAC of the shift-add unit over a Gaussian weight
+/// population quantized at `bits` (matches what real layers feed it).
+pub fn mean_cycles_gaussian(bits: u8, csd: bool, n: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let ql = quantize_to_int(&w, 1, bits);
+    let cfg = ShiftAddConfig { csd, ..Default::default() };
+    let total: u64 = ql.codes.iter().map(|&c| weight_cycles(c, cfg) as u64).sum();
+    total as f64 / n as f64
+}
+
+pub fn run(results_dir: &Path) -> Result<()> {
+    let mut t = Table::new(
+        "Table VI — MAC implementations (area: paper post-synthesis, TSMC 28nm)",
+        &["Impl", "Area/um^2", "vs INT8", "Energy/op (INT8=1)", "Cycles/op"],
+    );
+    for m in &MAC_IMPLS {
+        let (energy, cycles): (String, String) = if m.name == "Shift-add" {
+            ("data-dep (see below)".into(), "data-dep".into())
+        } else {
+            (format!("{:.1}", m.energy_per_op), format!("{:.0}", m.cycles_per_op))
+        };
+        let saving = 1.0 - m.area_um2 / 2103.4;
+        t.row(&[
+            m.name.to_string(),
+            format!("{:.1}", m.area_um2),
+            format!("{:+.1}%", -saving * 100.0),
+            energy,
+            cycles,
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "shift-add area saving vs INT8: {:.1}% (paper: 22.3%)",
+        area_saving_vs("INT8").unwrap() * 100.0
+    );
+
+    let mut t2 = Table::new(
+        "Shift-add data-dependent characteristics (measured, Gaussian weights)",
+        &["Weight bits", "cycles/MAC", "cycles/MAC (CSD)", "energy/MAC (INT8=1)"],
+    );
+    let mut csv = CsvWriter::new(
+        results_dir.join("table6_shift_add.csv"),
+        &["bits", "mean_cycles", "mean_cycles_csd", "energy_vs_int8"],
+    );
+    for bits in [2u8, 4, 6, 8] {
+        let c = mean_cycles_gaussian(bits, false, 65536, 42);
+        let ccsd = mean_cycles_gaussian(bits, true, 65536, 42);
+        let e = shift_add_energy(c, bits as f64);
+        t2.row(&[
+            format!("{bits}"),
+            format!("{c:.2}"),
+            format!("{ccsd:.2}"),
+            format!("{e:.3}"),
+        ]);
+        csv.row(&[
+            bits.to_string(),
+            format!("{c:.4}"),
+            format!("{ccsd:.4}"),
+            format!("{e:.4}"),
+        ]);
+    }
+    println!("{}", t2.render());
+    let p = csv.flush()?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_cycles_increase_with_bits() {
+        let mut prev = 0.0;
+        for bits in [2u8, 4, 6, 8] {
+            let c = mean_cycles_gaussian(bits, false, 8192, 1);
+            assert!(c > prev, "bits={bits}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn csd_at_most_binary() {
+        for bits in [4u8, 8] {
+            let c = mean_cycles_gaussian(bits, false, 8192, 2);
+            let csd = mean_cycles_gaussian(bits, true, 8192, 2);
+            assert!(csd <= c + 1e-9);
+        }
+    }
+}

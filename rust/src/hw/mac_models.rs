@@ -1,0 +1,118 @@
+//! PPA constants for the five MAC implementations of the paper's
+//! Table VI, plus the calibrated energy model.
+//!
+//! Area numbers are the paper's own post-synthesis values (TSMC 28 nm,
+//! 0.9 V, 600 MHz). Energy is normalized to "one INT8 MAC op = 1.0" and
+//! split for the shift-add unit into a per-cycle dynamic term and a
+//! per-MAC overhead term (accumulator + control), calibrated on the two
+//! anchors the paper reports for ResNet-34-class workloads:
+//!     A8W2 ≈ −25.0 % energy vs INT8 at mean ≈0.75 cycles/MAC
+//!     A8W4 ≈ −13.8 % energy vs INT8 at mean ≈1.75 cycles/MAC
+//! Solving the 2x2 system gives E_cycle = 0.112, E_overhead = 0.666.
+//! DESIGN.md §4 records this calibration as a substitution.
+
+/// One MAC implementation row of Table VI.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MacImpl {
+    pub name: &'static str,
+    /// Post-synthesis area in um^2 (paper Table VI).
+    pub area_um2: f64,
+    /// Energy per MAC op, normalized to INT8 = 1.0 (fixed-cycle units).
+    pub energy_per_op: f64,
+    /// Cycles per MAC (fixed-cycle units; shift-add is data-dependent).
+    pub cycles_per_op: f64,
+}
+
+/// Table VI rows. Energy ratios for FP32/FP16/BF16 come from the paper's
+/// Fig. 5 caption (up to 5.5x / 4.0x / 3.6x the INT8 cost).
+pub const MAC_IMPLS: [MacImpl; 5] = [
+    MacImpl { name: "FP32", area_um2: 3218.3, energy_per_op: 5.5, cycles_per_op: 1.0 },
+    MacImpl { name: "FP16", area_um2: 3837.9, energy_per_op: 4.0, cycles_per_op: 1.0 },
+    MacImpl { name: "BF16", area_um2: 3501.9, energy_per_op: 3.6, cycles_per_op: 1.0 },
+    MacImpl { name: "INT8", area_um2: 2103.4, energy_per_op: 1.0, cycles_per_op: 1.0 },
+    // shift-add: energy is data-dependent; energy_per_op here is the
+    // per-MAC overhead term, see `ShiftAddEnergy`.
+    MacImpl { name: "Shift-add", area_um2: 1635.4, energy_per_op: SHIFT_ADD_E_OVERHEAD, cycles_per_op: f64::NAN },
+];
+
+/// Calibrated shift-add energy model:
+///
+/// ```text
+/// E_mac = E_OVERHEAD + E_CYCLE * cycles + E_BIT * B_w
+/// ```
+///
+/// Three physically distinct terms: accumulator/control overhead per MAC,
+/// adder switching per shift-add cycle, and weight-fetch data movement
+/// proportional to the weight bitwidth. Calibrated on three anchors —
+/// the paper's A8W2 (-25.0%) and A8W4 (-13.8%) savings vs INT8 plus
+/// near-parity at A8W8 (Table VI: the unit is smaller but serial) — with
+/// the simulator's measured mean cycles on QAT weight distributions
+/// (c2 ~= 1.0, c4 ~= 1.3, c8 ~= 3.0). DESIGN.md §4 records this as a
+/// substitution for the paper's post-synthesis power numbers.
+pub const SHIFT_ADD_E_CYCLE: f64 = 0.058;
+pub const SHIFT_ADD_E_BIT: f64 = 0.047;
+pub const SHIFT_ADD_E_OVERHEAD: f64 = 0.598;
+
+/// Energy of one shift-add MAC taking `cycles` cycles at weight bitwidth
+/// `bits` (normalized to one INT8 MAC op = 1.0).
+#[inline]
+pub fn shift_add_energy(cycles: f64, bits: f64) -> f64 {
+    SHIFT_ADD_E_OVERHEAD + cycles * SHIFT_ADD_E_CYCLE + bits * SHIFT_ADD_E_BIT
+}
+
+pub fn by_name(name: &str) -> Option<&'static MacImpl> {
+    MAC_IMPLS.iter().find(|m| m.name == name)
+}
+
+/// Area saving of the shift-add unit vs a reference implementation.
+pub fn area_saving_vs(reference: &str) -> Option<f64> {
+    let sa = by_name("Shift-add")?;
+    let r = by_name(reference)?;
+    Some(1.0 - sa.area_um2 / r.area_um2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_area_anchor_22_3_percent() {
+        // paper Sec. VI-E: "reduces 22.3% area over the INT8 one"
+        let s = area_saving_vs("INT8").unwrap();
+        assert!((s - 0.223).abs() < 0.002, "got {s}");
+    }
+
+    #[test]
+    fn paper_area_anchor_49_2_percent_vs_others() {
+        // "and more than 49.2% over others" (FP32/FP16/BF16)
+        for name in ["FP32", "FP16", "BF16"] {
+            let s = area_saving_vs(name).unwrap();
+            assert!(s > 0.49, "{name}: {s}");
+        }
+    }
+
+    #[test]
+    fn energy_anchors_reproduced() {
+        // A8W2 at ~1.0 cycles/MAC -> ~25% saving vs INT8 (paper anchor)
+        let e2 = shift_add_energy(1.0, 2.0);
+        assert!((e2 - 0.75).abs() < 0.01, "A8W2 energy {e2}");
+        // A8W4 at ~1.3 cycles/MAC -> ~13.8% saving (paper anchor)
+        let e4 = shift_add_energy(1.3, 4.0);
+        assert!((e4 - 0.862).abs() < 0.015, "A8W4 energy {e4}");
+    }
+
+    #[test]
+    fn a8w8_energy_near_parity_with_int8() {
+        // dense 8-bit weights (~3.0 cycles): slight penalty vs INT8 — the
+        // shift-add unit trades latency/area, not energy, at full precision
+        let e8 = shift_add_energy(3.0, 8.0);
+        assert!((0.95..=1.25).contains(&e8), "A8W8 energy {e8}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("INT8").is_some());
+        assert!(by_name("nope").is_none());
+        assert_eq!(by_name("FP32").unwrap().area_um2, 3218.3);
+    }
+}

@@ -1,0 +1,17 @@
+//! Hardware substrate: the shift-add MAC microarchitecture model.
+//!
+//! The paper evaluates SigmaQuant on a bit-serial shift-add MAC (TSMC
+//! 28 nm, 0.9 V, 600 MHz). No silicon here, so we reproduce it as a
+//! cycle-accurate simulator (`shift_add`) plus an analytical PPA model
+//! anchored to the paper's own Table VI constants (`mac_models`), and a
+//! per-model mapper (`ppa`) that folds actual quantized weights with the
+//! manifest's per-layer MAC counts. DESIGN.md §3/§4 documents the
+//! substitution and calibration.
+
+pub mod mac_models;
+pub mod ppa;
+pub mod shift_add;
+
+pub use mac_models::{MacImpl, MAC_IMPLS};
+pub use ppa::{model_ppa, PpaReport};
+pub use shift_add::{multiply_exact, weight_cycles, CycleCounter, ShiftAddConfig};

@@ -1,0 +1,162 @@
+//! Model-level PPA mapping: fold actual quantized integer weights with the
+//! manifest's per-layer MAC counts to produce the cycle/energy numbers of
+//! the paper's Fig. 5 (normalized to the INT8 MAC implementation).
+
+use super::mac_models::{shift_add_energy, MacImpl};
+use super::shift_add::{CycleCounter, ShiftAddConfig};
+use crate::manifest::ArchSpec;
+use crate::quant::{quantize_to_int, BitAssignment};
+
+/// PPA of one model mapped on one MAC configuration.
+#[derive(Debug, Clone)]
+pub struct PpaReport {
+    pub arch: String,
+    /// Total MAC cycles per inference (shift-add) or MACs (fixed-cycle).
+    pub cycles: f64,
+    /// Energy per inference in INT8-MAC-op units.
+    pub energy: f64,
+    /// Same, normalized to the INT8 implementation baseline (= MACs).
+    pub cycles_vs_int8: f64,
+    pub energy_vs_int8: f64,
+    /// Mean cycles per MAC (the data-dependent shift-add latency).
+    pub mean_cycles_per_mac: f64,
+}
+
+/// Map a quantized model onto the shift-add unit.
+///
+/// `weights[i]` is the flat f32 tensor of quantizable layer i (fanin-major
+/// with out_channels trailing, as in the manifest layout).
+pub fn model_ppa(
+    arch: &ArchSpec,
+    weights: &[Vec<f32>],
+    bits: &BitAssignment,
+    cfg: ShiftAddConfig,
+) -> PpaReport {
+    assert_eq!(weights.len(), arch.num_qlayers());
+    assert_eq!(bits.len(), arch.num_qlayers());
+    let counter = CycleCounter::new(cfg);
+    let mut cycles = 0.0;
+    let mut energy = 0.0;
+    for (i, q) in arch.qlayers.iter().enumerate() {
+        let b = bits.bits[i];
+        let ql = quantize_to_int(&weights[i], q.out_channels, b);
+        let uses = q.macs as f64 / q.weight_count as f64;
+        let layer_cycles = counter.layer_cycles(&ql.codes, uses);
+        cycles += layer_cycles;
+        // per-MAC overhead + per-cycle switching + per-bit weight fetch
+        energy += q.macs as f64
+            * shift_add_energy(layer_cycles / q.macs as f64, b as f64);
+    }
+    let macs = arch.total_macs as f64;
+    PpaReport {
+        arch: arch.name.clone(),
+        cycles,
+        energy,
+        cycles_vs_int8: cycles / macs,
+        energy_vs_int8: energy / macs,
+        mean_cycles_per_mac: cycles / macs,
+    }
+}
+
+/// PPA of a fixed-cycle implementation (FP32/FP16/BF16/INT8 rows).
+pub fn fixed_ppa(arch: &ArchSpec, mac: &MacImpl) -> PpaReport {
+    let macs = arch.total_macs as f64;
+    PpaReport {
+        arch: arch.name.clone(),
+        cycles: macs * mac.cycles_per_op,
+        energy: macs * mac.energy_per_op,
+        cycles_vs_int8: mac.cycles_per_op,
+        energy_vs_int8: mac.energy_per_op,
+        mean_cycles_per_mac: mac.cycles_per_op,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::size::tests::toy_arch;
+    use crate::util::rng::Rng;
+
+    fn weights_for(arch: &ArchSpec, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        arch.qlayers
+            .iter()
+            .map(|q| (0..q.weight_count).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn lower_bits_fewer_cycles() {
+        let arch = toy_arch(&[512, 256]);
+        let ws = weights_for(&arch, 5);
+        let cfg = ShiftAddConfig::default();
+        let mut prev = f64::INFINITY;
+        for b in [8u8, 6, 4, 2] {
+            let r = model_ppa(&arch, &ws, &BitAssignment::uniform(2, b), cfg);
+            assert!(r.cycles < prev, "bits={b}: {} !< {prev}", r.cycles);
+            prev = r.cycles;
+        }
+    }
+
+    #[test]
+    fn csd_reduces_cycles() {
+        let arch = toy_arch(&[512]);
+        let ws = weights_for(&arch, 7);
+        let b8 = BitAssignment::uniform(1, 8);
+        let plain = model_ppa(&arch, &ws, &b8, ShiftAddConfig { csd: false, ..Default::default() });
+        let csd = model_ppa(&arch, &ws, &b8, ShiftAddConfig { csd: true, ..Default::default() });
+        assert!(csd.cycles < plain.cycles);
+        assert!(csd.energy < plain.energy);
+    }
+
+    #[test]
+    fn w8_latency_overhead_matches_paper_ballpark() {
+        // paper: A8W8 on shift-add ~4.2x slower than INT8
+        let arch = toy_arch(&[4096]);
+        let ws = weights_for(&arch, 11);
+        let r = model_ppa(&arch, &ws, &BitAssignment::uniform(1, 8),
+                          ShiftAddConfig::default());
+        assert!(
+            (2.5..=4.8).contains(&r.cycles_vs_int8),
+            "A8W8 {}x",
+            r.cycles_vs_int8
+        );
+    }
+
+    #[test]
+    fn w2_saves_energy_vs_int8() {
+        // paper: A8W2 ~25% energy saving vs the INT8 implementation
+        let arch = toy_arch(&[4096]);
+        let ws = weights_for(&arch, 13);
+        let r = model_ppa(&arch, &ws, &BitAssignment::uniform(1, 2),
+                          ShiftAddConfig::default());
+        assert!(
+            (0.70..=0.82).contains(&r.energy_vs_int8),
+            "A8W2 energy ratio {}",
+            r.energy_vs_int8
+        );
+    }
+
+    #[test]
+    fn fixed_impl_ratios() {
+        let arch = toy_arch(&[100]);
+        let int8 = fixed_ppa(&arch, crate::hw::mac_models::by_name("INT8").unwrap());
+        assert_eq!(int8.energy_vs_int8, 1.0);
+        assert_eq!(int8.cycles_vs_int8, 1.0);
+        let fp32 = fixed_ppa(&arch, crate::hw::mac_models::by_name("FP32").unwrap());
+        assert_eq!(fp32.energy_vs_int8, 5.5);
+    }
+
+    #[test]
+    fn mixed_assignment_between_uniform_extremes() {
+        let arch = toy_arch(&[512, 512]);
+        let ws = weights_for(&arch, 17);
+        let cfg = ShiftAddConfig::default();
+        let lo = model_ppa(&arch, &ws, &BitAssignment::uniform(2, 2), cfg);
+        let hi = model_ppa(&arch, &ws, &BitAssignment::uniform(2, 8), cfg);
+        let mix = model_ppa(&arch, &ws,
+                            &BitAssignment::new(vec![2, 8]).unwrap(), cfg);
+        assert!(lo.cycles < mix.cycles && mix.cycles < hi.cycles);
+        assert!(lo.energy < mix.energy && mix.energy < hi.energy);
+    }
+}

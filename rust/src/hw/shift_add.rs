@@ -1,0 +1,275 @@
+//! Cycle-accurate model of the bit-serial shift-add multiplier
+//! (paper Fig. 1(b) and Sec. VI-E).
+//!
+//! Microarchitecture modeled:
+//!   * multiplicand = 8-bit activation; multiplier = n-bit weight
+//!     (n in {2,4,6,8}), sign-magnitude processing of the weight;
+//!   * one adder: each cycle performs ONE add and an arbitrary-length
+//!     right shift, so runs of zero bits in the multiplier are absorbed
+//!     into the following add's shift ("multiple shift operations for
+//!     trailing zeros within a single cycle", Sec. III-B);
+//!   * a weight of magnitude 0 still costs one (pass-through) cycle;
+//!   * optional CSD (canonical signed digit) recoding, which reduces the
+//!     number of nonzero digits to <= ceil(n/2) and empirically ~n/3.
+//!
+//! Under this model the cycle count of one MAC equals the number of
+//! nonzero digits of the weight's magnitude (binary) or CSD encoding,
+//! clamped to >= 1 — for uniformly distributed n-bit weights the mean is
+//! ~n/2, matching the paper's "roughly n/2 cycles" claim.
+
+/// Configuration of the shift-add unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShiftAddConfig {
+    /// Use canonical-signed-digit recoding of the multiplier operand.
+    pub csd: bool,
+    /// Maximum right-shift distance absorbed per cycle. The datapath can
+    /// skip a run of zeros only up to the barrel-shifter width; 2 matches
+    /// the paper's "roughly n/2 cycles for an n-bit operand".
+    pub max_shift: u32,
+}
+
+impl Default for ShiftAddConfig {
+    fn default() -> Self {
+        ShiftAddConfig { csd: false, max_shift: 2 }
+    }
+}
+
+/// Cycles to multiply by a weight with integer code `w` (sign-magnitude).
+///
+/// Each cycle shifts by at most `max_shift` positions and performs one
+/// add when it lands on a nonzero digit, so the cost of digit i at
+/// position p_i after a stop at p_{i-1} is ceil((p_i - p_{i-1}) /
+/// max_shift) cycles. A zero operand costs one pass-through cycle.
+#[inline]
+pub fn weight_cycles(w: i32, cfg: ShiftAddConfig) -> u32 {
+    let mag = w.unsigned_abs();
+    if mag == 0 {
+        return 1;
+    }
+    let s = cfg.max_shift.max(1);
+    let cycles = if cfg.csd {
+        gap_cycles(csd_digits(mag).iter().map(|&(p, _)| p), s)
+    } else {
+        gap_cycles((0..32).filter(|&b| mag >> b & 1 == 1), s)
+    };
+    cycles.max(1)
+}
+
+/// Σ ceil(gap / max_shift) over successive nonzero-digit positions.
+#[inline]
+fn gap_cycles(positions: impl Iterator<Item = u32>, max_shift: u32) -> u32 {
+    let mut cycles = 0u32;
+    let mut prev: i64 = -1;
+    for p in positions {
+        let gap = (p as i64 - prev) as u32;
+        cycles += gap.div_ceil(max_shift);
+        prev = p as i64;
+    }
+    cycles
+}
+
+/// Number of nonzero digits in the canonical signed-digit encoding of
+/// `mag` (classic Reitwiesner recoding; runs of 1s collapse to 2 digits).
+pub fn csd_nonzero_digits(mag: u32) -> u32 {
+    // Standard identity: the nonadjacent-form (CSD) digit count of x is
+    // exactly popcount(x XOR 3x) computed in wide-enough arithmetic.
+    let x = mag as u64;
+    (x ^ (3 * x)).count_ones()
+}
+
+/// Bit-exact shift-add multiply: computes a * w via the serial algorithm
+/// and returns the full product (used by tests to prove the cycle counter
+/// walks the same recoding the datapath would).
+pub fn multiply_exact(a: i32, w: i32, cfg: ShiftAddConfig) -> (i64, u32) {
+    let neg = w < 0;
+    let mag = w.unsigned_abs();
+    let s = cfg.max_shift.max(1);
+    let mut acc: i64 = 0;
+    let mut cycles = 0u32;
+    let mut prev: i64 = -1;
+    let digits: Vec<(u32, i8)> = if cfg.csd {
+        csd_digits(mag)
+    } else {
+        (0..32).filter(|&b| mag >> b & 1 == 1).map(|b| (b, 1i8)).collect()
+    };
+    for (pos, d) in digits {
+        // walk from the previous stop to this digit, <= s positions/cycle
+        let gap = (pos as i64 - prev) as u32;
+        cycles += gap.div_ceil(s);
+        prev = pos as i64;
+        acc += ((a as i64) * (d as i64)) << pos;
+    }
+    if cycles == 0 {
+        cycles = 1; // zero weight: one pass-through cycle
+    }
+    ((if neg { -acc } else { acc }), cycles)
+}
+
+/// CSD digit expansion of a magnitude: list of (bit position, digit ∈ {-1,+1}).
+pub fn csd_digits(mag: u32) -> Vec<(u32, i8)> {
+    let mut out = Vec::new();
+    let mut x = mag as i64;
+    let mut pos = 0u32;
+    while x != 0 {
+        if x & 1 == 1 {
+            // digit is ±1 depending on the next bits (round to even)
+            let d: i8 = if x & 2 == 2 { -1 } else { 1 };
+            out.push((pos, d));
+            x -= d as i64;
+        }
+        x >>= 1;
+        pos += 1;
+    }
+    out
+}
+
+/// Accumulates cycle counts for whole layers/models.
+///
+/// `cycles_histogram[c]` counts weights needing `c` cycles; a 256-entry
+/// lookup table (code -> cycles) makes the per-weight cost O(1) — this is
+/// the L3 hot path optimization recorded in EXPERIMENTS.md §Perf.
+#[derive(Debug, Clone)]
+pub struct CycleCounter {
+    cfg: ShiftAddConfig,
+    /// LUT over sign-magnitude codes in [-128, 127] -> cycles.
+    lut: [u32; 256],
+}
+
+impl CycleCounter {
+    pub fn new(cfg: ShiftAddConfig) -> Self {
+        let mut lut = [0u32; 256];
+        for (i, slot) in lut.iter_mut().enumerate() {
+            let code = i as i32 - 128;
+            *slot = weight_cycles(code, cfg);
+        }
+        CycleCounter { cfg, lut }
+    }
+
+    #[inline]
+    pub fn cycles_for(&self, code: i32) -> u32 {
+        debug_assert!((-128..=127).contains(&code));
+        self.lut[(code + 128) as usize]
+    }
+
+    /// Total MAC cycles for one layer: every weight is used
+    /// `uses_per_weight` times per inference (= layer MACs / weight count).
+    pub fn layer_cycles(&self, codes: &[i32], uses_per_weight: f64) -> f64 {
+        let total: u64 = codes.iter().map(|&c| self.cycles_for(c) as u64).sum();
+        total as f64 * uses_per_weight
+    }
+
+    pub fn config(&self) -> ShiftAddConfig {
+        self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Pair, UsizeIn};
+
+    #[test]
+    fn multiply_matches_hardware_semantics() {
+        // exhaustive over all 8-bit weights and a sample of activations
+        for cfg in [
+            ShiftAddConfig { csd: false, max_shift: 2 },
+            ShiftAddConfig { csd: true, max_shift: 2 },
+            ShiftAddConfig { csd: false, max_shift: 4 },
+        ] {
+            for w in -127i32..=127 {
+                for a in [-128i32, -77, -1, 0, 1, 55, 127] {
+                    let (p, cyc) = multiply_exact(a, w, cfg);
+                    assert_eq!(p, a as i64 * w as i64, "a={a} w={w} cfg={cfg:?}");
+                    assert_eq!(cyc, weight_cycles(w, cfg), "cycle mismatch w={w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weight_one_cycle() {
+        for csd in [false, true] {
+            let cfg = ShiftAddConfig { csd, ..Default::default() };
+            assert_eq!(weight_cycles(0, cfg), 1);
+        }
+    }
+
+    #[test]
+    fn csd_never_worse_than_binary() {
+        for w in -127i32..=127 {
+            let bin = weight_cycles(w, ShiftAddConfig::default());
+            let csd = weight_cycles(w, ShiftAddConfig { csd: true, ..Default::default() });
+            assert!(csd <= bin + 1, "w={w}: csd {csd} >> binary {bin}");
+        }
+    }
+
+    #[test]
+    fn csd_classic_example() {
+        let bin = ShiftAddConfig { csd: false, max_shift: 4 };
+        let csd = ShiftAddConfig { csd: true, max_shift: 4 };
+        // 7 = 0111 (3 adds) -> CSD 100-1 (2 digits, one gap of 3 <= 4)
+        assert_eq!(weight_cycles(7, bin), 3);
+        assert_eq!(weight_cycles(7, csd), 2);
+        // 15 = 1111 -> 1000-1
+        assert_eq!(weight_cycles(15, csd), 2);
+        // shift cap: 128 = one digit at bit 7, needs ceil(8/4)=2 cycles
+        assert_eq!(weight_cycles(128, bin), 2);
+        assert_eq!(weight_cycles(128, ShiftAddConfig { csd: false, max_shift: 2 }), 4);
+    }
+
+    #[test]
+    fn mean_cycles_roughly_half_bitwidth() {
+        // paper Sec. VI-E: "average latency to roughly n/2 cycles"
+        for bits in [4u32, 6, 8] {
+            let q = (1i32 << (bits - 1)) - 1;
+            let cfg = ShiftAddConfig::default();
+            let total: u32 = (-q..=q).map(|w| weight_cycles(w, cfg)).sum();
+            let mean = total as f64 / (2 * q + 1) as f64;
+            assert!(
+                (mean - bits as f64 / 2.0).abs() < 0.8,
+                "bits={bits} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn lut_matches_direct_computation() {
+        for cfg in [
+            ShiftAddConfig::default(),
+            ShiftAddConfig { csd: true, ..Default::default() },
+        ] {
+            let cc = CycleCounter::new(cfg);
+            for code in -128i32..=127 {
+                assert_eq!(cc.cycles_for(code), weight_cycles(code, cfg));
+            }
+        }
+    }
+
+    #[test]
+    fn layer_cycles_scales_with_uses() {
+        let cc = CycleCounter::new(ShiftAddConfig::default());
+        let codes = vec![1, 3, 7, 0, -5];
+        let base = cc.layer_cycles(&codes, 1.0);
+        assert_eq!(cc.layer_cycles(&codes, 4.0), base * 4.0);
+        // max_shift=2: 1->1, 3->2, 7->3, 0->1, -5(101)->1+1=2 cycles
+        assert_eq!(base, 9.0);
+    }
+
+    #[test]
+    fn csd_digits_reconstruct_value_property() {
+        check(99, 2000, &Pair(UsizeIn(0, 127), UsizeIn(0, 1)), |&(m, _)| {
+            let digits = csd_digits(m as u32);
+            let v: i64 = digits.iter().map(|&(p, d)| (d as i64) << p).sum();
+            if v != m as i64 {
+                return Err(format!("csd({m}) reconstructs to {v}"));
+            }
+            // canonical: no two adjacent nonzero digits
+            for w in digits.windows(2) {
+                if w[1].0 - w[0].0 < 2 {
+                    return Err(format!("adjacent CSD digits for {m}: {digits:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

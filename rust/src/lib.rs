@@ -1,0 +1,31 @@
+//! # SigmaQuant
+//!
+//! Reproduction of *"SigmaQuant: Hardware-Aware Heterogeneous Quantization
+//! Method for Edge DNN Inference"* as a three-layer Rust + JAX + Pallas
+//! system: the Rust coordinator implements the paper's two-phase bitwidth
+//! search and every hardware/statistics substrate it needs; the AOT
+//! artifacts (built once from python/) carry the QAT-capable models whose
+//! per-layer bitwidths are runtime inputs.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`coordinator`] — the paper's contribution: adaptive-k-means Phase 1,
+//!   KL-refinement Phase 2, zone logic, QAT orchestration.
+//! * [`runtime`] — PJRT client; loads `artifacts/*.hlo.txt`.
+//! * [`quant`], [`stats`] — quantizer math, size/BOPs accounting, σ/KL.
+//! * [`hw`] — cycle-accurate shift-add MAC simulator + Table VI PPA model.
+//! * [`baselines`] — uniform / entropy / Hessian-proxy / greedy comparators.
+//! * [`data`] — deterministic synthetic dataset.
+//! * [`experiments`], [`report`] — one module per paper table/figure.
+//! * [`util`] — zero-dependency substrates (JSON, RNG, CLI, prop-testing).
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod hw;
+pub mod manifest;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod util;

@@ -1,0 +1,192 @@
+//! `sigmaquant` — the Layer-3 coordinator CLI.
+//!
+//! Every paper table/figure has a subcommand that regenerates it from the
+//! AOT artifacts (run `make artifacts` first); `quantize` runs the
+//! two-phase search with user-specified boundary conditions, which is the
+//! paper's headline use-case ("adapt one model to many devices").
+
+use anyhow::{bail, Result};
+use sigmaquant::coordinator::{Objective, SearchConfig, SigmaQuant};
+use sigmaquant::experiments::{ablation, common::Ctx, fig3, fig4, fig5, table1,
+                              table2, table3, table4, table5, table6};
+use sigmaquant::quant::int8_size_bytes;
+use sigmaquant::util::cli::Args;
+
+const USAGE: &str = "\
+sigmaquant — hardware-aware heterogeneous quantization (paper reproduction)
+
+USAGE: sigmaquant <command> [--options]
+
+COMMANDS
+  quantize   run the two-phase search on one model
+             --arch NAME  --size-frac F (of INT8, default 0.4)
+             --acc-drop D (default 0.02)  --objective memory|bops
+  table1     sigma/KL vs bits on alexnet_mini
+  table2     phase-1 vs final across the ResNet family [--archs a,b,...]
+  table3     comparison vs baselines [--archs resnet50_mini,inception_mini]
+  table4     buffer-sensitivity study [--arch resnet34_mini]
+  table5     BOPs-target activation adaptation [--archs ...]
+  table6     MAC implementation PPA (no artifacts needed)
+  fig3       two-phase trajectory [--arch resnet34_mini]
+  fig4       acc-vs-size frontier, uniform vs sigma [--archs ...]
+  fig5       shift-add energy/latency vs accuracy [--archs ...]
+  ablation   sigma-vs-KL sensitivity mix + step-size sweep [--arch ...]
+  suite      table2+3, fig4+5, table5, ablation in ONE process (shared
+             compile cache; small-model defaults)
+  info       list architectures and artifact status
+
+COMMON OPTIONS
+  --artifacts DIR (default artifacts)   --results DIR (default results)
+  --seed N (default 7)                  --eval-n N (default 512)
+  --qat-steps N (default 16)            --pretrain-steps N (default 300)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn split_archs<'a>(a: &'a Args, default: &'a str) -> Vec<&'a str> {
+    a.get_or("archs", default).split(',').filter(|s| !s.is_empty()).collect()
+}
+
+fn make_ctx(a: &Args) -> Result<Ctx> {
+    let mut ctx = Ctx::new(
+        a.get_or("artifacts", "artifacts"),
+        a.get_or("results", "results"),
+        a.get_u64("seed", 7),
+    )?;
+    ctx.pretrain_steps = a.get_usize("pretrain-steps", 300);
+    ctx.verbose = !a.flag("quiet");
+    Ok(ctx)
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let cmd = argv[0].as_str();
+    let a = Args::parse(&argv[1..]);
+    let eval_n = a.get_usize("eval-n", 512);
+    let qat = a.get_usize("qat-steps", 16);
+
+    match cmd {
+        "table6" => {
+            table6::run(std::path::Path::new(a.get_or("results", "results")))?;
+        }
+        "table1" => table1::run(&make_ctx(&a)?, eval_n)?,
+        "table2" => {
+            let ctx = make_ctx(&a)?;
+            let default = table2::RESNETS.join(",");
+            let archs = split_archs(&a, &default);
+            table2::run(&ctx, &archs, eval_n)?;
+        }
+        "table3" => {
+            let ctx = make_ctx(&a)?;
+            let archs = split_archs(&a, "resnet50_mini,inception_mini");
+            table3::run(&ctx, &archs, eval_n, qat)?;
+        }
+        "table4" => table4::run(&make_ctx(&a)?, a.get_or("arch", "resnet34_mini"), eval_n)?,
+        "table5" => {
+            let ctx = make_ctx(&a)?;
+            let archs = split_archs(&a, "resnet18_mini,resnet34_mini,resnet50_mini");
+            table5::run(&ctx, &archs, eval_n)?;
+        }
+        "fig3" => fig3::run(&make_ctx(&a)?, a.get_or("arch", "resnet34_mini"), eval_n)?,
+        "fig4" => {
+            let ctx = make_ctx(&a)?;
+            let default = table2::RESNETS.join(",");
+            let archs = split_archs(&a, &default);
+            fig4::run(&ctx, &archs, eval_n, qat)?;
+        }
+        "fig5" => {
+            let ctx = make_ctx(&a)?;
+            let default = table2::RESNETS.join(",");
+            let archs = split_archs(&a, &default);
+            fig5::run(&ctx, &archs, eval_n, qat)?;
+        }
+        "ablation" => ablation::run(&make_ctx(&a)?, a.get_or("arch", "alexnet_mini"), eval_n)?,
+        // one process, shared compile cache: the affordable full suite
+        "suite" => {
+            let ctx = make_ctx(&a)?;
+            let small = ["alexnet_mini", "resnet18_mini"];
+            println!("\n===== table2 =====");
+            table2::run(&ctx, &small, eval_n)?;
+            println!("\n===== table3 =====");
+            table3::run(&ctx, &small, eval_n, qat)?;
+            println!("\n===== fig4 =====");
+            fig4::run(&ctx, &small, eval_n, qat)?;
+            println!("\n===== fig5 =====");
+            fig5::run(&ctx, &["resnet18_mini"], eval_n, qat)?;
+            println!("\n===== table5 =====");
+            table5::run(&ctx, &small, eval_n)?;
+            println!("\n===== ablation =====");
+            ablation::run(&ctx, "alexnet_mini", eval_n)?;
+        }
+        "quantize" => quantize(&a, eval_n)?,
+        "info" => info(&a)?,
+        other => bail!("unknown command {other:?}; run `sigmaquant help`"),
+    }
+    Ok(())
+}
+
+fn quantize(a: &Args, eval_n: usize) -> Result<()> {
+    let ctx = make_ctx(a)?;
+    let arch = a.get_or("arch", "resnet18_mini");
+    let (mut session, mut cursor) = ctx.pretrained_session(arch)?;
+    let float_acc = ctx.float_accuracy(&session, eval_n)?;
+    let size_frac = a.get_f64("size-frac", 0.40);
+    let acc_drop = a.get_f64("acc-drop", 0.02);
+    let mut cfg = SearchConfig::defaults(
+        ctx.targets_from(&session, float_acc, acc_drop, size_frac));
+    cfg.eval_samples = eval_n;
+    cfg.seed = ctx.seed;
+    if a.get_or("objective", "memory") == "bops" {
+        cfg.objective = Objective::Bops;
+        let base = sigmaquant::quant::bops::int8_bops(&session.arch);
+        cfg.targets.size_target = base * size_frac;
+        cfg.targets.size_buffer = base * 0.05;
+    }
+    println!(
+        "quantizing {arch}: float acc {:.2}%, targets acc>= {:.2}%, resource <= {:.3e}",
+        float_acc * 100.0, cfg.targets.acc_target * 100.0, cfg.targets.size_target
+    );
+    let sq = SigmaQuant::new(cfg, &ctx.data);
+    let o = sq.run(&mut session, &ctx.data, &mut cursor)?;
+    println!("\ntrajectory:");
+    for p in &o.trajectory.points {
+        println!("  [{:<6}] it {:>2} acc {:>6.2}% res {:>10.1} zone {:<12} {}",
+                 p.phase, p.iter, p.accuracy * 100.0, p.size_bytes,
+                 p.zone.to_string(), p.action);
+    }
+    println!("\nresult: met={} zone={}", o.met, o.zone);
+    println!("  bits    : [{}]", o.wbits.summary());
+    if sq.cfg.objective == Objective::Bops {
+        println!("  act bits: [{}]", o.abits.summary());
+    }
+    println!("  accuracy: {:.2}% (int8 {:.2}%, float {:.2}%)",
+             o.accuracy * 100.0, o.int8_accuracy * 100.0, float_acc * 100.0);
+    println!("  resource: {:.3e} ({:.1}% of INT8)",
+             o.resource, 100.0 * o.resource / o.int8_resource);
+    Ok(())
+}
+
+fn info(a: &Args) -> Result<()> {
+    let ctx = make_ctx(a)?;
+    println!("dataset: {}x{}x{} classes={} train_batch={} eval_batch={}",
+             ctx.rt.manifest.dataset.height, ctx.rt.manifest.dataset.width,
+             ctx.rt.manifest.dataset.channels, ctx.rt.manifest.dataset.classes,
+             ctx.rt.manifest.dataset.train_batch, ctx.rt.manifest.dataset.eval_batch);
+    println!("{:<16} {:>8} {:>12} {:>14} {:>10}",
+             "arch", "qlayers", "weights", "MACs/example", "INT8 KiB");
+    for (name, arch) in &ctx.rt.manifest.archs {
+        println!("{:<16} {:>8} {:>12} {:>14} {:>10.1}",
+                 name, arch.num_qlayers(), arch.total_weight_params,
+                 arch.total_macs, int8_size_bytes(arch) / 1024.0);
+    }
+    Ok(())
+}

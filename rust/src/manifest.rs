@@ -1,0 +1,279 @@
+//! Typed view of `artifacts/manifest.json` — the contract emitted by the
+//! AOT pipeline (python/compile/aot.py). The Rust side never re-derives
+//! model structure; everything (parameter layout, quantizable layers, MAC
+//! counts, entry-point signatures) comes from here.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Dataset geometry shared by all artifacts.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl DatasetSpec {
+    pub fn image_len(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+}
+
+/// One parameter tensor in the flat parameter list.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub kind: ParamKind,
+    pub qlayer: Option<usize>,
+    pub fanin: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    ConvKernel,
+    DenseKernel,
+    Bias,
+    BnScale,
+    BnBias,
+}
+
+impl ParamKind {
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "conv_kernel" => ParamKind::ConvKernel,
+            "dense_kernel" => ParamKind::DenseKernel,
+            "bias" => ParamKind::Bias,
+            "bn_scale" => ParamKind::BnScale,
+            "bn_bias" => ParamKind::BnBias,
+            other => bail!("unknown param kind {other}"),
+        })
+    }
+
+    pub fn is_kernel(self) -> bool {
+        matches!(self, ParamKind::ConvKernel | ParamKind::DenseKernel)
+    }
+}
+
+/// One quantizable layer (conv or dense kernel) of an architecture.
+#[derive(Debug, Clone)]
+pub struct QLayerSpec {
+    pub name: String,
+    pub param_idx: usize,
+    pub kind: String,
+    /// Multiply-accumulates per example at the reference input size.
+    pub macs: u64,
+    pub weight_count: usize,
+    pub fanin: usize,
+    pub out_channels: usize,
+}
+
+/// A full architecture entry.
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: String,
+    pub artifacts: BTreeMap<String, String>,
+    pub params: Vec<ParamSpec>,
+    pub qlayers: Vec<QLayerSpec>,
+    pub total_params: usize,
+    pub total_weight_params: usize,
+    pub total_macs: u64,
+}
+
+impl ArchSpec {
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+    pub fn num_qlayers(&self) -> usize {
+        self.qlayers.len()
+    }
+    /// Path of an entry point's HLO file relative to the artifacts dir.
+    pub fn artifact_file(&self, entry: &str) -> Result<&str> {
+        self.artifacts
+            .get(entry)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("{}: no artifact for entry {entry}", self.name))
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dataset: DatasetSpec,
+    pub archs: BTreeMap<String, ArchSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::from_json_str(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for unit tests).
+    pub fn from_json_str(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let d = root.get("dataset");
+        let dataset = DatasetSpec {
+            height: req_usize(d, "height")?,
+            width: req_usize(d, "width")?,
+            channels: req_usize(d, "channels")?,
+            classes: req_usize(d, "classes")?,
+            train_batch: req_usize(d, "train_batch")?,
+            eval_batch: req_usize(d, "eval_batch")?,
+        };
+        let mut archs = BTreeMap::new();
+        let aobj = root
+            .get("archs")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: missing archs"))?;
+        for (name, entry) in aobj {
+            archs.insert(name.clone(), parse_arch(name, entry)?);
+        }
+        Ok(Manifest { dir, dataset, archs })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
+        self.archs.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown architecture {name}; available: {:?}",
+                self.archs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, arch: &ArchSpec, entry: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(arch.artifact_file(entry)?))
+    }
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| anyhow!("manifest: missing numeric field {key}"))
+}
+
+fn parse_arch(name: &str, e: &Json) -> Result<ArchSpec> {
+    let mut artifacts = BTreeMap::new();
+    if let Some(obj) = e.get("artifacts").as_obj() {
+        for (k, v) in obj {
+            artifacts.insert(
+                k.clone(),
+                v.as_str().ok_or_else(|| anyhow!("bad artifact path"))?.to_string(),
+            );
+        }
+    }
+    let mut params = Vec::new();
+    for p in e.get("params").as_arr().unwrap_or(&[]) {
+        let shape: Vec<usize> = p
+            .get("shape")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|d| d.as_usize())
+            .collect();
+        params.push(ParamSpec {
+            name: p.get("name").as_str().unwrap_or("").to_string(),
+            size: req_usize(p, "size")?,
+            kind: ParamKind::from_str(p.get("kind").as_str().unwrap_or(""))?,
+            qlayer: p.get("qlayer").as_usize(),
+            fanin: p.get("fanin").as_usize().unwrap_or(0),
+            shape,
+        });
+    }
+    let mut qlayers = Vec::new();
+    for q in e.get("qlayers").as_arr().unwrap_or(&[]) {
+        qlayers.push(QLayerSpec {
+            name: q.get("name").as_str().unwrap_or("").to_string(),
+            param_idx: req_usize(q, "param_idx")?,
+            kind: q.get("kind").as_str().unwrap_or("").to_string(),
+            macs: q.get("macs").as_u64().unwrap_or(0),
+            weight_count: req_usize(q, "weight_count")?,
+            fanin: q.get("fanin").as_usize().unwrap_or(0),
+            out_channels: q.get("out_channels").as_usize().unwrap_or(0),
+        });
+    }
+    // cross-validate the contract so corruption fails loudly at load time
+    for (qi, q) in qlayers.iter().enumerate() {
+        let p = params
+            .get(q.param_idx)
+            .ok_or_else(|| anyhow!("{name}: qlayer {qi} param_idx out of range"))?;
+        if p.qlayer != Some(qi) {
+            bail!("{name}: qlayer back-reference mismatch at {qi}");
+        }
+        if p.size != q.weight_count {
+            bail!("{name}: weight_count mismatch at {qi}");
+        }
+    }
+    Ok(ArchSpec {
+        name: name.to_string(),
+        artifacts,
+        total_params: req_usize(e, "total_params")?,
+        total_weight_params: req_usize(e, "total_weight_params")?,
+        total_macs: e.get("total_macs").as_u64().unwrap_or(0),
+        params,
+        qlayers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "dataset": {"height":16,"width":16,"channels":3,"classes":10,
+                  "train_batch":64,"eval_batch":256},
+      "archs": {
+        "toy": {
+          "artifacts": {"init":"toy.init.hlo.txt"},
+          "params": [
+            {"name":"c.kernel","shape":[3,3,3,8],"size":216,
+             "kind":"conv_kernel","qlayer":0,"fanin":27}
+          ],
+          "num_params": 1,
+          "num_qlayers": 1,
+          "qlayers": [
+            {"name":"c","param_idx":0,"kind":"conv","macs":55296,
+             "weight_count":216,"fanin":27,"out_channels":8}
+          ],
+          "total_params": 216,
+          "total_weight_params": 216,
+          "total_macs": 55296
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::from_json_str(MINI, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.dataset.classes, 10);
+        let a = m.arch("toy").unwrap();
+        assert_eq!(a.num_qlayers(), 1);
+        assert_eq!(a.qlayers[0].macs, 55296);
+        assert_eq!(a.params[0].kind, ParamKind::ConvKernel);
+        assert!(m.arch("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_backref() {
+        let bad = MINI.replace("\"qlayer\":0", "\"qlayer\":1");
+        assert!(Manifest::from_json_str(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_weight_count_mismatch() {
+        let bad = MINI.replace("\"weight_count\":216", "\"weight_count\":215");
+        assert!(Manifest::from_json_str(&bad, PathBuf::from("/tmp")).is_err());
+    }
+}

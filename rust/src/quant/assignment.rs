@@ -1,0 +1,143 @@
+//! Per-layer bitwidth assignments — the object the two-phase search moves
+//! through the design space.
+
+use crate::manifest::ArchSpec;
+use anyhow::{bail, Result};
+
+/// The valid weight bit-set of the paper (Sec. IV-B): {2, 4, 6, 8}.
+pub const VALID_BITS: [u8; 4] = [2, 4, 6, 8];
+
+/// A per-quantizable-layer bitwidth vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitAssignment {
+    pub bits: Vec<u8>,
+}
+
+impl BitAssignment {
+    /// Uniform assignment (e.g. the INT8 starting point of Alg. 1 line 1).
+    pub fn uniform(num_layers: usize, bits: u8) -> Self {
+        BitAssignment { bits: vec![bits; num_layers] }
+    }
+
+    /// Unvalidated constructor — used for the 32-bit float passthrough
+    /// assignment the runtime accepts for pre-training (not part of the
+    /// search space; `is_valid` is false for it).
+    pub fn raw(bits: Vec<u8>) -> Self {
+        BitAssignment { bits }
+    }
+
+    pub fn new(bits: Vec<u8>) -> Result<Self> {
+        for &b in &bits {
+            if !VALID_BITS.contains(&b) {
+                bail!("invalid bitwidth {b}; valid set is {VALID_BITS:?}");
+            }
+        }
+        Ok(BitAssignment { bits })
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// All entries in the valid set?
+    pub fn is_valid(&self) -> bool {
+        self.bits.iter().all(|b| VALID_BITS.contains(b))
+    }
+
+    /// Move layer `i` by one step (+1 = next higher valid bitwidth).
+    /// Returns false if already at the boundary.
+    pub fn step(&mut self, i: usize, dir: i8) -> bool {
+        let pos = VALID_BITS.iter().position(|&b| b == self.bits[i]).unwrap();
+        let next = pos as i64 + dir as i64;
+        if next < 0 || next >= VALID_BITS.len() as i64 {
+            return false;
+        }
+        self.bits[i] = VALID_BITS[next as usize];
+        true
+    }
+
+    /// f32 vector for the runtime (wbits input of the artifacts).
+    pub fn as_f32(&self) -> Vec<f32> {
+        self.bits.iter().map(|&b| b as f32).collect()
+    }
+
+    /// Average bitwidth weighted by layer weight counts.
+    pub fn mean_bits(&self, arch: &ArchSpec) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (q, &b) in arch.qlayers.iter().zip(&self.bits) {
+            num += q.weight_count as f64 * b as f64;
+            den += q.weight_count as f64;
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
+    }
+
+    /// Compact display like "8,6,4,4,2,...".
+    pub fn summary(&self) -> String {
+        self.bits
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_and_validity() {
+        let a = BitAssignment::uniform(5, 8);
+        assert_eq!(a.len(), 5);
+        assert!(a.is_valid());
+        assert!(BitAssignment::new(vec![2, 4, 6, 8]).is_ok());
+        assert!(BitAssignment::new(vec![3]).is_err());
+        assert!(BitAssignment::new(vec![0]).is_err());
+    }
+
+    #[test]
+    fn stepping_respects_boundaries() {
+        let mut a = BitAssignment::uniform(1, 8);
+        assert!(!a.step(0, 1), "cannot go above 8");
+        assert!(a.step(0, -1));
+        assert_eq!(a.bits[0], 6);
+        let mut b = BitAssignment::uniform(1, 2);
+        assert!(!b.step(0, -1), "cannot go below 2");
+        assert!(b.step(0, 1));
+        assert_eq!(b.bits[0], 4);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let a = BitAssignment::new(vec![2, 4, 6, 8]).unwrap();
+        assert_eq!(a.as_f32(), vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn step_stays_valid_property() {
+        use crate::util::prop::{check, UsizeIn};
+        check(7, 500, &UsizeIn(0, 1000), |&s| {
+            let mut a = BitAssignment::uniform(4, 8);
+            let mut x = s;
+            for _ in 0..16 {
+                let i = x % 4;
+                let dir = if (x / 4) % 2 == 0 { 1 } else { -1 };
+                a.step(i, dir);
+                x = x.wrapping_mul(2654435761).wrapping_add(1);
+                if !a.is_valid() {
+                    return Err(format!("invalid after steps: {:?}", a.bits));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,60 @@
+//! Bit-operations (BOPs) accounting — the paper's compute objective
+//! (Sec. VI-D): BOPs = Σ_ℓ B_w(ℓ) · B_a(ℓ) · MACs(ℓ).
+
+use super::assignment::BitAssignment;
+use crate::manifest::ArchSpec;
+
+/// Total BOPs for a (weight, activation) bit assignment pair.
+pub fn total_bops(arch: &ArchSpec, wbits: &BitAssignment, abits: &BitAssignment) -> f64 {
+    assert_eq!(arch.num_qlayers(), wbits.len());
+    assert_eq!(arch.num_qlayers(), abits.len());
+    arch.qlayers
+        .iter()
+        .zip(wbits.bits.iter().zip(&abits.bits))
+        .map(|(q, (&bw, &ba))| q.macs as f64 * bw as f64 * ba as f64)
+        .sum()
+}
+
+/// BOPs of the A8W8 reference (normalization base for Table V).
+pub fn int8_bops(arch: &ArchSpec) -> f64 {
+    arch.total_macs as f64 * 64.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::size::tests::toy_arch;
+
+    #[test]
+    fn a8w8_matches_reference() {
+        let a = toy_arch(&[100, 50]);
+        let b8 = BitAssignment::uniform(2, 8);
+        assert_eq!(total_bops(&a, &b8, &b8), int8_bops(&a));
+    }
+
+    #[test]
+    fn bops_monotone_in_each_factor() {
+        let a = toy_arch(&[100, 50]);
+        let b8 = BitAssignment::uniform(2, 8);
+        let b4 = BitAssignment::uniform(2, 4);
+        let b2 = BitAssignment::uniform(2, 2);
+        let full = total_bops(&a, &b8, &b8);
+        assert_eq!(total_bops(&a, &b4, &b8), full / 2.0);
+        assert_eq!(total_bops(&a, &b8, &b4), full / 2.0);
+        assert_eq!(total_bops(&a, &b2, &b2), full / 16.0);
+    }
+
+    #[test]
+    fn per_layer_weighting() {
+        // layer MACs weight the product: heavier layer dominates
+        let a = toy_arch(&[1000, 10]);
+        let mut w = BitAssignment::uniform(2, 8);
+        w.bits[0] = 2; // cut the heavy layer
+        let b8 = BitAssignment::uniform(2, 8);
+        let cut_heavy = total_bops(&a, &w, &b8);
+        let mut w2 = BitAssignment::uniform(2, 8);
+        w2.bits[1] = 2; // cut the light layer
+        let cut_light = total_bops(&a, &w2, &b8);
+        assert!(cut_heavy < cut_light);
+    }
+}

@@ -1,0 +1,13 @@
+//! Quantization substrate: the weight quantizer (bit-exact mirror of the
+//! L1 Pallas kernel), bit-assignment bookkeeping, and the model-size /
+//! BOPs accounting that the paper's boundary conditions are written in.
+
+pub mod assignment;
+pub mod bops;
+pub mod quantizer;
+pub mod size;
+
+pub use assignment::{BitAssignment, VALID_BITS};
+pub use bops::total_bops;
+pub use quantizer::{dequantize, quantize_dequantize, quantize_to_int, QuantizedLayer};
+pub use size::{int8_size_bytes, model_size_bytes, size_mib};

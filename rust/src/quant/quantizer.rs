@@ -1,0 +1,195 @@
+//! Per-output-channel symmetric weight quantizer.
+//!
+//! Bit-exact mirror of the Pallas kernel (python/compile/kernels/
+//! fake_quant.py): Q = 2^(b-1) - 1 signed levels, scale = abs-max over the
+//! fan-in axis with a 1e-8 floor, round-half-to-even (XLA semantics).
+//! The coordinator uses this for σ/KL bookkeeping and for producing the
+//! integer weights consumed by the shift-add MAC simulator — the same
+//! integers the accelerator would see.
+
+/// Integer codes + per-channel scales for one layer.
+#[derive(Debug, Clone)]
+pub struct QuantizedLayer {
+    /// Codes in [-Q, Q], laid out like the source tensor (fanin-major).
+    pub codes: Vec<i32>,
+    /// Per-output-channel scale Δ_c.
+    pub scales: Vec<f32>,
+    pub bits: u8,
+    pub out_channels: usize,
+}
+
+fn q_levels(bits: u8) -> f32 {
+    ((1u32 << (bits - 1)) - 1) as f32
+}
+
+/// Per-channel abs-max over the fan-in axis.
+/// `w` is fanin-major: element (i, c) at `i * cout + c`.
+fn channel_amax(w: &[f32], cout: usize) -> Vec<f32> {
+    assert!(cout > 0 && w.len() % cout == 0);
+    let mut amax = vec![0.0f32; cout];
+    for row in w.chunks_exact(cout) {
+        for (m, &v) in amax.iter_mut().zip(row) {
+            let a = v.abs();
+            if a > *m {
+                *m = a;
+            }
+        }
+    }
+    amax
+}
+
+/// Quantize to integer codes + scales (the accelerator-facing form).
+pub fn quantize_to_int(w: &[f32], cout: usize, bits: u8) -> QuantizedLayer {
+    assert!((2..=8).contains(&bits), "bits must be in [2, 8], got {bits}");
+    let q = q_levels(bits);
+    let amax = channel_amax(w, cout);
+    let scales: Vec<f32> = amax.iter().map(|&a| a.max(1e-8) / q).collect();
+    let mut codes = Vec::with_capacity(w.len());
+    for row in w.chunks_exact(cout) {
+        for (c, &v) in row.iter().enumerate() {
+            let code = (v / scales[c]).round_ties_even().clamp(-q, q);
+            codes.push(code as i32);
+        }
+    }
+    QuantizedLayer { codes, scales, bits, out_channels: cout }
+}
+
+/// Dequantize integer codes back to f32.
+pub fn dequantize(ql: &QuantizedLayer) -> Vec<f32> {
+    let cout = ql.out_channels;
+    ql.codes
+        .iter()
+        .enumerate()
+        .map(|(i, &code)| code as f32 * ql.scales[i % cout])
+        .collect()
+}
+
+/// Fake-quantize (quantize-dequantize) — matches the Pallas kernel output
+/// bit-for-bit; bits >= 31 is the float passthrough.
+pub fn quantize_dequantize(w: &[f32], cout: usize, bits: u8) -> Vec<f32> {
+    if bits >= 31 {
+        return w.to_vec();
+    }
+    dequantize(&quantize_to_int(w, cout, bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Pair, UsizeIn, VecF32};
+    use crate::util::rng::Rng;
+
+    fn rand_w(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn codes_within_range() {
+        for bits in [2u8, 4, 6, 8] {
+            let w = rand_w(64 * 8, bits as u64);
+            let ql = quantize_to_int(&w, 8, bits);
+            let q = ((1i32 << (bits - 1)) - 1) as i32;
+            assert!(ql.codes.iter().all(|&c| (-q..=q).contains(&c)));
+        }
+    }
+
+    #[test]
+    fn abs_max_maps_to_extreme_code() {
+        let mut w = rand_w(32 * 4, 3);
+        w[5 * 4 + 2] = 10.0; // dominate channel 2
+        let ql = quantize_to_int(&w, 4, 4);
+        assert_eq!(ql.codes[5 * 4 + 2], 7);
+    }
+
+    #[test]
+    fn dequantize_roundtrip_error_bounded() {
+        let w = rand_w(128 * 8, 9);
+        for bits in [2u8, 4, 6, 8] {
+            let dq = quantize_dequantize(&w, 8, bits);
+            let amax = super::channel_amax(&w, 8);
+            let q = q_levels(bits);
+            for (i, (&orig, &deq)) in w.iter().zip(&dq).enumerate() {
+                let delta = amax[i % 8].max(1e-8) / q;
+                assert!(
+                    (orig - deq).abs() <= delta * 0.5 + 1e-6,
+                    "bits={bits} i={i} orig={orig} deq={deq} delta={delta}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn passthrough_at_32() {
+        let w = rand_w(64, 1);
+        assert_eq!(quantize_dequantize(&w, 8, 32), w);
+    }
+
+    #[test]
+    fn idempotent_property() {
+        // fq(fq(w)) == fq(w) for all inputs (matches the pytest invariant)
+        let gen = Pair(VecF32 { min_len: 8, max_len: 64, scale: 5.0 }, UsizeIn(2, 8));
+        check(42, 200, &gen, |(w, bshift)| {
+            let bits = (*bshift as u8 / 2) * 2; // in {2,4,6,8}
+            let bits = bits.clamp(2, 8);
+            let cout = 4;
+            let mut w = w.clone();
+            w.truncate(w.len() / cout * cout);
+            if w.is_empty() {
+                return Ok(());
+            }
+            let once = quantize_dequantize(&w, cout, bits);
+            let twice = quantize_dequantize(&once, cout, bits);
+            for (a, b) in once.iter().zip(&twice) {
+                if (a - b).abs() > 1e-5 * a.abs().max(1.0) {
+                    return Err(format!("not idempotent: {a} vs {b} (bits={bits})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn per_channel_independence_property() {
+        let w = rand_w(64 * 4, 17);
+        let base = quantize_dequantize(&w, 4, 4);
+        let mut w2 = w.clone();
+        for i in (0..w2.len()).step_by(4) {
+            w2[i] *= 50.0; // blow up channel 0 only
+        }
+        let pert = quantize_dequantize(&w2, 4, 4);
+        for i in 0..w.len() {
+            if i % 4 != 0 {
+                assert_eq!(base[i], pert[i], "channel crosstalk at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weights_stay_zero() {
+        let w = vec![0.0f32; 32];
+        let dq = quantize_dequantize(&w, 4, 2);
+        assert!(dq.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "bits must be in")]
+    fn rejects_bad_bits() {
+        quantize_to_int(&[1.0, 2.0], 2, 1);
+    }
+
+    #[test]
+    fn distinct_levels_bounded() {
+        let w = rand_w(512 * 2, 23);
+        for bits in [2u8, 4] {
+            let ql = quantize_to_int(&w, 2, bits);
+            for c in 0..2 {
+                let mut levels: Vec<i32> =
+                    ql.codes.iter().skip(c).step_by(2).copied().collect();
+                levels.sort();
+                levels.dedup();
+                assert!(levels.len() <= (1usize << bits) - 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Model-size accounting (the paper's memory boundary condition).
+//!
+//! Following the paper (Sec. IV-C) the memory objective counts *weights
+//! only* — Σ_ℓ weight_count(ℓ) · b_ℓ / 8 bytes. Activations and BN/bias
+//! parameters are excluded (they stay at 8 bits / float respectively and
+//! are identical across schemes, so they cancel in all comparisons).
+
+use super::assignment::BitAssignment;
+use crate::manifest::ArchSpec;
+
+/// Quantized model size in bytes under a bit assignment.
+pub fn model_size_bytes(arch: &ArchSpec, bits: &BitAssignment) -> f64 {
+    assert_eq!(arch.num_qlayers(), bits.len(), "assignment/arch mismatch");
+    arch.qlayers
+        .iter()
+        .zip(&bits.bits)
+        .map(|(q, &b)| q.weight_count as f64 * b as f64 / 8.0)
+        .sum()
+}
+
+/// INT8 reference size in bytes (the paper's normalization base).
+pub fn int8_size_bytes(arch: &ArchSpec) -> f64 {
+    arch.total_weight_params as f64
+}
+
+/// Bytes -> MiB.
+pub fn size_mib(bytes: f64) -> f64 {
+    bytes / (1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::manifest::{ArchSpec, ParamKind, ParamSpec, QLayerSpec};
+    use std::collections::BTreeMap;
+
+    pub(crate) fn toy_arch(weight_counts: &[usize]) -> ArchSpec {
+        let mut params = Vec::new();
+        let mut qlayers = Vec::new();
+        for (i, &wc) in weight_counts.iter().enumerate() {
+            params.push(ParamSpec {
+                name: format!("l{i}.kernel"),
+                shape: vec![wc / 2, 2],
+                size: wc,
+                kind: ParamKind::ConvKernel,
+                qlayer: Some(i),
+                fanin: wc / 2,
+            });
+            qlayers.push(QLayerSpec {
+                name: format!("l{i}"),
+                param_idx: i,
+                kind: "conv".into(),
+                macs: (wc * 16) as u64,
+                weight_count: wc,
+                fanin: wc / 2,
+                out_channels: 2,
+            });
+        }
+        ArchSpec {
+            name: "toy".into(),
+            artifacts: BTreeMap::new(),
+            total_params: weight_counts.iter().sum(),
+            total_weight_params: weight_counts.iter().sum(),
+            total_macs: weight_counts.iter().map(|&w| (w * 16) as u64).sum(),
+            params,
+            qlayers,
+        }
+    }
+
+    #[test]
+    fn int8_equals_weight_count() {
+        let a = toy_arch(&[100, 200]);
+        assert_eq!(int8_size_bytes(&a), 300.0);
+        let b8 = BitAssignment::uniform(2, 8);
+        assert_eq!(model_size_bytes(&a, &b8), 300.0);
+    }
+
+    #[test]
+    fn size_monotone_in_bits() {
+        let a = toy_arch(&[128, 64, 32]);
+        let mut prev = 0.0;
+        for bits in [2u8, 4, 6, 8] {
+            let s = model_size_bytes(&a, &BitAssignment::uniform(3, bits));
+            assert!(s > prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn mixed_assignment_between_extremes() {
+        let a = toy_arch(&[128, 64]);
+        let lo = model_size_bytes(&a, &BitAssignment::uniform(2, 2));
+        let hi = model_size_bytes(&a, &BitAssignment::uniform(2, 8));
+        let mix = model_size_bytes(&a, &BitAssignment::new(vec![2, 8]).unwrap());
+        assert!(lo < mix && mix < hi);
+        // exact: 128*2/8 + 64*8/8 = 32 + 64
+        assert_eq!(mix, 96.0);
+    }
+
+    #[test]
+    fn mib_conversion() {
+        assert_eq!(size_mib(1024.0 * 1024.0), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "assignment/arch mismatch")]
+    fn mismatched_lengths_panic() {
+        let a = toy_arch(&[10]);
+        model_size_bytes(&a, &BitAssignment::uniform(2, 8));
+    }
+}

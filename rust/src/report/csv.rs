@@ -1,0 +1,74 @@
+//! CSV series writer — every experiment also drops its raw series under
+//! results/ so the paper figures can be re-plotted externally.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Buffered CSV writer with a fixed column schema.
+pub struct CsvWriter {
+    path: PathBuf,
+    cols: usize,
+    buf: String,
+}
+
+impl CsvWriter {
+    pub fn new(path: impl AsRef<Path>, header: &[&str]) -> CsvWriter {
+        let mut buf = String::new();
+        buf.push_str(&header.join(","));
+        buf.push('\n');
+        CsvWriter { path: path.as_ref().to_path_buf(), cols: header.len(), buf }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.cols, "csv row arity mismatch");
+        let escaped: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        self.buf.push_str(&escaped.join(","));
+        self.buf.push('\n');
+        self
+    }
+
+    /// Write the accumulated rows to disk (creates parent dirs).
+    pub fn flush(&self) -> Result<PathBuf> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(&self.path)
+            .with_context(|| format!("creating {:?}", self.path))?;
+        f.write_all(self.buf.as_bytes())?;
+        Ok(self.path.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("sq_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::new(&path, &["a", "b"]);
+        w.row(&["1".into(), "x,y".into()]);
+        w.row(&["2".into(), "q\"z".into()]);
+        let p = w.flush().unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert_eq!(s, "a,b\n1,\"x,y\"\n2,\"q\"\"z\"\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        CsvWriter::new("/tmp/x.csv", &["a"]).row(&["1".into(), "2".into()]);
+    }
+}

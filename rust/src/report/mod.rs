@@ -1,0 +1,9 @@
+//! Reporting substrate: ASCII tables (paper-style) and CSV series.
+
+pub mod csv;
+pub mod plot;
+pub mod table;
+
+pub use csv::CsvWriter;
+pub use plot::ScatterPlot;
+pub use table::Table;

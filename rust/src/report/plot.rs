@@ -1,0 +1,156 @@
+//! ASCII scatter plots — terminal renderings of Fig. 3 (trajectory) and
+//! Fig. 4 (accuracy-size frontier), so the experiment binaries show the
+//! *shape* directly instead of only dropping CSVs.
+
+/// One labeled series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub glyph: char,
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// A fixed-size character canvas with axes.
+pub struct ScatterPlot {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub width: usize,
+    pub height: usize,
+    series: Vec<Series>,
+}
+
+impl ScatterPlot {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> ScatterPlot {
+        ScatterPlot {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            width: 64,
+            height: 20,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn series(&mut self, glyph: char, label: &str, points: Vec<(f64, f64)>) -> &mut Self {
+        self.series.push(Series { glyph, label: label.to_string(), points });
+        self
+    }
+
+    fn bounds(&self) -> Option<(f64, f64, f64, f64)> {
+        let all: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().copied())
+            .filter(|(x, y)| x.is_finite() && y.is_finite())
+            .collect();
+        if all.is_empty() {
+            return None;
+        }
+        let (mut x0, mut x1, mut y0, mut y1) =
+            (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+        for (x, y) in all {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        // avoid zero-span axes
+        if (x1 - x0).abs() < 1e-12 {
+            x0 -= 0.5;
+            x1 += 0.5;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y0 -= 0.5;
+            y1 += 0.5;
+        }
+        Some((x0, x1, y0, y1))
+    }
+
+    /// Render to a multi-line string (points overplot later series last).
+    pub fn render(&self) -> String {
+        let Some((x0, x1, y0, y1)) = self.bounds() else {
+            return format!("{} (no data)\n", self.title);
+        };
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                if !x.is_finite() || !y.is_finite() {
+                    continue;
+                }
+                let cx = ((x - x0) / (x1 - x0) * (self.width - 1) as f64).round() as usize;
+                let cy = ((y - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - cy.min(self.height - 1);
+                grid[row][cx.min(self.width - 1)] = s.glyph;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&format!("  y: {} in [{:.3}, {:.3}]\n", self.y_label, y0, y1));
+        for row in &grid {
+            out.push_str("  |");
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str("  +");
+        out.push_str(&"-".repeat(self.width));
+        out.push('\n');
+        out.push_str(&format!("   x: {} in [{:.3}, {:.3}]\n", self.x_label, x0, x1));
+        for s in &self.series {
+            out.push_str(&format!("   {} {} ({} pts)\n", s.glyph, s.label, s.points.len()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_in_correct_corners() {
+        let mut p = ScatterPlot::new("t", "x", "y");
+        p.series('a', "low", vec![(0.0, 0.0)]);
+        p.series('b', "high", vec![(1.0, 1.0)]);
+        let s = p.render();
+        let rows: Vec<&str> = s.lines().filter(|l| l.starts_with("  |")).collect();
+        assert_eq!(rows.len(), 20);
+        // 'b' (max y) in the first grid row, 'a' (min y) in the last
+        assert!(rows[0].contains('b'), "{s}");
+        assert!(rows[19].contains('a'), "{s}");
+        // 'a' left, 'b' right
+        assert!(rows[19].find('a').unwrap() < rows[0].find('b').unwrap());
+    }
+
+    #[test]
+    fn empty_plot_safe() {
+        let p = ScatterPlot::new("empty", "x", "y");
+        assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_does_not_panic() {
+        let mut p = ScatterPlot::new("c", "x", "y");
+        p.series('*', "s", vec![(1.0, 2.0), (1.0, 2.0)]);
+        let s = p.render();
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn nan_points_skipped() {
+        let mut p = ScatterPlot::new("n", "x", "y");
+        p.series('*', "s", vec![(f64::NAN, 1.0), (0.5, 0.5)]);
+        let s = p.render();
+        assert_eq!(s.matches('*').count(), 1 + 1); // 1 point + legend glyph
+    }
+
+    #[test]
+    fn legend_lists_all_series() {
+        let mut p = ScatterPlot::new("l", "x", "y");
+        p.series('u', "uniform", vec![(0.0, 0.0)]);
+        p.series('s', "sigma", vec![(1.0, 1.0)]);
+        let out = p.render();
+        assert!(out.contains("u uniform (1 pts)"));
+        assert!(out.contains("s sigma (1 pts)"));
+    }
+}

@@ -1,0 +1,112 @@
+//! ASCII table builder used by every experiment binary to print the
+//! paper-table-shaped output.
+
+/// Simple column-aligned table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with box-drawing separators.
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let sep = |l: char, m: char, r: char| {
+            let mut s = String::new();
+            s.push(l);
+            for (i, w) in widths.iter().enumerate() {
+                s.push_str(&"─".repeat(w + 2));
+                s.push(if i + 1 == cols { r } else { m });
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("│");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} │", cell, w = widths[c]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep('┌', '┬', '┐'));
+        out.push_str(&fmt_row(&self.header));
+        out.push_str(&sep('├', '┼', '┤'));
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+        }
+        out.push_str(&sep('└', '┴', '┘'));
+        out
+    }
+}
+
+/// Format helpers shared by experiments.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+pub fn mib(bytes: f64) -> String {
+    format!("{:.4}", bytes / (1024.0 * 1024.0))
+}
+
+pub fn kib(bytes: f64) -> String {
+    format!("{:.2}", bytes / 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("│ 1   │ 2    │"));
+        assert!(s.contains("│ 333 │ 4    │"));
+        assert_eq!(s.lines().count(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        Table::new("", &["a"]).row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(pct(0.1234), "12.34%");
+        assert_eq!(kib(2048.0), "2.00");
+    }
+}

@@ -1,0 +1,97 @@
+//! PJRT client wrapper + executable cache.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile`. Text is the interchange format because jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects in
+//! serialized-proto form.
+
+use crate::manifest::{ArchSpec, Manifest};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// Owns the PJRT client, the manifest, and a compile cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// (arch, entry) -> compiled executable; compilation of the deep
+    /// ResNets takes seconds, so everything is compiled exactly once.
+    cache: RefCell<HashMap<(String, String), std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    pub verbose: bool,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()), verbose: false })
+    }
+
+    /// Compile (or fetch from cache) one entry point of one architecture.
+    pub fn executable(
+        &self,
+        arch: &ArchSpec,
+        entry: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let key = (arch.name.clone(), entry.to_string());
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(arch, entry)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}:{entry}", arch.name))?;
+        if self.verbose {
+            eprintln!(
+                "[runtime] compiled {}:{} in {:.2}s",
+                arch.name,
+                entry,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        let rc = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+}
+
+/// Build an f32 literal with the given logical dims.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal with the given logical dims.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Rank-0 f32 literal.
+pub fn f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// PRNG key literal (u32[2]) from a 64-bit seed.
+pub fn key_literal(seed: u64) -> Result<xla::Literal> {
+    let data = [(seed >> 32) as u32, seed as u32];
+    let l = xla::Literal::vec1(&data);
+    Ok(l)
+}
+
+/// Read a rank-0 or single-element f32 literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client. This is the only place Python output crosses into the
+//! Rust world; after `make artifacts` the binary is self-contained.
+
+pub mod client;
+pub mod params_io;
+pub mod session;
+
+pub use client::Runtime;
+pub use params_io::{load_params, save_params};
+pub use session::{EvalResult, ModelSession, StepResult};

@@ -1,0 +1,116 @@
+//! Binary (de)serialization of model parameters — pre-trained float
+//! checkpoints are cached under results/pretrained/ so experiment
+//! binaries don't repeat the float pre-training.
+//!
+//! Format: magic "SQP1" | u32 array-count | per array: u64 length +
+//! little-endian f32 data. Lengths are validated against the manifest at
+//! load, so a stale checkpoint fails loudly instead of silently skewing
+//! results.
+
+use crate::manifest::ArchSpec;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SQP1";
+
+/// Save a parameter set.
+pub fn save_params(path: impl AsRef<Path>, params: &[Vec<f32>]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for arr in params {
+        f.write_all(&(arr.len() as u64).to_le_bytes())?;
+        // SAFETY-free path: serialize via to_le_bytes per chunk
+        let mut bytes = Vec::with_capacity(arr.len() * 4);
+        for &v in arr {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+/// Load a parameter set and validate it against the manifest layout.
+pub fn load_params(path: impl AsRef<Path>, arch: &ArchSpec) -> Result<Vec<Vec<f32>>> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic");
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf) as usize;
+    if count != arch.num_params() {
+        bail!(
+            "{path:?}: {count} arrays but manifest expects {} — stale checkpoint?",
+            arch.num_params()
+        );
+    }
+    let mut out = Vec::with_capacity(count);
+    let mut u64buf = [0u8; 8];
+    for (i, spec) in arch.params.iter().enumerate() {
+        f.read_exact(&mut u64buf)?;
+        let len = u64::from_le_bytes(u64buf) as usize;
+        if len != spec.size {
+            bail!("{path:?}: array {i} has {len} elems, manifest says {}", spec.size);
+        }
+        let mut bytes = vec![0u8; len * 4];
+        f.read_exact(&mut bytes)?;
+        let arr: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(arr);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::size::tests::toy_arch;
+
+    #[test]
+    fn roundtrip() {
+        let arch = toy_arch(&[16, 8]);
+        let params = vec![
+            (0..16).map(|i| i as f32 * 0.5).collect::<Vec<f32>>(),
+            (0..8).map(|i| -(i as f32)).collect(),
+        ];
+        let path = std::env::temp_dir().join("sq_params_test.bin");
+        save_params(&path, &params).unwrap();
+        let got = load_params(&path, &arch).unwrap();
+        assert_eq!(got, params);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_layout() {
+        let arch = toy_arch(&[16, 8]);
+        let other = toy_arch(&[16]);
+        let params = vec![(0..16).map(|i| i as f32).collect::<Vec<f32>>()];
+        let path = std::env::temp_dir().join("sq_params_test2.bin");
+        save_params(&path, &params).unwrap();
+        assert!(load_params(&path, &arch).is_err());
+        assert!(load_params(&path, &other).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("sq_params_test3.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        let arch = toy_arch(&[1]);
+        assert!(load_params(&path, &arch).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

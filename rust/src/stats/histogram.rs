@@ -1,0 +1,90 @@
+//! Fixed-bin histogram over a shared range — the discrete distributions
+//! p_ℓ and p̃_ℓ of Eq. 1.
+
+/// A normalized histogram (probability mass per bin).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub mass: Vec<f64>,
+    pub count: usize,
+}
+
+impl Histogram {
+    /// Build over an explicit range (values outside clamp to edge bins).
+    pub fn with_range(xs: &[f32], lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(bins > 0 && hi > lo);
+        let mut counts = vec![0u64; bins];
+        let scale = bins as f64 / (hi - lo);
+        for &x in xs {
+            let mut b = ((x as f64 - lo) * scale) as i64;
+            if b < 0 {
+                b = 0;
+            }
+            if b >= bins as i64 {
+                b = bins as i64 - 1;
+            }
+            counts[b as usize] += 1;
+        }
+        let n = xs.len().max(1) as f64;
+        Histogram {
+            lo,
+            hi,
+            mass: counts.iter().map(|&c| c as f64 / n).collect(),
+            count: xs.len(),
+        }
+    }
+
+    /// Build over the data's own (symmetric) range: [-amax, amax].
+    /// Symmetric range matches the symmetric weight quantizer's grid.
+    pub fn symmetric(xs: &[f32], bins: usize) -> Histogram {
+        let amax = xs
+            .iter()
+            .fold(0.0f64, |m, &x| m.max((x as f64).abs()))
+            .max(1e-12);
+        Self::with_range(xs, -amax, amax, bins)
+    }
+
+    pub fn bins(&self) -> usize {
+        self.mass.len()
+    }
+
+    pub fn total_mass(&self) -> f64 {
+        self.mass.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mass_sums_to_one() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 / 100.0).sin()).collect();
+        let h = Histogram::symmetric(&xs, 64);
+        assert!((h.total_mass() - 1.0).abs() < 1e-9);
+        assert_eq!(h.count, 1000);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let h = Histogram::with_range(&[-100.0, 100.0], -1.0, 1.0, 4);
+        assert!((h.mass[0] - 0.5).abs() < 1e-12);
+        assert!((h.mass[3] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_data_roughly_uniform_mass() {
+        let xs: Vec<f32> = (0..10_000).map(|i| i as f32 / 10_000.0).collect();
+        let h = Histogram::with_range(&xs, 0.0, 1.0, 10);
+        for &m in &h.mass {
+            assert!((m - 0.1).abs() < 0.01, "{m}");
+        }
+    }
+
+    #[test]
+    fn empty_input_zero_mass() {
+        let h = Histogram::with_range(&[], 0.0, 1.0, 8);
+        assert_eq!(h.total_mass(), 0.0);
+    }
+}

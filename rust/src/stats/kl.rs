@@ -1,0 +1,93 @@
+//! KL divergence between float and quantized weight distributions (Eq. 1)
+//! and the normalized variant used by Phase 2's sensitivity score.
+
+use super::histogram::Histogram;
+
+/// Smoothing mass added to every bin before normalization, so that
+/// D_KL is finite when the quantized distribution has empty bins (it
+/// always does at low bitwidths — that's precisely the signal).
+const EPS: f64 = 1e-9;
+
+/// D_KL(p ‖ q) over two histograms with identical binning.
+pub fn kl_divergence(p: &Histogram, q: &Histogram) -> f64 {
+    assert_eq!(p.bins(), q.bins(), "histograms must share binning");
+    let pn: f64 = p.mass.iter().sum::<f64>() + EPS * p.bins() as f64;
+    let qn: f64 = q.mass.iter().sum::<f64>() + EPS * q.bins() as f64;
+    let mut d = 0.0;
+    for (pi, qi) in p.mass.iter().zip(q.mass.iter()) {
+        let pp = (pi + EPS) / pn;
+        let qq = (qi + EPS) / qn;
+        d += pp * (pp / qq).ln();
+    }
+    d.max(0.0)
+}
+
+/// Paper's normalized KL: divide by the divergence of the 8-bit baseline
+/// so scores are comparable across layers (bounded to [0, 1] by clamping;
+/// a layer whose current D_KL is below the INT8 baseline's scores ~0).
+pub fn normalized_kl(d_cur: f64, d_int8: f64) -> f64 {
+    if d_cur <= 0.0 {
+        return 0.0;
+    }
+    if d_int8 <= 0.0 {
+        // int8 is lossless on this layer: any loss saturates the score
+        return 1.0;
+    }
+    (d_cur / d_int8).min(1.0) / 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist(xs: &[f32]) -> Histogram {
+        Histogram::with_range(xs, -1.0, 1.0, 32)
+    }
+
+    #[test]
+    fn identical_distributions_zero() {
+        let xs: Vec<f32> = (0..512).map(|i| ((i * 37) % 200) as f32 / 100.0 - 1.0).collect();
+        let d = kl_divergence(&hist(&xs), &hist(&xs));
+        assert!(d.abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn nonnegative_and_asymmetric() {
+        let a: Vec<f32> = (0..512).map(|i| (i as f32 / 512.0) - 0.5).collect();
+        let b: Vec<f32> = (0..512).map(|i| ((i as f32 / 512.0) - 0.5) * 0.3).collect();
+        let dab = kl_divergence(&hist(&a), &hist(&b));
+        let dba = kl_divergence(&hist(&b), &hist(&a));
+        assert!(dab > 0.0 && dba > 0.0);
+        assert!((dab - dba).abs() > 1e-6, "KL should be asymmetric");
+    }
+
+    #[test]
+    fn coarser_quantization_higher_kl() {
+        // quantize a smooth ramp to k levels; fewer levels => larger KL
+        let xs: Vec<f32> = (0..4096).map(|i| i as f32 / 4096.0 * 2.0 - 1.0).collect();
+        let quant = |levels: f32| -> Vec<f32> {
+            xs.iter().map(|&x| (x * levels).round() / levels).collect()
+        };
+        let p = hist(&xs);
+        let d2 = kl_divergence(&p, &hist(&quant(1.0)));
+        let d4 = kl_divergence(&p, &hist(&quant(7.0)));
+        let d8 = kl_divergence(&p, &hist(&quant(127.0)));
+        assert!(d2 > d4 && d4 > d8, "{d2} {d4} {d8}");
+    }
+
+    #[test]
+    fn normalized_kl_bounds() {
+        assert_eq!(normalized_kl(0.0, 1.0), 0.0);
+        assert_eq!(normalized_kl(0.5, 0.0), 1.0);
+        assert!((normalized_kl(0.25, 0.5) - 0.5).abs() < 1e-12);
+        assert_eq!(normalized_kl(5.0, 0.5), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "share binning")]
+    fn mismatched_bins_panics() {
+        let a = Histogram::with_range(&[0.0], -1.0, 1.0, 8);
+        let b = Histogram::with_range(&[0.0], -1.0, 1.0, 16);
+        kl_divergence(&a, &b);
+    }
+}

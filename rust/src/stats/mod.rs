@@ -1,0 +1,15 @@
+//! Statistics substrate: histograms, KL divergence, stddev, OLS regression.
+//!
+//! These are the two signals the paper's algorithm runs on (σ_ℓ and
+//! D_KL(p_ℓ ‖ p̃_ℓ), Sec. III-A) plus the regression/error-band analysis
+//! used by Fig. 4(b).
+
+pub mod histogram;
+pub mod kl;
+pub mod regression;
+pub mod stddev;
+
+pub use histogram::Histogram;
+pub use kl::{kl_divergence, normalized_kl};
+pub use regression::LinearFit;
+pub use stddev::{mean, stddev};

@@ -1,0 +1,100 @@
+//! Ordinary least squares y = a + b·x with residual σ — the regression
+//! fits and ±1σ error bands of Fig. 4(b).
+
+/// OLS fit result.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearFit {
+    pub intercept: f64,
+    pub slope: f64,
+    /// Residual standard deviation (the ±1σ band half-width).
+    pub sigma: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+    pub n: usize,
+}
+
+impl LinearFit {
+    /// Fit y = a + b·x by least squares. Requires n >= 2.
+    pub fn fit(xs: &[f64], ys: &[f64]) -> LinearFit {
+        assert_eq!(xs.len(), ys.len());
+        let n = xs.len();
+        assert!(n >= 2, "need at least two points");
+        let nf = n as f64;
+        let mx = xs.iter().sum::<f64>() / nf;
+        let my = ys.iter().sum::<f64>() / nf;
+        let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+        let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+        let intercept = my - slope * mx;
+        let mut ss_res = 0.0;
+        let mut ss_tot = 0.0;
+        for (x, y) in xs.iter().zip(ys) {
+            let pred = intercept + slope * x;
+            ss_res += (y - pred) * (y - pred);
+            ss_tot += (y - my) * (y - my);
+        }
+        let sigma = (ss_res / nf).sqrt();
+        let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+        LinearFit { intercept, slope, sigma, r2, n }
+    }
+
+    pub fn predict(&self, x: f64) -> f64 {
+        self.intercept + self.slope * x
+    }
+
+    /// Horizontal gap to another fit at a given y (the paper's
+    /// "model-size saving at equal accuracy", Fig. 4b).
+    pub fn x_at(&self, y: f64) -> f64 {
+        if self.slope.abs() < 1e-12 {
+            f64::NAN
+        } else {
+            (y - self.intercept) / self.slope
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let f = LinearFit::fit(&xs, &ys);
+        assert!((f.slope - 2.0).abs() < 1e-12);
+        assert!((f.intercept - 3.0).abs() < 1e-12);
+        assert!(f.sigma < 1e-9);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_reasonable() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64 / 10.0).collect();
+        // deterministic pseudo-noise
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 1.0 + 0.5 * x + 0.1 * ((i * 2654435761) % 1000) as f64 / 1000.0)
+            .collect();
+        let f = LinearFit::fit(&xs, &ys);
+        assert!((f.slope - 0.5).abs() < 0.05);
+        assert!(f.r2 > 0.9);
+    }
+
+    #[test]
+    fn predict_and_invert_roundtrip() {
+        let f = LinearFit { intercept: 1.0, slope: 2.0, sigma: 0.0, r2: 1.0, n: 2 };
+        let y = f.predict(3.0);
+        assert!((f.x_at(y) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_y_zero_slope() {
+        let xs = [0.0, 1.0, 2.0];
+        let ys = [5.0, 5.0, 5.0];
+        let f = LinearFit::fit(&xs, &ys);
+        assert_eq!(f.slope, 0.0);
+        assert!((f.intercept - 5.0).abs() < 1e-12);
+    }
+}

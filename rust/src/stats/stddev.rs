@@ -1,0 +1,49 @@
+//! Mean / standard deviation over f32 weight slices (f64 accumulation).
+
+/// Arithmetic mean (0 for empty input).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation — the σ_ℓ of the paper (Table I).
+pub fn stddev(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    var.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+    }
+
+    #[test]
+    fn constant_has_zero_std() {
+        assert_eq!(stddev(&[3.0; 100]), 0.0);
+    }
+
+    #[test]
+    fn scale_equivariance() {
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let scaled: Vec<f32> = xs.iter().map(|x| x * 4.0).collect();
+        assert!((stddev(&scaled) - 4.0 * stddev(&xs)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny declarative CLI argument parser (offline build: no clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; produces usage strings for `sigmaquant help`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name / subcommand).
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&sv(&["table3", "--arch", "resnet50_mini",
+                                  "--steps=20", "--verbose"]));
+        assert_eq!(a.positional, vec!["table3"]);
+        assert_eq!(a.get("arch"), Some("resnet50_mini"));
+        assert_eq!(a.get_usize("steps", 0), 20);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]));
+        assert_eq!(a.get_f64("x", 1.5), 1.5);
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(&sv(&["--a", "--b", "v"]));
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Zero-dependency substrates: JSON, RNG, CLI, property testing, timing.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;

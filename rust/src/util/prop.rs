@@ -1,0 +1,145 @@
+//! In-repo property-based testing harness (offline build: no proptest).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs; on failure it performs greedy shrinking via the generator's
+//! `shrink` hook and panics with the minimal reproduction and its seed.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// A generator of random test cases with optional shrinking.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; default = no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs; panic with the minimal
+/// counterexample on failure.
+pub fn check<G, F>(seed: u64, cases: usize, gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // greedy shrink
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}): {best_msg}\n\
+                 minimal counterexample: {best:?}"
+            );
+        }
+    }
+}
+
+/// Generator: f32 vector with values in [-scale, scale], length in [min_len, max_len].
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..n).map(|_| rng.range(-self.scale as f64, self.scale as f64) as f32).collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            out.push(v[1..].to_vec());
+        }
+        // zero out elements
+        if let Some(i) = v.iter().position(|&x| x != 0.0) {
+            let mut z = v.clone();
+            z[i] = 0.0;
+            out.push(z);
+        }
+        out.retain(|c| c.len() >= self.min_len);
+        out
+    }
+}
+
+/// Generator: uniform usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        if *v > self.0 { vec![self.0, (self.0 + v) / 2] } else { vec![] }
+    }
+}
+
+/// Generator: pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{check, UsizeIn, VecF32};
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 100, &VecF32 { min_len: 0, max_len: 16, scale: 10.0 }, |v| {
+            if v.len() <= 16 { Ok(()) } else { Err("too long".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(1, 100, &UsizeIn(0, 100), |&v| {
+            if v < 50 { Ok(()) } else { Err(format!("{v} >= 50")) }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        let r = std::panic::catch_unwind(|| {
+            check(3, 50, &UsizeIn(0, 1000), |&v| {
+                if v < 123 { Ok(()) } else { Err("big".into()) }
+            });
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        // greedy bisection should land well below the initial failure
+        assert!(msg.contains("counterexample"), "{msg}");
+    }
+}

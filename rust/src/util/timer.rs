@@ -1,0 +1,73 @@
+//! Measurement helpers shared by the bench harness and the perf pass.
+
+use std::time::Instant;
+
+/// Robust timing summary over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Timing {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations and `min_total_ms`
+/// milliseconds, whichever is larger; returns summary statistics.
+pub fn bench<F: FnMut()>(min_iters: usize, min_total_ms: f64, mut f: F) -> Timing {
+    // warmup
+    f();
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        if samples_ns.len() >= min_iters
+            && start.elapsed().as_secs_f64() * 1e3 >= min_total_ms
+        {
+            break;
+        }
+        if samples_ns.len() >= 1_000_000 {
+            break;
+        }
+    }
+    summarize(&mut samples_ns)
+}
+
+fn summarize(samples_ns: &mut [f64]) -> Timing {
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    Timing {
+        iters: n,
+        mean_ns: mean,
+        median_ns: samples_ns[n / 2],
+        min_ns: samples_ns[0],
+        p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let t = bench(10, 1.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.iters >= 10);
+        assert!(t.min_ns <= t.median_ns);
+        assert!(t.median_ns <= t.p95_ns);
+    }
+}

@@ -1,0 +1,126 @@
+//! End-to-end coordinator integration over real artifacts: the two-phase
+//! search must terminate, produce a valid assignment, respect the met
+//! flag semantics, and the trajectory must be well-formed.
+
+use sigmaquant::coordinator::qat::TrainCursor;
+use sigmaquant::coordinator::zones::Targets;
+use sigmaquant::coordinator::{SearchConfig, SigmaQuant, Zone};
+use sigmaquant::data::SynthDataset;
+use sigmaquant::quant::{int8_size_bytes, model_size_bytes};
+use sigmaquant::runtime::{ModelSession, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts missing; skipping");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+fn quick_cfg(targets: Targets) -> SearchConfig {
+    let mut cfg = SearchConfig::defaults(targets);
+    cfg.qat_steps_p1 = 6;
+    cfg.qat_steps_p2 = 4;
+    cfg.max_phase1_iters = 2;
+    cfg.max_phase2_iters = 4;
+    cfg.eval_samples = 256;
+    cfg
+}
+
+#[test]
+fn search_terminates_with_valid_assignment() {
+    let Some(rt) = runtime() else { return };
+    let mut s = ModelSession::load(&rt, "alexnet_mini", 3).expect("load");
+    let data = SynthDataset::new(rt.manifest.dataset.clone(), 3);
+    let mut cursor = TrainCursor::default();
+    // brief float warmup so accuracy is above chance
+    sigmaquant::coordinator::qat::pretrain(&mut s, &data, &mut cursor, 0.05, 40, 0)
+        .expect("pretrain");
+    let int8 = int8_size_bytes(&s.arch);
+    let targets = Targets {
+        acc_target: 0.25, // modest: reachable after the tiny warmup
+        size_target: int8 * 0.6,
+        acc_buffer: 0.05,
+        size_buffer: int8 * 0.05,
+        abandon_factor: 8.0,
+    };
+    let sq = SigmaQuant::new(quick_cfg(targets), &data);
+    let o = sq.run(&mut s, &data, &mut cursor).expect("search");
+
+    // invariant: assignment valid + resource accounting consistent
+    assert!(o.wbits.is_valid(), "bits {:?}", o.wbits.bits);
+    assert_eq!(o.wbits.len(), s.num_qlayers());
+    let recomputed = model_size_bytes(&s.arch, &o.wbits);
+    assert!((recomputed - o.resource).abs() < 1e-6);
+    // met flag agrees with the targets
+    let truly_met = o.accuracy >= targets.acc_target && o.resource <= targets.size_target;
+    assert_eq!(o.met, truly_met);
+    // trajectory recorded start + at least one phase-1 point
+    assert!(o.trajectory.len() >= 2);
+    assert_eq!(o.trajectory.points[0].phase, "start");
+    // a met search must end in the Target zone
+    if o.met {
+        assert_eq!(o.zone, Zone::Target);
+    }
+}
+
+#[test]
+fn impossible_targets_abandon_or_fail_gracefully() {
+    let Some(rt) = runtime() else { return };
+    let mut s = ModelSession::load(&rt, "alexnet_mini", 5).expect("load");
+    let data = SynthDataset::new(rt.manifest.dataset.clone(), 5);
+    let mut cursor = TrainCursor::default();
+    let int8 = int8_size_bytes(&s.arch);
+    // accuracy 100% at 1% of INT8 size: unattainable
+    let targets = Targets {
+        acc_target: 1.0,
+        size_target: int8 * 0.01,
+        acc_buffer: 0.001,
+        size_buffer: int8 * 0.001,
+        abandon_factor: 2.0,
+    };
+    let sq = SigmaQuant::new(quick_cfg(targets), &data);
+    let o = sq.run(&mut s, &data, &mut cursor).expect("search");
+    assert!(!o.met);
+    // still returns a usable model (paper Sec. VI-C: failed runs still
+    // produce meaningful trade-offs)
+    assert!(o.wbits.is_valid());
+    assert!(o.accuracy.is_finite());
+}
+
+#[test]
+fn phase2_never_unmeets_a_met_constraint_on_acceptance() {
+    let Some(rt) = runtime() else { return };
+    let mut s = ModelSession::load(&rt, "alexnet_mini", 9).expect("load");
+    let data = SynthDataset::new(rt.manifest.dataset.clone(), 9);
+    let mut cursor = TrainCursor::default();
+    sigmaquant::coordinator::qat::pretrain(&mut s, &data, &mut cursor, 0.05, 30, 0)
+        .expect("pretrain");
+    let int8 = int8_size_bytes(&s.arch);
+    let targets = Targets {
+        acc_target: 0.30,
+        size_target: int8 * 0.5,
+        acc_buffer: 0.05,
+        size_buffer: int8 * 0.05,
+        abandon_factor: 8.0,
+    };
+    let sq = SigmaQuant::new(quick_cfg(targets), &data);
+    let o = sq.run(&mut s, &data, &mut cursor).expect("search");
+    // scan phase-2 accepted moves: once size is under target it must not
+    // exceed target+buffer on any later accepted point
+    let mut size_met_seen = false;
+    for p in &o.trajectory.points {
+        if p.phase != "phase2" || p.action.contains("reverted") {
+            continue;
+        }
+        if size_met_seen {
+            assert!(
+                p.size_bytes <= targets.size_target + targets.size_buffer,
+                "accepted move broke the met size constraint: {p:?}"
+            );
+        }
+        if p.size_bytes <= targets.size_target {
+            size_met_seen = true;
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Cross-language parity: the Rust quantizer must match the L1 Pallas
+//! kernel bit-for-bit on the fixture emitted by the AOT pipeline.
+
+use sigmaquant::quant::quantize_dequantize;
+use sigmaquant::util::json::parse;
+
+#[test]
+fn rust_quantizer_matches_pallas_kernel_bit_for_bit() {
+    let path = "artifacts/fq_fixture.json";
+    let Ok(text) = std::fs::read_to_string(path) else {
+        eprintln!("fixture missing; run `make artifacts`");
+        return;
+    };
+    let j = parse(&text).expect("fixture json");
+    let fanin = j.get("fanin").as_usize().unwrap();
+    let cout = j.get("cout").as_usize().unwrap();
+    let w: Vec<f32> = j
+        .get("weights")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    assert_eq!(w.len(), fanin * cout);
+    let cases = j.get("cases").as_arr().unwrap();
+    assert_eq!(cases.len(), 4, "fixture covers the whole bit-set");
+    for case in cases {
+        let bits = case.get("bits").as_f64().unwrap() as u8;
+        let want: Vec<f32> = case
+            .get("output")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let got = quantize_dequantize(&w, cout, bits);
+        let mut max_err = 0.0f32;
+        for (i, (g, e)) in got.iter().zip(&want).enumerate() {
+            let err = (g - e).abs();
+            if err > max_err {
+                max_err = err;
+            }
+            assert!(
+                err <= 1e-6 * e.abs().max(1e-3),
+                "bits={bits} idx={i}: rust {g} vs pallas {e}"
+            );
+        }
+        println!("bits={bits}: max |err| = {max_err:e}");
+    }
+}
