@@ -1,46 +1,45 @@
-//! End-to-end runtime benchmarks over the real AOT artifacts: per-arch
+//! End-to-end runtime benchmarks on the native CPU backend: per-arch
 //! train-step and eval latency — the quantities that dominate every
 //! table's wall-clock (QAT loops, Alg. 1 lines 10/25).
 //!
-//! Requires `make artifacts`; prints a note and exits cleanly otherwise.
+//! Run via `cargo bench --bench bench_runtime`. Needs nothing but the
+//! checkout; build with `--features pjrt` plus AOT artifacts to compare
+//! the PJRT path (see EXPERIMENTS.md §Perf).
 
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::BitAssignment;
-use sigmaquant::runtime::{ModelSession, Runtime};
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 use sigmaquant::util::timer::bench;
 use std::time::Instant;
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("artifacts missing — run `make artifacts` first");
-        return;
-    }
-    println!("# bench_runtime — PJRT execution latency per architecture");
-    let rt = Runtime::new("artifacts").expect("runtime");
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 1);
-    // single-core CPU budget: the deep variants compile in minutes and
-    // are covered by the experiment runs; bench the fast trio
+    println!("# bench_runtime — native backend execution latency per architecture");
+    let be = NativeBackend::new();
+    let data = SynthDataset::new(be.dataset().clone(), 1);
     let archs = ["alexnet_mini", "resnet18_mini", "inception_mini"];
     for arch in archs {
         let t0 = Instant::now();
-        let mut s = ModelSession::load(&rt, arch, 1).expect("load");
-        let compile_s = t0.elapsed().as_secs_f64();
+        let mut s = ModelSession::load(&be, arch, 1).expect("load");
+        let setup_s = t0.elapsed().as_secs_f64();
         let l = s.num_qlayers();
         let w8 = BitAssignment::uniform(l, 8);
-        let b = rt.manifest.dataset.train_batch;
+        let b = be.dataset().train_batch;
         let (x, y) = data.train_batch(0, b);
         let t_step = bench(5, 2000.0, || {
             s.train_step(&x, &y, &w8, &w8, 0.02).expect("step");
         });
-        let (xs, ys) = data.eval_set(rt.manifest.dataset.eval_batch);
+        let eval_n = be.dataset().eval_batch;
+        let (xs, ys) = data.eval_set(eval_n);
         let t_eval = bench(3, 2000.0, || {
             s.evaluate(&xs, &ys, &w8, &w8).expect("eval");
         });
         println!(
-            "{:<16} compile {:>6.2}s | train_step {:>8.1} ms | eval/256 {:>8.1} ms",
+            "{:<16} setup {:>6.3}s | train_step/{} {:>8.1} ms | eval/{} {:>8.1} ms",
             arch,
-            compile_s,
+            setup_s,
+            b,
             t_step.mean_ms(),
+            eval_n,
             t_eval.mean_ms()
         );
     }

@@ -1,24 +1,21 @@
 //! End-to-end search benchmark: a complete (budget-reduced) two-phase
-//! SigmaQuant run on alexnet_mini — the Table II/III/IV inner loop.
-//! Also times the individual phases so regressions localize.
+//! SigmaQuant run on alexnet_mini — the Table II/III/IV inner loop —
+//! on the native CPU backend. Also times the individual phases so
+//! regressions localize.
 
 use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
 use sigmaquant::coordinator::zones::Targets;
 use sigmaquant::coordinator::{SearchConfig, SigmaQuant};
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::int8_size_bytes;
-use sigmaquant::runtime::{ModelSession, Runtime};
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 use std::time::Instant;
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("artifacts missing — run `make artifacts` first");
-        return;
-    }
-    println!("# bench_search — end-to-end two-phase search (alexnet_mini)");
-    let rt = Runtime::new("artifacts").expect("runtime");
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 1);
-    let mut s = ModelSession::load(&rt, "alexnet_mini", 1).expect("load");
+    println!("# bench_search — end-to-end two-phase search (alexnet_mini, native)");
+    let be = NativeBackend::new();
+    let data = SynthDataset::new(be.dataset().clone(), 1);
+    let mut s = ModelSession::load(&be, "alexnet_mini", 1).expect("load");
     let mut cursor = TrainCursor::default();
     let t0 = Instant::now();
     pretrain(&mut s, &data, &mut cursor, 0.05, 60, 0).expect("pretrain");

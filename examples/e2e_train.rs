@@ -1,7 +1,8 @@
 //! End-to-end driver (DESIGN.md §6): float pre-train on the synthetic
 //! workload with the loss curve logged, quantize with SigmaQuant, then
 //! map the quantized model onto the shift-add MAC simulator and report
-//! the full PPA story. The run recorded in EXPERIMENTS.md §E2E.
+//! the full PPA story. Runs on the native CPU backend; the run recorded
+//! in EXPERIMENTS.md §E2E.
 //!
 //!     cargo run --release --example e2e_train [arch] [pretrain_steps]
 
@@ -13,7 +14,7 @@ use sigmaquant::hw::mac_models::area_saving_vs;
 use sigmaquant::hw::ppa::model_ppa;
 use sigmaquant::hw::shift_add::ShiftAddConfig;
 use sigmaquant::quant::{int8_size_bytes, BitAssignment};
-use sigmaquant::runtime::{ModelSession, Runtime};
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -21,12 +22,12 @@ fn main() -> anyhow::Result<()> {
     let arch = args.first().map(|s| s.as_str()).unwrap_or("resnet18_mini");
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
 
-    let rt = Runtime::new("artifacts")?;
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 11);
-    println!("=== E2E: {arch}, {steps} pre-training steps ===");
+    let backend = NativeBackend::new();
+    let data = SynthDataset::new(backend.dataset().clone(), 11);
+    println!("=== E2E: {arch}, {steps} pre-training steps (native backend) ===");
     let t0 = Instant::now();
-    let mut session = ModelSession::load(&rt, arch, 11)?;
-    println!("[1/4] artifacts compiled in {:.1}s", t0.elapsed().as_secs_f64());
+    let mut session = ModelSession::load(&backend, arch, 11)?;
+    println!("[1/4] session ready in {:.2}s", t0.elapsed().as_secs_f64());
 
     // ---- stage 1: float training with loss curve -----------------------
     let mut cursor = TrainCursor::default();

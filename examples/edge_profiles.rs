@@ -2,7 +2,7 @@
 //! device profiles — the same code adapts the bit allocation to each
 //! device's memory budget and accuracy requirement (Sec. I's boundary
 //! conditions), where a fixed mixed-precision scheme would need three
-//! hand-tuned configurations.
+//! hand-tuned configurations. Native CPU backend; no artifacts needed.
 //!
 //!     cargo run --release --example edge_profiles
 
@@ -11,7 +11,7 @@ use sigmaquant::coordinator::zones::Targets;
 use sigmaquant::coordinator::{SearchConfig, SigmaQuant};
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::{int8_size_bytes, BitAssignment};
-use sigmaquant::runtime::{ModelSession, Runtime};
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 
 struct Device {
     name: &'static str,
@@ -28,13 +28,13 @@ fn main() -> anyhow::Result<()> {
         Device { name: "Mobile (accuracy-first)", size_frac: 0.70, acc_drop: 0.01 },
     ];
 
-    let rt = Runtime::new("artifacts")?;
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 21);
+    let backend = NativeBackend::new();
+    let data = SynthDataset::new(backend.dataset().clone(), 21);
     let arch = "resnet34_mini";
     println!("adapting {arch} to {} device profiles\n", devices.len());
 
     // shared float pre-training (one checkpoint, many deployments)
-    let mut base = ModelSession::load(&rt, arch, 21)?;
+    let mut base = ModelSession::load(&backend, arch, 21)?;
     let mut cursor = TrainCursor::default();
     pretrain(&mut base, &data, &mut cursor, 0.05, 200, 0)?;
     let l = base.num_qlayers();

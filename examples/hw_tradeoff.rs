@@ -1,7 +1,7 @@
 //! Hardware trade-off explorer: sweep uniform and SigmaQuant models
 //! through the cycle-accurate shift-add MAC simulator and print the
 //! Fig. 5-style energy/latency/accuracy frontier, plus the CSD ablation
-//! the paper mentions as future headroom (Sec. VI-E).
+//! the paper mentions as future headroom (Sec. VI-E). Native CPU backend.
 //!
 //!     cargo run --release --example hw_tradeoff [arch]
 
@@ -13,13 +13,13 @@ use sigmaquant::data::SynthDataset;
 use sigmaquant::hw::ppa::model_ppa;
 use sigmaquant::hw::shift_add::ShiftAddConfig;
 use sigmaquant::quant::{int8_size_bytes, BitAssignment};
-use sigmaquant::runtime::{ModelSession, Runtime};
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 
 fn main() -> anyhow::Result<()> {
     let arch = std::env::args().nth(1).unwrap_or_else(|| "resnet18_mini".into());
-    let rt = Runtime::new("artifacts")?;
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 31);
-    let mut s = ModelSession::load(&rt, &arch, 31)?;
+    let backend = NativeBackend::new();
+    let data = SynthDataset::new(backend.dataset().clone(), 31);
+    let mut s = ModelSession::load(&backend, &arch, 31)?;
     let mut cursor = TrainCursor::default();
     pretrain(&mut s, &data, &mut cursor, 0.05, 200, 0)?;
     let l = s.num_qlayers();

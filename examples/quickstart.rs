@@ -1,23 +1,26 @@
 //! Quickstart: quantize one model under explicit boundary conditions.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
+//! Runs entirely on the native CPU backend — no artifacts, no XLA.
 //! Loads resnet18_mini, float pre-trains briefly, then runs the two-phase
 //! SigmaQuant search for "at most 2% accuracy drop at 40% of the INT8
-//! size" and prints the resulting per-layer bit assignment.
+//! size" and prints the resulting per-layer bit assignment. Build with
+//! `--features pjrt` (and AOT artifacts from python/compile/aot.py) to
+//! run the same search through XLA — swap `NativeBackend` for `Runtime`.
 
 use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
 use sigmaquant::coordinator::zones::Targets;
 use sigmaquant::coordinator::{SearchConfig, SigmaQuant};
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::{int8_size_bytes, BitAssignment};
-use sigmaquant::runtime::{ModelSession, Runtime};
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 
 fn main() -> anyhow::Result<()> {
-    // 1. runtime over the AOT artifacts (HLO text, compiled via PJRT)
-    let rt = Runtime::new("artifacts")?;
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 7);
-    let mut session = ModelSession::load(&rt, "resnet18_mini", 7)?;
+    // 1. the native CPU backend: the Rust model zoo + graph interpreter
+    let backend = NativeBackend::new();
+    let data = SynthDataset::new(backend.dataset().clone(), 7);
+    let mut session = ModelSession::load(&backend, "resnet18_mini", 7)?;
     let mut cursor = TrainCursor::default();
 
     // 2. float pre-training (stand-in for the paper's torchvision weights)

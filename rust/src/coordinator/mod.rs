@@ -6,7 +6,7 @@
 //! * [`sensitivity`] — σ_ℓ + normalized-KL layer scores (Sec. IV-C).
 //! * [`phase1`] — cluster-based initial assignment.
 //! * [`phase2`] — iterative KL-based refinement with reversion.
-//! * [`qat`] — QAT loop driver over the PJRT train_step artifact.
+//! * [`qat`] — QAT loop driver over the session backend's train_step.
 //! * [`search`] — the end-to-end SigmaQuant driver + config.
 //! * [`trajectory`] — Fig. 3 trace recording.
 

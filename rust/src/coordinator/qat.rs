@@ -1,6 +1,7 @@
-//! QAT loop driver: runs `steps` train_step executions against the PJRT
-//! artifact, streaming deterministic synthetic batches. The coordinator
-//! calls this after every bitwidth change (Alg. 1 lines 10 & 25).
+//! QAT loop driver: runs `steps` train_step executions against the
+//! session's backend (native graph interpreter or PJRT artifact),
+//! streaming deterministic synthetic batches. The coordinator calls this
+//! after every bitwidth change (Alg. 1 lines 10 & 25).
 
 use crate::data::SynthDataset;
 use crate::quant::BitAssignment;
@@ -23,7 +24,7 @@ pub fn run_qat(
     lr: f32,
     steps: usize,
 ) -> Result<StepResult> {
-    let b = session.rt.manifest.dataset.train_batch;
+    let b = session.dataset().train_batch;
     let mut last = StepResult { loss: f32::NAN, acc: 0.0 };
     for _ in 0..steps {
         let (x, y) = data.train_batch(cursor.next_batch, b);
@@ -44,7 +45,7 @@ pub fn pretrain(
 ) -> Result<Vec<(usize, f32)>> {
     let l = session.num_qlayers();
     let float_bits = BitAssignment::raw(vec![32; l]);
-    let b = session.rt.manifest.dataset.train_batch;
+    let b = session.dataset().train_batch;
     let mut curve = Vec::new();
     for step in 0..steps {
         let (x, y) = data.train_batch(cursor.next_batch, b);

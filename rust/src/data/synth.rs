@@ -39,7 +39,7 @@ struct Component {
 pub struct SynthDataset {
     pub spec: DatasetSpec,
     seed: u64,
-    /// [class][channel][component]
+    /// `[class][channel][component]`
     comps: Vec<Vec<Vec<Component>>>,
 }
 

@@ -1,18 +1,47 @@
-//! Shared experiment scaffolding: runtime construction, float
-//! pre-training with on-disk checkpoint caching, and the standard
-//! target derivation used across tables.
+//! Shared experiment scaffolding: backend selection, float pre-training
+//! with on-disk checkpoint caching, and the standard target derivation
+//! used across tables.
 
 use crate::coordinator::qat::{pretrain, TrainCursor};
 use crate::coordinator::zones::Targets;
 use crate::data::SynthDataset;
 use crate::quant::{int8_size_bytes, BitAssignment};
-use crate::runtime::{load_params, save_params, ModelSession, Runtime};
+use crate::runtime::{load_params, save_params, Backend, ModelSession, NativeBackend};
 use anyhow::Result;
 use std::path::PathBuf;
 
+/// Build the backend for an experiment run.
+///
+/// With the `pjrt` feature enabled *and* an artifacts directory present,
+/// the PJRT backend executes the AOT artifacts; in every other case the
+/// native CPU backend is used (it needs no artifacts at all). `force`
+/// overrides the auto-selection: `Some("native")` / `Some("pjrt")`.
+pub fn make_backend(artifacts_dir: &str, force: Option<&str>) -> Result<Box<dyn Backend>> {
+    match force {
+        Some("native") => return Ok(Box::new(NativeBackend::new())),
+        Some("pjrt") => {
+            #[cfg(feature = "pjrt")]
+            return Ok(Box::new(crate::runtime::Runtime::new(artifacts_dir)?));
+            #[cfg(not(feature = "pjrt"))]
+            anyhow::bail!(
+                "backend \"pjrt\" requires building with `--features pjrt` \
+                 (and the XLA toolchain; see DESIGN.md §2)"
+            );
+        }
+        Some(other) => anyhow::bail!("unknown backend {other:?}; expected native or pjrt"),
+        None => {}
+    }
+    #[cfg(feature = "pjrt")]
+    if std::path::Path::new(artifacts_dir).join("manifest.json").exists() {
+        return Ok(Box::new(crate::runtime::Runtime::new(artifacts_dir)?));
+    }
+    let _ = artifacts_dir;
+    Ok(Box::new(NativeBackend::new()))
+}
+
 /// Global experiment context.
 pub struct Ctx {
-    pub rt: Runtime,
+    pub backend: Box<dyn Backend>,
     pub data: SynthDataset,
     pub results_dir: PathBuf,
     pub seed: u64,
@@ -23,11 +52,16 @@ pub struct Ctx {
 }
 
 impl Ctx {
+    /// Context with the auto-selected backend (see [`make_backend`]).
     pub fn new(artifacts_dir: &str, results_dir: &str, seed: u64) -> Result<Ctx> {
-        let rt = Runtime::new(artifacts_dir)?;
-        let data = SynthDataset::new(rt.manifest.dataset.clone(), seed);
+        Self::with_backend(make_backend(artifacts_dir, None)?, results_dir, seed)
+    }
+
+    /// Context over an explicit backend.
+    pub fn with_backend(backend: Box<dyn Backend>, results_dir: &str, seed: u64) -> Result<Ctx> {
+        let data = SynthDataset::new(backend.dataset().clone(), seed);
         Ok(Ctx {
-            rt,
+            backend,
             data,
             results_dir: PathBuf::from(results_dir),
             seed,
@@ -38,15 +72,20 @@ impl Ctx {
     }
 
     fn checkpoint_path(&self, arch: &str) -> PathBuf {
-        self.results_dir
-            .join("pretrained")
-            .join(format!("{arch}.seed{}.steps{}.bin", self.seed, self.pretrain_steps))
+        // the backend name is part of the key: checkpoints are layout-
+        // compatible across backends but training trajectories differ
+        self.results_dir.join("pretrained").join(format!(
+            "{arch}.{}.seed{}.steps{}.bin",
+            self.backend.name(),
+            self.seed,
+            self.pretrain_steps
+        ))
     }
 
     /// Load an architecture with float pre-trained parameters, training
     /// (and caching the checkpoint) on first use.
-    pub fn pretrained_session(&self, arch: &str) -> Result<(ModelSession<'_>, TrainCursor)> {
-        let mut session = ModelSession::load(&self.rt, arch, self.seed)?;
+    pub fn pretrained_session(&self, arch: &str) -> Result<(ModelSession, TrainCursor)> {
+        let mut session = ModelSession::load(self.backend.as_ref(), arch, self.seed)?;
         // the cursor starts after the pre-training stream so later QAT
         // sees fresh batches whether or not the checkpoint was cached
         let mut cursor = TrainCursor { next_batch: self.pretrain_steps as u64 };

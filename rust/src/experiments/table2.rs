@@ -9,8 +9,10 @@ use crate::report::table::{kib, pct, Table};
 use anyhow::Result;
 
 /// Default family for the tables: the three mid-size ResNets. The deep
-/// 101/152 variants work identically but PJRT-compile in tens of minutes
-/// on CPU (EXPERIMENTS.md §Runtime-notes); pass --archs to include them.
+/// 101/152 variants work identically but cost real wall-clock — minutes
+/// of dense math per search round on the native backend, tens of minutes
+/// of PJRT compilation on the artifact path (EXPERIMENTS.md
+/// §Runtime-notes); pass --archs to include them.
 pub const RESNETS: [&str; 3] = [
     "resnet18_mini",
     "resnet34_mini",

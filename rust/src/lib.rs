@@ -1,21 +1,28 @@
 //! # SigmaQuant
 //!
 //! Reproduction of *"SigmaQuant: Hardware-Aware Heterogeneous Quantization
-//! Method for Edge DNN Inference"* as a three-layer Rust + JAX + Pallas
-//! system: the Rust coordinator implements the paper's two-phase bitwidth
-//! search and every hardware/statistics substrate it needs; the AOT
-//! artifacts (built once from python/) carry the QAT-capable models whose
-//! per-layer bitwidths are runtime inputs.
+//! Method for Edge DNN Inference"* as a three-layer system: the Rust
+//! coordinator implements the paper's two-phase bitwidth search and every
+//! hardware/statistics substrate it needs; pluggable runtime backends
+//! execute the QAT-capable models whose per-layer bitwidths are runtime
+//! inputs — a native CPU reference backend that works from a clean
+//! checkout, and an XLA/PJRT backend (cargo feature `pjrt`) over the AOT
+//! artifacts built once from python/.
 //!
 //! Layer map (see DESIGN.md):
 //! * [`coordinator`] — the paper's contribution: adaptive-k-means Phase 1,
 //!   KL-refinement Phase 2, zone logic, QAT orchestration.
-//! * [`runtime`] — PJRT client; loads `artifacts/*.hlo.txt`.
+//! * [`runtime`] — the backend layer: [`runtime::Backend`] /
+//!   [`runtime::ModelExecutor`] traits, the backend-agnostic
+//!   [`runtime::ModelSession`] (host-side params, snapshot/restore), the
+//!   native CPU engine in [`runtime::native`], and the feature-gated PJRT
+//!   client that loads `artifacts/*.hlo.txt`.
 //! * [`quant`], [`stats`] — quantizer math, size/BOPs accounting, σ/KL.
 //! * [`hw`] — cycle-accurate shift-add MAC simulator + Table VI PPA model.
 //! * [`baselines`] — uniform / entropy / Hessian-proxy / greedy comparators.
 //! * [`data`] — deterministic synthetic dataset.
-//! * [`experiments`], [`report`] — one module per paper table/figure.
+//! * [`experiments`], [`report`] — one module per paper table/figure
+//!   (EXPERIMENTS.md maps each to the paper).
 //! * [`util`] — zero-dependency substrates (JSON, RNG, CLI, prop-testing).
 
 pub mod baselines;

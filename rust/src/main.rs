@@ -1,13 +1,16 @@
 //! `sigmaquant` — the Layer-3 coordinator CLI.
 //!
-//! Every paper table/figure has a subcommand that regenerates it from the
-//! AOT artifacts (run `make artifacts` first); `quantize` runs the
-//! two-phase search with user-specified boundary conditions, which is the
-//! paper's headline use-case ("adapt one model to many devices").
+//! Every paper table/figure has a subcommand that regenerates it; by
+//! default everything runs on the native CPU backend (no artifacts
+//! needed). Builds with `--features pjrt` pick up AOT artifacts when
+//! present, or force a backend with `--backend native|pjrt`. `quantize`
+//! runs the two-phase search with user-specified boundary conditions,
+//! the paper's headline use-case ("adapt one model to many devices").
 
 use anyhow::{bail, Result};
 use sigmaquant::coordinator::{Objective, SearchConfig, SigmaQuant};
-use sigmaquant::experiments::{ablation, common::Ctx, fig3, fig4, fig5, table1,
+use sigmaquant::experiments::common::{make_backend, Ctx};
+use sigmaquant::experiments::{ablation, fig3, fig4, fig5, table1,
                               table2, table3, table4, table5, table6};
 use sigmaquant::quant::int8_size_bytes;
 use sigmaquant::util::cli::Args;
@@ -33,9 +36,11 @@ COMMANDS
   ablation   sigma-vs-KL sensitivity mix + step-size sweep [--arch ...]
   suite      table2+3, fig4+5, table5, ablation in ONE process (shared
              compile cache; small-model defaults)
-  info       list architectures and artifact status
+  info       list architectures, dataset geometry and active backend
 
 COMMON OPTIONS
+  --backend native|pjrt (default: native; pjrt auto-selected when built
+            with --features pjrt and --artifacts has a manifest)
   --artifacts DIR (default artifacts)   --results DIR (default results)
   --seed N (default 7)                  --eval-n N (default 512)
   --qat-steps N (default 16)            --pretrain-steps N (default 300)
@@ -58,8 +63,9 @@ fn split_archs<'a>(a: &'a Args, default: &'a str) -> Vec<&'a str> {
 }
 
 fn make_ctx(a: &Args) -> Result<Ctx> {
-    let mut ctx = Ctx::new(
-        a.get_or("artifacts", "artifacts"),
+    let backend = make_backend(a.get_or("artifacts", "artifacts"), a.get("backend"))?;
+    let mut ctx = Ctx::with_backend(
+        backend,
         a.get_or("results", "results"),
         a.get_u64("seed", 7),
     )?;
@@ -177,13 +183,15 @@ fn quantize(a: &Args, eval_n: usize) -> Result<()> {
 
 fn info(a: &Args) -> Result<()> {
     let ctx = make_ctx(a)?;
+    let ds = ctx.backend.dataset();
+    println!("backend: {}", ctx.backend.name());
     println!("dataset: {}x{}x{} classes={} train_batch={} eval_batch={}",
-             ctx.rt.manifest.dataset.height, ctx.rt.manifest.dataset.width,
-             ctx.rt.manifest.dataset.channels, ctx.rt.manifest.dataset.classes,
-             ctx.rt.manifest.dataset.train_batch, ctx.rt.manifest.dataset.eval_batch);
+             ds.height, ds.width, ds.channels, ds.classes,
+             ds.train_batch, ds.eval_batch);
     println!("{:<16} {:>8} {:>12} {:>14} {:>10}",
              "arch", "qlayers", "weights", "MACs/example", "INT8 KiB");
-    for (name, arch) in &ctx.rt.manifest.archs {
+    for name in ctx.backend.arch_names() {
+        let arch = ctx.backend.arch(&name)?;
         println!("{:<16} {:>8} {:>12} {:>14} {:>10.1}",
                  name, arch.num_qlayers(), arch.total_weight_params,
                  arch.total_macs, int8_size_bytes(arch) / 1024.0);

@@ -1,0 +1,153 @@
+//! The backend abstraction: the contract between the coordinator and
+//! whatever actually executes models.
+//!
+//! Two traits split the contract along its natural seam:
+//!
+//! * [`Backend`] — a *factory*: owns the architecture zoo and the dataset
+//!   geometry, and hands out per-model executors. Implementations:
+//!   [`crate::runtime::NativeBackend`] (always available, pure Rust) and
+//!   `runtime::client::Runtime` (PJRT over AOT artifacts, behind the
+//!   `pjrt` cargo feature).
+//! * [`ModelExecutor`] — a *compute engine* for one architecture: init /
+//!   train-step / eval-batch over host-side `Vec<f32>` parameters. All
+//!   session state (parameters, momentum, snapshots) lives in the
+//!   backend-agnostic [`crate::runtime::ModelSession`], so Phase 2's
+//!   snapshot/restore reversion works identically on every backend.
+//!
+//! ```
+//! use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
+//!
+//! let backend = NativeBackend::new();
+//! assert!(backend.arch_names().iter().any(|n| n == "alexnet_mini"));
+//! let session = ModelSession::load(&backend, "alexnet_mini", 7).unwrap();
+//! assert_eq!(session.num_qlayers(), 8); // 5 conv + 3 fc
+//! ```
+
+use crate::manifest::{ArchSpec, DatasetSpec};
+use crate::quant::BitAssignment;
+use anyhow::Result;
+
+/// One training step's scalars.
+#[derive(Debug, Clone, Copy)]
+pub struct StepResult {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Aggregated evaluation result.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub loss: f64,
+    pub samples: usize,
+}
+
+/// Host-side parameter snapshot (params + momentum) — the object Phase 2
+/// reverts to when a bitwidth move is rejected.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub(crate) params: Vec<Vec<f32>>,
+    pub(crate) mom: Vec<Vec<f32>>,
+}
+
+/// Compute engine for one architecture.
+///
+/// Parameters are owned by the caller ([`crate::runtime::ModelSession`])
+/// and passed in by reference; implementations keep only immutable model
+/// structure plus reusable scratch space, so they may be freely shared
+/// per architecture. Methods take `&self`: implementations use interior
+/// mutability for scratch buffers (the native backend's arena) or
+/// executable caches (PJRT).
+pub trait ModelExecutor {
+    /// Structure of the model this executor runs (manifest order).
+    fn arch(&self) -> &ArchSpec;
+
+    /// Dataset geometry (batch sizes, image dims) this executor expects.
+    fn dataset(&self) -> &DatasetSpec;
+
+    /// Fresh parameter set for `seed`: He-normal kernels, zero biases,
+    /// unit BN scales. Deterministic per (architecture, seed).
+    fn init(&self, seed: u64) -> Result<Vec<Vec<f32>>>;
+
+    /// One SGD-with-momentum QAT step on a batch; updates `params` and
+    /// `mom` in place. `x` is NHWC, `y` class indices; batch size is
+    /// `y.len()` and must equal the dataset's `train_batch`.
+    fn train_step(
+        &self,
+        params: &mut [Vec<f32>],
+        mom: &mut [Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+        lr: f32,
+    ) -> Result<StepResult>;
+
+    /// Forward-only pass on one batch; returns `(correct_count,
+    /// mean_batch_loss)`. Batch size is `y.len()` and must equal the
+    /// dataset's `eval_batch`.
+    fn eval_batch(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+    ) -> Result<(f32, f32)>;
+}
+
+impl<T: ModelExecutor + ?Sized> ModelExecutor for Box<T> {
+    fn arch(&self) -> &ArchSpec {
+        (**self).arch()
+    }
+    fn dataset(&self) -> &DatasetSpec {
+        (**self).dataset()
+    }
+    fn init(&self, seed: u64) -> Result<Vec<Vec<f32>>> {
+        (**self).init(seed)
+    }
+    fn train_step(
+        &self,
+        params: &mut [Vec<f32>],
+        mom: &mut [Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+        lr: f32,
+    ) -> Result<StepResult> {
+        (**self).train_step(params, mom, x, y, wbits, abits, lr)
+    }
+    fn eval_batch(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+    ) -> Result<(f32, f32)> {
+        (**self).eval_batch(params, x, y, wbits, abits)
+    }
+}
+
+/// A model source: architecture zoo + dataset geometry + executor factory.
+///
+/// Object safe, so callers hold `Box<dyn Backend>` and select the
+/// implementation at runtime (`--backend` on the CLI).
+pub trait Backend {
+    /// Short backend identifier (`"native"`, `"pjrt"`); used in log lines
+    /// and checkpoint file names so caches never cross backends.
+    fn name(&self) -> &'static str;
+
+    /// Dataset geometry shared by every architecture of this backend.
+    fn dataset(&self) -> &DatasetSpec;
+
+    /// All architecture names, sorted.
+    fn arch_names(&self) -> Vec<String>;
+
+    /// Structure of one architecture.
+    fn arch(&self, name: &str) -> Result<&ArchSpec>;
+
+    /// Build (or compile) an executor for one architecture.
+    fn executor(&self, arch_name: &str) -> Result<Box<dyn ModelExecutor>>;
+}

@@ -1,16 +1,26 @@
-//! PJRT client wrapper + executable cache.
+//! PJRT backend (cargo feature `pjrt`): loads the AOT HLO-text artifacts
+//! and executes them on the CPU PJRT client.
 //!
 //! Pattern follows /opt/xla-example/load_hlo: HLO *text* ->
 //! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
 //! `client.compile`. Text is the interchange format because jax >= 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects in
 //! serialized-proto form.
+//!
+//! In this build the `xla` crate resolves to the in-repo stub
+//! (`rust/vendor/xla-stub`), which type-checks this module but fails at
+//! `Runtime::new` with a clear message; point the dependency at the real
+//! bindings to execute artifacts. The default (no-feature) build uses the
+//! native backend instead and never touches this module.
 
-use crate::manifest::{ArchSpec, Manifest};
-use anyhow::{Context, Result};
+use super::backend::{Backend, ModelExecutor, StepResult};
+use crate::manifest::{ArchSpec, DatasetSpec, Manifest};
+use crate::quant::BitAssignment;
+use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::rc::Rc;
 use std::time::Instant;
 
 /// Owns the PJRT client, the manifest, and a compile cache.
@@ -19,7 +29,7 @@ pub struct Runtime {
     pub manifest: Manifest,
     /// (arch, entry) -> compiled executable; compilation of the deep
     /// ResNets takes seconds, so everything is compiled exactly once.
-    cache: RefCell<HashMap<(String, String), std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    cache: RefCell<HashMap<(String, String), Rc<xla::PjRtLoadedExecutable>>>,
     pub verbose: bool,
 }
 
@@ -36,7 +46,7 @@ impl Runtime {
         &self,
         arch: &ArchSpec,
         entry: &str,
-    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
         let key = (arch.name.clone(), entry.to_string());
         if let Some(exe) = self.cache.borrow().get(&key) {
             return Ok(exe.clone());
@@ -60,9 +70,157 @@ impl Runtime {
                 t0.elapsed().as_secs_f64()
             );
         }
-        let rc = std::rc::Rc::new(exe);
+        let rc = Rc::new(exe);
         self.cache.borrow_mut().insert(key, rc.clone());
         Ok(rc)
+    }
+}
+
+impl Backend for Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn dataset(&self) -> &DatasetSpec {
+        &self.manifest.dataset
+    }
+
+    fn arch_names(&self) -> Vec<String> {
+        self.manifest.archs.keys().cloned().collect()
+    }
+
+    fn arch(&self, name: &str) -> Result<&ArchSpec> {
+        self.manifest.arch(name)
+    }
+
+    fn executor(&self, arch_name: &str) -> Result<Box<dyn ModelExecutor>> {
+        let arch = self.manifest.arch(arch_name)?.clone();
+        let init_exe = self.executable(&arch, "init")?;
+        let train_exe = self.executable(&arch, "train_step")?;
+        let eval_exe = self.executable(&arch, "eval_batch")?;
+        Ok(Box::new(PjrtExecutor {
+            arch,
+            dataset: self.manifest.dataset.clone(),
+            init_exe,
+            train_exe,
+            eval_exe,
+        }))
+    }
+}
+
+/// Compiled entry points of one architecture; parameters stay host-side
+/// and literals are rebuilt per call (trivial next to the compute on CPU).
+pub struct PjrtExecutor {
+    arch: ArchSpec,
+    dataset: DatasetSpec,
+    init_exe: Rc<xla::PjRtLoadedExecutable>,
+    train_exe: Rc<xla::PjRtLoadedExecutable>,
+    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl ModelExecutor for PjrtExecutor {
+    fn arch(&self) -> &ArchSpec {
+        &self.arch
+    }
+
+    fn dataset(&self) -> &DatasetSpec {
+        &self.dataset
+    }
+
+    fn init(&self, seed: u64) -> Result<Vec<Vec<f32>>> {
+        let out = self.init_exe.execute::<xla::Literal>(&[key_literal(seed)?])?;
+        let tuple = out[0][0].to_literal_sync()?.to_tuple()?;
+        if tuple.len() != self.arch.num_params() {
+            bail!(
+                "init returned {} params, manifest says {}",
+                tuple.len(),
+                self.arch.num_params()
+            );
+        }
+        tuple
+            .iter()
+            .map(|l| l.to_vec::<f32>().context("init output"))
+            .collect()
+    }
+
+    fn train_step(
+        &self,
+        params: &mut [Vec<f32>],
+        mom: &mut [Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+        lr: f32,
+    ) -> Result<StepResult> {
+        let ds = &self.dataset;
+        let b = ds.train_batch;
+        if y.len() != b || x.len() != b * ds.image_len() {
+            bail!("train_step: artifact is compiled for batch {b}, got {}", y.len());
+        }
+        let l = self.arch.num_qlayers();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(2 * params.len() + 5);
+        for (spec, data) in self.arch.params.iter().zip(params.iter()) {
+            args.push(f32_literal(data, &spec.shape)?);
+        }
+        for (spec, data) in self.arch.params.iter().zip(mom.iter()) {
+            args.push(f32_literal(data, &spec.shape)?);
+        }
+        args.push(f32_literal(x, &[b, ds.height, ds.width, ds.channels])?);
+        args.push(i32_literal(y, &[b])?);
+        args.push(f32_literal(&wbits.as_f32(), &[l])?);
+        args.push(f32_literal(&abits.as_f32(), &[l])?);
+        args.push(f32_scalar(lr));
+
+        let out = self.train_exe.execute::<xla::Literal>(&args)?;
+        let tuple = out[0][0].to_literal_sync()?.to_tuple()?;
+        let p = self.arch.num_params();
+        if tuple.len() != 2 * p + 2 {
+            bail!("train_step returned {} outputs, expected {}", tuple.len(), 2 * p + 2);
+        }
+        for (i, lit) in tuple[..p].iter().enumerate() {
+            params[i] = lit.to_vec::<f32>()?;
+        }
+        for (i, lit) in tuple[p..2 * p].iter().enumerate() {
+            mom[i] = lit.to_vec::<f32>()?;
+        }
+        Ok(StepResult {
+            loss: scalar_f32(&tuple[2 * p])?,
+            acc: scalar_f32(&tuple[2 * p + 1])?,
+        })
+    }
+
+    // NOTE: parameter literals are rebuilt for every batch. The pre-trait
+    // evaluate() built them once per eval set; the per-batch contract
+    // trades that (cheap on CPU — conversion is noise next to XLA
+    // execution) for a backend-agnostic ModelSession. If profiling with
+    // real bindings shows it matters, add a multi-batch entry point to
+    // ModelExecutor or cache literals keyed by parameter generation.
+    fn eval_batch(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+    ) -> Result<(f32, f32)> {
+        let ds = &self.dataset;
+        let b = ds.eval_batch;
+        if y.len() != b || x.len() != b * ds.image_len() {
+            bail!("eval_batch: artifact is compiled for batch {b}, got {}", y.len());
+        }
+        let l = self.arch.num_qlayers();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(params.len() + 4);
+        for (spec, data) in self.arch.params.iter().zip(params.iter()) {
+            args.push(f32_literal(data, &spec.shape)?);
+        }
+        args.push(f32_literal(x, &[b, ds.height, ds.width, ds.channels])?);
+        args.push(i32_literal(y, &[b])?);
+        args.push(f32_literal(&wbits.as_f32(), &[l])?);
+        args.push(f32_literal(&abits.as_f32(), &[l])?);
+        let out = self.eval_exe.execute::<xla::Literal>(&args)?;
+        let tuple = out[0][0].to_literal_sync()?.to_tuple()?;
+        Ok((scalar_f32(&tuple[0])?, scalar_f32(&tuple[1])?))
     }
 }
 

@@ -1,11 +1,37 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
-//! CPU PJRT client. This is the only place Python output crosses into the
-//! Rust world; after `make artifacts` the binary is self-contained.
+//! Runtime layer: pluggable model-execution backends behind one
+//! session contract.
+//!
+//! * [`backend`] — the [`Backend`] / [`ModelExecutor`] traits: the full
+//!   session contract (load / reinit / train_step / evaluate / snapshot /
+//!   restore / parameter access) split into a factory and a compute
+//!   engine.
+//! * [`session`] — [`ModelSession`], the backend-agnostic live model:
+//!   host-side parameters + momentum, snapshot/restore, batched eval.
+//! * [`native`] — the default backend: a pure-Rust graph interpreter
+//!   (forward + backward + STE fake-quant QAT) over a Rust port of the
+//!   Python model zoo. No XLA, no artifacts, works from a clean checkout.
+//! * `client` (cargo feature `pjrt`) — the XLA/PJRT backend: loads the
+//!   AOT HLO-text artifacts produced by `python/compile/aot.py` and
+//!   executes them on the PJRT CPU client. The only place Python output
+//!   crosses into the Rust world.
+//! * [`params_io`] — float checkpoint (de)serialization shared by all
+//!   backends.
+//!
+//! The feature matrix is documented in DESIGN.md §2; quantization math is
+//! identical across backends (pinned by `rust/tests/native_backend.rs`).
 
-pub mod client;
+pub mod backend;
+pub mod native;
 pub mod params_io;
 pub mod session;
 
-pub use client::Runtime;
+#[cfg(feature = "pjrt")]
+pub mod client;
+
+pub use backend::{Backend, EvalResult, ModelExecutor, Snapshot, StepResult};
+pub use native::NativeBackend;
 pub use params_io::{load_params, save_params};
-pub use session::{EvalResult, ModelSession, StepResult};
+pub use session::ModelSession;
+
+#[cfg(feature = "pjrt")]
+pub use client::Runtime;

@@ -1,0 +1,573 @@
+//! The native CPU [`ModelExecutor`]: graph interpreter with hand-written
+//! forward + backward passes, STE fake-quant QAT, and SGD-with-momentum
+//! updates — semantically the same entry points the AOT artifacts expose
+//! (`python/compile/model.py`), minus XLA.
+//!
+//! All intermediate tensors live in a reusable scratch-buffer arena
+//! behind a `RefCell`: buffers are grown once to the largest batch seen
+//! and then reused, so the Phase-2 snapshot → QAT → evaluate → restore
+//! loop performs no per-iteration activation allocation (the only
+//! steady-state allocations are two tiny per-channel temporaries inside
+//! the BN backward reduction).
+
+use super::fakequant::{fake_quant_act, fake_quant_weight};
+use super::graph::{NativeArch, Node};
+use super::ops;
+use crate::manifest::{ArchSpec, DatasetSpec, ParamKind};
+use crate::quant::BitAssignment;
+use crate::runtime::backend::{ModelExecutor, StepResult};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// SGD momentum coefficient (mirrors `model.py::MOMENTUM`).
+const MOMENTUM: f32 = 0.9;
+/// Global-norm gradient clip (mirrors `model.py::GRAD_CLIP`).
+const GRAD_CLIP: f64 = 1.0;
+
+/// Reusable buffers; grown monotonically, never shrunk.
+struct Scratch {
+    /// Largest batch the buffers are currently sized for.
+    batch: usize,
+    /// Forward activations per SSA value (batch × numel).
+    acts: Vec<Vec<f32>>,
+    /// Activation gradients per SSA value.
+    grads: Vec<Vec<f32>>,
+    /// Fake-quantized *input* activation of each conv/dense node.
+    qact: Vec<Vec<f32>>,
+    /// Fake-quantized weights per quantizable layer.
+    qw: Vec<Vec<f32>>,
+    /// Per-channel quantizer scales (scratch for `fake_quant_weight`).
+    qscales: Vec<Vec<f32>>,
+    /// Saved BN batch statistics per BN node (mean, 1/σ).
+    bn_mean: Vec<Vec<f32>>,
+    bn_inv: Vec<Vec<f32>>,
+    /// Parameter gradients (manifest order).
+    pgrads: Vec<Vec<f32>>,
+}
+
+/// Native CPU executor for one architecture.
+pub struct NativeExecutor {
+    arch: Rc<NativeArch>,
+    dataset: DatasetSpec,
+    /// Conv geometry per node id (None for non-conv nodes).
+    conv_dims: Vec<Option<ops::Conv2d>>,
+    scratch: RefCell<Scratch>,
+}
+
+/// Split `acts` into the (read) input value and the (write) output value.
+/// Valid because the builder emits SSA ids in topological order (i < o).
+fn io<'a>(acts: &'a mut [Vec<f32>], i: usize, o: usize, ilen: usize) -> (&'a [f32], &'a mut Vec<f32>) {
+    debug_assert!(i < o);
+    let (lo, hi) = acts.split_at_mut(o);
+    (&lo[i][..ilen], &mut hi[0])
+}
+
+/// Two disjoint `&mut` entries of a slice of Vecs (i != j).
+fn split_two(v: &mut [Vec<f32>], i: usize, j: usize) -> (&mut Vec<f32>, &mut Vec<f32>) {
+    debug_assert_ne!(i, j);
+    if i < j {
+        let (lo, hi) = v.split_at_mut(j);
+        (&mut lo[i], &mut hi[0])
+    } else {
+        let (lo, hi) = v.split_at_mut(i);
+        (&mut hi[0], &mut lo[j])
+    }
+}
+
+impl NativeExecutor {
+    pub fn new(arch: Rc<NativeArch>, dataset: DatasetSpec) -> NativeExecutor {
+        let n = arch.nodes.len();
+        let mut conv_dims = vec![None; n];
+        for (vid, node) in arch.nodes.iter().enumerate() {
+            if let Node::Conv { input, k, stride, same, q, .. } = node {
+                let (h, w, cin) = arch.shapes[*input].hwc();
+                let cout = arch.spec.qlayers[*q].out_channels;
+                conv_dims[vid] = Some(ops::Conv2d::new(h, w, cin, cout, *k, *stride, *same));
+            }
+        }
+        let scratch = Scratch {
+            batch: 0,
+            acts: vec![Vec::new(); n],
+            grads: vec![Vec::new(); n],
+            qact: vec![Vec::new(); n],
+            qw: arch.spec.qlayers.iter().map(|q| vec![0.0; q.weight_count]).collect(),
+            qscales: arch.spec.qlayers.iter().map(|q| vec![0.0; q.out_channels]).collect(),
+            bn_mean: arch
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(vid, node)| match node {
+                    Node::Bn { .. } => vec![0.0; arch.shapes[vid].channels()],
+                    _ => Vec::new(),
+                })
+                .collect(),
+            bn_inv: arch
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(vid, node)| match node {
+                    Node::Bn { .. } => vec![0.0; arch.shapes[vid].channels()],
+                    _ => Vec::new(),
+                })
+                .collect(),
+            pgrads: arch.spec.params.iter().map(|p| vec![0.0; p.size]).collect(),
+        };
+        NativeExecutor { arch, dataset, conv_dims, scratch: RefCell::new(scratch) }
+    }
+
+    /// Grow activation/gradient buffers to hold `batch` samples.
+    fn ensure_batch(&self, scr: &mut Scratch, batch: usize) {
+        if scr.batch >= batch {
+            return;
+        }
+        for (vid, shape) in self.arch.shapes.iter().enumerate() {
+            let n = batch * shape.numel();
+            if scr.acts[vid].len() < n {
+                scr.acts[vid].resize(n, 0.0);
+                scr.grads[vid].resize(n, 0.0);
+            }
+        }
+        for (vid, node) in self.arch.nodes.iter().enumerate() {
+            if let Node::Conv { input, .. } | Node::Dense { input, .. } = node {
+                let n = batch * self.arch.shapes[*input].numel();
+                if scr.qact[vid].len() < n {
+                    scr.qact[vid].resize(n, 0.0);
+                }
+            }
+        }
+        scr.batch = batch;
+    }
+
+    /// Interpret the graph forward. Activations land in `scr.acts`;
+    /// conv/dense quantized inputs/weights are retained for backward.
+    fn forward(
+        &self,
+        scr: &mut Scratch,
+        params: &[Vec<f32>],
+        x: &[f32],
+        batch: usize,
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+    ) {
+        let shapes = &self.arch.shapes;
+        scr.acts[0][..x.len()].copy_from_slice(x);
+        for vid in 1..self.arch.nodes.len() {
+            match &self.arch.nodes[vid] {
+                Node::Input => unreachable!("input is always node 0"),
+                Node::Conv { input, kernel, bias, q, .. } => {
+                    let cv = self.conv_dims[vid].expect("conv dims precomputed");
+                    let in_n = batch * shapes[*input].numel();
+                    fake_quant_act(
+                        &scr.acts[*input][..in_n],
+                        abits.bits[*q],
+                        &mut scr.qact[vid][..in_n],
+                    );
+                    fake_quant_weight(
+                        &params[*kernel],
+                        cv.cout,
+                        wbits.bits[*q],
+                        &mut scr.qscales[*q],
+                        &mut scr.qw[*q],
+                    );
+                    cv.forward(batch, &scr.qact[vid][..in_n], &scr.qw[*q], &mut scr.acts[vid]);
+                    if let Some(bp) = bias {
+                        ops::bias_forward(batch * cv.oh * cv.ow, cv.cout, &params[*bp], &mut scr.acts[vid]);
+                    }
+                }
+                Node::Dense { input, kernel, bias, q } => {
+                    let cin = shapes[*input].numel();
+                    let cout = shapes[vid].numel();
+                    let in_n = batch * cin;
+                    fake_quant_act(
+                        &scr.acts[*input][..in_n],
+                        abits.bits[*q],
+                        &mut scr.qact[vid][..in_n],
+                    );
+                    fake_quant_weight(
+                        &params[*kernel],
+                        cout,
+                        wbits.bits[*q],
+                        &mut scr.qscales[*q],
+                        &mut scr.qw[*q],
+                    );
+                    ops::dense_forward(
+                        batch,
+                        cin,
+                        cout,
+                        &scr.qact[vid][..in_n],
+                        &scr.qw[*q],
+                        &params[*bias],
+                        &mut scr.acts[vid],
+                    );
+                }
+                Node::Bn { input, scale, bias } => {
+                    let c = shapes[vid].channels();
+                    let rows = batch * shapes[vid].numel() / c;
+                    let (xin, out) = io(&mut scr.acts, *input, vid, rows * c);
+                    ops::bn_forward(
+                        rows,
+                        c,
+                        xin,
+                        &params[*scale],
+                        &params[*bias],
+                        out,
+                        &mut scr.bn_mean[vid],
+                        &mut scr.bn_inv[vid],
+                    );
+                }
+                Node::Relu { input } => {
+                    let n = batch * shapes[vid].numel();
+                    let (xin, out) = io(&mut scr.acts, *input, vid, n);
+                    ops::relu_forward(n, xin, out);
+                }
+                Node::Add { a, b } => {
+                    let n = batch * shapes[vid].numel();
+                    let (lo, hi) = scr.acts.split_at_mut(vid);
+                    let (av, bv, out) = (&lo[*a][..n], &lo[*b][..n], &mut hi[0]);
+                    for i in 0..n {
+                        out[i] = av[i] + bv[i];
+                    }
+                }
+                Node::Concat { ins } => {
+                    let (h, w, c) = shapes[vid].hwc();
+                    let (lo, hi) = scr.acts.split_at_mut(vid);
+                    let out = &mut hi[0];
+                    for pos in 0..batch * h * w {
+                        let mut off = 0;
+                        for &inp in ins {
+                            let cc = shapes[inp].channels();
+                            out[pos * c + off..pos * c + off + cc]
+                                .copy_from_slice(&lo[inp][pos * cc..(pos + 1) * cc]);
+                            off += cc;
+                        }
+                    }
+                }
+                Node::MaxPool { input, window, stride } => {
+                    let (h, w, c) = shapes[*input].hwc();
+                    let (xin, out) = io(&mut scr.acts, *input, vid, batch * h * w * c);
+                    ops::maxpool_forward(batch, h, w, c, *window, *stride, xin, out);
+                }
+                Node::AvgPoolSame { input, window } => {
+                    let (h, w, c) = shapes[*input].hwc();
+                    let (xin, out) = io(&mut scr.acts, *input, vid, batch * h * w * c);
+                    ops::avgpool_same_forward(batch, h, w, c, *window, xin, out);
+                }
+                Node::Gap { input } => {
+                    let (h, w, c) = shapes[*input].hwc();
+                    let (xin, out) = io(&mut scr.acts, *input, vid, batch * h * w * c);
+                    ops::gap_forward(batch, h, w, c, xin, out);
+                }
+                Node::Flatten { input } => {
+                    // NHWC row-major: flatten is a layout no-op
+                    let n = batch * shapes[vid].numel();
+                    let (xin, out) = io(&mut scr.acts, *input, vid, n);
+                    out[..n].copy_from_slice(xin);
+                }
+            }
+        }
+    }
+
+    /// Reverse-walk the graph, accumulating activation gradients in
+    /// `scr.grads` and parameter gradients in `scr.pgrads`. Expects
+    /// `d loss/d logits` already in `scr.grads[out_id]` and every other
+    /// gradient buffer zeroed.
+    fn backward(&self, scr: &mut Scratch, params: &[Vec<f32>], batch: usize) {
+        let shapes = &self.arch.shapes;
+        for vid in (1..self.arch.nodes.len()).rev() {
+            match &self.arch.nodes[vid] {
+                Node::Input => unreachable!("input is always node 0"),
+                Node::Conv { input, kernel, bias, q, .. } => {
+                    let cv = self.conv_dims[vid].expect("conv dims precomputed");
+                    let in_n = batch * shapes[*input].numel();
+                    let out_n = batch * shapes[vid].numel();
+                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    let g = &ghi[0][..out_n];
+                    // STE: d/d(input) flows through the act quantizer as
+                    // identity; d/d(kernel) through the weight quantizer.
+                    // The image (node 0) has no consumer for its gradient,
+                    // so stem convs skip the dx accumulation entirely.
+                    if *input == 0 {
+                        cv.backward_weights(batch, &scr.qact[vid][..in_n], g, &mut scr.pgrads[*kernel]);
+                    } else {
+                        cv.backward(
+                            batch,
+                            &scr.qact[vid][..in_n],
+                            &scr.qw[*q],
+                            g,
+                            &mut glo[*input],
+                            &mut scr.pgrads[*kernel],
+                        );
+                    }
+                    if let Some(bp) = bias {
+                        ops::bias_backward(batch * cv.oh * cv.ow, cv.cout, g, &mut scr.pgrads[*bp]);
+                    }
+                }
+                Node::Dense { input, kernel, bias, q } => {
+                    let cin = shapes[*input].numel();
+                    let cout = shapes[vid].numel();
+                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    let (dk, db) = split_two(&mut scr.pgrads, *kernel, *bias);
+                    ops::dense_backward(
+                        batch,
+                        cin,
+                        cout,
+                        &scr.qact[vid][..batch * cin],
+                        &scr.qw[*q],
+                        &ghi[0][..batch * cout],
+                        &mut glo[*input],
+                        dk,
+                        db,
+                    );
+                }
+                Node::Bn { input, scale, bias } => {
+                    let c = shapes[vid].channels();
+                    let rows = batch * shapes[vid].numel() / c;
+                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    let (dscale, dbias) = split_two(&mut scr.pgrads, *scale, *bias);
+                    ops::bn_backward(
+                        rows,
+                        c,
+                        &scr.acts[*input][..rows * c],
+                        &params[*scale],
+                        &scr.bn_mean[vid],
+                        &scr.bn_inv[vid],
+                        &ghi[0][..rows * c],
+                        &mut glo[*input],
+                        dscale,
+                        dbias,
+                    );
+                }
+                Node::Relu { input } => {
+                    let n = batch * shapes[vid].numel();
+                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    ops::relu_backward(n, &scr.acts[vid][..n], &ghi[0][..n], &mut glo[*input]);
+                }
+                Node::Add { a, b } => {
+                    let n = batch * shapes[vid].numel();
+                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    let g = &ghi[0][..n];
+                    for (d, &gv) in glo[*a][..n].iter_mut().zip(g) {
+                        *d += gv;
+                    }
+                    for (d, &gv) in glo[*b][..n].iter_mut().zip(g) {
+                        *d += gv;
+                    }
+                }
+                Node::Concat { ins } => {
+                    let (h, w, c) = shapes[vid].hwc();
+                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    let g = &ghi[0];
+                    for pos in 0..batch * h * w {
+                        let mut off = 0;
+                        for &inp in ins {
+                            let cc = shapes[inp].channels();
+                            for (d, &gv) in glo[inp][pos * cc..(pos + 1) * cc]
+                                .iter_mut()
+                                .zip(&g[pos * c + off..pos * c + off + cc])
+                            {
+                                *d += gv;
+                            }
+                            off += cc;
+                        }
+                    }
+                }
+                Node::MaxPool { input, window, stride } => {
+                    let (h, w, c) = shapes[*input].hwc();
+                    let out_n = batch * shapes[vid].numel();
+                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    ops::maxpool_backward(
+                        batch,
+                        h,
+                        w,
+                        c,
+                        *window,
+                        *stride,
+                        &scr.acts[*input][..batch * h * w * c],
+                        &scr.acts[vid][..out_n],
+                        &ghi[0][..out_n],
+                        &mut glo[*input],
+                    );
+                }
+                Node::AvgPoolSame { input, window } => {
+                    let (h, w, c) = shapes[*input].hwc();
+                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    ops::avgpool_same_backward(
+                        batch,
+                        h,
+                        w,
+                        c,
+                        *window,
+                        &ghi[0][..batch * h * w * c],
+                        &mut glo[*input],
+                    );
+                }
+                Node::Gap { input } => {
+                    let (h, w, c) = shapes[*input].hwc();
+                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    ops::gap_backward(batch, h, w, c, &ghi[0][..batch * c], &mut glo[*input]);
+                }
+                Node::Flatten { input } => {
+                    let n = batch * shapes[vid].numel();
+                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    for (d, &gv) in glo[*input][..n].iter_mut().zip(&ghi[0][..n]) {
+                        *d += gv;
+                    }
+                }
+            }
+        }
+    }
+
+    fn validate_bits(&self, wbits: &BitAssignment, abits: &BitAssignment) -> Result<()> {
+        let l = self.arch.spec.num_qlayers();
+        if wbits.len() != l || abits.len() != l {
+            bail!(
+                "bit assignment length mismatch: wbits {} / abits {} vs {} quantizable layers",
+                wbits.len(),
+                abits.len(),
+                l
+            );
+        }
+        // value check: bits outside [2, 8] ∪ [31, ∞) would make the
+        // quantizer scale degenerate (b=1 ⇒ q=0 ⇒ NaN weights) — fail
+        // loudly instead of silently corrupting a search
+        for &b in wbits.bits.iter().chain(abits.bits.iter()) {
+            if !((2..=8).contains(&b) || b >= 31) {
+                bail!("bitwidth {b} outside the supported set (2..=8 or >=31 passthrough)");
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_batch(&self, x: &[f32], y: &[i32]) -> Result<usize> {
+        let batch = y.len();
+        let img = self.dataset.image_len();
+        if batch == 0 || x.len() != batch * img {
+            bail!("batch geometry mismatch: {} labels vs {} pixels (image_len {img})", batch, x.len());
+        }
+        let classes = self.dataset.classes as i32;
+        if let Some(&bad) = y.iter().find(|&&v| v < 0 || v >= classes) {
+            bail!("label {bad} out of range [0, {classes})");
+        }
+        Ok(batch)
+    }
+}
+
+impl ModelExecutor for NativeExecutor {
+    fn arch(&self) -> &ArchSpec {
+        &self.arch.spec
+    }
+
+    fn dataset(&self) -> &DatasetSpec {
+        &self.dataset
+    }
+
+    fn init(&self, seed: u64) -> Result<Vec<Vec<f32>>> {
+        // He-normal kernels, unit BN scales, zero biases (model.py::make_init).
+        // FNV-mix the arch name so two architectures with the same seed
+        // draw independent streams.
+        let mut h = 0xcbf29ce484222325u64;
+        for b in self.arch.spec.name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        let mut rng = Rng::new(seed ^ h);
+        let mut out = Vec::with_capacity(self.arch.spec.params.len());
+        for p in &self.arch.spec.params {
+            let arr = match p.kind {
+                ParamKind::ConvKernel | ParamKind::DenseKernel => {
+                    let std = (2.0 / p.fanin as f64).sqrt();
+                    (0..p.size).map(|_| (std * rng.normal()) as f32).collect()
+                }
+                ParamKind::BnScale => vec![1.0f32; p.size],
+                ParamKind::Bias | ParamKind::BnBias => vec![0.0f32; p.size],
+            };
+            out.push(arr);
+        }
+        Ok(out)
+    }
+
+    fn train_step(
+        &self,
+        params: &mut [Vec<f32>],
+        mom: &mut [Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+        lr: f32,
+    ) -> Result<StepResult> {
+        self.validate_bits(wbits, abits)?;
+        let batch = self.validate_batch(x, y)?;
+        let classes = self.dataset.classes;
+        let mut guard = self.scratch.borrow_mut();
+        let scr = &mut *guard;
+        self.ensure_batch(scr, batch);
+
+        self.forward(scr, params, x, batch, wbits, abits);
+
+        // zero gradient buffers, then seed d loss/d logits
+        for (vid, shape) in self.arch.shapes.iter().enumerate() {
+            scr.grads[vid][..batch * shape.numel()].fill(0.0);
+        }
+        for g in scr.pgrads.iter_mut() {
+            g.fill(0.0);
+        }
+        let out_id = self.arch.out_id;
+        let (loss, acc) = ops::softmax_ce(
+            batch,
+            classes,
+            &scr.acts[out_id][..batch * classes],
+            y,
+            Some(&mut scr.grads[out_id][..batch * classes]),
+        );
+
+        self.backward(scr, params, batch);
+
+        // global-norm gradient clipping (model.py: scale = min(1, C/‖g‖))
+        let mut sq = 0.0f64;
+        for g in &scr.pgrads {
+            for &v in g {
+                sq += (v as f64) * (v as f64);
+            }
+        }
+        let gnorm = (sq + 1e-12).sqrt();
+        let scale = (GRAD_CLIP / gnorm).min(1.0) as f32;
+        for ((p, m), g) in params.iter_mut().zip(mom.iter_mut()).zip(&scr.pgrads) {
+            for j in 0..p.len() {
+                let gv = g[j] * scale;
+                m[j] = MOMENTUM * m[j] + gv;
+                p[j] -= lr * m[j];
+            }
+        }
+        Ok(StepResult { loss, acc })
+    }
+
+    fn eval_batch(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+    ) -> Result<(f32, f32)> {
+        self.validate_bits(wbits, abits)?;
+        let batch = self.validate_batch(x, y)?;
+        let classes = self.dataset.classes;
+        let mut guard = self.scratch.borrow_mut();
+        let scr = &mut *guard;
+        self.ensure_batch(scr, batch);
+        self.forward(scr, params, x, batch, wbits, abits);
+        let (loss, acc) = ops::softmax_ce(
+            batch,
+            classes,
+            &scr.acts[self.arch.out_id][..batch * classes],
+            y,
+            None,
+        );
+        // acc·batch is exact: acc = correct/batch with batch a small power
+        // of two (eval_batch), and correct an integer
+        Ok(((acc * batch as f32).round(), loss))
+    }
+}

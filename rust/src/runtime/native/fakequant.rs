@@ -1,0 +1,126 @@
+//! Fake quantization for the native backend's QAT forward pass.
+//!
+//! Same math as the L1 Pallas kernel and its jnp oracle
+//! (`python/compile/kernels/fake_quant.py` / `ref.py`):
+//!
+//! * weights — per-output-channel symmetric abs-max, `Q = 2^(b-1) - 1`
+//!   signed levels, scale floor 1e-8, round-half-to-even;
+//! * activations — per-tensor asymmetric min-max, `2^b - 1` unsigned
+//!   levels with a rounded zero-point;
+//! * `bits >= 31` — float passthrough (pre-training / FP32 arm).
+//!
+//! The straight-through estimator lives in the executor's backward pass:
+//! gradients flow *around* these functions (identity on the float input,
+//! zero on bits), exactly like `layers.py::ste`.
+//!
+//! Buffer-based variants (caller provides the output and the per-channel
+//! scale scratch) keep the QAT inner loop allocation-free; the
+//! coordinator-facing allocating mirror lives in
+//! [`crate::quant::quantizer`] and the parity test in
+//! `rust/tests/native_backend.rs` pins the two together.
+
+/// Per-output-channel symmetric fake quantization into `out`.
+/// `w` is fanin-major with `cout` trailing; `scales` is a reusable
+/// `cout`-sized scratch that afterwards holds the per-channel Δ.
+pub fn fake_quant_weight(w: &[f32], cout: usize, bits: u8, scales: &mut [f32], out: &mut [f32]) {
+    debug_assert_eq!(scales.len(), cout);
+    debug_assert_eq!(out.len(), w.len());
+    debug_assert_eq!(w.len() % cout, 0);
+    if bits >= 31 {
+        out.copy_from_slice(w);
+        return;
+    }
+    let q = ((1u32 << (bits - 1)) - 1) as f32;
+    scales.fill(0.0);
+    for row in w.chunks_exact(cout) {
+        for (m, &v) in scales.iter_mut().zip(row) {
+            let a = v.abs();
+            if a > *m {
+                *m = a;
+            }
+        }
+    }
+    for s in scales.iter_mut() {
+        *s = s.max(1e-8) / q;
+    }
+    for (wrow, orow) in w.chunks_exact(cout).zip(out.chunks_exact_mut(cout)) {
+        for c in 0..cout {
+            orow[c] = (wrow[c] / scales[c]).round_ties_even().clamp(-q, q) * scales[c];
+        }
+    }
+}
+
+/// Per-tensor asymmetric fake quantization into `out`
+/// (mirror of `fake_quant_act_ref`).
+pub fn fake_quant_act(a: &[f32], bits: u8, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    if bits >= 31 {
+        out.copy_from_slice(a);
+        return;
+    }
+    let levels = ((1u64 << bits) - 1) as f32;
+    let mut amin = f32::INFINITY;
+    let mut amax = f32::NEG_INFINITY;
+    for &v in a {
+        if v < amin {
+            amin = v;
+        }
+        if v > amax {
+            amax = v;
+        }
+    }
+    let scale = (amax - amin).max(1e-8) / levels;
+    let zp = (-amin / scale).round_ties_even();
+    for (o, &v) in out.iter_mut().zip(a) {
+        let code = ((v / scale).round_ties_even() + zp).clamp(0.0, levels);
+        *o = (code - zp) * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_dequantize;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weight_path_matches_coordinator_quantizer() {
+        let mut rng = Rng::new(3);
+        let cout = 6;
+        let w: Vec<f32> = (0..cout * 40).map(|_| rng.normal() as f32).collect();
+        for bits in [2u8, 4, 6, 8, 32] {
+            let mut scales = vec![0.0f32; cout];
+            let mut out = vec![0.0f32; w.len()];
+            fake_quant_weight(&w, cout, bits, &mut scales, &mut out);
+            assert_eq!(out, quantize_dequantize(&w, cout, bits), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn act_quant_is_idempotent_and_bounded() {
+        let mut rng = Rng::new(4);
+        let a: Vec<f32> = (0..256).map(|_| (rng.normal() * 3.0) as f32).collect();
+        for bits in [2u8, 4, 8] {
+            let mut once = vec![0.0f32; a.len()];
+            fake_quant_act(&a, bits, &mut once);
+            let mut twice = vec![0.0f32; a.len()];
+            fake_quant_act(&once, bits, &mut twice);
+            for (x, y) in once.iter().zip(&twice) {
+                assert!((x - y).abs() <= 1e-5 * x.abs().max(1.0), "bits={bits}: {x} vs {y}");
+            }
+            // distinct levels bounded by 2^b
+            let mut lv: Vec<i64> = once.iter().map(|&v| (v * 1e4).round() as i64).collect();
+            lv.sort_unstable();
+            lv.dedup();
+            assert!(lv.len() <= 1 << bits, "bits={bits}: {} levels", lv.len());
+        }
+    }
+
+    #[test]
+    fn passthrough_at_32() {
+        let a = [1.0f32, -2.5, 0.33];
+        let mut out = [0.0f32; 3];
+        fake_quant_act(&a, 32, &mut out);
+        assert_eq!(out, a);
+    }
+}

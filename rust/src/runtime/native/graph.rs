@@ -1,0 +1,497 @@
+//! Native model zoo: a Rust port of the SSA graph builder in
+//! `python/compile/arch.py`.
+//!
+//! The native backend cannot read AOT artifacts (there are none without
+//! the Python pipeline), so it re-derives the *same* architectures — the
+//! builder mirrors arch.py operation for operation, producing both the
+//! [`ArchSpec`] contract (parameter layout, quantizable layers, MAC
+//! counts) and the executable node graph. Parameter ordering, names, MAC
+//! formulas and the zoo itself match the Python builder, so checkpoints,
+//! size/BOPs accounting and experiment configs mean the same thing on
+//! both backends.
+
+use crate::manifest::{ArchSpec, ParamKind, ParamSpec, QLayerSpec};
+use std::collections::BTreeMap;
+
+/// Reference input geometry (synthetic dataset; mirrors arch.py).
+pub const INPUT_H: usize = 16;
+pub const INPUT_W: usize = 16;
+pub const INPUT_C: usize = 3;
+pub const NUM_CLASSES: usize = 10;
+
+/// Activation shape of one SSA value: spatial NHWC (per-sample `h×w×c`)
+/// or flat (per-sample `n` features).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    Hwc(usize, usize, usize),
+    Flat(usize),
+}
+
+impl Shape {
+    /// Elements per sample.
+    pub fn numel(&self) -> usize {
+        match *self {
+            Shape::Hwc(h, w, c) => h * w * c,
+            Shape::Flat(n) => n,
+        }
+    }
+
+    /// Spatial dims; panics on flat shapes (builder invariant).
+    pub fn hwc(&self) -> (usize, usize, usize) {
+        match *self {
+            Shape::Hwc(h, w, c) => (h, w, c),
+            Shape::Flat(n) => panic!("expected spatial shape, got flat({n})"),
+        }
+    }
+
+    /// Trailing (channel) dimension.
+    pub fn channels(&self) -> usize {
+        match *self {
+            Shape::Hwc(_, _, c) => c,
+            Shape::Flat(n) => n,
+        }
+    }
+}
+
+/// One SSA node. Value id `i` is produced by `nodes[i]`; inputs always
+/// have smaller ids (the builder emits in topological order).
+#[derive(Debug, Clone)]
+pub enum Node {
+    Input,
+    /// NHWC × HWIO convolution; `kernel`/`bias` are param indices,
+    /// `k` the spatial kernel size, `q` the quantizable-layer index.
+    Conv {
+        input: usize,
+        kernel: usize,
+        bias: Option<usize>,
+        k: usize,
+        stride: usize,
+        same: bool,
+        q: usize,
+    },
+    Dense { input: usize, kernel: usize, bias: usize, q: usize },
+    Bn { input: usize, scale: usize, bias: usize },
+    Relu { input: usize },
+    Add { a: usize, b: usize },
+    Concat { ins: Vec<usize> },
+    /// VALID max pooling.
+    MaxPool { input: usize, window: usize, stride: usize },
+    /// SAME, stride-1 average pooling (Inception pool branch).
+    AvgPoolSame { input: usize, window: usize },
+    /// Global average pool: NHWC → NC.
+    Gap { input: usize },
+    Flatten { input: usize },
+}
+
+/// A complete native architecture: the [`ArchSpec`] contract plus the
+/// executable graph.
+#[derive(Debug, Clone)]
+pub struct NativeArch {
+    pub spec: ArchSpec,
+    pub nodes: Vec<Node>,
+    pub shapes: Vec<Shape>,
+    pub out_id: usize,
+}
+
+/// Shape-tracking graph builder (port of arch.py's `Builder`).
+struct Builder {
+    name: String,
+    params: Vec<ParamSpec>,
+    qlayers: Vec<QLayerSpec>,
+    nodes: Vec<Node>,
+    shapes: Vec<Shape>,
+}
+
+impl Builder {
+    fn new(name: &str) -> Builder {
+        Builder {
+            name: name.to_string(),
+            params: Vec::new(),
+            qlayers: Vec::new(),
+            nodes: vec![Node::Input],
+            shapes: vec![Shape::Hwc(INPUT_H, INPUT_W, INPUT_C)],
+        }
+    }
+
+    fn emit(&mut self, node: Node, shape: Shape) -> usize {
+        self.nodes.push(node);
+        self.shapes.push(shape);
+        self.nodes.len() - 1
+    }
+
+    fn param(
+        &mut self,
+        name: String,
+        shape: Vec<usize>,
+        kind: ParamKind,
+        qlayer: Option<usize>,
+        fanin: usize,
+    ) -> usize {
+        let size = shape.iter().product();
+        self.params.push(ParamSpec { name, shape, size, kind, qlayer, fanin });
+        self.params.len() - 1
+    }
+
+    fn conv(
+        &mut self,
+        x: usize,
+        name: &str,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        bias: bool,
+    ) -> usize {
+        let (h, w, cin) = self.shapes[x].hwc();
+        // SAME padding throughout the zoo (arch.py passes pad="SAME" for
+        // every conv); output dims are ceil(in/stride).
+        let oh = (h + stride - 1) / stride;
+        let ow = (w + stride - 1) / stride;
+        let fanin = k * k * cin;
+        let qidx = self.qlayers.len();
+        let kp = self.param(
+            format!("{name}.kernel"),
+            vec![k, k, cin, cout],
+            ParamKind::ConvKernel,
+            Some(qidx),
+            fanin,
+        );
+        self.qlayers.push(QLayerSpec {
+            name: name.to_string(),
+            param_idx: kp,
+            kind: "conv".to_string(),
+            macs: (oh * ow * fanin * cout) as u64,
+            weight_count: fanin * cout,
+            fanin,
+            out_channels: cout,
+        });
+        let bp = if bias {
+            Some(self.param(format!("{name}.bias"), vec![cout], ParamKind::Bias, None, 0))
+        } else {
+            None
+        };
+        let node = Node::Conv { input: x, kernel: kp, bias: bp, k, stride, same: true, q: qidx };
+        self.emit(node, Shape::Hwc(oh, ow, cout))
+    }
+
+    fn dense(&mut self, x: usize, name: &str, cout: usize) -> usize {
+        let cin = match self.shapes[x] {
+            Shape::Flat(n) => n,
+            s => panic!("dense input must be flat, got {s:?}"),
+        };
+        let qidx = self.qlayers.len();
+        let kp = self.param(
+            format!("{name}.kernel"),
+            vec![cin, cout],
+            ParamKind::DenseKernel,
+            Some(qidx),
+            cin,
+        );
+        self.qlayers.push(QLayerSpec {
+            name: name.to_string(),
+            param_idx: kp,
+            kind: "dense".to_string(),
+            macs: (cin * cout) as u64,
+            weight_count: cin * cout,
+            fanin: cin,
+            out_channels: cout,
+        });
+        let bp = self.param(format!("{name}.bias"), vec![cout], ParamKind::Bias, None, 0);
+        self.emit(Node::Dense { input: x, kernel: kp, bias: bp, q: qidx }, Shape::Flat(cout))
+    }
+
+    fn bn(&mut self, x: usize, name: &str) -> usize {
+        let shape = self.shapes[x];
+        let c = shape.channels();
+        let sp = self.param(format!("{name}.scale"), vec![c], ParamKind::BnScale, None, 0);
+        let bp = self.param(format!("{name}.bias"), vec![c], ParamKind::BnBias, None, 0);
+        self.emit(Node::Bn { input: x, scale: sp, bias: bp }, shape)
+    }
+
+    fn relu(&mut self, x: usize) -> usize {
+        self.emit(Node::Relu { input: x }, self.shapes[x])
+    }
+
+    fn add(&mut self, a: usize, b: usize) -> usize {
+        assert_eq!(
+            self.shapes[a], self.shapes[b],
+            "residual mismatch {:?} vs {:?}",
+            self.shapes[a], self.shapes[b]
+        );
+        self.emit(Node::Add { a, b }, self.shapes[a])
+    }
+
+    fn concat(&mut self, xs: &[usize]) -> usize {
+        let (h, w, _) = self.shapes[xs[0]].hwc();
+        let c = xs.iter().map(|&x| self.shapes[x].channels()).sum();
+        self.emit(Node::Concat { ins: xs.to_vec() }, Shape::Hwc(h, w, c))
+    }
+
+    fn maxpool(&mut self, x: usize, window: usize, stride: usize) -> usize {
+        let (h, w, c) = self.shapes[x].hwc();
+        let oh = (h - window) / stride + 1;
+        let ow = (w - window) / stride + 1;
+        self.emit(Node::MaxPool { input: x, window, stride }, Shape::Hwc(oh, ow, c))
+    }
+
+    fn avgpool_same(&mut self, x: usize, window: usize) -> usize {
+        let shape = self.shapes[x];
+        self.emit(Node::AvgPoolSame { input: x, window }, shape)
+    }
+
+    fn gap(&mut self, x: usize) -> usize {
+        let (_, _, c) = self.shapes[x].hwc();
+        self.emit(Node::Gap { input: x }, Shape::Flat(c))
+    }
+
+    fn flatten(&mut self, x: usize) -> usize {
+        let n = self.shapes[x].numel();
+        self.emit(Node::Flatten { input: x }, Shape::Flat(n))
+    }
+
+    fn conv_bn_relu(&mut self, x: usize, name: &str, cout: usize, k: usize, stride: usize) -> usize {
+        let x = self.conv(x, name, cout, k, stride, false);
+        let x = self.bn(x, &format!("{name}.bn"));
+        self.relu(x)
+    }
+
+    fn finish(self, out_id: usize) -> NativeArch {
+        assert_eq!(self.shapes[out_id], Shape::Flat(NUM_CLASSES));
+        let total_params = self.params.iter().map(|p| p.size).sum();
+        let total_weight_params = self.qlayers.iter().map(|q| q.weight_count).sum();
+        let total_macs = self.qlayers.iter().map(|q| q.macs).sum();
+        NativeArch {
+            spec: ArchSpec {
+                name: self.name,
+                artifacts: BTreeMap::new(),
+                params: self.params,
+                qlayers: self.qlayers,
+                total_params,
+                total_weight_params,
+                total_macs,
+            },
+            nodes: self.nodes,
+            shapes: self.shapes,
+            out_id,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zoo builders (mirroring arch.py)
+// ---------------------------------------------------------------------------
+
+/// CIFAR-style AlexNet: 5 conv + 3 fc, matching Table I's layer layout.
+fn alexnet_mini() -> NativeArch {
+    let mut b = Builder::new("alexnet_mini");
+    let mut x = 0;
+    x = b.conv(x, "conv1", 16, 3, 1, true);
+    x = b.relu(x);
+    x = b.maxpool(x, 2, 2); // 16 -> 8
+    x = b.conv(x, "conv2", 24, 3, 1, true);
+    x = b.relu(x);
+    x = b.maxpool(x, 2, 2); // 8 -> 4
+    x = b.conv(x, "conv3", 32, 3, 1, true);
+    x = b.relu(x);
+    x = b.conv(x, "conv4", 32, 3, 1, true);
+    x = b.relu(x);
+    x = b.conv(x, "conv5", 24, 3, 1, true);
+    x = b.relu(x);
+    x = b.maxpool(x, 2, 2); // 4 -> 2
+    x = b.flatten(x); // 96
+    x = b.dense(x, "fc1", 64);
+    x = b.relu(x);
+    x = b.dense(x, "fc2", 48);
+    x = b.relu(x);
+    x = b.dense(x, "fc3", NUM_CLASSES);
+    b.finish(x)
+}
+
+/// ResNet BasicBlock: two 3x3 convs + identity/projection shortcut.
+fn basic_block(b: &mut Builder, x: usize, name: &str, cout: usize, stride: usize) -> usize {
+    let (_, _, cin) = b.shapes[x].hwc();
+    let shortcut = if stride != 1 || cin != cout {
+        let s = b.conv(x, &format!("{name}.down"), cout, 1, stride, false);
+        b.bn(s, &format!("{name}.down.bn"))
+    } else {
+        x
+    };
+    let y = b.conv_bn_relu(x, &format!("{name}.conv1"), cout, 3, stride);
+    let y = b.conv(y, &format!("{name}.conv2"), cout, 3, 1, false);
+    let y = b.bn(y, &format!("{name}.conv2.bn"));
+    let y = b.add(y, shortcut);
+    b.relu(y)
+}
+
+/// ResNet Bottleneck: 1x1 reduce, 3x3, 1x1 expand + shortcut.
+fn bottleneck_block(b: &mut Builder, x: usize, name: &str, width: usize, stride: usize) -> usize {
+    const EXPANSION: usize = 4;
+    let cout = width * EXPANSION;
+    let (_, _, cin) = b.shapes[x].hwc();
+    let shortcut = if stride != 1 || cin != cout {
+        let s = b.conv(x, &format!("{name}.down"), cout, 1, stride, false);
+        b.bn(s, &format!("{name}.down.bn"))
+    } else {
+        x
+    };
+    let y = b.conv_bn_relu(x, &format!("{name}.conv1"), width, 1, 1);
+    let y = b.conv_bn_relu(y, &format!("{name}.conv2"), width, 3, stride);
+    let y = b.conv(y, &format!("{name}.conv3"), cout, 1, 1, false);
+    let y = b.bn(y, &format!("{name}.conv3.bn"));
+    let y = b.add(y, shortcut);
+    b.relu(y)
+}
+
+/// CIFAR-style ResNet: 3x3 stem (no maxpool), 4 stages, GAP + fc.
+fn resnet_mini(name: &str, layers: [usize; 4], bottleneck: bool) -> NativeArch {
+    const BASE: usize = 8;
+    let mut b = Builder::new(name);
+    let mut x = b.conv_bn_relu(0, "stem", BASE, 3, 1);
+    let widths = [BASE, BASE * 2, BASE * 4, BASE * 8];
+    for (stage, (&n, &w)) in layers.iter().zip(&widths).enumerate() {
+        for i in 0..n {
+            let stride = if stage > 0 && i == 0 { 2 } else { 1 };
+            let blk = format!("s{}.b{}", stage + 1, i + 1);
+            x = if bottleneck {
+                bottleneck_block(&mut b, x, &blk, w, stride)
+            } else {
+                basic_block(&mut b, x, &blk, w, stride)
+            };
+        }
+    }
+    x = b.gap(x);
+    x = b.dense(x, "fc", NUM_CLASSES);
+    b.finish(x)
+}
+
+/// InceptionV3-style mixed block: 1x1 / 1x1-3x3 / 1x1-3x3-3x3 / pool-1x1.
+#[allow(clippy::too_many_arguments)]
+fn inception_block(
+    b: &mut Builder,
+    x: usize,
+    name: &str,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    cd3r: usize,
+    cd3: usize,
+    cp: usize,
+) -> usize {
+    let br1 = b.conv_bn_relu(x, &format!("{name}.b1x1"), c1, 1, 1);
+    let br2 = b.conv_bn_relu(x, &format!("{name}.b3x3r"), c3r, 1, 1);
+    let br2 = b.conv_bn_relu(br2, &format!("{name}.b3x3"), c3, 3, 1);
+    let br3 = b.conv_bn_relu(x, &format!("{name}.bd3r"), cd3r, 1, 1);
+    let br3 = b.conv_bn_relu(br3, &format!("{name}.bd3a"), cd3, 3, 1);
+    let br3 = b.conv_bn_relu(br3, &format!("{name}.bd3b"), cd3, 3, 1);
+    let br4 = b.avgpool_same(x, 3);
+    let br4 = b.conv_bn_relu(br4, &format!("{name}.bpool"), cp, 1, 1);
+    b.concat(&[br1, br2, br3, br4])
+}
+
+/// Width-reduced InceptionV3: stem convs + 3 mixed blocks + GAP/fc.
+fn inception_mini() -> NativeArch {
+    let mut b = Builder::new("inception_mini");
+    let mut x = b.conv_bn_relu(0, "stem1", 8, 3, 1);
+    x = b.conv_bn_relu(x, "stem2", 16, 3, 1);
+    x = inception_block(&mut b, x, "mixed1", 8, 8, 12, 8, 12, 8); // 40ch @16x16
+    x = b.maxpool(x, 2, 2); // 16 -> 8
+    x = inception_block(&mut b, x, "mixed2", 12, 12, 16, 8, 16, 12); // 56ch
+    x = b.maxpool(x, 2, 2); // 8 -> 4
+    x = inception_block(&mut b, x, "mixed3", 16, 12, 24, 12, 24, 16); // 80ch
+    x = b.gap(x);
+    x = b.dense(x, "fc", NUM_CLASSES);
+    b.finish(x)
+}
+
+/// All architectures, keyed by name (the same zoo as python/compile).
+pub fn zoo() -> Vec<NativeArch> {
+    vec![
+        alexnet_mini(),
+        resnet_mini("resnet18_mini", [2, 2, 2, 2], false),
+        resnet_mini("resnet34_mini", [3, 4, 6, 3], false),
+        resnet_mini("resnet50_mini", [3, 4, 6, 3], true),
+        resnet_mini("resnet101_mini", [3, 4, 23, 3], true),
+        resnet_mini("resnet152_mini", [3, 8, 36, 3], true),
+        inception_mini(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_matches_python_builder_invariants() {
+        let archs = zoo();
+        assert_eq!(archs.len(), 7);
+        for a in &archs {
+            // qlayer back-references and weight counts are consistent
+            for (qi, q) in a.spec.qlayers.iter().enumerate() {
+                let p = &a.spec.params[q.param_idx];
+                assert_eq!(p.qlayer, Some(qi), "{}: backref {qi}", a.spec.name);
+                assert_eq!(p.size, q.weight_count, "{}: weights {qi}", a.spec.name);
+            }
+            // output is the logits vector
+            assert_eq!(a.shapes[a.out_id], Shape::Flat(NUM_CLASSES));
+            // SSA: inputs precede their consumers
+            for (vid, n) in a.nodes.iter().enumerate() {
+                let ins: Vec<usize> = match n {
+                    Node::Input => vec![],
+                    Node::Conv { input, .. }
+                    | Node::Dense { input, .. }
+                    | Node::Bn { input, .. }
+                    | Node::Relu { input }
+                    | Node::MaxPool { input, .. }
+                    | Node::AvgPoolSame { input, .. }
+                    | Node::Gap { input }
+                    | Node::Flatten { input } => vec![*input],
+                    Node::Add { a, b } => vec![*a, *b],
+                    Node::Concat { ins } => ins.clone(),
+                };
+                assert!(ins.iter().all(|&i| i < vid), "{}: node {vid}", a.spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn alexnet_layout_matches_table1() {
+        let a = zoo().into_iter().find(|a| a.spec.name == "alexnet_mini").unwrap();
+        assert_eq!(a.spec.num_qlayers(), 8); // 5 conv + 3 fc
+        assert_eq!(a.spec.qlayers[0].out_channels, 16);
+        assert_eq!(a.spec.qlayers[0].fanin, 27);
+        // conv1 MACs: 16*16 positions × 27 fanin × 16 cout
+        assert_eq!(a.spec.qlayers[0].macs, 16 * 16 * 27 * 16);
+        assert_eq!(a.spec.qlayers[5].fanin, 96); // fc1 after 2x2x24 flatten
+    }
+
+    #[test]
+    fn resnet18_depth_and_downsamples() {
+        let a = zoo().into_iter().find(|a| a.spec.name == "resnet18_mini").unwrap();
+        // stem + 8 blocks × 2 convs + 3 projection shortcuts + fc = 21
+        assert_eq!(a.spec.num_qlayers(), 21);
+        // final spatial resolution before GAP is 2x2 at 64 channels
+        let gap_in = a
+            .nodes
+            .iter()
+            .find_map(|n| match n {
+                Node::Gap { input } => Some(*input),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(a.shapes[gap_in], Shape::Hwc(2, 2, 64));
+    }
+
+    #[test]
+    fn inception_concat_channels() {
+        let a = zoo().into_iter().find(|a| a.spec.name == "inception_mini").unwrap();
+        let concats: Vec<usize> = a
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(vid, n)| matches!(n, Node::Concat { .. }).then_some(vid))
+            .collect();
+        assert_eq!(concats.len(), 3);
+        assert_eq!(a.shapes[concats[0]].channels(), 40);
+        assert_eq!(a.shapes[concats[1]].channels(), 56);
+        assert_eq!(a.shapes[concats[2]].channels(), 80);
+    }
+}

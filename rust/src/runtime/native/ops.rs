@@ -1,0 +1,709 @@
+//! Dense CPU kernels for the native backend: forward *and* backward
+//! passes for every SSA op the zoo emits.
+//!
+//! Layout conventions (matching the JAX side so weights mean the same
+//! thing on every backend):
+//! * activations: NHWC, flattened row-major per batch;
+//! * conv kernels: HWIO, i.e. `((kh*K + kw)*Cin + ci)*Cout + co` —
+//!   fanin-major with the output channel trailing, exactly the layout the
+//!   per-channel quantizer expects;
+//! * dense kernels: `(cin, cout)` row-major.
+//!
+//! Backward functions *accumulate* (`+=`) into their input-gradient and
+//! parameter-gradient buffers: a value can feed several consumers
+//! (residual shortcuts, Inception branches), so the executor zeroes the
+//! buffers once per step and lets every consumer add its contribution.
+
+/// Geometry of one convolution, with SAME/VALID padding resolved to
+/// explicit top/left pad amounts (XLA convention: `ceil(in/stride)`
+/// output positions, low padding = floor(total/2)).
+#[derive(Debug, Clone, Copy)]
+pub struct Conv2d {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+}
+
+impl Conv2d {
+    pub fn new(h: usize, w: usize, cin: usize, cout: usize, k: usize, stride: usize, same: bool) -> Conv2d {
+        let (oh, ow, pad_h, pad_w) = if same {
+            let oh = (h + stride - 1) / stride;
+            let ow = (w + stride - 1) / stride;
+            let total_h = ((oh - 1) * stride + k).saturating_sub(h);
+            let total_w = ((ow - 1) * stride + k).saturating_sub(w);
+            (oh, ow, total_h / 2, total_w / 2)
+        } else {
+            ((h - k) / stride + 1, (w - k) / stride + 1, 0, 0)
+        };
+        Conv2d { h, w, cin, cout, k, stride, oh, ow, pad_h, pad_w }
+    }
+
+    /// `out[b, oh, ow, co] = Σ_{kh,kw,ci} x[b, ih, iw, ci] · k[kh, kw, ci, co]`.
+    pub fn forward(&self, batch: usize, x: &[f32], kern: &[f32], out: &mut [f32]) {
+        let (h, w, cin, cout) = (self.h, self.w, self.cin, self.cout);
+        out[..batch * self.oh * self.ow * cout].fill(0.0);
+        for n in 0..batch {
+            let xn = &x[n * h * w * cin..(n + 1) * h * w * cin];
+            let on = &mut out[n * self.oh * self.ow * cout..(n + 1) * self.oh * self.ow * cout];
+            for oy in 0..self.oh {
+                for ox in 0..self.ow {
+                    let obase = (oy * self.ow + ox) * cout;
+                    for kh in 0..self.k {
+                        let iy = (oy * self.stride + kh) as isize - self.pad_h as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kw in 0..self.k {
+                            let ix = (ox * self.stride + kw) as isize - self.pad_w as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let xbase = (iy as usize * w + ix as usize) * cin;
+                            let kbase = (kh * self.k + kw) * cin * cout;
+                            for ci in 0..cin {
+                                let a = xn[xbase + ci];
+                                if a == 0.0 {
+                                    continue;
+                                }
+                                let krow = kbase + ci * cout;
+                                let orow = &mut on[obase..obase + cout];
+                                let krow = &kern[krow..krow + cout];
+                                for (o, &kv) in orow.iter_mut().zip(krow) {
+                                    *o += a * kv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Kernel-gradient-only backward (`dk += conv_kernel_grad`) for convs
+    /// whose input gradient has no consumer (the stem conv reading the
+    /// image) — skips the per-tap `dx` multiply-accumulate entirely.
+    pub fn backward_weights(&self, batch: usize, x: &[f32], dy: &[f32], dk: &mut [f32]) {
+        let (h, w, cin, cout) = (self.h, self.w, self.cin, self.cout);
+        for n in 0..batch {
+            let xn = &x[n * h * w * cin..(n + 1) * h * w * cin];
+            let dyn_ = &dy[n * self.oh * self.ow * cout..(n + 1) * self.oh * self.ow * cout];
+            for oy in 0..self.oh {
+                for ox in 0..self.ow {
+                    let obase = (oy * self.ow + ox) * cout;
+                    let g = &dyn_[obase..obase + cout];
+                    for kh in 0..self.k {
+                        let iy = (oy * self.stride + kh) as isize - self.pad_h as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kw in 0..self.k {
+                            let ix = (ox * self.stride + kw) as isize - self.pad_w as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let xbase = (iy as usize * w + ix as usize) * cin;
+                            let kbase = (kh * self.k + kw) * cin * cout;
+                            for ci in 0..cin {
+                                let a = xn[xbase + ci];
+                                if a == 0.0 {
+                                    continue;
+                                }
+                                let dkrow = &mut dk[kbase + ci * cout..kbase + (ci + 1) * cout];
+                                for (d, &gv) in dkrow.iter_mut().zip(g) {
+                                    *d += a * gv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Accumulates `dx += conv_input_grad`, `dk += conv_kernel_grad`.
+    pub fn backward(
+        &self,
+        batch: usize,
+        x: &[f32],
+        kern: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        dk: &mut [f32],
+    ) {
+        let (h, w, cin, cout) = (self.h, self.w, self.cin, self.cout);
+        for n in 0..batch {
+            let xn = &x[n * h * w * cin..(n + 1) * h * w * cin];
+            let dxn = &mut dx[n * h * w * cin..(n + 1) * h * w * cin];
+            let dyn_ = &dy[n * self.oh * self.ow * cout..(n + 1) * self.oh * self.ow * cout];
+            for oy in 0..self.oh {
+                for ox in 0..self.ow {
+                    let obase = (oy * self.ow + ox) * cout;
+                    let g = &dyn_[obase..obase + cout];
+                    for kh in 0..self.k {
+                        let iy = (oy * self.stride + kh) as isize - self.pad_h as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kw in 0..self.k {
+                            let ix = (ox * self.stride + kw) as isize - self.pad_w as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let xbase = (iy as usize * w + ix as usize) * cin;
+                            let kbase = (kh * self.k + kw) * cin * cout;
+                            for ci in 0..cin {
+                                let a = xn[xbase + ci];
+                                let krow = &kern[kbase + ci * cout..kbase + (ci + 1) * cout];
+                                let dkrow = &mut dk[kbase + ci * cout..kbase + (ci + 1) * cout];
+                                let mut acc = 0.0f32;
+                                for co in 0..cout {
+                                    let gv = g[co];
+                                    dkrow[co] += a * gv;
+                                    acc += krow[co] * gv;
+                                }
+                                dxn[xbase + ci] += acc;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `out[b, co] = Σ_ci a[b, ci] · k[ci, co] + bias[co]`.
+pub fn dense_forward(batch: usize, cin: usize, cout: usize, a: &[f32], k: &[f32], bias: &[f32], out: &mut [f32]) {
+    for n in 0..batch {
+        let an = &a[n * cin..(n + 1) * cin];
+        let on = &mut out[n * cout..(n + 1) * cout];
+        on.copy_from_slice(bias);
+        for (ci, &av) in an.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let krow = &k[ci * cout..(ci + 1) * cout];
+            for (o, &kv) in on.iter_mut().zip(krow) {
+                *o += av * kv;
+            }
+        }
+    }
+}
+
+/// Accumulates `da += dy·kᵀ`, `dk += aᵀ·dy`, `db += Σ_b dy`.
+pub fn dense_backward(
+    batch: usize,
+    cin: usize,
+    cout: usize,
+    a: &[f32],
+    k: &[f32],
+    dy: &[f32],
+    da: &mut [f32],
+    dk: &mut [f32],
+    db: &mut [f32],
+) {
+    for n in 0..batch {
+        let an = &a[n * cin..(n + 1) * cin];
+        let dan = &mut da[n * cin..(n + 1) * cin];
+        let g = &dy[n * cout..(n + 1) * cout];
+        for (d, &gv) in db.iter_mut().zip(g) {
+            *d += gv;
+        }
+        for ci in 0..cin {
+            let av = an[ci];
+            let krow = &k[ci * cout..(ci + 1) * cout];
+            let dkrow = &mut dk[ci * cout..(ci + 1) * cout];
+            let mut acc = 0.0f32;
+            for co in 0..cout {
+                let gv = g[co];
+                dkrow[co] += av * gv;
+                acc += krow[co] * gv;
+            }
+            dan[ci] += acc;
+        }
+    }
+}
+
+/// Broadcast-add a per-channel bias over `rows` rows.
+pub fn bias_forward(rows: usize, c: usize, bias: &[f32], out: &mut [f32]) {
+    for row in out[..rows * c].chunks_exact_mut(c) {
+        for (o, &b) in row.iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+}
+
+/// Accumulates `db[c] += Σ_rows dy[., c]`.
+pub fn bias_backward(rows: usize, c: usize, dy: &[f32], db: &mut [f32]) {
+    for row in dy[..rows * c].chunks_exact(c) {
+        for (d, &g) in db.iter_mut().zip(row) {
+            *d += g;
+        }
+    }
+}
+
+pub const BN_EPS: f64 = 1e-5;
+
+/// BatchNorm with batch statistics over all rows (N·H·W), per channel;
+/// matches `python/compile/layers.py::batchnorm`. Saves per-channel
+/// `mean` and `inv = 1/sqrt(var + eps)` for the backward pass.
+pub fn bn_forward(
+    rows: usize,
+    c: usize,
+    x: &[f32],
+    scale: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    mean: &mut [f32],
+    inv: &mut [f32],
+) {
+    let m = rows as f64;
+    for ch in 0..c {
+        let mut s = 0.0f64;
+        for row in x[..rows * c].chunks_exact(c) {
+            s += row[ch] as f64;
+        }
+        let mu = s / m;
+        let mut v = 0.0f64;
+        for row in x[..rows * c].chunks_exact(c) {
+            let d = row[ch] as f64 - mu;
+            v += d * d;
+        }
+        mean[ch] = mu as f32;
+        inv[ch] = (1.0 / (v / m + BN_EPS).sqrt()) as f32;
+    }
+    for (xrow, orow) in x[..rows * c].chunks_exact(c).zip(out[..rows * c].chunks_exact_mut(c)) {
+        for ch in 0..c {
+            orow[ch] = (xrow[ch] - mean[ch]) * inv[ch] * scale[ch] + bias[ch];
+        }
+    }
+}
+
+/// Batch-statistics BN backward. Accumulates into `dx`, `dscale`, `dbias`.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_backward(
+    rows: usize,
+    c: usize,
+    x: &[f32],
+    scale: &[f32],
+    mean: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    dscale: &mut [f32],
+    dbias: &mut [f32],
+) {
+    let m = rows as f64;
+    // per-channel reductions: Σdy and Σ(dy·x̂)
+    let mut sum_dy = vec![0.0f64; c];
+    let mut sum_dy_xhat = vec![0.0f64; c];
+    for (xrow, grow) in x[..rows * c].chunks_exact(c).zip(dy[..rows * c].chunks_exact(c)) {
+        for ch in 0..c {
+            let xhat = (xrow[ch] - mean[ch]) * inv[ch];
+            sum_dy[ch] += grow[ch] as f64;
+            sum_dy_xhat[ch] += (grow[ch] * xhat) as f64;
+        }
+    }
+    for ch in 0..c {
+        dbias[ch] += sum_dy[ch] as f32;
+        dscale[ch] += sum_dy_xhat[ch] as f32;
+    }
+    for ((xrow, grow), dxrow) in x[..rows * c]
+        .chunks_exact(c)
+        .zip(dy[..rows * c].chunks_exact(c))
+        .zip(dx[..rows * c].chunks_exact_mut(c))
+    {
+        for ch in 0..c {
+            let xhat = (xrow[ch] - mean[ch]) * inv[ch];
+            let t = grow[ch] as f64 - sum_dy[ch] / m - xhat as f64 * (sum_dy_xhat[ch] / m);
+            dxrow[ch] += (scale[ch] * inv[ch]) as f32 * t as f32;
+        }
+    }
+}
+
+/// `out = max(x, 0)` elementwise.
+pub fn relu_forward(n: usize, x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out[..n].iter_mut().zip(&x[..n]) {
+        *o = v.max(0.0);
+    }
+}
+
+/// `dx += dy · 1[y > 0]` (gradient 0 at exactly 0, like `jax.nn.relu`).
+pub fn relu_backward(n: usize, y: &[f32], dy: &[f32], dx: &mut [f32]) {
+    for i in 0..n {
+        if y[i] > 0.0 {
+            dx[i] += dy[i];
+        }
+    }
+}
+
+/// VALID max pooling, NHWC.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_forward(
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    window: usize,
+    stride: usize,
+    x: &[f32],
+    out: &mut [f32],
+) {
+    let oh = (h - window) / stride + 1;
+    let ow = (w - window) / stride + 1;
+    for n in 0..batch {
+        let xn = &x[n * h * w * c..(n + 1) * h * w * c];
+        let on = &mut out[n * oh * ow * c..(n + 1) * oh * ow * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = (oy * ow + ox) * c;
+                for ch in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..window {
+                        for kx in 0..window {
+                            let v = xn[((oy * stride + ky) * w + ox * stride + kx) * c + ch];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    on[obase + ch] = m;
+                }
+            }
+        }
+    }
+}
+
+/// Max-pool backward: the gradient flows to the first window element
+/// equal to the max (`dx += ...`).
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_backward(
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    window: usize,
+    stride: usize,
+    x: &[f32],
+    y: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+) {
+    let oh = (h - window) / stride + 1;
+    let ow = (w - window) / stride + 1;
+    for n in 0..batch {
+        let xn = &x[n * h * w * c..(n + 1) * h * w * c];
+        let dxn = &mut dx[n * h * w * c..(n + 1) * h * w * c];
+        let yn = &y[n * oh * ow * c..(n + 1) * oh * ow * c];
+        let dyn_ = &dy[n * oh * ow * c..(n + 1) * oh * ow * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = (oy * ow + ox) * c;
+                for ch in 0..c {
+                    let target = yn[obase + ch];
+                    'win: for ky in 0..window {
+                        for kx in 0..window {
+                            let idx = ((oy * stride + ky) * w + ox * stride + kx) * c + ch;
+                            if xn[idx] == target {
+                                dxn[idx] += dyn_[obase + ch];
+                                break 'win;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// SAME, stride-1 average pooling: each output averages the in-bounds
+/// window elements (count varies near the border, matching the
+/// reduce_window-sum / reduce_window-count formulation in layers.py).
+pub fn avgpool_same_forward(batch: usize, h: usize, w: usize, c: usize, window: usize, x: &[f32], out: &mut [f32]) {
+    let lo = (window - 1) / 2;
+    for n in 0..batch {
+        let xn = &x[n * h * w * c..(n + 1) * h * w * c];
+        let on = &mut out[n * h * w * c..(n + 1) * h * w * c];
+        for oy in 0..h {
+            for ox in 0..w {
+                let y0 = oy.saturating_sub(lo);
+                let y1 = (oy + window - lo - 1).min(h - 1);
+                let x0 = ox.saturating_sub(lo);
+                let x1 = (ox + window - lo - 1).min(w - 1);
+                let count = ((y1 - y0 + 1) * (x1 - x0 + 1)) as f32;
+                let obase = (oy * w + ox) * c;
+                for ch in 0..c {
+                    let mut s = 0.0f32;
+                    for iy in y0..=y1 {
+                        for ix in x0..=x1 {
+                            s += xn[(iy * w + ix) * c + ch];
+                        }
+                    }
+                    on[obase + ch] = s / count;
+                }
+            }
+        }
+    }
+}
+
+/// Backward of [`avgpool_same_forward`] (`dx += dy/count` over windows).
+pub fn avgpool_same_backward(batch: usize, h: usize, w: usize, c: usize, window: usize, dy: &[f32], dx: &mut [f32]) {
+    let lo = (window - 1) / 2;
+    for n in 0..batch {
+        let dxn = &mut dx[n * h * w * c..(n + 1) * h * w * c];
+        let dyn_ = &dy[n * h * w * c..(n + 1) * h * w * c];
+        for oy in 0..h {
+            for ox in 0..w {
+                let y0 = oy.saturating_sub(lo);
+                let y1 = (oy + window - lo - 1).min(h - 1);
+                let x0 = ox.saturating_sub(lo);
+                let x1 = (ox + window - lo - 1).min(w - 1);
+                let count = ((y1 - y0 + 1) * (x1 - x0 + 1)) as f32;
+                let obase = (oy * w + ox) * c;
+                for ch in 0..c {
+                    let g = dyn_[obase + ch] / count;
+                    for iy in y0..=y1 {
+                        for ix in x0..=x1 {
+                            dxn[(iy * w + ix) * c + ch] += g;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Global average pool NHWC → NC.
+pub fn gap_forward(batch: usize, h: usize, w: usize, c: usize, x: &[f32], out: &mut [f32]) {
+    let hw = (h * w) as f32;
+    for n in 0..batch {
+        let xn = &x[n * h * w * c..(n + 1) * h * w * c];
+        let on = &mut out[n * c..(n + 1) * c];
+        on.fill(0.0);
+        for row in xn.chunks_exact(c) {
+            for (o, &v) in on.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        for o in on.iter_mut() {
+            *o /= hw;
+        }
+    }
+}
+
+/// Backward of [`gap_forward`] (`dx += dy/(h·w)`).
+pub fn gap_backward(batch: usize, h: usize, w: usize, c: usize, dy: &[f32], dx: &mut [f32]) {
+    let hw = (h * w) as f32;
+    for n in 0..batch {
+        let dxn = &mut dx[n * h * w * c..(n + 1) * h * w * c];
+        let g = &dy[n * c..(n + 1) * c];
+        for row in dxn.chunks_exact_mut(c) {
+            for (d, &gv) in row.iter_mut().zip(g) {
+                *d += gv / hw;
+            }
+        }
+    }
+}
+
+/// Mean softmax cross-entropy + accuracy; optionally writes
+/// `d loss / d logits` (already divided by the batch size).
+pub fn softmax_ce(
+    batch: usize,
+    classes: usize,
+    logits: &[f32],
+    y: &[i32],
+    mut dlogits: Option<&mut [f32]>,
+) -> (f32, f32) {
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for n in 0..batch {
+        let row = &logits[n * classes..(n + 1) * classes];
+        let label = y[n] as usize;
+        debug_assert!(label < classes);
+        let mut mx = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > mx {
+                mx = v;
+                argmax = c;
+            }
+        }
+        if argmax == label {
+            correct += 1;
+        }
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - mx).exp();
+        }
+        let lse = mx + denom.ln();
+        loss += (lse - row[label]) as f64;
+        if let Some(d) = dlogits.as_deref_mut() {
+            let drow = &mut d[n * classes..(n + 1) * classes];
+            for (c, &v) in row.iter().enumerate() {
+                let p = (v - lse).exp();
+                drow[c] = (p - if c == label { 1.0 } else { 0.0 }) / batch as f32;
+            }
+        }
+    }
+    ((loss / batch as f64) as f32, correct as f32 / batch as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Central-difference gradient check of the conv kernel gradient.
+    #[test]
+    fn conv_kernel_gradient_matches_finite_difference() {
+        let cv = Conv2d::new(5, 5, 2, 3, 3, 1, true);
+        assert_eq!((cv.oh, cv.ow, cv.pad_h), (5, 5, 1));
+        let batch = 2;
+        let x = randv(batch * 5 * 5 * 2, 1);
+        let mut k = randv(3 * 3 * 2 * 3, 2);
+        let dy = randv(batch * 5 * 5 * 3, 3);
+        let mut out = vec![0.0f32; batch * 5 * 5 * 3];
+        let mut dx = vec![0.0f32; x.len()];
+        let mut dk = vec![0.0f32; k.len()];
+        cv.backward(batch, &x, &k, &dy, &mut dx, &mut dk);
+        // loss = Σ out·dy; finite-difference a few kernel entries
+        let loss = |cv: &Conv2d, x: &[f32], k: &[f32], out: &mut [f32]| -> f64 {
+            cv.forward(batch, x, k, out);
+            out.iter().zip(&dy).map(|(&o, &g)| (o * g) as f64).sum()
+        };
+        let eps = 1e-3f32;
+        for idx in [0usize, 7, 23, 53] {
+            let orig = k[idx];
+            k[idx] = orig + eps;
+            let lp = loss(&cv, &x, &k, &mut out);
+            k[idx] = orig - eps;
+            let lm = loss(&cv, &x, &k, &mut out);
+            k[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - dk[idx] as f64).abs() < 2e-2 * fd.abs().max(1.0),
+                "kernel grad mismatch at {idx}: fd {fd} vs {}",
+                dk[idx]
+            );
+        }
+        // and a few input entries
+        let mut xm = x.clone();
+        for idx in [0usize, 11, 31] {
+            let orig = xm[idx];
+            xm[idx] = orig + eps;
+            let lp = loss(&cv, &xm, &k, &mut out);
+            xm[idx] = orig - eps;
+            let lm = loss(&cv, &xm, &k, &mut out);
+            xm[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - dx[idx] as f64).abs() < 2e-2 * fd.abs().max(1.0),
+                "input grad mismatch at {idx}: fd {fd} vs {}",
+                dx[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn bn_gradient_matches_finite_difference() {
+        let (rows, c) = (12, 3);
+        let x = randv(rows * c, 5);
+        let scale = vec![1.2f32, 0.8, 1.0];
+        let bias = vec![0.1f32, -0.2, 0.0];
+        let dy = randv(rows * c, 6);
+        let mut out = vec![0.0f32; rows * c];
+        let mut mean = vec![0.0f32; c];
+        let mut inv = vec![0.0f32; c];
+        bn_forward(rows, c, &x, &scale, &bias, &mut out, &mut mean, &mut inv);
+        let mut dx = vec![0.0f32; rows * c];
+        let mut ds = vec![0.0f32; c];
+        let mut db = vec![0.0f32; c];
+        bn_backward(rows, c, &x, &scale, &mean, &inv, &dy, &mut dx, &mut ds, &mut db);
+        let loss = |x: &[f32]| -> f64 {
+            let mut o = vec![0.0f32; rows * c];
+            let mut m = vec![0.0f32; c];
+            let mut iv = vec![0.0f32; c];
+            bn_forward(rows, c, x, &scale, &bias, &mut o, &mut m, &mut iv);
+            o.iter().zip(&dy).map(|(&a, &g)| (a * g) as f64).sum()
+        };
+        let eps = 1e-3f32;
+        let mut xm = x.clone();
+        for idx in [0usize, 5, 17, 35] {
+            let orig = xm[idx];
+            xm[idx] = orig + eps;
+            let lp = loss(&xm);
+            xm[idx] = orig - eps;
+            let lm = loss(&xm);
+            xm[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - dx[idx] as f64).abs() < 3e-2 * fd.abs().max(0.5),
+                "bn dx mismatch at {idx}: fd {fd} vs {}",
+                dx[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_ce_gradient_sums_to_zero_per_row() {
+        let (b, c) = (4, 10);
+        let logits = randv(b * c, 9);
+        let y = vec![1i32, 0, 7, 3];
+        let mut d = vec![0.0f32; b * c];
+        let (loss, acc) = softmax_ce(b, c, &logits, &y, Some(&mut d));
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+        for n in 0..b {
+            let s: f32 = d[n * c..(n + 1) * c].iter().sum();
+            assert!(s.abs() < 1e-5, "row {n} grad sum {s}");
+        }
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_max() {
+        let (h, w, c) = (4, 4, 1);
+        let mut x = vec![0.0f32; h * w];
+        x[5] = 3.0; // max of the first 2x2 window at stride 2? window covers idx 0,1,4,5
+        let mut y = vec![0.0f32; 4];
+        maxpool_forward(1, h, w, c, 2, 2, &x, &mut y);
+        assert_eq!(y[0], 3.0);
+        let dy = vec![1.0f32; 4];
+        let mut dx = vec![0.0f32; h * w];
+        maxpool_backward(1, h, w, c, 2, 2, &x, &y, &dy, &mut dx);
+        assert_eq!(dx[5], 1.0);
+        assert_eq!(dx[0], 0.0);
+    }
+
+    #[test]
+    fn avgpool_same_is_mean_and_conserves_gradient() {
+        let (h, w, c) = (4, 4, 2);
+        let x = randv(h * w * c, 12);
+        let mut y = vec![0.0f32; h * w * c];
+        avgpool_same_forward(1, h, w, c, 3, &x, &mut y);
+        // center cell (1,1) averages a full 3x3 window
+        let mut s = 0.0f32;
+        for iy in 0..3 {
+            for ix in 0..3 {
+                s += x[(iy * w + ix) * c];
+            }
+        }
+        assert!((y[(w + 1) * c] - s / 9.0).abs() < 1e-5);
+        // gradient mass is conserved: Σdx == Σdy
+        let dy = randv(h * w * c, 13);
+        let mut dx = vec![0.0f32; h * w * c];
+        avgpool_same_backward(1, h, w, c, 3, &dy, &mut dx);
+        let sdx: f32 = dx.iter().sum();
+        let sdy: f32 = dy.iter().sum();
+        assert!((sdx - sdy).abs() < 1e-4, "{sdx} vs {sdy}");
+    }
+}

@@ -1,84 +1,79 @@
-//! A live model: compiled entry points + host-side parameter state.
+//! A live model: an executor plus host-side parameter state.
 //!
-//! Parameters live host-side as Vec<f32> (snapshot/restore is central to
-//! Phase 2's reversion logic); literals are rebuilt per call. On CPU the
-//! copies are trivial next to the compute (see EXPERIMENTS.md §Perf for
-//! the measured breakdown).
+//! Parameters live host-side as `Vec<f32>` regardless of backend —
+//! snapshot/restore is central to Phase 2's reversion logic, and keeping
+//! the authoritative state here means a search can even migrate between
+//! backends mid-run via [`ModelSession::params`]/[`ModelSession::set_params`].
+//! On CPU the copies are trivial next to the compute (see EXPERIMENTS.md
+//! §Perf for the measured breakdown).
 
-use super::client::{f32_literal, f32_scalar, i32_literal, key_literal, Runtime};
-use crate::manifest::ArchSpec;
+use super::backend::{Backend, EvalResult, ModelExecutor, Snapshot, StepResult};
+use crate::manifest::{ArchSpec, DatasetSpec};
 use crate::quant::BitAssignment;
-use anyhow::{bail, Context, Result};
-use std::rc::Rc;
+use anyhow::{bail, Result};
 
-/// One training step's scalars.
-#[derive(Debug, Clone, Copy)]
-pub struct StepResult {
-    pub loss: f32,
-    pub acc: f32,
-}
-
-/// Aggregated evaluation result.
-#[derive(Debug, Clone, Copy)]
-pub struct EvalResult {
-    pub accuracy: f64,
-    pub loss: f64,
-    pub samples: usize,
-}
-
-/// Host-side parameter snapshot (params + momentum).
-#[derive(Debug, Clone)]
-pub struct Snapshot {
-    params: Vec<Vec<f32>>,
-    mom: Vec<Vec<f32>>,
-}
-
-/// A loaded architecture with live parameter state.
-pub struct ModelSession<'rt> {
-    pub rt: &'rt Runtime,
+/// A loaded architecture with live parameter state, generic over the
+/// executing backend. The default executor type is the boxed trait
+/// object handed out by [`Backend::executor`], so `ModelSession` written
+/// without type arguments is the runtime-selected-backend session used
+/// throughout the coordinator.
+///
+/// ```
+/// use sigmaquant::quant::BitAssignment;
+/// use sigmaquant::runtime::{ModelSession, NativeBackend};
+///
+/// let backend = NativeBackend::new();
+/// let mut s = ModelSession::load(&backend, "alexnet_mini", 42).unwrap();
+/// let snap = s.snapshot();
+/// let w8 = BitAssignment::uniform(s.num_qlayers(), 8);
+/// let b = s.dataset().train_batch;
+/// let x = vec![0.5f32; b * s.dataset().image_len()];
+/// let y = vec![0i32; b];
+/// s.train_step(&x, &y, &w8, &w8, 0.01).unwrap();
+/// s.restore(&snap); // Phase-2 style reversion
+/// ```
+pub struct ModelSession<E: ModelExecutor = Box<dyn ModelExecutor>> {
+    exec: E,
     pub arch: ArchSpec,
-    init_exe: Rc<xla::PjRtLoadedExecutable>,
-    train_exe: Rc<xla::PjRtLoadedExecutable>,
-    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+    dataset: DatasetSpec,
     params: Vec<Vec<f32>>,
     mom: Vec<Vec<f32>>,
 }
 
-impl<'rt> ModelSession<'rt> {
-    /// Compile all entry points of `arch_name` and initialize params.
-    pub fn load(rt: &'rt Runtime, arch_name: &str, seed: u64) -> Result<Self> {
-        let arch = rt.manifest.arch(arch_name)?.clone();
-        let init_exe = rt.executable(&arch, "init")?;
-        let train_exe = rt.executable(&arch, "train_step")?;
-        let eval_exe = rt.executable(&arch, "eval_batch")?;
-        let mut s = ModelSession {
-            rt,
-            arch,
-            init_exe,
-            train_exe,
-            eval_exe,
-            params: Vec::new(),
-            mom: Vec::new(),
-        };
+impl ModelSession {
+    /// Load `arch_name` from `backend` and initialize params from `seed`.
+    pub fn load(backend: &dyn Backend, arch_name: &str, seed: u64) -> Result<Self> {
+        Self::with_executor(backend.executor(arch_name)?, seed)
+    }
+}
+
+impl<E: ModelExecutor> ModelSession<E> {
+    /// Wrap a concrete executor (statically dispatched sessions; the
+    /// boxed path above is the common case).
+    pub fn with_executor(exec: E, seed: u64) -> Result<Self> {
+        let arch = exec.arch().clone();
+        let dataset = exec.dataset().clone();
+        let mut s = ModelSession { exec, arch, dataset, params: Vec::new(), mom: Vec::new() };
         s.reinit(seed)?;
         Ok(s)
     }
 
+    /// Dataset geometry (batch sizes, image dims) of the backend.
+    pub fn dataset(&self) -> &DatasetSpec {
+        &self.dataset
+    }
+
     /// (Re-)initialize parameters from a seed; zeroes momentum.
     pub fn reinit(&mut self, seed: u64) -> Result<()> {
-        let out = self.init_exe.execute::<xla::Literal>(&[key_literal(seed)?])?;
-        let tuple = out[0][0].to_literal_sync()?.to_tuple()?;
-        if tuple.len() != self.arch.num_params() {
+        let params = self.exec.init(seed)?;
+        if params.len() != self.arch.num_params() {
             bail!(
-                "init returned {} params, manifest says {}",
-                tuple.len(),
+                "init returned {} params, arch spec says {}",
+                params.len(),
                 self.arch.num_params()
             );
         }
-        self.params = tuple
-            .iter()
-            .map(|l| l.to_vec::<f32>().context("init output"))
-            .collect::<Result<_>>()?;
+        self.params = params;
         self.mom = self
             .arch
             .params
@@ -98,7 +93,7 @@ impl<'rt> ModelSession<'rt> {
     }
 
     /// Replace the full parameter set (e.g. from a cached checkpoint);
-    /// momentum is zeroed. Lengths are validated against the manifest.
+    /// momentum is zeroed. Lengths are validated against the arch spec.
     pub fn set_params(&mut self, params: Vec<Vec<f32>>) -> Result<()> {
         if params.len() != self.arch.num_params() {
             bail!("set_params: {} arrays, expected {}", params.len(), self.arch.num_params());
@@ -147,40 +142,11 @@ impl<'rt> ModelSession<'rt> {
         abits: &BitAssignment,
         lr: f32,
     ) -> Result<StepResult> {
-        let ds = &self.rt.manifest.dataset;
-        let b = ds.train_batch;
-        debug_assert_eq!(x.len(), b * ds.image_len());
-        debug_assert_eq!(y.len(), b);
-        let l = self.num_qlayers();
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(2 * self.params.len() + 5);
-        for (spec, data) in self.arch.params.iter().zip(&self.params) {
-            args.push(f32_literal(data, &spec.shape)?);
-        }
-        for (spec, data) in self.arch.params.iter().zip(&self.mom) {
-            args.push(f32_literal(data, &spec.shape)?);
-        }
-        args.push(f32_literal(x, &[b, ds.height, ds.width, ds.channels])?);
-        args.push(i32_literal(y, &[b])?);
-        args.push(f32_literal(&wbits.as_f32(), &[l])?);
-        args.push(f32_literal(&abits.as_f32(), &[l])?);
-        args.push(f32_scalar(lr));
-
-        let out = self.train_exe.execute::<xla::Literal>(&args)?;
-        let tuple = out[0][0].to_literal_sync()?.to_tuple()?;
-        let p = self.arch.num_params();
-        if tuple.len() != 2 * p + 2 {
-            bail!("train_step returned {} outputs, expected {}", tuple.len(), 2 * p + 2);
-        }
-        for (i, lit) in tuple[..p].iter().enumerate() {
-            self.params[i] = lit.to_vec::<f32>()?;
-        }
-        for (i, lit) in tuple[p..2 * p].iter().enumerate() {
-            self.mom[i] = lit.to_vec::<f32>()?;
-        }
-        Ok(StepResult {
-            loss: super::client::scalar_f32(&tuple[2 * p])?,
-            acc: super::client::scalar_f32(&tuple[2 * p + 1])?,
-        })
+        let ds = &self.dataset;
+        debug_assert_eq!(x.len(), ds.train_batch * ds.image_len());
+        debug_assert_eq!(y.len(), ds.train_batch);
+        self.exec
+            .train_step(&mut self.params, &mut self.mom, x, y, wbits, abits, lr)
     }
 
     /// Evaluate on pre-batched data (len must be a multiple of eval_batch).
@@ -191,37 +157,20 @@ impl<'rt> ModelSession<'rt> {
         wbits: &BitAssignment,
         abits: &BitAssignment,
     ) -> Result<EvalResult> {
-        let ds = &self.rt.manifest.dataset;
-        let b = ds.eval_batch;
-        let img = ds.image_len();
+        let b = self.dataset.eval_batch;
+        let img = self.dataset.image_len();
         if ys.is_empty() || ys.len() % b != 0 {
             bail!("eval set size {} must be a positive multiple of {b}", ys.len());
         }
-        let l = self.num_qlayers();
+        let batches = ys.len() / b;
         let mut correct = 0.0f64;
         let mut loss_sum = 0.0f64;
-        let batches = ys.len() / b;
-        // parameter literals are identical across batches; build once
-        let mut base_args: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 4);
-        for (spec, data) in self.arch.params.iter().zip(&self.params) {
-            base_args.push(f32_literal(data, &spec.shape)?);
-        }
-        let wb = f32_literal(&wbits.as_f32(), &[l])?;
-        let ab = f32_literal(&abits.as_f32(), &[l])?;
         for bi in 0..batches {
             let x = &xs[bi * b * img..(bi + 1) * b * img];
             let y = &ys[bi * b..(bi + 1) * b];
-            let mut args: Vec<&xla::Literal> = base_args.iter().collect();
-            let xl = f32_literal(x, &[b, ds.height, ds.width, ds.channels])?;
-            let yl = i32_literal(y, &[b])?;
-            args.push(&xl);
-            args.push(&yl);
-            args.push(&wb);
-            args.push(&ab);
-            let out = self.eval_exe.execute::<&xla::Literal>(&args)?;
-            let tuple = out[0][0].to_literal_sync()?.to_tuple()?;
-            correct += super::client::scalar_f32(&tuple[0])? as f64;
-            loss_sum += super::client::scalar_f32(&tuple[1])? as f64;
+            let (c, l) = self.exec.eval_batch(&self.params, x, y, wbits, abits)?;
+            correct += c as f64;
+            loss_sum += l as f64;
         }
         Ok(EvalResult {
             accuracy: correct / ys.len() as f64,

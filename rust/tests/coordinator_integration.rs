@@ -1,21 +1,13 @@
-//! End-to-end coordinator integration over real artifacts: the two-phase
-//! search must terminate, produce a valid assignment, respect the met
-//! flag semantics, and the trajectory must be well-formed.
+//! End-to-end coordinator integration on the native CPU backend: the
+//! two-phase search must terminate, produce a valid assignment, respect
+//! the met flag semantics, and the trajectory must be well-formed.
 
 use sigmaquant::coordinator::qat::TrainCursor;
 use sigmaquant::coordinator::zones::Targets;
 use sigmaquant::coordinator::{SearchConfig, SigmaQuant, Zone};
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::{int8_size_bytes, model_size_bytes};
-use sigmaquant::runtime::{ModelSession, Runtime};
-
-fn runtime() -> Option<Runtime> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("artifacts missing; skipping");
-        return None;
-    }
-    Some(Runtime::new("artifacts").expect("runtime"))
-}
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 
 fn quick_cfg(targets: Targets) -> SearchConfig {
     let mut cfg = SearchConfig::defaults(targets);
@@ -29,9 +21,9 @@ fn quick_cfg(targets: Targets) -> SearchConfig {
 
 #[test]
 fn search_terminates_with_valid_assignment() {
-    let Some(rt) = runtime() else { return };
-    let mut s = ModelSession::load(&rt, "alexnet_mini", 3).expect("load");
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 3);
+    let be = NativeBackend::new();
+    let mut s = ModelSession::load(&be, "alexnet_mini", 3).expect("load");
+    let data = SynthDataset::new(be.dataset().clone(), 3);
     let mut cursor = TrainCursor::default();
     // brief float warmup so accuracy is above chance
     sigmaquant::coordinator::qat::pretrain(&mut s, &data, &mut cursor, 0.05, 40, 0)
@@ -66,9 +58,9 @@ fn search_terminates_with_valid_assignment() {
 
 #[test]
 fn impossible_targets_abandon_or_fail_gracefully() {
-    let Some(rt) = runtime() else { return };
-    let mut s = ModelSession::load(&rt, "alexnet_mini", 5).expect("load");
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 5);
+    let be = NativeBackend::new();
+    let mut s = ModelSession::load(&be, "alexnet_mini", 5).expect("load");
+    let data = SynthDataset::new(be.dataset().clone(), 5);
     let mut cursor = TrainCursor::default();
     let int8 = int8_size_bytes(&s.arch);
     // accuracy 100% at 1% of INT8 size: unattainable
@@ -90,9 +82,9 @@ fn impossible_targets_abandon_or_fail_gracefully() {
 
 #[test]
 fn phase2_never_unmeets_a_met_constraint_on_acceptance() {
-    let Some(rt) = runtime() else { return };
-    let mut s = ModelSession::load(&rt, "alexnet_mini", 9).expect("load");
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 9);
+    let be = NativeBackend::new();
+    let mut s = ModelSession::load(&be, "alexnet_mini", 9).expect("load");
+    let data = SynthDataset::new(be.dataset().clone(), 9);
     let mut cursor = TrainCursor::default();
     sigmaquant::coordinator::qat::pretrain(&mut s, &data, &mut cursor, 0.05, 30, 0)
         .expect("pretrain");

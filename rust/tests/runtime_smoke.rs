@@ -1,26 +1,18 @@
-//! Integration: load real AOT artifacts, run init/train/eval end-to-end.
-//! Requires `make artifacts` (skips cleanly when artifacts are absent).
+//! Integration: run init/train/eval end-to-end on the native CPU
+//! backend. Needs nothing but a clean checkout — no artifacts, no XLA.
 
 use sigmaquant::coordinator::qat::{pretrain, run_qat, TrainCursor};
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::BitAssignment;
-use sigmaquant::runtime::{ModelSession, Runtime};
-
-fn runtime() -> Option<Runtime> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("artifacts missing; skipping integration test");
-        return None;
-    }
-    Some(Runtime::new("artifacts").expect("runtime"))
-}
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 
 #[test]
 fn alexnet_init_train_eval_roundtrip() {
-    let Some(rt) = runtime() else { return };
-    let mut s = ModelSession::load(&rt, "alexnet_mini", 1).expect("load");
+    let be = NativeBackend::new();
+    let mut s = ModelSession::load(&be, "alexnet_mini", 1).expect("load");
     let l = s.num_qlayers();
     assert_eq!(l, 8, "alexnet has 8 quantizable layers");
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 99);
+    let data = SynthDataset::new(be.dataset().clone(), 99);
     let mut cursor = TrainCursor::default();
 
     // a few float pre-training steps must reduce the loss
@@ -29,12 +21,13 @@ fn alexnet_init_train_eval_roundtrip() {
     let last = curve.last().unwrap().1;
     assert!(last < first, "loss should fall: {first} -> {last}");
 
-    // eval under 8-bit quantization: accuracy in [0,1], better than random
+    // eval under 8-bit quantization: accuracy in [0,1], finite loss
     let w8 = BitAssignment::uniform(l, 8);
-    let (xs, ys) = data.eval_set(rt.manifest.dataset.eval_batch);
+    let (xs, ys) = data.eval_set(be.dataset().eval_batch);
     let r = s.evaluate(&xs, &ys, &w8, &w8).expect("eval");
     assert!(r.accuracy >= 0.0 && r.accuracy <= 1.0);
     assert!(r.loss.is_finite());
+    assert_eq!(r.samples, be.dataset().eval_batch);
 
     // QAT at mixed bits runs and returns finite metrics
     let mixed = BitAssignment::new(vec![8, 6, 4, 4, 2, 2, 4, 8]).unwrap();
@@ -44,24 +37,49 @@ fn alexnet_init_train_eval_roundtrip() {
 
 #[test]
 fn init_is_deterministic_across_sessions() {
-    let Some(rt) = runtime() else { return };
-    let s1 = ModelSession::load(&rt, "alexnet_mini", 42).expect("load");
-    let s2 = ModelSession::load(&rt, "alexnet_mini", 42).expect("load");
+    let be = NativeBackend::new();
+    let s1 = ModelSession::load(&be, "alexnet_mini", 42).expect("load");
+    let s2 = ModelSession::load(&be, "alexnet_mini", 42).expect("load");
     assert_eq!(s1.qlayer_weights(0), s2.qlayer_weights(0));
-    let s3 = ModelSession::load(&rt, "alexnet_mini", 43).expect("load");
+    let s3 = ModelSession::load(&be, "alexnet_mini", 43).expect("load");
     assert_ne!(s1.qlayer_weights(0), s3.qlayer_weights(0));
+    // different architectures draw independent streams from one seed
+    let s4 = ModelSession::load(&be, "resnet18_mini", 42).expect("load");
+    assert_ne!(
+        s1.qlayer_weights(0)[..8],
+        s4.qlayer_weights(0)[..8],
+        "arch name must be mixed into the init stream"
+    );
 }
 
 #[test]
 fn bits_change_eval_output() {
-    let Some(rt) = runtime() else { return };
-    let s = ModelSession::load(&rt, "alexnet_mini", 7).expect("load");
+    let be = NativeBackend::new();
+    let s = ModelSession::load(&be, "alexnet_mini", 7).expect("load");
     let l = s.num_qlayers();
-    let data = SynthDataset::new(rt.manifest.dataset.clone(), 5);
-    let (xs, ys) = data.eval_set(rt.manifest.dataset.eval_batch);
+    let data = SynthDataset::new(be.dataset().clone(), 5);
+    let (xs, ys) = data.eval_set(be.dataset().eval_batch);
     let a8 = BitAssignment::uniform(l, 8);
     let loss8 = s.evaluate(&xs, &ys, &a8, &a8).unwrap().loss;
     let w2 = BitAssignment::uniform(l, 2);
     let loss2 = s.evaluate(&xs, &ys, &w2, &a8).unwrap().loss;
     assert_ne!(loss8, loss2, "bitwidth input must affect the computation");
+}
+
+#[test]
+fn snapshot_restore_is_bit_exact() {
+    let be = NativeBackend::new();
+    let mut s = ModelSession::load(&be, "alexnet_mini", 11).expect("load");
+    let l = s.num_qlayers();
+    let data = SynthDataset::new(be.dataset().clone(), 11);
+    let mut cursor = TrainCursor::default();
+    pretrain(&mut s, &data, &mut cursor, 0.05, 5, 0).expect("pretrain");
+    let snap = s.snapshot();
+    let before: Vec<Vec<f32>> = s.params().to_vec();
+    // diverge, then restore (the Phase-2 reversion path)
+    let w4 = BitAssignment::uniform(l, 4);
+    run_qat(&mut s, &data, &mut cursor, &w4, &w4, 0.05, 4).expect("qat");
+    assert_ne!(s.params().to_vec(), before, "training must change params");
+    s.restore(&snap);
+    assert_eq!(s.params().to_vec(), before, "restore must be bit-exact");
 }

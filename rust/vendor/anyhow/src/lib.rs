@@ -1,0 +1,183 @@
+//! Offline-vendored subset of the `anyhow` API.
+//!
+//! The build environment has no network access to crates.io, so this
+//! in-repo crate provides the (small) slice of `anyhow` the workspace
+//! actually uses: [`Error`], [`Result`], the [`Context`] extension trait,
+//! and the [`anyhow!`]/[`bail!`] macros. Swapping in the real crate is a
+//! one-line change in `rust/Cargo.toml`; nothing in the workspace relies
+//! on behavior beyond what real `anyhow` provides.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of causes.
+///
+/// Like `anyhow::Error` it is deliberately *not* `std::error::Error`, so
+/// the blanket `From<E: std::error::Error>` conversion below can coexist
+/// with the identity `From<Error>` used by the `?` operator.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain from the outermost message to the root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur)
+        })
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &Error {
+        self.chain().last().expect("chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost message; `{:#}` prints the whole chain
+    /// separated by `: ` (mirrors real anyhow's alternate formatting).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = Vec::new();
+        msgs.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, as in real anyhow.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("opening config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("empty").unwrap_err();
+        assert_eq!(e.to_string(), "empty");
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert_eq!(inner(true).unwrap_err().to_string(), "failed with code 7");
+        let e2 = anyhow!("x = {}", 3);
+        assert_eq!(e2.root_cause().to_string(), "x = 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/path/xyz")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Compile-time stub of the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The container that builds this workspace has no XLA toolchain, so the
+//! `pjrt` cargo feature resolves to this stub: the same type and method
+//! surface the PJRT runtime code compiles against, with every runtime
+//! entry point returning [`Error::Unavailable`]. This keeps the
+//! feature-gated code honest (it must keep type-checking) while the
+//! default build carries no XLA dependency at all.
+//!
+//! To actually execute AOT artifacts, replace the `xla` path dependency
+//! in `rust/Cargo.toml` with the real `xla` bindings crate; the runtime
+//! code in `sigmaquant::runtime::client` is written against that API.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: either "this build has no XLA" or a message carried
+/// through from a fallible constructor.
+#[derive(Debug)]
+pub enum Error {
+    /// The operation needs the real PJRT runtime.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: XLA/PJRT is stubbed out in this build; rebuild with the real \
+                 `xla` bindings (see rust/vendor/xla-stub) to execute AOT artifacts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types a [`Literal`] can be built from / read into.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug, Clone, Default)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal(()))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-resident buffer (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub: construction always fails, so callers fall back or
+/// report a clear error before any compute is attempted).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_is_honest_about_unavailability() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("stubbed out"));
+    }
+}
