@@ -6,9 +6,13 @@
 use sigmaquant::hw::shift_add::{multiply_exact, weight_cycles, CycleCounter, ShiftAddConfig};
 use sigmaquant::quant::quantize_to_int;
 use sigmaquant::util::rng::Rng;
-use sigmaquant::util::timer::bench;
+use sigmaquant::util::timer::{bench, BenchReport};
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut report = BenchReport::new("hw");
+    // CI smoke mode: single short iteration per op
+    let ms = |full: f64| if quick { 1.0 } else { full };
     println!("# bench_hw — shift-add MAC simulator hot paths");
     let mut rng = Rng::new(1);
     let w: Vec<f32> = (0..262_144).map(|_| rng.normal() as f32).collect();
@@ -16,7 +20,7 @@ fn main() {
 
     // 1. direct per-weight cycle computation (pre-optimization path)
     let cfg = ShiftAddConfig::default();
-    let t_direct = bench(20, 300.0, || {
+    let t_direct = bench(if quick { 1 } else { 20 }, ms(300.0), || {
         let total: u64 = ql.codes.iter().map(|&c| weight_cycles(c, cfg) as u64).sum();
         std::hint::black_box(total);
     });
@@ -25,7 +29,7 @@ fn main() {
 
     // 2. LUT-based CycleCounter (the optimized hot path)
     let cc = CycleCounter::new(cfg);
-    let t_lut = bench(20, 300.0, || {
+    let t_lut = bench(if quick { 1 } else { 20 }, ms(300.0), || {
         std::hint::black_box(cc.layer_cycles(&ql.codes, 16.0));
     });
     println!("CycleCounter LUT      : {:>10.1} us/262k-weights ({:.0} Mweights/s, {:.2}x vs direct)",
@@ -34,13 +38,13 @@ fn main() {
 
     // 3. CSD recoding variant
     let cc_csd = CycleCounter::new(ShiftAddConfig { csd: true, ..Default::default() });
-    let t_csd = bench(20, 300.0, || {
+    let t_csd = bench(if quick { 1 } else { 20 }, ms(300.0), || {
         std::hint::black_box(cc_csd.layer_cycles(&ql.codes, 16.0));
     });
     println!("CycleCounter LUT (CSD): {:>10.1} us/262k-weights", t_csd.median_us());
 
     // 4. bit-exact serial multiply (reference path used in tests)
-    let t_mul = bench(20, 300.0, || {
+    let t_mul = bench(if quick { 1 } else { 20 }, ms(300.0), || {
         let mut acc = 0i64;
         for &c in ql.codes.iter().take(4096) {
             acc += multiply_exact(77, c, cfg).0;
@@ -50,9 +54,19 @@ fn main() {
     println!("multiply_exact        : {:>10.1} us/4k-MACs", t_mul.median_us());
 
     // 5. full-layer quantize + cycle count (the Fig. 5 inner loop)
-    let t_full = bench(10, 300.0, || {
+    let t_full = bench(if quick { 1 } else { 10 }, ms(300.0), || {
         let q = quantize_to_int(&w, 64, 4);
         std::hint::black_box(cc.layer_cycles(&q.codes, 16.0));
     });
     println!("quantize+count 262k   : {:>10.1} us", t_full.median_us());
+
+    report.add("weight_cycles_direct_262k", 1, t_direct.mean_ns);
+    report.add("cyclecounter_lut_262k", 1, t_lut.mean_ns);
+    report.add("cyclecounter_lut_csd_262k", 1, t_csd.mean_ns);
+    report.add("multiply_exact_4k", 1, t_mul.mean_ns);
+    report.add("quantize_plus_count_262k", 1, t_full.mean_ns);
+    match report.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench report write failed: {e}"),
+    }
 }

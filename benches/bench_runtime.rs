@@ -1,46 +1,70 @@
 //! End-to-end runtime benchmarks on the native CPU backend: per-arch
 //! train-step and eval latency — the quantities that dominate every
-//! table's wall-clock (QAT loops, Alg. 1 lines 10/25).
+//! table's wall-clock (QAT loops, Alg. 1 lines 10/25) — measured at 1
+//! and N threads to report the parallel engine's speedup (results are
+//! bit-identical across thread counts; only the wall-clock changes).
 //!
-//! Run via `cargo bench --bench bench_runtime`. Needs nothing but the
-//! checkout; build with `--features pjrt` plus AOT artifacts to compare
-//! the PJRT path (see EXPERIMENTS.md §Perf).
+//! Run via `cargo bench --bench bench_runtime`; pass `-- --quick` for a
+//! single short iteration (the CI smoke mode). Emits
+//! `results/BENCH_runtime.json` (op, threads, ns/iter) so the perf
+//! trajectory is tracked across PRs.
 
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::BitAssignment;
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
-use sigmaquant::util::timer::bench;
+use sigmaquant::util::pool::Parallelism;
+use sigmaquant::util::timer::{bench, BenchReport};
 use std::time::Instant;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (iters, budget_ms) = if quick { (1, 1.0) } else { (5, 2000.0) };
     println!("# bench_runtime — native backend execution latency per architecture");
-    let be = NativeBackend::new();
-    let data = SynthDataset::new(be.dataset().clone(), 1);
-    let archs = ["alexnet_mini", "resnet18_mini", "inception_mini"];
+    let mut report = BenchReport::new("runtime");
+    let thread_counts = [1usize, 4];
+    let archs = ["alexnet_mini", "resnet18_mini", "resnet34_mini", "inception_mini"];
     for arch in archs {
-        let t0 = Instant::now();
-        let mut s = ModelSession::load(&be, arch, 1).expect("load");
-        let setup_s = t0.elapsed().as_secs_f64();
-        let l = s.num_qlayers();
-        let w8 = BitAssignment::uniform(l, 8);
-        let b = be.dataset().train_batch;
-        let (x, y) = data.train_batch(0, b);
-        let t_step = bench(5, 2000.0, || {
-            s.train_step(&x, &y, &w8, &w8, 0.02).expect("step");
-        });
-        let eval_n = be.dataset().eval_batch;
-        let (xs, ys) = data.eval_set(eval_n);
-        let t_eval = bench(3, 2000.0, || {
-            s.evaluate(&xs, &ys, &w8, &w8).expect("eval");
-        });
+        // ns/iter at each thread count, [train_step, eval]
+        let mut step_ns = Vec::new();
+        let mut eval_ns = Vec::new();
+        for &threads in &thread_counts {
+            let be = NativeBackend::with_parallelism(Parallelism::new(threads));
+            let data = SynthDataset::new(be.dataset().clone(), 1);
+            let t0 = Instant::now();
+            let mut s = ModelSession::load(&be, arch, 1).expect("load");
+            let setup_s = t0.elapsed().as_secs_f64();
+            let l = s.num_qlayers();
+            let w8 = BitAssignment::uniform(l, 8);
+            let b = be.dataset().train_batch;
+            let (x, y) = data.train_batch(0, b);
+            let t_step = bench(iters, budget_ms, || {
+                s.train_step(&x, &y, &w8, &w8, 0.02).expect("step");
+            });
+            let eval_n = be.dataset().eval_batch;
+            let (xs, ys) = data.eval_set(eval_n);
+            let t_eval = bench(iters.min(3), budget_ms, || {
+                s.evaluate(&xs, &ys, &w8, &w8).expect("eval");
+            });
+            println!(
+                "{:<16} threads {:>2} | setup {:>6.3}s | train_step/{} {:>8.1} ms | eval/{} {:>8.1} ms",
+                arch, threads, setup_s, b,
+                t_step.mean_ms(), eval_n, t_eval.mean_ms()
+            );
+            report.add(&format!("train_step/{arch}"), threads, t_step.mean_ns);
+            report.add(&format!("eval/{arch}"), threads, t_eval.mean_ns);
+            step_ns.push(t_step.mean_ns);
+            eval_ns.push(t_eval.mean_ns);
+        }
+        let nmax = thread_counts[thread_counts.len() - 1];
         println!(
-            "{:<16} setup {:>6.3}s | train_step/{} {:>8.1} ms | eval/{} {:>8.1} ms",
-            arch,
-            setup_s,
-            b,
-            t_step.mean_ms(),
-            eval_n,
-            t_eval.mean_ms()
+            "{:<16} speedup @{} threads: train_step {:.2}x | eval {:.2}x",
+            arch, nmax,
+            step_ns[0] / step_ns[step_ns.len() - 1],
+            eval_ns[0] / eval_ns[eval_ns.len() - 1]
         );
+    }
+    match report.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench report write failed: {e}"),
     }
 }

@@ -1,25 +1,31 @@
 //! End-to-end search benchmark: a complete (budget-reduced) two-phase
 //! SigmaQuant run on alexnet_mini — the Table II/III/IV inner loop —
-//! on the native CPU backend. Also times the individual phases so
-//! regressions localize.
+//! on the native CPU backend, at 1 and N threads. Beyond the speedup,
+//! the run cross-checks the determinism contract: the final bit
+//! assignment must be identical at every thread count.
+//!
+//! Pass `-- --quick` for the CI smoke mode (single short run). Emits
+//! `results/BENCH_search.json`.
 
 use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
 use sigmaquant::coordinator::zones::Targets;
-use sigmaquant::coordinator::{SearchConfig, SigmaQuant};
+use sigmaquant::coordinator::{SearchConfig, SearchOutcome, SigmaQuant};
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::int8_size_bytes;
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
+use sigmaquant::util::pool::Parallelism;
+use sigmaquant::util::timer::BenchReport;
 use std::time::Instant;
 
-fn main() {
-    println!("# bench_search — end-to-end two-phase search (alexnet_mini, native)");
-    let be = NativeBackend::new();
+fn run_search(threads: usize, quick: bool) -> (f64, f64, SearchOutcome) {
+    let be = NativeBackend::with_parallelism(Parallelism::new(threads));
     let data = SynthDataset::new(be.dataset().clone(), 1);
     let mut s = ModelSession::load(&be, "alexnet_mini", 1).expect("load");
     let mut cursor = TrainCursor::default();
+    let pretrain_steps = if quick { 8 } else { 60 };
     let t0 = Instant::now();
-    pretrain(&mut s, &data, &mut cursor, 0.05, 60, 0).expect("pretrain");
-    println!("pretrain 60 steps     : {:>8.2} s", t0.elapsed().as_secs_f64());
+    pretrain(&mut s, &data, &mut cursor, 0.05, pretrain_steps, 0).expect("pretrain");
+    let pre_s = t0.elapsed().as_secs_f64();
 
     let int8 = int8_size_bytes(&s.arch);
     let targets = Targets {
@@ -30,19 +36,59 @@ fn main() {
         abandon_factor: 8.0,
     };
     let mut cfg = SearchConfig::defaults(targets);
-    cfg.qat_steps_p1 = 8;
-    cfg.qat_steps_p2 = 4;
-    cfg.max_phase2_iters = 6;
-    cfg.eval_samples = 256;
+    cfg.qat_steps_p1 = if quick { 2 } else { 8 };
+    cfg.qat_steps_p2 = if quick { 1 } else { 4 };
+    cfg.max_phase2_iters = if quick { 2 } else { 6 };
+    cfg.eval_samples = if quick { 128 } else { 256 };
     let sq = SigmaQuant::new(cfg, &data);
     let t1 = Instant::now();
     let o = sq.run(&mut s, &data, &mut cursor).expect("search");
-    let total = t1.elapsed().as_secs_f64();
-    println!("two-phase search      : {:>8.2} s ({} trajectory points, met={})",
-             total, o.trajectory.len(), o.met);
-    println!("  phase1 rounds       : {}", o.phase1.rounds);
-    println!("  phase2 rounds       : {}", o.phase2_rounds);
-    println!("  final bits          : [{}]", o.wbits.summary());
-    println!("  per-round wall-clock: {:>8.2} s",
-             total / (o.phase1.rounds + o.phase2_rounds).max(1) as f64);
+    (pre_s, t1.elapsed().as_secs_f64(), o)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!("# bench_search — end-to-end two-phase search (alexnet_mini, native)");
+    let mut report = BenchReport::new("search");
+    let thread_counts = [1usize, 4];
+    let mut totals = Vec::new();
+    let mut outcomes: Vec<SearchOutcome> = Vec::new();
+    for &threads in &thread_counts {
+        let (pre_s, search_s, o) = run_search(threads, quick);
+        println!(
+            "threads {:>2} | pretrain {:>7.2} s | two-phase search {:>7.2} s \
+             ({} trajectory points, met={})",
+            threads, pre_s, search_s, o.trajectory.len(), o.met
+        );
+        println!("  phase1 rounds       : {}", o.phase1.rounds);
+        println!("  phase2 rounds       : {}", o.phase2_rounds);
+        println!("  final bits          : [{}]", o.wbits.summary());
+        report.add("pretrain", threads, pre_s * 1e9);
+        report.add("two_phase_search", threads, search_s * 1e9);
+        totals.push(search_s);
+        outcomes.push(o);
+    }
+    println!(
+        "search speedup @{} threads: {:.2}x",
+        thread_counts[thread_counts.len() - 1],
+        totals[0] / totals[totals.len() - 1]
+    );
+    // determinism cross-check: identical searches at every thread count
+    let first = &outcomes[0];
+    for (o, &threads) in outcomes.iter().zip(&thread_counts).skip(1) {
+        assert_eq!(
+            first.wbits.bits, o.wbits.bits,
+            "bit assignment diverged between 1 and {threads} threads"
+        );
+        assert_eq!(
+            first.accuracy.to_bits(),
+            o.accuracy.to_bits(),
+            "accuracy diverged between 1 and {threads} threads"
+        );
+    }
+    println!("determinism: outcomes bit-identical across {thread_counts:?} threads");
+    match report.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench report write failed: {e}"),
+    }
 }

@@ -6,19 +6,23 @@ use sigmaquant::coordinator::kmeans::adaptive_kmeans;
 use sigmaquant::quant::quantize_dequantize;
 use sigmaquant::stats::{kl_divergence, stddev, Histogram, LinearFit};
 use sigmaquant::util::rng::Rng;
-use sigmaquant::util::timer::bench;
+use sigmaquant::util::timer::{bench, BenchReport};
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut report = BenchReport::new("stats");
+    // CI smoke mode: single short iteration per op
+    let ms = |full: f64| if quick { 1.0 } else { full };
     println!("# bench_stats — coordinator bookkeeping hot paths");
     let mut rng = Rng::new(2);
     let w: Vec<f32> = (0..131_072).map(|_| rng.normal() as f32).collect();
 
-    let t_std = bench(30, 200.0, || {
+    let t_std = bench(if quick { 1 } else { 30 }, ms(200.0), || {
         std::hint::black_box(stddev(&w));
     });
     println!("stddev 128k           : {:>9.1} us", t_std.median_us());
 
-    let t_hist = bench(30, 200.0, || {
+    let t_hist = bench(if quick { 1 } else { 30 }, ms(200.0), || {
         std::hint::black_box(Histogram::symmetric(&w, 512));
     });
     println!("histogram 128k/512b   : {:>9.1} us", t_hist.median_us());
@@ -26,13 +30,13 @@ fn main() {
     let p = Histogram::symmetric(&w, 512);
     let dq = quantize_dequantize(&w, 64, 4);
     let q = Histogram::with_range(&dq, p.lo, p.hi, 512);
-    let t_kl = bench(100, 200.0, || {
+    let t_kl = bench(if quick { 1 } else { 100 }, ms(200.0), || {
         std::hint::black_box(kl_divergence(&p, &q));
     });
     println!("kl_divergence 512b    : {:>9.1} us", t_kl.median_us());
 
     // the full per-layer sensitivity block: quantize + 2 histograms + 2 KL
-    let t_sens = bench(10, 300.0, || {
+    let t_sens = bench(if quick { 1 } else { 10 }, ms(300.0), || {
         let dq4 = quantize_dequantize(&w, 64, 4);
         let h4 = Histogram::with_range(&dq4, p.lo, p.hi, 512);
         let dq8 = quantize_dequantize(&w, 64, 8);
@@ -42,15 +46,26 @@ fn main() {
     println!("layer sensitivity 128k: {:>9.1} us", t_sens.median_us());
 
     let feats: Vec<f64> = (0..160).map(|_| rng.uniform() * 0.1).collect();
-    let t_km = bench(50, 200.0, || {
+    let t_km = bench(if quick { 1 } else { 50 }, ms(200.0), || {
         std::hint::black_box(adaptive_kmeans(&feats, 4, 0.3, 42));
     });
     println!("adaptive_kmeans 160pts: {:>9.1} us", t_km.median_us());
 
     let xs: Vec<f64> = (0..64).map(|i| i as f64).collect();
     let ys: Vec<f64> = xs.iter().map(|x| 1.0 + 0.1 * x).collect();
-    let t_fit = bench(200, 100.0, || {
+    let t_fit = bench(if quick { 1 } else { 200 }, ms(100.0), || {
         std::hint::black_box(LinearFit::fit(&xs, &ys));
     });
     println!("linear fit 64pts      : {:>9.2} us", t_fit.median_us());
+
+    report.add("stddev_128k", 1, t_std.mean_ns);
+    report.add("histogram_128k_512b", 1, t_hist.mean_ns);
+    report.add("kl_divergence_512b", 1, t_kl.mean_ns);
+    report.add("layer_sensitivity_128k", 1, t_sens.mean_ns);
+    report.add("adaptive_kmeans_160", 1, t_km.mean_ns);
+    report.add("linear_fit_64", 1, t_fit.mean_ns);
+    match report.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench report write failed: {e}"),
+    }
 }

@@ -4,14 +4,21 @@
 //! conditions), where a fixed mixed-precision scheme would need three
 //! hand-tuned configurations. Native CPU backend; no artifacts needed.
 //!
+//! The three searches are independent, so they run **concurrently** on
+//! the deterministic worker pool: each device forks the shared float
+//! checkpoint (`ModelSession::fork_for_eval`) and searches on its own
+//! session. Results are bit-identical to running the profiles one after
+//! another (DESIGN.md §8).
+//!
 //!     cargo run --release --example edge_profiles
 
 use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
 use sigmaquant::coordinator::zones::Targets;
-use sigmaquant::coordinator::{SearchConfig, SigmaQuant};
+use sigmaquant::coordinator::{SearchConfig, SearchOutcome, SigmaQuant};
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::{int8_size_bytes, BitAssignment};
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
+use sigmaquant::util::pool::{Parallelism, Task};
 
 struct Device {
     name: &'static str,
@@ -28,7 +35,9 @@ fn main() -> anyhow::Result<()> {
         Device { name: "Mobile (accuracy-first)", size_frac: 0.70, acc_drop: 0.01 },
     ];
 
-    let backend = NativeBackend::new();
+    let par = Parallelism::available();
+    println!("worker pool: {} threads", par.threads());
+    let backend = NativeBackend::with_parallelism(par.clone());
     let data = SynthDataset::new(backend.dataset().clone(), 21);
     let arch = "resnet34_mini";
     println!("adapting {arch} to {} device profiles\n", devices.len());
@@ -42,25 +51,39 @@ fn main() -> anyhow::Result<()> {
     let (xs, ys) = data.eval_set(512);
     let float_acc = base.evaluate(&xs, &ys, &fb, &fb)?.accuracy;
     let int8 = int8_size_bytes(&base.arch);
-    let checkpoint: Vec<Vec<f32>> = base.params().to_vec();
     println!("shared float checkpoint: acc {:.2}%, INT8 size {:.1} KiB\n",
              float_acc * 100.0, int8 / 1024.0);
 
-    for dev in &devices {
-        // fresh session state from the shared checkpoint
-        base.set_params(checkpoint.clone())?;
-        let mut cur = cursor.clone();
-        let targets = Targets {
-            acc_target: float_acc - dev.acc_drop,
-            size_target: int8 * dev.size_frac,
-            acc_buffer: 0.02,
-            size_buffer: int8 * 0.05,
-            abandon_factor: 8.0,
-        };
-        let mut cfg = SearchConfig::defaults(targets);
-        cfg.eval_samples = 512;
-        let sq = SigmaQuant::new(cfg, &data);
-        let o = sq.run(&mut base, &data, &mut cur)?;
+    // one search per device profile, fanned out over the pool: each
+    // device gets a fork of the pre-trained session (created here, then
+    // moved onto its worker — sessions are Send, not Sync) and its own
+    // cursor clone
+    let mut forks = Vec::with_capacity(devices.len());
+    for _ in &devices {
+        forks.push(Some((base.fork_for_eval()?, cursor.clone())));
+    }
+    let mut results: Vec<Option<anyhow::Result<(Targets, SearchOutcome)>>> =
+        (0..devices.len()).map(|_| None).collect();
+    {
+        let data_ref = &data;
+        let tasks: Vec<Task<'_>> = results
+            .iter_mut()
+            .zip(forks.iter_mut())
+            .zip(devices.iter())
+            .map(|((slot, fork), dev)| {
+                Box::new(move || {
+                    let (session, cur) = fork.take().expect("fork prepared");
+                    *slot = Some(run_profile(
+                        session, data_ref, cur, dev, float_acc, int8,
+                    ));
+                }) as Task<'_>
+            })
+            .collect();
+        par.run(tasks);
+    }
+
+    for (dev, slot) in devices.iter().zip(results) {
+        let (targets, o) = slot.expect("profile ran")?;
         println!("== {} ==", dev.name);
         println!("  budget: {:.1} KiB ({:.0}% INT8), drop <= {:.0}pp",
                  targets.size_target / 1024.0, dev.size_frac * 100.0,
@@ -69,4 +92,26 @@ fn main() -> anyhow::Result<()> {
                  o.accuracy * 100.0, o.resource / 1024.0, o.met, o.wbits.summary());
     }
     Ok(())
+}
+
+fn run_profile(
+    mut session: ModelSession,
+    data: &SynthDataset,
+    mut cur: TrainCursor,
+    dev: &Device,
+    float_acc: f64,
+    int8: f64,
+) -> anyhow::Result<(Targets, SearchOutcome)> {
+    let targets = Targets {
+        acc_target: float_acc - dev.acc_drop,
+        size_target: int8 * dev.size_frac,
+        acc_buffer: 0.02,
+        size_buffer: int8 * 0.05,
+        abandon_factor: 8.0,
+    };
+    let mut cfg = SearchConfig::defaults(targets);
+    cfg.eval_samples = 512;
+    let sq = SigmaQuant::new(cfg, data);
+    let o = sq.run(&mut session, data, &mut cur)?;
+    Ok((targets, o))
 }

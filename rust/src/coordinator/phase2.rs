@@ -1,12 +1,23 @@
 //! Phase 2 — iterative KL-based refinement (Alg. 1 lines 21-31, Sec. IV-C).
 //!
-//! Each round adjusts `m` layers by one step of the valid bit-set (±2
-//! bits), chosen by the σ/KL sensitivity score: most-sensitive layers go
-//! up when accuracy is the unmet metric, least-sensitive layers go down
-//! when the resource budget is the unmet metric. A short QAT cycle
-//! re-stabilizes the model after every move; moves that break the
-//! already-satisfied metric (beyond its buffer) or fail to improve the
-//! unmet one are reverted (step 4, "Early Stopping / Reversion").
+//! Each round picks `m` candidate layers by the σ/KL sensitivity score:
+//! most-sensitive layers go up when accuracy is the unmet metric,
+//! least-sensitive layers go down when the resource budget is the unmet
+//! metric. Every candidate single-layer move is then evaluated
+//! **concurrently** on its own forked session (`fork_for_eval`: shared
+//! model structure, copied params + momentum, the same deterministic
+//! batch stream): a short QAT cycle re-stabilizes the candidate, then
+//! accuracy and resource are measured.
+//!
+//! Acceptance stays a *serial* decision: candidates are scanned in
+//! sensitivity order and the first one that improves the unmet metric
+//! without breaking the already-satisfied one (beyond its buffer) is
+//! adopted — its trained parameters become the session state. If none
+//! qualifies the round is a reverted move (step 4, "Early Stopping /
+//! Reversion") and the base session is untouched. Because candidates are
+//! always *all* evaluated and the scan order is fixed, the trajectory is
+//! bit-identical at every thread count (see
+//! `rust/tests/parallel_determinism.rs`).
 
 use super::phase1::Phase1Result;
 use super::qat::{run_qat, TrainCursor};
@@ -19,6 +30,7 @@ use super::zones::classify;
 use crate::data::SynthDataset;
 use crate::quant::BitAssignment;
 use crate::runtime::ModelSession;
+use crate::util::pool::Task;
 use anyhow::Result;
 
 /// Phase-2 summary.
@@ -31,6 +43,39 @@ pub struct Phase2Result {
     pub met: bool,
     pub rounds: usize,
     pub reverted_moves: usize,
+}
+
+/// One candidate single-layer move, evaluated on a forked session.
+struct Candidate {
+    qi: usize,
+    wbits: BitAssignment,
+    abits: BitAssignment,
+    session: ModelSession,
+    cursor: TrainCursor,
+    acc: f64,
+    res: f64,
+    err: Option<anyhow::Error>,
+}
+
+/// QAT + eval of one candidate (runs on a pool worker).
+fn eval_candidate(sq: &SigmaQuant, data: &SynthDataset, c: &mut Candidate) {
+    let r = run_qat(
+        &mut c.session,
+        data,
+        &mut c.cursor,
+        &c.wbits,
+        &c.abits,
+        sq.cfg.lr,
+        sq.cfg.qat_steps_p2,
+    )
+    .and_then(|_| sq.eval_acc(&c.session, &c.wbits, &c.abits));
+    match r {
+        Ok(acc) => {
+            c.acc = acc;
+            c.res = sq.resource(&c.session, &c.wbits, &c.abits);
+        }
+        Err(e) => c.err = Some(e),
+    }
 }
 
 pub fn run_phase2(
@@ -67,7 +112,7 @@ pub fn run_phase2(
         let weights = session.all_qlayer_weights();
         let sens = layer_sensitivities(&session.arch, &weights, &wbits, cfg.sigma_weight);
 
-        // -- step 2: pick layers and direction ---------------------------
+        // -- step 2: pick candidate layers and direction -----------------
         let acc_unmet = !t.acc_met(acc);
         let res_unmet = resource > t.size_target;
         // When both are unmet (possible inside buffers), fix accuracy
@@ -84,52 +129,103 @@ pub fn run_phase2(
             break; // no legal move remains in this direction
         }
 
-        // -- step 3: apply, calibrate (QAT), re-evaluate ------------------
-        let snapshot = session.snapshot();
-        let prev = (wbits.clone(), abits.clone(), acc, resource);
-        let mut moved = Vec::new();
+        // -- step 3: evaluate all candidate moves concurrently -----------
+        // Every candidate forks the session (params + momentum) and runs
+        // its own short QAT against the *same* batch window, so results
+        // are independent of evaluation order and thread count.
+        let mut cands: Vec<Candidate> = Vec::with_capacity(targets_idx.len());
         for &qi in &targets_idx {
-            if wbits.step(qi, dir) {
-                moved.push(qi);
+            let mut w = wbits.clone();
+            if !w.step(qi, dir) {
+                continue; // boundary layer (shouldn't happen: pre-filtered)
             }
+            let mut a = abits.clone();
             if cfg.objective == Objective::Bops {
-                abits.step(qi, dir);
+                a.step(qi, dir);
+            }
+            cands.push(Candidate {
+                qi,
+                wbits: w,
+                abits: a,
+                session: session.fork_for_eval()?,
+                cursor: cursor.clone(),
+                acc: 0.0,
+                res: 0.0,
+                err: None,
+            });
+        }
+        if cands.is_empty() {
+            break;
+        }
+        let par = session.parallelism().clone();
+        {
+            let tasks: Vec<Task<'_>> = cands
+                .iter_mut()
+                .map(|c| Box::new(move || eval_candidate(sq, data, c)) as Task<'_>)
+                .collect();
+            par.run(tasks);
+        }
+        for c in cands.iter_mut() {
+            if let Some(e) = c.err.take() {
+                return Err(e.context(format!(
+                    "phase-2 candidate move on layer {} failed", c.qi
+                )));
             }
         }
-        run_qat(session, data, cursor, &wbits, &abits, cfg.lr, cfg.qat_steps_p2)?;
-        let new_acc = sq.eval_acc(session, &wbits, &abits)?;
-        let new_res = sq.resource(session, &wbits, &abits);
+        // all candidates consumed the same qat_steps_p2 batch window
+        cursor.next_batch += cfg.qat_steps_p2 as u64;
 
-        // -- step 4: accept or revert ------------------------------------
-        let improved = if dir > 0 { new_acc > acc } else { new_res < resource };
-        let kept_other = if dir > 0 {
-            t.size_in_buffer(new_res) || new_res <= prev.3
-        } else {
-            t.acc_in_buffer(new_acc)
+        // -- step 4: serial accept-or-revert over the candidates ---------
+        let chosen = cands.iter().position(|c| {
+            let improved = if dir > 0 { c.acc > acc } else { c.res < resource };
+            let kept_other = if dir > 0 {
+                t.size_in_buffer(c.res) || c.res <= resource
+            } else {
+                t.acc_in_buffer(c.acc)
+            };
+            improved && kept_other
+        });
+        let (point_acc, point_res, moved) = match chosen {
+            Some(i) => {
+                let c = cands.swap_remove(i);
+                // adopt the candidate's trained params + momentum
+                let snap = c.session.snapshot();
+                session.restore(&snap);
+                wbits = c.wbits;
+                abits = c.abits;
+                acc = c.acc;
+                resource = c.res;
+                fails = 0;
+                (acc, resource, format!("[{}]", c.qi))
+            }
+            None => {
+                // base session was never touched: rejected moves only
+                // ever mutated their forks. Record the round's best
+                // attempt (by the unmet metric; deterministic — first
+                // wins ties) and list every candidate that was tried.
+                reverted += 1;
+                fails += 1;
+                let best = cands
+                    .iter()
+                    .reduce(|a, b| {
+                        let b_better =
+                            if dir > 0 { b.acc > a.acc } else { b.res < a.res };
+                        if b_better { b } else { a }
+                    })
+                    .expect("cands is non-empty");
+                let tried: Vec<usize> = cands.iter().map(|c| c.qi).collect();
+                (best.acc, best.res, format!("{tried:?}"))
+            }
         };
-        let accept = improved && kept_other;
-        if accept {
-            acc = new_acc;
-            resource = new_res;
-            fails = 0;
-        } else {
-            session.restore(&snapshot);
-            wbits = prev.0;
-            abits = prev.1;
-            acc = prev.2;
-            resource = prev.3;
-            reverted += 1;
-            fails += 1;
-        }
         traj.push(TrajPoint {
             phase: "phase2",
             iter: rounds,
-            accuracy: if accept { acc } else { new_acc },
-            size_bytes: if accept { resource } else { new_res },
+            accuracy: point_acc,
+            size_bytes: point_res,
             zone: classify(acc, resource, t),
             action: format!(
-                "{what} bits of layers {moved:?} ({})",
-                if accept { "accepted" } else { "reverted" }
+                "{what} bits of layers {moved} ({})",
+                if chosen.is_some() { "accepted" } else { "reverted" }
             ),
             bits_summary: wbits.summary(),
         });

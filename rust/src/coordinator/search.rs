@@ -34,7 +34,11 @@ pub struct SearchConfig {
     pub qat_steps_p1: usize,
     /// QAT steps after each Phase-2 move.
     pub qat_steps_p2: usize,
-    /// Layers adjusted per Phase-2 round (paper: m = 2).
+    /// Candidate layers evaluated per Phase-2 round (paper: m = 2).
+    /// Each round forks the session per candidate, evaluates the m
+    /// single-layer moves concurrently, and adopts the first candidate
+    /// (in sensitivity order) that passes the accept rule — at most one
+    /// move per round; see `coordinator::phase2`.
     pub layers_per_round: usize,
     /// σ-vs-KL mix in the sensitivity score (0 = pure KL).
     pub sigma_weight: f64,

@@ -7,6 +7,7 @@ use crate::coordinator::zones::Targets;
 use crate::data::SynthDataset;
 use crate::quant::{int8_size_bytes, BitAssignment};
 use crate::runtime::{load_params, save_params, Backend, ModelSession, NativeBackend};
+use crate::util::pool::{Parallelism, Task};
 use anyhow::Result;
 use std::path::PathBuf;
 
@@ -16,9 +17,19 @@ use std::path::PathBuf;
 /// the PJRT backend executes the AOT artifacts; in every other case the
 /// native CPU backend is used (it needs no artifacts at all). `force`
 /// overrides the auto-selection: `Some("native")` / `Some("pjrt")`.
-pub fn make_backend(artifacts_dir: &str, force: Option<&str>) -> Result<Box<dyn Backend>> {
+///
+/// `par` is the worker pool the native backend executes kernels on and
+/// experiment sweeps fan out over (`--threads` on the CLI; results are
+/// bit-identical at every thread count, DESIGN.md §8). The PJRT backend
+/// ignores it for kernels — XLA manages its own threads — but sessions
+/// still inherit it for coordinator-level fan-out.
+pub fn make_backend(
+    artifacts_dir: &str,
+    force: Option<&str>,
+    par: Parallelism,
+) -> Result<Box<dyn Backend>> {
     match force {
-        Some("native") => return Ok(Box::new(NativeBackend::new())),
+        Some("native") => return Ok(Box::new(NativeBackend::with_parallelism(par))),
         Some("pjrt") => {
             #[cfg(feature = "pjrt")]
             return Ok(Box::new(crate::runtime::Runtime::new(artifacts_dir)?));
@@ -36,7 +47,7 @@ pub fn make_backend(artifacts_dir: &str, force: Option<&str>) -> Result<Box<dyn 
         return Ok(Box::new(crate::runtime::Runtime::new(artifacts_dir)?));
     }
     let _ = artifacts_dir;
-    Ok(Box::new(NativeBackend::new()))
+    Ok(Box::new(NativeBackend::with_parallelism(par)))
 }
 
 /// Global experiment context.
@@ -52,9 +63,15 @@ pub struct Ctx {
 }
 
 impl Ctx {
-    /// Context with the auto-selected backend (see [`make_backend`]).
+    /// Context with the auto-selected backend (see [`make_backend`]),
+    /// executing serially. CLI entry points build the backend themselves
+    /// so `--threads` reaches [`make_backend`].
     pub fn new(artifacts_dir: &str, results_dir: &str, seed: u64) -> Result<Ctx> {
-        Self::with_backend(make_backend(artifacts_dir, None)?, results_dir, seed)
+        Self::with_backend(
+            make_backend(artifacts_dir, None, Parallelism::serial())?,
+            results_dir,
+            seed,
+        )
     }
 
     /// Context over an explicit backend.
@@ -80,6 +97,36 @@ impl Ctx {
             self.seed,
             self.pretrain_steps
         ))
+    }
+
+    /// Fan several independent architectures out across the worker pool:
+    /// each gets its own [`Ctx::pretrained_session`] (training and
+    /// caching the float checkpoint on first use), results in `archs`
+    /// order. Per-arch pre-training is deterministic and independent, so
+    /// the result is identical to the serial loop at any thread count.
+    pub fn pretrained_sessions(
+        &self,
+        archs: &[&str],
+    ) -> Result<Vec<(ModelSession, TrainCursor)>> {
+        let par = self.backend.parallelism();
+        let mut slots: Vec<Option<Result<(ModelSession, TrainCursor)>>> = Vec::new();
+        slots.resize_with(archs.len(), || None);
+        {
+            let tasks: Vec<Task<'_>> = slots
+                .iter_mut()
+                .zip(archs.iter())
+                .map(|(slot, &arch)| {
+                    Box::new(move || {
+                        *slot = Some(self.pretrained_session(arch));
+                    }) as Task<'_>
+                })
+                .collect();
+            par.run(tasks);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every arch task ran"))
+            .collect()
     }
 
     /// Load an architecture with float pre-trained parameters, training

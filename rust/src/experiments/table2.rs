@@ -39,8 +39,10 @@ pub fn run(ctx: &Ctx, archs: &[&str], eval_n: usize) -> Result<()> {
         &["arch", "int8_size", "int8_acc", "final_acc", "final_size",
           "p1_acc", "p1_size", "direction", "met"],
     );
-    for &arch in archs {
-        let (mut session, mut cursor) = ctx.pretrained_session(arch)?;
+    // fan the heavy, independent float pre-trainings out across the
+    // worker pool; the searches below then start from warm sessions
+    let sessions = ctx.pretrained_sessions(archs)?;
+    for (&arch, (mut session, mut cursor)) in archs.iter().zip(sessions) {
         let float_acc = ctx.float_accuracy(&session, eval_n)?;
         let targets = ctx.targets_from(&session, float_acc, 0.02, 0.40);
         let mut cfg = SearchConfig::defaults(targets);

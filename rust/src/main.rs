@@ -14,6 +14,7 @@ use sigmaquant::experiments::{ablation, fig3, fig4, fig5, table1,
                               table2, table3, table4, table5, table6};
 use sigmaquant::quant::int8_size_bytes;
 use sigmaquant::util::cli::Args;
+use sigmaquant::util::pool::Parallelism;
 
 const USAGE: &str = "\
 sigmaquant — hardware-aware heterogeneous quantization (paper reproduction)
@@ -44,6 +45,10 @@ COMMON OPTIONS
   --artifacts DIR (default artifacts)   --results DIR (default results)
   --seed N (default 7)                  --eval-n N (default 512)
   --qat-steps N (default 16)            --pretrain-steps N (default 300)
+  --threads N (default: all hardware threads; results are bit-identical
+            at every N — kernels, QAT and candidate moves fan out over
+            a fixed partition with ordered reductions, DESIGN.md §8)
+  --quiet   suppress progress logging on stderr
 ";
 
 fn main() {
@@ -63,7 +68,11 @@ fn split_archs<'a>(a: &'a Args, default: &'a str) -> Vec<&'a str> {
 }
 
 fn make_ctx(a: &Args) -> Result<Ctx> {
-    let backend = make_backend(a.get_or("artifacts", "artifacts"), a.get("backend"))?;
+    let par = match a.get("threads") {
+        Some(_) => Parallelism::new(a.get_usize("threads", 1)),
+        None => Parallelism::available(),
+    };
+    let backend = make_backend(a.get_or("artifacts", "artifacts"), a.get("backend"), par)?;
     let mut ctx = Ctx::with_backend(
         backend,
         a.get_or("results", "results"),
@@ -185,6 +194,7 @@ fn info(a: &Args) -> Result<()> {
     let ctx = make_ctx(a)?;
     let ds = ctx.backend.dataset();
     println!("backend: {}", ctx.backend.name());
+    println!("threads: {}", ctx.backend.parallelism().threads());
     println!("dataset: {}x{}x{} classes={} train_batch={} eval_batch={}",
              ds.height, ds.width, ds.channels, ds.classes,
              ds.train_batch, ds.eval_batch);

@@ -25,6 +25,7 @@
 
 use crate::manifest::{ArchSpec, DatasetSpec};
 use crate::quant::BitAssignment;
+use crate::util::pool::Parallelism;
 use anyhow::Result;
 
 /// One training step's scalars.
@@ -58,7 +59,13 @@ pub struct Snapshot {
 /// per architecture. Methods take `&self`: implementations use interior
 /// mutability for scratch buffers (the native backend's arena) or
 /// executable caches (PJRT).
-pub trait ModelExecutor {
+///
+/// `Send` is a supertrait so sessions can migrate onto pool workers —
+/// the coordinator evaluates Phase-2 candidate moves concurrently, each
+/// on its own forked session (see [`ModelExecutor::fork`] and
+/// DESIGN.md §8). Executors are *not* required to be `Sync`: one
+/// executor is only ever driven from one thread at a time.
+pub trait ModelExecutor: Send {
     /// Structure of the model this executor runs (manifest order).
     fn arch(&self) -> &ArchSpec;
 
@@ -94,6 +101,13 @@ pub trait ModelExecutor {
         wbits: &BitAssignment,
         abits: &BitAssignment,
     ) -> Result<(f32, f32)>;
+
+    /// Cheap clone of this compute engine over the same immutable model
+    /// structure (shared architecture graph / compiled executables, fresh
+    /// scratch state). The substrate of `ModelSession::fork_for_eval`:
+    /// forked executors run concurrently on pool workers while the
+    /// original keeps serving the main session.
+    fn fork(&self) -> Result<Box<dyn ModelExecutor>>;
 }
 
 impl<T: ModelExecutor + ?Sized> ModelExecutor for Box<T> {
@@ -128,13 +142,18 @@ impl<T: ModelExecutor + ?Sized> ModelExecutor for Box<T> {
     ) -> Result<(f32, f32)> {
         (**self).eval_batch(params, x, y, wbits, abits)
     }
+    fn fork(&self) -> Result<Box<dyn ModelExecutor>> {
+        (**self).fork()
+    }
 }
 
 /// A model source: architecture zoo + dataset geometry + executor factory.
 ///
 /// Object safe, so callers hold `Box<dyn Backend>` and select the
-/// implementation at runtime (`--backend` on the CLI).
-pub trait Backend {
+/// implementation at runtime (`--backend` on the CLI). `Send + Sync` are
+/// supertraits so experiment drivers can fan independent architectures
+/// out across the worker pool while sharing one backend.
+pub trait Backend: Send + Sync {
     /// Short backend identifier (`"native"`, `"pjrt"`); used in log lines
     /// and checkpoint file names so caches never cross backends.
     fn name(&self) -> &'static str;
@@ -150,4 +169,11 @@ pub trait Backend {
 
     /// Build (or compile) an executor for one architecture.
     fn executor(&self, arch_name: &str) -> Result<Box<dyn ModelExecutor>>;
+
+    /// The parallelism handle sessions created from this backend inherit
+    /// (worker-pool fan-out for Phase-2 candidate moves and experiment
+    /// sweeps). Defaults to the serial handle.
+    fn parallelism(&self) -> Parallelism {
+        Parallelism::serial()
+    }
 }

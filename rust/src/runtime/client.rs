@@ -17,10 +17,9 @@ use super::backend::{Backend, ModelExecutor, StepResult};
 use crate::manifest::{ArchSpec, DatasetSpec, Manifest};
 use crate::quant::BitAssignment;
 use anyhow::{bail, Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Owns the PJRT client, the manifest, and a compile cache.
@@ -29,7 +28,9 @@ pub struct Runtime {
     pub manifest: Manifest,
     /// (arch, entry) -> compiled executable; compilation of the deep
     /// ResNets takes seconds, so everything is compiled exactly once.
-    cache: RefCell<HashMap<(String, String), Rc<xla::PjRtLoadedExecutable>>>,
+    /// Mutex (not RefCell) so the backend satisfies the `Sync` contract
+    /// executors and experiment fan-out rely on.
+    cache: Mutex<HashMap<(String, String), Arc<xla::PjRtLoadedExecutable>>>,
     pub verbose: bool,
 }
 
@@ -38,7 +39,7 @@ impl Runtime {
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
         let manifest = Manifest::load(&artifacts_dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()), verbose: false })
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()), verbose: false })
     }
 
     /// Compile (or fetch from cache) one entry point of one architecture.
@@ -46,9 +47,9 @@ impl Runtime {
         &self,
         arch: &ArchSpec,
         entry: &str,
-    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         let key = (arch.name.clone(), entry.to_string());
-        if let Some(exe) = self.cache.borrow().get(&key) {
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
             return Ok(exe.clone());
         }
         let path = self.manifest.artifact_path(arch, entry)?;
@@ -70,8 +71,8 @@ impl Runtime {
                 t0.elapsed().as_secs_f64()
             );
         }
-        let rc = Rc::new(exe);
-        self.cache.borrow_mut().insert(key, rc.clone());
+        let rc = Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, rc.clone());
         Ok(rc)
     }
 }
@@ -113,9 +114,9 @@ impl Backend for Runtime {
 pub struct PjrtExecutor {
     arch: ArchSpec,
     dataset: DatasetSpec,
-    init_exe: Rc<xla::PjRtLoadedExecutable>,
-    train_exe: Rc<xla::PjRtLoadedExecutable>,
-    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+    init_exe: Arc<xla::PjRtLoadedExecutable>,
+    train_exe: Arc<xla::PjRtLoadedExecutable>,
+    eval_exe: Arc<xla::PjRtLoadedExecutable>,
 }
 
 impl ModelExecutor for PjrtExecutor {
@@ -221,6 +222,18 @@ impl ModelExecutor for PjrtExecutor {
         let out = self.eval_exe.execute::<xla::Literal>(&args)?;
         let tuple = out[0][0].to_literal_sync()?.to_tuple()?;
         Ok((scalar_f32(&tuple[0])?, scalar_f32(&tuple[1])?))
+    }
+
+    fn fork(&self) -> Result<Box<dyn ModelExecutor>> {
+        // compiled executables are shared (Arc); PJRT executables are
+        // themselves stateless across calls, so a fork is just a handle
+        Ok(Box::new(PjrtExecutor {
+            arch: self.arch.clone(),
+            dataset: self.dataset.clone(),
+            init_exe: self.init_exe.clone(),
+            train_exe: self.train_exe.clone(),
+            eval_exe: self.eval_exe.clone(),
+        }))
     }
 }
 

@@ -3,28 +3,60 @@
 //! updates — semantically the same entry points the AOT artifacts expose
 //! (`python/compile/model.py`), minus XLA.
 //!
-//! All intermediate tensors live in a reusable scratch-buffer arena
-//! behind a `RefCell`: buffers are grown once to the largest batch seen
-//! and then reused, so the Phase-2 snapshot → QAT → evaluate → restore
-//! loop performs no per-iteration activation allocation (the only
-//! steady-state allocations are two tiny per-channel temporaries inside
-//! the BN backward reduction).
+//! # Execution model (DESIGN.md §8)
+//!
+//! Each op is interpreted as a fork-join over a **fixed partition** of
+//! the batch rows (`util::pool::fixed_partition`, never a function of
+//! the thread count):
+//!
+//! * per-row ops (conv, dense, relu, pools) write disjoint output rows —
+//!   bit-identical under any schedule;
+//! * cross-row reductions (activation-quantizer range, BN statistics,
+//!   kernel/bias gradients) produce one partial per partition, merged
+//!   serially **in partition order**, so floating-point accumulation
+//!   order depends only on the partition.
+//!
+//! Same inputs ⇒ bit-identical outputs at every `--threads` value; the
+//! cross-thread-count determinism test in
+//! `rust/tests/parallel_determinism.rs` pins this.
+//!
+//! Ops whose estimated work is below `MIN_PARALLEL_WORK` execute
+//! their partition inline — the queue round-trips would cost more than
+//! the compute. Scheduling only: the partition is the same either way.
+//!
+//! All intermediate tensors live in a reusable scratch arena behind a
+//! `RefCell`: full-batch activation/gradient buffers that workers write
+//! disjoint row ranges of, plus per-partition gradient shards (the
+//! "per-worker arenas" — one shard per partition, reused across nodes
+//! and steps). Buffers are grown once to the largest batch seen, so the
+//! Phase-2 snapshot → QAT → evaluate → restore loop performs no
+//! per-iteration activation allocation; the steady-state allocations
+//! are the small per-channel BN reduction temporaries and the
+//! O(partitions) task boxes per parallel-dispatched node.
 
-use super::fakequant::{fake_quant_act, fake_quant_weight};
+use super::fakequant::{act_minmax, fake_quant_act_range, fake_quant_weight};
 use super::graph::{NativeArch, Node};
 use super::ops;
 use crate::manifest::{ArchSpec, DatasetSpec, ParamKind};
 use crate::quant::BitAssignment;
 use crate::runtime::backend::{ModelExecutor, StepResult};
+use crate::util::pool::{partition_rows, split_rows, Parallelism, Task, FIXED_PARTITIONS};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::cell::RefCell;
-use std::rc::Rc;
+use std::ops::Range;
+use std::sync::Arc;
 
 /// SGD momentum coefficient (mirrors `model.py::MOMENTUM`).
 const MOMENTUM: f32 = 0.9;
 /// Global-norm gradient clip (mirrors `model.py::GRAD_CLIP`).
 const GRAD_CLIP: f64 = 1.0;
+/// Ops whose estimated work (≈ multiply-accumulates or touched
+/// elements) falls below this run their partition inline: the queue
+/// round-trips would cost more than the compute. Scheduling only — the
+/// partition and merge order are the same either way, so results do not
+/// change (see `util::pool::Parallelism::run_gated`).
+const MIN_PARALLEL_WORK: usize = 16 * 1024;
 
 /// Reusable buffers; grown monotonically, never shrunk.
 struct Scratch {
@@ -45,14 +77,19 @@ struct Scratch {
     bn_inv: Vec<Vec<f32>>,
     /// Parameter gradients (manifest order).
     pgrads: Vec<Vec<f32>>,
+    /// Per-partition gradient shards: one `kernel+bias`-sized arena per
+    /// fixed partition. Workers accumulate into their partition's shard;
+    /// the interpreter merges shards into `pgrads` in partition order.
+    shards: Vec<Vec<f32>>,
 }
 
 /// Native CPU executor for one architecture.
 pub struct NativeExecutor {
-    arch: Rc<NativeArch>,
+    arch: Arc<NativeArch>,
     dataset: DatasetSpec,
     /// Conv geometry per node id (None for non-conv nodes).
     conv_dims: Vec<Option<ops::Conv2d>>,
+    par: Parallelism,
     scratch: RefCell<Scratch>,
 }
 
@@ -76,8 +113,47 @@ fn split_two(v: &mut [Vec<f32>], i: usize, j: usize) -> (&mut Vec<f32>, &mut Vec
     }
 }
 
+/// Per-tensor activation range, reduced over the fixed row partition
+/// (min/max merges are exact, so any grouping is bit-identical).
+/// `None` means float passthrough (`bits >= 31`).
+fn act_range(
+    par: &Parallelism,
+    parallel: bool,
+    chunks: &[Range<usize>],
+    x: &[f32],
+    stride: usize,
+    bits: u8,
+) -> Option<(f32, f32)> {
+    if bits >= 31 {
+        return None;
+    }
+    let parts = par.map_chunks_gated(parallel, chunks, |_, r| {
+        act_minmax(&x[r.start * stride..r.end * stride])
+    });
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for (l, h) in parts {
+        if l < lo {
+            lo = l;
+        }
+        if h > hi {
+            hi = h;
+        }
+    }
+    Some((lo, hi))
+}
+
+/// Quantize one partition of activation rows against the tensor-wide
+/// range (or pass floats through).
+fn quant_rows(x: &[f32], bits: u8, range: Option<(f32, f32)>, out: &mut [f32]) {
+    match range {
+        None => out.copy_from_slice(x),
+        Some((lo, hi)) => fake_quant_act_range(x, bits, lo, hi, out),
+    }
+}
+
 impl NativeExecutor {
-    pub fn new(arch: Rc<NativeArch>, dataset: DatasetSpec) -> NativeExecutor {
+    pub fn new(arch: Arc<NativeArch>, dataset: DatasetSpec, par: Parallelism) -> NativeExecutor {
         let n = arch.nodes.len();
         let mut conv_dims = vec![None; n];
         for (vid, node) in arch.nodes.iter().enumerate() {
@@ -85,6 +161,24 @@ impl NativeExecutor {
                 let (h, w, cin) = arch.shapes[*input].hwc();
                 let cout = arch.spec.qlayers[*q].out_channels;
                 conv_dims[vid] = Some(ops::Conv2d::new(h, w, cin, cout, *k, *stride, *same));
+            }
+        }
+        // one gradient shard per fixed partition, sized for the largest
+        // kernel+bias pair any single node accumulates into
+        let mut shard_len = 0usize;
+        for node in arch.nodes.iter() {
+            match node {
+                Node::Conv { kernel, bias, .. } => {
+                    let k = arch.spec.params[*kernel].size;
+                    let b = bias.map(|bp| arch.spec.params[bp].size).unwrap_or(0);
+                    shard_len = shard_len.max(k + b);
+                }
+                Node::Dense { kernel, bias, .. } => {
+                    let k = arch.spec.params[*kernel].size;
+                    let b = arch.spec.params[*bias].size;
+                    shard_len = shard_len.max(k + b);
+                }
+                _ => {}
             }
         }
         let scratch = Scratch {
@@ -113,8 +207,9 @@ impl NativeExecutor {
                 })
                 .collect(),
             pgrads: arch.spec.params.iter().map(|p| vec![0.0; p.size]).collect(),
+            shards: (0..FIXED_PARTITIONS).map(|_| vec![0.0; shard_len]).collect(),
         };
-        NativeExecutor { arch, dataset, conv_dims, scratch: RefCell::new(scratch) }
+        NativeExecutor { arch, dataset, conv_dims, par, scratch: RefCell::new(scratch) }
     }
 
     /// Grow activation/gradient buffers to hold `batch` samples.
@@ -142,6 +237,7 @@ impl NativeExecutor {
 
     /// Interpret the graph forward. Activations land in `scr.acts`;
     /// conv/dense quantized inputs/weights are retained for backward.
+    /// Each op fans out over the fixed batch-row partition.
     fn forward(
         &self,
         scr: &mut Scratch,
@@ -152,79 +248,158 @@ impl NativeExecutor {
         abits: &BitAssignment,
     ) {
         let shapes = &self.arch.shapes;
-        scr.acts[0][..x.len()].copy_from_slice(x);
+        let par = &self.par;
+        let chunks = partition_rows(batch);
+        let Scratch { acts, qact, qw, qscales, bn_mean, bn_inv, .. } = scr;
+        acts[0][..x.len()].copy_from_slice(x);
         for vid in 1..self.arch.nodes.len() {
             match &self.arch.nodes[vid] {
                 Node::Input => unreachable!("input is always node 0"),
                 Node::Conv { input, kernel, bias, q, .. } => {
                     let cv = self.conv_dims[vid].expect("conv dims precomputed");
-                    let in_n = batch * shapes[*input].numel();
-                    fake_quant_act(
-                        &scr.acts[*input][..in_n],
-                        abits.bits[*q],
-                        &mut scr.qact[vid][..in_n],
-                    );
+                    let in_st = shapes[*input].numel();
+                    let out_st = shapes[vid].numel();
+                    let (alo, ahi) = acts.split_at_mut(vid);
+                    let xin: &[f32] = &alo[*input][..batch * in_st];
                     fake_quant_weight(
                         &params[*kernel],
                         cv.cout,
                         wbits.bits[*q],
-                        &mut scr.qscales[*q],
-                        &mut scr.qw[*q],
+                        &mut qscales[*q],
+                        &mut qw[*q],
                     );
-                    cv.forward(batch, &scr.qact[vid][..in_n], &scr.qw[*q], &mut scr.acts[vid]);
-                    if let Some(bp) = bias {
-                        ops::bias_forward(batch * cv.oh * cv.ow, cv.cout, &params[*bp], &mut scr.acts[vid]);
+                    let work = batch * out_st * cv.k * cv.k * cv.cin;
+                    let ab = abits.bits[*q];
+                    let range =
+                        act_range(par, batch * in_st >= MIN_PARALLEL_WORK, &chunks, xin, in_st, ab);
+                    let qw_ref: &[f32] = &qw[*q];
+                    let bias_ref: Option<&[f32]> = bias.map(|bp| params[bp].as_slice());
+                    let qa_chunks = split_rows(&mut qact[vid], &chunks, in_st);
+                    let out_chunks = split_rows(&mut ahi[0], &chunks, out_st);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                    for ((qa, oc), r) in
+                        qa_chunks.into_iter().zip(out_chunks).zip(chunks.iter().cloned())
+                    {
+                        tasks.push(Box::new(move || {
+                            let rows = r.end - r.start;
+                            quant_rows(&xin[r.start * in_st..r.end * in_st], ab, range, qa);
+                            cv.forward(rows, qa, qw_ref, oc);
+                            if let Some(b) = bias_ref {
+                                ops::bias_forward(rows * cv.oh * cv.ow, cv.cout, b, oc);
+                            }
+                        }));
                     }
+                    par.run_gated(work >= MIN_PARALLEL_WORK, tasks);
                 }
                 Node::Dense { input, kernel, bias, q } => {
                     let cin = shapes[*input].numel();
                     let cout = shapes[vid].numel();
-                    let in_n = batch * cin;
-                    fake_quant_act(
-                        &scr.acts[*input][..in_n],
-                        abits.bits[*q],
-                        &mut scr.qact[vid][..in_n],
-                    );
+                    let (alo, ahi) = acts.split_at_mut(vid);
+                    let xin: &[f32] = &alo[*input][..batch * cin];
                     fake_quant_weight(
                         &params[*kernel],
                         cout,
                         wbits.bits[*q],
-                        &mut scr.qscales[*q],
-                        &mut scr.qw[*q],
+                        &mut qscales[*q],
+                        &mut qw[*q],
                     );
-                    ops::dense_forward(
-                        batch,
-                        cin,
-                        cout,
-                        &scr.qact[vid][..in_n],
-                        &scr.qw[*q],
-                        &params[*bias],
-                        &mut scr.acts[vid],
-                    );
+                    let work = batch * cin * cout;
+                    let ab = abits.bits[*q];
+                    let range =
+                        act_range(par, batch * cin >= MIN_PARALLEL_WORK, &chunks, xin, cin, ab);
+                    let qw_ref: &[f32] = &qw[*q];
+                    let bias_ref: &[f32] = &params[*bias];
+                    let qa_chunks = split_rows(&mut qact[vid], &chunks, cin);
+                    let out_chunks = split_rows(&mut ahi[0], &chunks, cout);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                    for ((qa, oc), r) in
+                        qa_chunks.into_iter().zip(out_chunks).zip(chunks.iter().cloned())
+                    {
+                        tasks.push(Box::new(move || {
+                            let rows = r.end - r.start;
+                            quant_rows(&xin[r.start * cin..r.end * cin], ab, range, qa);
+                            ops::dense_forward(rows, cin, cout, qa, qw_ref, bias_ref, oc);
+                        }));
+                    }
+                    par.run_gated(work >= MIN_PARALLEL_WORK, tasks);
                 }
                 Node::Bn { input, scale, bias } => {
                     let c = shapes[vid].channels();
-                    let rows = batch * shapes[vid].numel() / c;
-                    let (xin, out) = io(&mut scr.acts, *input, vid, rows * c);
-                    ops::bn_forward(
-                        rows,
-                        c,
-                        xin,
-                        &params[*scale],
-                        &params[*bias],
-                        out,
-                        &mut scr.bn_mean[vid],
-                        &mut scr.bn_inv[vid],
-                    );
+                    let rows_total = batch * shapes[vid].numel() / c;
+                    let m = rows_total as f64;
+                    let row_chunks = partition_rows(rows_total);
+                    let par_ok = rows_total * c >= MIN_PARALLEL_WORK;
+                    let (alo, ahi) = acts.split_at_mut(vid);
+                    let xin: &[f32] = &alo[*input][..rows_total * c];
+                    // stage A: per-partition Σx, merged in partition order
+                    let sums = par.map_chunks_gated(par_ok, &row_chunks, |_, r| {
+                        ops::bn_sum_partial(r.end - r.start, c, &xin[r.start * c..r.end * c])
+                    });
+                    let mut mu = vec![0.0f64; c];
+                    for s in &sums {
+                        for (acc, &v) in mu.iter_mut().zip(s) {
+                            *acc += v;
+                        }
+                    }
+                    for v in mu.iter_mut() {
+                        *v /= m;
+                    }
+                    // stage B: per-partition Σ(x-μ)², merged in order
+                    let vars = par.map_chunks_gated(par_ok, &row_chunks, |_, r| {
+                        ops::bn_var_partial(r.end - r.start, c, &xin[r.start * c..r.end * c], &mu)
+                    });
+                    let mut var = vec![0.0f64; c];
+                    for s in &vars {
+                        for (acc, &v) in var.iter_mut().zip(s) {
+                            *acc += v;
+                        }
+                    }
+                    let mean = &mut bn_mean[vid];
+                    let inv = &mut bn_inv[vid];
+                    for ch in 0..c {
+                        mean[ch] = mu[ch] as f32;
+                        inv[ch] = (1.0 / (var[ch] / m + ops::BN_EPS).sqrt()) as f32;
+                    }
+                    // stage C: normalize disjoint row partitions
+                    let mean_ref: &[f32] = mean;
+                    let inv_ref: &[f32] = inv;
+                    let scale_ref: &[f32] = &params[*scale];
+                    let bias_ref: &[f32] = &params[*bias];
+                    let out_chunks = split_rows(&mut ahi[0], &row_chunks, c);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(row_chunks.len());
+                    for (oc, r) in out_chunks.into_iter().zip(row_chunks.iter().cloned()) {
+                        tasks.push(Box::new(move || {
+                            ops::bn_normalize(
+                                r.end - r.start,
+                                c,
+                                &xin[r.start * c..r.end * c],
+                                scale_ref,
+                                bias_ref,
+                                mean_ref,
+                                inv_ref,
+                                oc,
+                            );
+                        }));
+                    }
+                    par.run_gated(par_ok, tasks);
                 }
                 Node::Relu { input } => {
-                    let n = batch * shapes[vid].numel();
-                    let (xin, out) = io(&mut scr.acts, *input, vid, n);
-                    ops::relu_forward(n, xin, out);
+                    let stride = shapes[vid].numel();
+                    let (alo, ahi) = acts.split_at_mut(vid);
+                    let xin: &[f32] = &alo[*input][..batch * stride];
+                    let out_chunks = split_rows(&mut ahi[0], &chunks, stride);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                    for (oc, r) in out_chunks.into_iter().zip(chunks.iter().cloned()) {
+                        tasks.push(Box::new(move || {
+                            let n = (r.end - r.start) * stride;
+                            ops::relu_forward(n, &xin[r.start * stride..r.end * stride], oc);
+                        }));
+                    }
+                    par.run_gated(batch * stride >= MIN_PARALLEL_WORK, tasks);
                 }
                 Node::Add { a, b } => {
                     let n = batch * shapes[vid].numel();
-                    let (lo, hi) = scr.acts.split_at_mut(vid);
+                    let (lo, hi) = acts.split_at_mut(vid);
                     let (av, bv, out) = (&lo[*a][..n], &lo[*b][..n], &mut hi[0]);
                     for i in 0..n {
                         out[i] = av[i] + bv[i];
@@ -232,7 +407,7 @@ impl NativeExecutor {
                 }
                 Node::Concat { ins } => {
                     let (h, w, c) = shapes[vid].hwc();
-                    let (lo, hi) = scr.acts.split_at_mut(vid);
+                    let (lo, hi) = acts.split_at_mut(vid);
                     let out = &mut hi[0];
                     for pos in 0..batch * h * w {
                         let mut off = 0;
@@ -246,23 +421,61 @@ impl NativeExecutor {
                 }
                 Node::MaxPool { input, window, stride } => {
                     let (h, w, c) = shapes[*input].hwc();
-                    let (xin, out) = io(&mut scr.acts, *input, vid, batch * h * w * c);
-                    ops::maxpool_forward(batch, h, w, c, *window, *stride, xin, out);
+                    let in_st = h * w * c;
+                    let out_st = shapes[vid].numel();
+                    let (window, stride) = (*window, *stride);
+                    let (alo, ahi) = acts.split_at_mut(vid);
+                    let xin: &[f32] = &alo[*input][..batch * in_st];
+                    let out_chunks = split_rows(&mut ahi[0], &chunks, out_st);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                    for (oc, r) in out_chunks.into_iter().zip(chunks.iter().cloned()) {
+                        tasks.push(Box::new(move || {
+                            ops::maxpool_forward(
+                                r.end - r.start,
+                                h,
+                                w,
+                                c,
+                                window,
+                                stride,
+                                &xin[r.start * in_st..r.end * in_st],
+                                oc,
+                            );
+                        }));
+                    }
+                    par.run_gated(batch * out_st * window * window >= MIN_PARALLEL_WORK, tasks);
                 }
                 Node::AvgPoolSame { input, window } => {
                     let (h, w, c) = shapes[*input].hwc();
-                    let (xin, out) = io(&mut scr.acts, *input, vid, batch * h * w * c);
-                    ops::avgpool_same_forward(batch, h, w, c, *window, xin, out);
+                    let in_st = h * w * c;
+                    let window = *window;
+                    let (alo, ahi) = acts.split_at_mut(vid);
+                    let xin: &[f32] = &alo[*input][..batch * in_st];
+                    let out_chunks = split_rows(&mut ahi[0], &chunks, in_st);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                    for (oc, r) in out_chunks.into_iter().zip(chunks.iter().cloned()) {
+                        tasks.push(Box::new(move || {
+                            ops::avgpool_same_forward(
+                                r.end - r.start,
+                                h,
+                                w,
+                                c,
+                                window,
+                                &xin[r.start * in_st..r.end * in_st],
+                                oc,
+                            );
+                        }));
+                    }
+                    par.run_gated(batch * in_st * window * window >= MIN_PARALLEL_WORK, tasks);
                 }
                 Node::Gap { input } => {
                     let (h, w, c) = shapes[*input].hwc();
-                    let (xin, out) = io(&mut scr.acts, *input, vid, batch * h * w * c);
+                    let (xin, out) = io(acts, *input, vid, batch * h * w * c);
                     ops::gap_forward(batch, h, w, c, xin, out);
                 }
                 Node::Flatten { input } => {
                     // NHWC row-major: flatten is a layout no-op
                     let n = batch * shapes[vid].numel();
-                    let (xin, out) = io(&mut scr.acts, *input, vid, n);
+                    let (xin, out) = io(acts, *input, vid, n);
                     out[..n].copy_from_slice(xin);
                 }
             }
@@ -272,81 +485,244 @@ impl NativeExecutor {
     /// Reverse-walk the graph, accumulating activation gradients in
     /// `scr.grads` and parameter gradients in `scr.pgrads`. Expects
     /// `d loss/d logits` already in `scr.grads[out_id]` and every other
-    /// gradient buffer zeroed.
+    /// gradient buffer zeroed. Input gradients are row-disjoint across
+    /// partitions; kernel/bias gradients accumulate into per-partition
+    /// shards merged in partition order.
     fn backward(&self, scr: &mut Scratch, params: &[Vec<f32>], batch: usize) {
         let shapes = &self.arch.shapes;
+        let par = &self.par;
+        let chunks = partition_rows(batch);
+        let Scratch { acts, grads, qact, qw, bn_mean, bn_inv, pgrads, shards, .. } = scr;
         for vid in (1..self.arch.nodes.len()).rev() {
             match &self.arch.nodes[vid] {
                 Node::Input => unreachable!("input is always node 0"),
                 Node::Conv { input, kernel, bias, q, .. } => {
                     let cv = self.conv_dims[vid].expect("conv dims precomputed");
-                    let in_n = batch * shapes[*input].numel();
-                    let out_n = batch * shapes[vid].numel();
-                    let (glo, ghi) = scr.grads.split_at_mut(vid);
-                    let g = &ghi[0][..out_n];
+                    let in_st = shapes[*input].numel();
+                    let out_st = shapes[vid].numel();
+                    let (glo, ghi) = grads.split_at_mut(vid);
+                    let g: &[f32] = &ghi[0][..batch * out_st];
+                    let qa: &[f32] = &qact[vid][..batch * in_st];
+                    let klen = params[*kernel].len();
+                    let blen = bias.map(|bp| params[bp].len()).unwrap_or(0);
+                    let work = batch * out_st * cv.k * cv.k * cv.cin;
+                    let par_ok = work >= MIN_PARALLEL_WORK;
+                    let nsh = chunks.len();
+                    for s in shards[..nsh].iter_mut() {
+                        s[..klen + blen].fill(0.0);
+                    }
+                    let shard_slices: Vec<&mut [f32]> =
+                        shards[..nsh].iter_mut().map(|s| &mut s[..klen + blen]).collect();
                     // STE: d/d(input) flows through the act quantizer as
                     // identity; d/d(kernel) through the weight quantizer.
                     // The image (node 0) has no consumer for its gradient,
                     // so stem convs skip the dx accumulation entirely.
                     if *input == 0 {
-                        cv.backward_weights(batch, &scr.qact[vid][..in_n], g, &mut scr.pgrads[*kernel]);
+                        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(nsh);
+                        for (sh, r) in shard_slices.into_iter().zip(chunks.iter().cloned()) {
+                            tasks.push(Box::new(move || {
+                                let rows = r.end - r.start;
+                                let (dk, db) = sh.split_at_mut(klen);
+                                cv.backward_weights(
+                                    rows,
+                                    &qa[r.start * in_st..r.end * in_st],
+                                    &g[r.start * out_st..r.end * out_st],
+                                    dk,
+                                );
+                                if !db.is_empty() {
+                                    ops::bias_backward(
+                                        rows * cv.oh * cv.ow,
+                                        cv.cout,
+                                        &g[r.start * out_st..r.end * out_st],
+                                        db,
+                                    );
+                                }
+                            }));
+                        }
+                        par.run_gated(par_ok, tasks);
                     } else {
-                        cv.backward(
-                            batch,
-                            &scr.qact[vid][..in_n],
-                            &scr.qw[*q],
-                            g,
-                            &mut glo[*input],
-                            &mut scr.pgrads[*kernel],
-                        );
+                        let qw_ref: &[f32] = &qw[*q];
+                        let dx_chunks = split_rows(&mut glo[*input], &chunks, in_st);
+                        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(nsh);
+                        for ((sh, dxc), r) in
+                            shard_slices.into_iter().zip(dx_chunks).zip(chunks.iter().cloned())
+                        {
+                            tasks.push(Box::new(move || {
+                                let rows = r.end - r.start;
+                                let (dk, db) = sh.split_at_mut(klen);
+                                cv.backward(
+                                    rows,
+                                    &qa[r.start * in_st..r.end * in_st],
+                                    qw_ref,
+                                    &g[r.start * out_st..r.end * out_st],
+                                    dxc,
+                                    dk,
+                                );
+                                if !db.is_empty() {
+                                    ops::bias_backward(
+                                        rows * cv.oh * cv.ow,
+                                        cv.cout,
+                                        &g[r.start * out_st..r.end * out_st],
+                                        db,
+                                    );
+                                }
+                            }));
+                        }
+                        par.run_gated(par_ok, tasks);
+                    }
+                    // merge the per-partition shards in partition order
+                    let dk_main = &mut pgrads[*kernel];
+                    for s in shards[..nsh].iter() {
+                        for (d, &v) in dk_main.iter_mut().zip(&s[..klen]) {
+                            *d += v;
+                        }
                     }
                     if let Some(bp) = bias {
-                        ops::bias_backward(batch * cv.oh * cv.ow, cv.cout, g, &mut scr.pgrads[*bp]);
+                        let db_main = &mut pgrads[*bp];
+                        for s in shards[..nsh].iter() {
+                            for (d, &v) in db_main.iter_mut().zip(&s[klen..klen + blen]) {
+                                *d += v;
+                            }
+                        }
                     }
                 }
                 Node::Dense { input, kernel, bias, q } => {
                     let cin = shapes[*input].numel();
                     let cout = shapes[vid].numel();
-                    let (glo, ghi) = scr.grads.split_at_mut(vid);
-                    let (dk, db) = split_two(&mut scr.pgrads, *kernel, *bias);
-                    ops::dense_backward(
-                        batch,
-                        cin,
-                        cout,
-                        &scr.qact[vid][..batch * cin],
-                        &scr.qw[*q],
-                        &ghi[0][..batch * cout],
-                        &mut glo[*input],
-                        dk,
-                        db,
-                    );
+                    let (glo, ghi) = grads.split_at_mut(vid);
+                    let g: &[f32] = &ghi[0][..batch * cout];
+                    let qa: &[f32] = &qact[vid][..batch * cin];
+                    let qw_ref: &[f32] = &qw[*q];
+                    let klen = params[*kernel].len();
+                    let blen = params[*bias].len();
+                    let nsh = chunks.len();
+                    for s in shards[..nsh].iter_mut() {
+                        s[..klen + blen].fill(0.0);
+                    }
+                    let shard_slices: Vec<&mut [f32]> =
+                        shards[..nsh].iter_mut().map(|s| &mut s[..klen + blen]).collect();
+                    let da_chunks = split_rows(&mut glo[*input], &chunks, cin);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(nsh);
+                    for ((sh, dac), r) in
+                        shard_slices.into_iter().zip(da_chunks).zip(chunks.iter().cloned())
+                    {
+                        tasks.push(Box::new(move || {
+                            let rows = r.end - r.start;
+                            let (dk, db) = sh.split_at_mut(klen);
+                            ops::dense_backward(
+                                rows,
+                                cin,
+                                cout,
+                                &qa[r.start * cin..r.end * cin],
+                                qw_ref,
+                                &g[r.start * cout..r.end * cout],
+                                dac,
+                                dk,
+                                db,
+                            );
+                        }));
+                    }
+                    par.run_gated(batch * cin * cout >= MIN_PARALLEL_WORK, tasks);
+                    let dk_main = &mut pgrads[*kernel];
+                    for s in shards[..nsh].iter() {
+                        for (d, &v) in dk_main.iter_mut().zip(&s[..klen]) {
+                            *d += v;
+                        }
+                    }
+                    let db_main = &mut pgrads[*bias];
+                    for s in shards[..nsh].iter() {
+                        for (d, &v) in db_main.iter_mut().zip(&s[klen..klen + blen]) {
+                            *d += v;
+                        }
+                    }
                 }
                 Node::Bn { input, scale, bias } => {
                     let c = shapes[vid].channels();
-                    let rows = batch * shapes[vid].numel() / c;
-                    let (glo, ghi) = scr.grads.split_at_mut(vid);
-                    let (dscale, dbias) = split_two(&mut scr.pgrads, *scale, *bias);
-                    ops::bn_backward(
-                        rows,
-                        c,
-                        &scr.acts[*input][..rows * c],
-                        &params[*scale],
-                        &scr.bn_mean[vid],
-                        &scr.bn_inv[vid],
-                        &ghi[0][..rows * c],
-                        &mut glo[*input],
-                        dscale,
-                        dbias,
-                    );
+                    let rows_total = batch * shapes[vid].numel() / c;
+                    let m = rows_total as f64;
+                    let row_chunks = partition_rows(rows_total);
+                    let par_ok = rows_total * c >= MIN_PARALLEL_WORK;
+                    let (glo, ghi) = grads.split_at_mut(vid);
+                    let g: &[f32] = &ghi[0][..rows_total * c];
+                    let xin: &[f32] = &acts[*input][..rows_total * c];
+                    let mean_ref: &[f32] = &bn_mean[vid];
+                    let inv_ref: &[f32] = &bn_inv[vid];
+                    // stage A: per-partition (Σdy, Σ dy·x̂), merged in order
+                    let parts = par.map_chunks_gated(par_ok, &row_chunks, |_, r| {
+                        ops::bn_backward_sums(
+                            r.end - r.start,
+                            c,
+                            &xin[r.start * c..r.end * c],
+                            mean_ref,
+                            inv_ref,
+                            &g[r.start * c..r.end * c],
+                        )
+                    });
+                    let mut sum_dy = vec![0.0f64; c];
+                    let mut sum_dy_xhat = vec![0.0f64; c];
+                    for (a, b) in &parts {
+                        for (acc, &v) in sum_dy.iter_mut().zip(a) {
+                            *acc += v;
+                        }
+                        for (acc, &v) in sum_dy_xhat.iter_mut().zip(b) {
+                            *acc += v;
+                        }
+                    }
+                    {
+                        let (dscale, dbias) = split_two(pgrads, *scale, *bias);
+                        for ch in 0..c {
+                            dbias[ch] += sum_dy[ch] as f32;
+                            dscale[ch] += sum_dy_xhat[ch] as f32;
+                        }
+                    }
+                    // stage B: disjoint dx row partitions
+                    let scale_ref: &[f32] = &params[*scale];
+                    let sum_dy_ref: &[f64] = &sum_dy;
+                    let sum_dy_xhat_ref: &[f64] = &sum_dy_xhat;
+                    let dx_chunks = split_rows(&mut glo[*input], &row_chunks, c);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(row_chunks.len());
+                    for (dxc, r) in dx_chunks.into_iter().zip(row_chunks.iter().cloned()) {
+                        tasks.push(Box::new(move || {
+                            ops::bn_backward_dx(
+                                r.end - r.start,
+                                c,
+                                m,
+                                &xin[r.start * c..r.end * c],
+                                scale_ref,
+                                mean_ref,
+                                inv_ref,
+                                &g[r.start * c..r.end * c],
+                                sum_dy_ref,
+                                sum_dy_xhat_ref,
+                                dxc,
+                            );
+                        }));
+                    }
+                    par.run_gated(par_ok, tasks);
                 }
                 Node::Relu { input } => {
-                    let n = batch * shapes[vid].numel();
-                    let (glo, ghi) = scr.grads.split_at_mut(vid);
-                    ops::relu_backward(n, &scr.acts[vid][..n], &ghi[0][..n], &mut glo[*input]);
+                    let stride = shapes[vid].numel();
+                    let (glo, ghi) = grads.split_at_mut(vid);
+                    let g: &[f32] = &ghi[0][..batch * stride];
+                    let y: &[f32] = &acts[vid][..batch * stride];
+                    let dx_chunks = split_rows(&mut glo[*input], &chunks, stride);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                    for (dxc, r) in dx_chunks.into_iter().zip(chunks.iter().cloned()) {
+                        tasks.push(Box::new(move || {
+                            let n = (r.end - r.start) * stride;
+                            ops::relu_backward(
+                                n,
+                                &y[r.start * stride..r.end * stride],
+                                &g[r.start * stride..r.end * stride],
+                                dxc,
+                            );
+                        }));
+                    }
+                    par.run_gated(batch * stride >= MIN_PARALLEL_WORK, tasks);
                 }
                 Node::Add { a, b } => {
                     let n = batch * shapes[vid].numel();
-                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    let (glo, ghi) = grads.split_at_mut(vid);
                     let g = &ghi[0][..n];
                     for (d, &gv) in glo[*a][..n].iter_mut().zip(g) {
                         *d += gv;
@@ -357,7 +733,7 @@ impl NativeExecutor {
                 }
                 Node::Concat { ins } => {
                     let (h, w, c) = shapes[vid].hwc();
-                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    let (glo, ghi) = grads.split_at_mut(vid);
                     let g = &ghi[0];
                     for pos in 0..batch * h * w {
                         let mut off = 0;
@@ -375,42 +751,64 @@ impl NativeExecutor {
                 }
                 Node::MaxPool { input, window, stride } => {
                     let (h, w, c) = shapes[*input].hwc();
-                    let out_n = batch * shapes[vid].numel();
-                    let (glo, ghi) = scr.grads.split_at_mut(vid);
-                    ops::maxpool_backward(
-                        batch,
-                        h,
-                        w,
-                        c,
-                        *window,
-                        *stride,
-                        &scr.acts[*input][..batch * h * w * c],
-                        &scr.acts[vid][..out_n],
-                        &ghi[0][..out_n],
-                        &mut glo[*input],
-                    );
+                    let in_st = h * w * c;
+                    let out_st = shapes[vid].numel();
+                    let (window, stride) = (*window, *stride);
+                    let (glo, ghi) = grads.split_at_mut(vid);
+                    let g: &[f32] = &ghi[0][..batch * out_st];
+                    let xin: &[f32] = &acts[*input][..batch * in_st];
+                    let y: &[f32] = &acts[vid][..batch * out_st];
+                    let dx_chunks = split_rows(&mut glo[*input], &chunks, in_st);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                    for (dxc, r) in dx_chunks.into_iter().zip(chunks.iter().cloned()) {
+                        tasks.push(Box::new(move || {
+                            ops::maxpool_backward(
+                                r.end - r.start,
+                                h,
+                                w,
+                                c,
+                                window,
+                                stride,
+                                &xin[r.start * in_st..r.end * in_st],
+                                &y[r.start * out_st..r.end * out_st],
+                                &g[r.start * out_st..r.end * out_st],
+                                dxc,
+                            );
+                        }));
+                    }
+                    par.run_gated(batch * out_st * window * window >= MIN_PARALLEL_WORK, tasks);
                 }
                 Node::AvgPoolSame { input, window } => {
                     let (h, w, c) = shapes[*input].hwc();
-                    let (glo, ghi) = scr.grads.split_at_mut(vid);
-                    ops::avgpool_same_backward(
-                        batch,
-                        h,
-                        w,
-                        c,
-                        *window,
-                        &ghi[0][..batch * h * w * c],
-                        &mut glo[*input],
-                    );
+                    let in_st = h * w * c;
+                    let window = *window;
+                    let (glo, ghi) = grads.split_at_mut(vid);
+                    let g: &[f32] = &ghi[0][..batch * in_st];
+                    let dx_chunks = split_rows(&mut glo[*input], &chunks, in_st);
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                    for (dxc, r) in dx_chunks.into_iter().zip(chunks.iter().cloned()) {
+                        tasks.push(Box::new(move || {
+                            ops::avgpool_same_backward(
+                                r.end - r.start,
+                                h,
+                                w,
+                                c,
+                                window,
+                                &g[r.start * in_st..r.end * in_st],
+                                dxc,
+                            );
+                        }));
+                    }
+                    par.run_gated(batch * in_st * window * window >= MIN_PARALLEL_WORK, tasks);
                 }
                 Node::Gap { input } => {
                     let (h, w, c) = shapes[*input].hwc();
-                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    let (glo, ghi) = grads.split_at_mut(vid);
                     ops::gap_backward(batch, h, w, c, &ghi[0][..batch * c], &mut glo[*input]);
                 }
                 Node::Flatten { input } => {
                     let n = batch * shapes[vid].numel();
-                    let (glo, ghi) = scr.grads.split_at_mut(vid);
+                    let (glo, ghi) = grads.split_at_mut(vid);
                     for (d, &gv) in glo[*input][..n].iter_mut().zip(&ghi[0][..n]) {
                         *d += gv;
                     }
@@ -569,5 +967,15 @@ impl ModelExecutor for NativeExecutor {
         // acc·batch is exact: acc = correct/batch with batch a small power
         // of two (eval_batch), and correct an integer
         Ok(((acc * batch as f32).round(), loss))
+    }
+
+    fn fork(&self) -> Result<Box<dyn ModelExecutor>> {
+        // immutable structure is shared (Arc), scratch starts fresh —
+        // bit-identical behavior, independent interior mutability
+        Ok(Box::new(NativeExecutor::new(
+            self.arch.clone(),
+            self.dataset.clone(),
+            self.par.clone(),
+        )))
     }
 }

@@ -53,12 +53,18 @@ pub fn fake_quant_weight(w: &[f32], cout: usize, bits: u8, scales: &mut [f32], o
 /// Per-tensor asymmetric fake quantization into `out`
 /// (mirror of `fake_quant_act_ref`).
 pub fn fake_quant_act(a: &[f32], bits: u8, out: &mut [f32]) {
-    debug_assert_eq!(out.len(), a.len());
     if bits >= 31 {
         out.copy_from_slice(a);
         return;
     }
-    let levels = ((1u64 << bits) - 1) as f32;
+    let (amin, amax) = act_minmax(a);
+    fake_quant_act_range(a, bits, amin, amax, out);
+}
+
+/// Min/max of one activation slice — the per-partition reduction step of
+/// the parallel activation quantizer. Min and max are exact (order-free),
+/// so merging per-partition results is bit-identical to a single pass.
+pub fn act_minmax(a: &[f32]) -> (f32, f32) {
     let mut amin = f32::INFINITY;
     let mut amax = f32::NEG_INFINITY;
     for &v in a {
@@ -69,6 +75,16 @@ pub fn fake_quant_act(a: &[f32], bits: u8, out: &mut [f32]) {
             amax = v;
         }
     }
+    (amin, amax)
+}
+
+/// Elementwise half of [`fake_quant_act`], parameterized on a
+/// pre-computed tensor range so disjoint row partitions can be quantized
+/// concurrently against the same grid.
+pub fn fake_quant_act_range(a: &[f32], bits: u8, amin: f32, amax: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert!(bits < 31);
+    let levels = ((1u64 << bits) - 1) as f32;
     let scale = (amax - amin).max(1e-8) / levels;
     let zp = (-amin / scale).round_ties_even();
     for (o, &v) in out.iter_mut().zip(a) {

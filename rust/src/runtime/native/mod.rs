@@ -13,6 +13,11 @@
 //! checkout. The PJRT backend (`pjrt` cargo feature) executes the same
 //! searches through XLA when AOT artifacts are available.
 //!
+//! Kernels execute over the deterministic worker pool when the backend
+//! is built with [`NativeBackend::with_parallelism`]: every op fans out
+//! across a fixed batch-row partition with ordered reductions, so the
+//! results are bit-identical at every thread count (DESIGN.md §8).
+//!
 //! ```
 //! use sigmaquant::runtime::{Backend, NativeBackend};
 //!
@@ -32,9 +37,10 @@ pub use graph::NativeArch;
 
 use crate::manifest::{ArchSpec, DatasetSpec};
 use crate::runtime::backend::{Backend, ModelExecutor};
+use crate::util::pool::Parallelism;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Dataset geometry of the native backend. Image dims and class count
 /// are fixed by the zoo ([`graph::INPUT_H`] etc.); batch sizes are chosen
@@ -53,18 +59,32 @@ pub fn default_dataset() -> DatasetSpec {
 /// The native CPU backend: owns the zoo, hands out [`NativeExecutor`]s.
 pub struct NativeBackend {
     dataset: DatasetSpec,
-    archs: BTreeMap<String, Rc<NativeArch>>,
+    archs: BTreeMap<String, Arc<NativeArch>>,
+    par: Parallelism,
 }
 
 impl NativeBackend {
-    /// Backend with the [`default_dataset`] geometry.
+    /// Backend with the [`default_dataset`] geometry, executing serially
+    /// (the conservative default; see [`NativeBackend::with_parallelism`]).
     pub fn new() -> NativeBackend {
         Self::with_dataset(default_dataset())
+    }
+
+    /// Backend with the default geometry executing on a worker pool.
+    /// Results are bit-identical at every thread count (DESIGN.md §8);
+    /// the handle is inherited by every executor and session.
+    pub fn with_parallelism(par: Parallelism) -> NativeBackend {
+        Self::with_dataset_parallelism(default_dataset(), par)
     }
 
     /// Backend with custom batch sizes. Image geometry and class count
     /// must match the zoo's fixed input contract.
     pub fn with_dataset(dataset: DatasetSpec) -> NativeBackend {
+        Self::with_dataset_parallelism(dataset, Parallelism::serial())
+    }
+
+    /// Custom batch sizes *and* worker pool.
+    pub fn with_dataset_parallelism(dataset: DatasetSpec, par: Parallelism) -> NativeBackend {
         assert_eq!(
             (dataset.height, dataset.width, dataset.channels, dataset.classes),
             (graph::INPUT_H, graph::INPUT_W, graph::INPUT_C, graph::NUM_CLASSES),
@@ -72,12 +92,12 @@ impl NativeBackend {
         );
         let archs = graph::zoo()
             .into_iter()
-            .map(|a| (a.spec.name.clone(), Rc::new(a)))
+            .map(|a| (a.spec.name.clone(), Arc::new(a)))
             .collect();
-        NativeBackend { dataset, archs }
+        NativeBackend { dataset, archs, par }
     }
 
-    fn native_arch(&self, name: &str) -> Result<&Rc<NativeArch>> {
+    fn native_arch(&self, name: &str) -> Result<&Arc<NativeArch>> {
         self.archs.get(name).ok_or_else(|| {
             anyhow!(
                 "unknown architecture {name}; available: {:?}",
@@ -89,7 +109,11 @@ impl NativeBackend {
     /// Concrete (statically dispatched) executor, for callers that want
     /// to avoid the `Box<dyn ModelExecutor>` indirection.
     pub fn native_executor(&self, name: &str) -> Result<NativeExecutor> {
-        Ok(NativeExecutor::new(self.native_arch(name)?.clone(), self.dataset.clone()))
+        Ok(NativeExecutor::new(
+            self.native_arch(name)?.clone(),
+            self.dataset.clone(),
+            self.par.clone(),
+        ))
     }
 }
 
@@ -118,6 +142,10 @@ impl Backend for NativeBackend {
 
     fn executor(&self, arch_name: &str) -> Result<Box<dyn ModelExecutor>> {
         Ok(Box::new(self.native_executor(arch_name)?))
+    }
+
+    fn parallelism(&self) -> Parallelism {
+        self.par.clone()
     }
 }
 

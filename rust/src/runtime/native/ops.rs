@@ -13,6 +13,26 @@
 //! parameter-gradient buffers: a value can feed several consumers
 //! (residual shortcuts, Inception branches), so the executor zeroes the
 //! buffers once per step and lets every consumer add its contribution.
+//!
+//! # Batch-row partition contract (DESIGN.md §8)
+//!
+//! Every kernel here is written against an explicit *row partition*: the
+//! `batch`/`rows` argument plus the slice arguments describe one
+//! contiguous block of batch rows, not necessarily the whole batch. The
+//! executor splits a batch with `util::pool::fixed_partition` and calls
+//! the same kernel once per partition with disjoint sub-slices:
+//!
+//! * per-row ops (conv, dense, relu, pools, gap) write **disjoint output
+//!   rows** — bit-identical under any schedule;
+//! * cross-row reductions (kernel/bias gradients, BN batch statistics,
+//!   the activation-quantizer range) produce **one partial per
+//!   partition** (`backward` into a per-partition shard, `bn_*_partial`,
+//!   `fakequant::act_minmax`) that the executor merges serially in
+//!   partition order, so floating-point accumulation order depends only
+//!   on the partition — never on the thread count.
+//!
+//! Calling a kernel once with the full batch (as the unit tests do) is
+//! simply the one-partition case.
 
 /// Geometry of one convolution, with SAME/VALID padding resolved to
 /// explicit top/left pad amounts (XLA convention: `ceil(in/stride)`
@@ -250,9 +270,56 @@ pub fn bias_backward(rows: usize, c: usize, dy: &[f32], db: &mut [f32]) {
 
 pub const BN_EPS: f64 = 1e-5;
 
+/// Per-channel Σx over one row partition (f64 accumulation). Stage A of
+/// the two-pass parallel BN forward; partials are merged in partition
+/// order by the executor.
+pub fn bn_sum_partial(rows: usize, c: usize, x: &[f32]) -> Vec<f64> {
+    let mut s = vec![0.0f64; c];
+    for row in x[..rows * c].chunks_exact(c) {
+        for (acc, &v) in s.iter_mut().zip(row) {
+            *acc += v as f64;
+        }
+    }
+    s
+}
+
+/// Per-channel Σ(x-μ)² over one row partition, against the merged mean.
+/// Stage B of the parallel BN forward.
+pub fn bn_var_partial(rows: usize, c: usize, x: &[f32], mu: &[f64]) -> Vec<f64> {
+    let mut s = vec![0.0f64; c];
+    for row in x[..rows * c].chunks_exact(c) {
+        for ch in 0..c {
+            let d = row[ch] as f64 - mu[ch];
+            s[ch] += d * d;
+        }
+    }
+    s
+}
+
+/// Elementwise normalize of one row partition against finalized
+/// statistics. Stage C of the parallel BN forward (disjoint rows).
+pub fn bn_normalize(
+    rows: usize,
+    c: usize,
+    x: &[f32],
+    scale: &[f32],
+    bias: &[f32],
+    mean: &[f32],
+    inv: &[f32],
+    out: &mut [f32],
+) {
+    for (xrow, orow) in x[..rows * c].chunks_exact(c).zip(out[..rows * c].chunks_exact_mut(c)) {
+        for ch in 0..c {
+            orow[ch] = (xrow[ch] - mean[ch]) * inv[ch] * scale[ch] + bias[ch];
+        }
+    }
+}
+
 /// BatchNorm with batch statistics over all rows (N·H·W), per channel;
 /// matches `python/compile/layers.py::batchnorm`. Saves per-channel
-/// `mean` and `inv = 1/sqrt(var + eps)` for the backward pass.
+/// `mean` and `inv = 1/sqrt(var + eps)` for the backward pass. The
+/// single-partition composition of `bn_sum_partial` / `bn_var_partial` /
+/// [`bn_normalize`].
 pub fn bn_forward(
     rows: usize,
     c: usize,
@@ -264,28 +331,71 @@ pub fn bn_forward(
     inv: &mut [f32],
 ) {
     let m = rows as f64;
+    let s = bn_sum_partial(rows, c, x);
+    let mu: Vec<f64> = s.iter().map(|&v| v / m).collect();
+    let var = bn_var_partial(rows, c, x, &mu);
     for ch in 0..c {
-        let mut s = 0.0f64;
-        for row in x[..rows * c].chunks_exact(c) {
-            s += row[ch] as f64;
-        }
-        let mu = s / m;
-        let mut v = 0.0f64;
-        for row in x[..rows * c].chunks_exact(c) {
-            let d = row[ch] as f64 - mu;
-            v += d * d;
-        }
-        mean[ch] = mu as f32;
-        inv[ch] = (1.0 / (v / m + BN_EPS).sqrt()) as f32;
+        mean[ch] = mu[ch] as f32;
+        inv[ch] = (1.0 / (var[ch] / m + BN_EPS).sqrt()) as f32;
     }
-    for (xrow, orow) in x[..rows * c].chunks_exact(c).zip(out[..rows * c].chunks_exact_mut(c)) {
+    bn_normalize(rows, c, x, scale, bias, mean, inv, out);
+}
+
+/// Per-channel (Σdy, Σ(dy·x̂)) over one row partition — stage A of the
+/// parallel BN backward; partials merge in partition order.
+pub fn bn_backward_sums(
+    rows: usize,
+    c: usize,
+    x: &[f32],
+    mean: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+) -> (Vec<f64>, Vec<f64>) {
+    let mut sum_dy = vec![0.0f64; c];
+    let mut sum_dy_xhat = vec![0.0f64; c];
+    for (xrow, grow) in x[..rows * c].chunks_exact(c).zip(dy[..rows * c].chunks_exact(c)) {
         for ch in 0..c {
-            orow[ch] = (xrow[ch] - mean[ch]) * inv[ch] * scale[ch] + bias[ch];
+            let xhat = (xrow[ch] - mean[ch]) * inv[ch];
+            sum_dy[ch] += grow[ch] as f64;
+            sum_dy_xhat[ch] += (grow[ch] * xhat) as f64;
+        }
+    }
+    (sum_dy, sum_dy_xhat)
+}
+
+/// Per-row `dx` accumulation of the BN backward against the merged
+/// reductions — stage B, disjoint row partitions. `m` is the *total* row
+/// count of the batch (not this partition's).
+#[allow(clippy::too_many_arguments)]
+pub fn bn_backward_dx(
+    rows: usize,
+    c: usize,
+    m: f64,
+    x: &[f32],
+    scale: &[f32],
+    mean: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+    sum_dy: &[f64],
+    sum_dy_xhat: &[f64],
+    dx: &mut [f32],
+) {
+    for ((xrow, grow), dxrow) in x[..rows * c]
+        .chunks_exact(c)
+        .zip(dy[..rows * c].chunks_exact(c))
+        .zip(dx[..rows * c].chunks_exact_mut(c))
+    {
+        for ch in 0..c {
+            let xhat = (xrow[ch] - mean[ch]) * inv[ch];
+            let t = grow[ch] as f64 - sum_dy[ch] / m - xhat as f64 * (sum_dy_xhat[ch] / m);
+            dxrow[ch] += (scale[ch] * inv[ch]) as f32 * t as f32;
         }
     }
 }
 
-/// Batch-statistics BN backward. Accumulates into `dx`, `dscale`, `dbias`.
+/// Batch-statistics BN backward. Accumulates into `dx`, `dscale`,
+/// `dbias`. The single-partition composition of [`bn_backward_sums`] and
+/// [`bn_backward_dx`].
 #[allow(clippy::too_many_arguments)]
 pub fn bn_backward(
     rows: usize,
@@ -300,31 +410,12 @@ pub fn bn_backward(
     dbias: &mut [f32],
 ) {
     let m = rows as f64;
-    // per-channel reductions: Σdy and Σ(dy·x̂)
-    let mut sum_dy = vec![0.0f64; c];
-    let mut sum_dy_xhat = vec![0.0f64; c];
-    for (xrow, grow) in x[..rows * c].chunks_exact(c).zip(dy[..rows * c].chunks_exact(c)) {
-        for ch in 0..c {
-            let xhat = (xrow[ch] - mean[ch]) * inv[ch];
-            sum_dy[ch] += grow[ch] as f64;
-            sum_dy_xhat[ch] += (grow[ch] * xhat) as f64;
-        }
-    }
+    let (sum_dy, sum_dy_xhat) = bn_backward_sums(rows, c, x, mean, inv, dy);
     for ch in 0..c {
         dbias[ch] += sum_dy[ch] as f32;
         dscale[ch] += sum_dy_xhat[ch] as f32;
     }
-    for ((xrow, grow), dxrow) in x[..rows * c]
-        .chunks_exact(c)
-        .zip(dy[..rows * c].chunks_exact(c))
-        .zip(dx[..rows * c].chunks_exact_mut(c))
-    {
-        for ch in 0..c {
-            let xhat = (xrow[ch] - mean[ch]) * inv[ch];
-            let t = grow[ch] as f64 - sum_dy[ch] / m - xhat as f64 * (sum_dy_xhat[ch] / m);
-            dxrow[ch] += (scale[ch] * inv[ch]) as f32 * t as f32;
-        }
-    }
+    bn_backward_dx(rows, c, m, x, scale, mean, inv, dy, &sum_dy, &sum_dy_xhat, dx);
 }
 
 /// `out = max(x, 0)` elementwise.

@@ -10,6 +10,7 @@
 use super::backend::{Backend, EvalResult, ModelExecutor, Snapshot, StepResult};
 use crate::manifest::{ArchSpec, DatasetSpec};
 use crate::quant::BitAssignment;
+use crate::util::pool::Parallelism;
 use anyhow::{bail, Result};
 
 /// A loaded architecture with live parameter state, generic over the
@@ -38,22 +39,37 @@ pub struct ModelSession<E: ModelExecutor = Box<dyn ModelExecutor>> {
     dataset: DatasetSpec,
     params: Vec<Vec<f32>>,
     mom: Vec<Vec<f32>>,
+    /// Worker-pool handle inherited from the backend; the coordinator
+    /// uses it to fan out concurrent candidate evaluations over
+    /// [`ModelSession::fork_for_eval`] clones.
+    par: Parallelism,
 }
 
 impl ModelSession {
     /// Load `arch_name` from `backend` and initialize params from `seed`.
+    /// The session inherits the backend's parallelism handle.
     pub fn load(backend: &dyn Backend, arch_name: &str, seed: u64) -> Result<Self> {
-        Self::with_executor(backend.executor(arch_name)?, seed)
+        let mut s = Self::with_executor(backend.executor(arch_name)?, seed)?;
+        s.par = backend.parallelism();
+        Ok(s)
     }
 }
 
 impl<E: ModelExecutor> ModelSession<E> {
     /// Wrap a concrete executor (statically dispatched sessions; the
-    /// boxed path above is the common case).
+    /// boxed path above is the common case). Coordinator-level fan-out
+    /// defaults to serial; see [`ModelSession::set_parallelism`].
     pub fn with_executor(exec: E, seed: u64) -> Result<Self> {
         let arch = exec.arch().clone();
         let dataset = exec.dataset().clone();
-        let mut s = ModelSession { exec, arch, dataset, params: Vec::new(), mom: Vec::new() };
+        let mut s = ModelSession {
+            exec,
+            arch,
+            dataset,
+            params: Vec::new(),
+            mom: Vec::new(),
+            par: Parallelism::serial(),
+        };
         s.reinit(seed)?;
         Ok(s)
     }
@@ -61,6 +77,33 @@ impl<E: ModelExecutor> ModelSession<E> {
     /// Dataset geometry (batch sizes, image dims) of the backend.
     pub fn dataset(&self) -> &DatasetSpec {
         &self.dataset
+    }
+
+    /// The worker-pool handle this session fans coordinator-level work
+    /// out on (kernel-level parallelism lives inside the executor).
+    pub fn parallelism(&self) -> &Parallelism {
+        &self.par
+    }
+
+    /// Replace the coordinator-level parallelism handle.
+    pub fn set_parallelism(&mut self, par: Parallelism) {
+        self.par = par;
+    }
+
+    /// Cheap fork for concurrent candidate evaluation (Phase 2): a fresh
+    /// executor over the same shared model structure
+    /// ([`ModelExecutor::fork`]) plus a copy of the live parameters and
+    /// momentum. The fork evolves independently; adopt its state back
+    /// with `snapshot()`/`restore()` if its move is accepted.
+    pub fn fork_for_eval(&self) -> Result<ModelSession<Box<dyn ModelExecutor>>> {
+        Ok(ModelSession {
+            exec: self.exec.fork()?,
+            arch: self.arch.clone(),
+            dataset: self.dataset.clone(),
+            params: self.params.clone(),
+            mom: self.mom.clone(),
+            par: self.par.clone(),
+        })
     }
 
     /// (Re-)initialize parameters from a seed; zeroes momentum.

@@ -1,7 +1,9 @@
-//! Zero-dependency substrates: JSON, RNG, CLI, property testing, timing.
+//! Zero-dependency substrates: JSON, RNG, CLI, property testing, timing,
+//! and the deterministic worker pool.
 
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod timer;

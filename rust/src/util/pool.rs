@@ -1,0 +1,547 @@
+//! Deterministic scoped worker pool — the zero-dependency parallelism
+//! substrate behind the native runtime and the coordinator's concurrent
+//! candidate evaluation (DESIGN.md §8).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Determinism across thread counts.** Every parallel loop in the
+//!    system is split into a *fixed* partition — a pure function of the
+//!    problem size ([`fixed_partition`], [`FIXED_PARTITIONS`]) that never
+//!    looks at the worker count. Work either writes disjoint output
+//!    slices (bit-identical under any schedule) or produces one partial
+//!    result per partition that the caller merges in partition order
+//!    ([`Parallelism::map_chunks`] / [`Parallelism::ordered_reduce`]), so
+//!    floating-point accumulation order is independent of `--threads`.
+//! 2. **Spawn once, reuse forever.** Workers are OS threads spawned at
+//!    [`Parallelism::new`] and shared by every scope; a scope submission
+//!    is two mutex operations per task, no thread creation.
+//! 3. **Zero dependencies.** `std::thread` + `Mutex`/`Condvar` only — no
+//!    `rayon`, no crates.io access (vendored-crates policy).
+//!
+//! The handle is cheaply cloneable and is threaded through backend and
+//! session construction; `Parallelism::serial()` (the default) runs every
+//! task inline on the caller with no pool at all, so single-threaded
+//! behavior is *the same code path* as N-threaded behavior minus the
+//! queue.
+//!
+//! Nesting is safe: a task may itself call [`Parallelism::run`] (the
+//! coordinator fans out candidate moves whose QAT steps fan out kernel
+//! partitions). The submitting thread participates in draining the queue
+//! while it waits, so the pool cannot deadlock on nested scopes.
+//!
+//! ```
+//! use sigmaquant::util::pool::{fixed_partition, Parallelism, FIXED_PARTITIONS};
+//!
+//! let par = Parallelism::new(4);
+//! let data: Vec<f64> = (0..1000).map(|i| i as f64 * 0.1).collect();
+//! let chunks = fixed_partition(data.len(), FIXED_PARTITIONS);
+//! // ordered reduction: same result at any thread count
+//! let sum = par.ordered_reduce(
+//!     &chunks,
+//!     |_, r| data[r].iter().sum::<f64>(),
+//!     0.0f64,
+//!     |acc, part| acc + part,
+//! );
+//! let serial: f64 = chunks.iter().map(|r| data[r.clone()].iter().sum::<f64>()).sum();
+//! assert_eq!(sum.to_bits(), serial.to_bits());
+//! ```
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Number of partitions every parallel loop is split into. A *constant*,
+/// deliberately independent of the worker count: partial results are
+/// merged in partition order, so the merge tree — and therefore every
+/// floating-point bit — is identical at 1, 2, 4, … threads. Thread counts
+/// above this value stop helping inside a single kernel (they still help
+/// across concurrent candidate evaluations).
+pub const FIXED_PARTITIONS: usize = 8;
+
+/// A unit of scoped work. The lifetime is the scope of the submitting
+/// [`Parallelism::run`] call, which joins before returning.
+pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Split `0..n` into at most `parts` contiguous ranges whose lengths
+/// differ by at most one. Pure function of `(n, parts)` — never of the
+/// thread count; see [`FIXED_PARTITIONS`].
+pub fn fixed_partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = parts.clamp(1, n);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Standard row partition used by the native kernels: [`fixed_partition`]
+/// with [`FIXED_PARTITIONS`] parts.
+pub fn partition_rows(n: usize) -> Vec<Range<usize>> {
+    fixed_partition(n, FIXED_PARTITIONS)
+}
+
+/// Split the leading `total_rows × stride` elements of `buf` into one
+/// disjoint `&mut` sub-slice per chunk. Chunks must be the contiguous
+/// ascending ranges produced by [`fixed_partition`] (checked: panics on
+/// gaps, overlap, or overrun). The canonical way to hand each partition
+/// its own output rows.
+pub fn split_rows<'a, T>(
+    buf: &'a mut [T],
+    chunks: &[Range<usize>],
+    stride: usize,
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(chunks.len());
+    let buf_len = buf.len();
+    let ptr = buf.as_mut_ptr();
+    let mut off = 0usize;
+    for r in chunks {
+        assert_eq!(r.start * stride, off, "chunks must be contiguous and ascending");
+        let len = (r.end - r.start) * stride;
+        assert!(off + len <= buf_len, "chunks overrun the buffer");
+        // SAFETY: the asserts above guarantee [off, off+len) ranges are
+        // in-bounds and pairwise disjoint, so each sub-slice aliases a
+        // distinct region of `buf` for lifetime 'a.
+        out.push(unsafe { std::slice::from_raw_parts_mut(ptr.add(off), len) });
+        off += len;
+    }
+    out
+}
+
+/// Queue + shutdown flag shared between the workers and every handle.
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    /// Signalled when jobs are pushed (and at shutdown).
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Owns the worker threads; joined when the last handle drops.
+struct Core {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl Drop for Core {
+    fn drop(&mut self) {
+        {
+            // store under the queue lock: a worker's empty-check +
+            // cv-wait is atomic w.r.t. this store, so the wakeup below
+            // cannot be missed
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Join-state of one `run` scope.
+struct Scope {
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+    panicked: AtomicBool,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+/// Cheap, cloneable handle on the worker pool (or on "no pool": the
+/// serial handle). See the module docs for the determinism contract.
+#[derive(Clone)]
+pub struct Parallelism {
+    threads: usize,
+    core: Option<Arc<Core>>,
+}
+
+impl Parallelism {
+    /// Pool with `threads` total execution lanes: `threads - 1` spawned
+    /// workers plus the submitting thread, which always participates.
+    /// `threads <= 1` spawns nothing and runs everything inline.
+    pub fn new(threads: usize) -> Parallelism {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return Parallelism { threads: 1, core: None };
+        }
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads - 1)
+            .map(|i| {
+                let sh = shared.clone();
+                thread::Builder::new()
+                    .name(format!("sigmaquant-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Parallelism {
+            threads,
+            core: Some(Arc::new(Core { shared, workers: Mutex::new(workers) })),
+        }
+    }
+
+    /// The inline (no-pool) handle; the default everywhere a thread count
+    /// was not explicitly requested.
+    pub fn serial() -> Parallelism {
+        Parallelism { threads: 1, core: None }
+    }
+
+    /// One lane per available hardware thread (the `--threads` default).
+    pub fn available() -> Parallelism {
+        Parallelism::new(thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    /// Total execution lanes (including the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute every task to completion, in any schedule. Tasks must
+    /// write disjoint data (the borrow checker enforces this for the
+    /// slice-splitting callers; [`split_rows`]). Panics in tasks are
+    /// re-raised here after all tasks of the scope have settled.
+    pub fn run<'s>(&self, tasks: Vec<Task<'s>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let core = match &self.core {
+            Some(c) if n > 1 => c.clone(),
+            _ => {
+                // serial handle, or a single task: run inline
+                for t in tasks {
+                    t();
+                }
+                return;
+            }
+        };
+        let scope = Arc::new(Scope {
+            remaining: Mutex::new(n),
+            done_cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut q = core.shared.queue.lock().unwrap();
+            for t in tasks {
+                let sc = scope.clone();
+                let wrapped: Task<'s> = Box::new(move || {
+                    if catch_unwind(AssertUnwindSafe(t)).is_err() {
+                        sc.panicked.store(true, Ordering::SeqCst);
+                    }
+                    let mut r = sc.remaining.lock().unwrap();
+                    *r -= 1;
+                    if *r == 0 {
+                        sc.done_cv.notify_all();
+                    }
+                });
+                // SAFETY: the scope's borrows outlive every job because
+                // this function does not return until `remaining == 0`,
+                // i.e. until every wrapped task has finished running.
+                let job: Job = unsafe { std::mem::transmute::<Task<'s>, Job>(wrapped) };
+                q.push_back(job);
+            }
+            core.shared.work_cv.notify_all();
+        }
+        // Participate while waiting: the submitting thread drains the
+        // queue too, which both adds a lane and makes nested scopes
+        // (tasks that themselves call `run`) deadlock-free.
+        loop {
+            let job = core.shared.queue.lock().unwrap().pop_front();
+            match job {
+                Some(j) => j(),
+                None => break,
+            }
+            if *scope.remaining.lock().unwrap() == 0 {
+                break;
+            }
+        }
+        let mut r = scope.remaining.lock().unwrap();
+        while *r != 0 {
+            r = scope.done_cv.wait(r).unwrap();
+        }
+        drop(r);
+        if scope.panicked.load(Ordering::SeqCst) {
+            panic!("a task submitted to the worker pool panicked");
+        }
+    }
+
+    /// [`Parallelism::run`], but inline in submission order when
+    /// `parallel` is false — for callers that know the per-task work is
+    /// too small to amortize queue overhead. Purely a scheduling
+    /// decision: the partition never changes, so results are identical
+    /// either way.
+    pub fn run_gated<'s>(&self, parallel: bool, tasks: Vec<Task<'s>>) {
+        if parallel {
+            self.run(tasks);
+        } else {
+            for t in tasks {
+                t();
+            }
+        }
+    }
+
+    /// Run `f` once per chunk (chunk index + range), in any schedule.
+    pub fn for_chunks<F>(&self, chunks: &[Range<usize>], f: F)
+    where
+        F: Fn(usize, Range<usize>) + Sync,
+    {
+        let fref = &f;
+        let tasks: Vec<Task<'_>> = chunks
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, r)| Box::new(move || fref(i, r)) as Task<'_>)
+            .collect();
+        self.run(tasks);
+    }
+
+    /// Compute one `T` per chunk concurrently; results come back **in
+    /// chunk order**, regardless of which worker produced them. The
+    /// building block of every ordered reduction.
+    pub fn map_chunks<T, F>(&self, chunks: &[Range<usize>], f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, Range<usize>) -> T + Sync,
+    {
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(chunks.len());
+        slots.resize_with(chunks.len(), || None);
+        {
+            let fref = &f;
+            let tasks: Vec<Task<'_>> = slots
+                .iter_mut()
+                .zip(chunks.iter().cloned())
+                .enumerate()
+                .map(|(i, (slot, r))| {
+                    Box::new(move || {
+                        *slot = Some(fref(i, r));
+                    }) as Task<'_>
+                })
+                .collect();
+            self.run(tasks);
+        }
+        slots.into_iter().map(|s| s.expect("every chunk ran")).collect()
+    }
+
+    /// [`Parallelism::map_chunks`], but computed inline in chunk order
+    /// when `parallel` is false (see [`Parallelism::run_gated`]).
+    pub fn map_chunks_gated<T, F>(
+        &self,
+        parallel: bool,
+        chunks: &[Range<usize>],
+        f: F,
+    ) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, Range<usize>) -> T + Sync,
+    {
+        if parallel {
+            self.map_chunks(chunks, f)
+        } else {
+            chunks.iter().cloned().enumerate().map(|(i, r)| f(i, r)).collect()
+        }
+    }
+
+    /// Ordered reduction: per-chunk partials computed concurrently, then
+    /// folded serially **in partition order** — the floating-point merge
+    /// tree is a function of the partition only, never of the thread
+    /// count or schedule.
+    pub fn ordered_reduce<T, A, F, M>(
+        &self,
+        chunks: &[Range<usize>],
+        f: F,
+        init: A,
+        merge: M,
+    ) -> A
+    where
+        T: Send,
+        F: Fn(usize, Range<usize>) -> T + Sync,
+        M: FnMut(A, T) -> A,
+    {
+        self.map_chunks(chunks, f).into_iter().fold(init, merge)
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::serial()
+    }
+}
+
+impl fmt::Debug for Parallelism {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Parallelism({} threads)", self.threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn partition_is_exact_and_balanced() {
+        for n in [0usize, 1, 3, 8, 9, 32, 100, 127] {
+            for parts in [1usize, 2, 8, 16] {
+                let ch = fixed_partition(n, parts);
+                let want = if n == 0 { 0 } else { parts.min(n) };
+                assert_eq!(ch.len(), want, "n={n} parts={parts}: {ch:?}");
+                // contiguous cover of 0..n
+                let mut pos = 0;
+                for r in &ch {
+                    assert_eq!(r.start, pos);
+                    pos = r.end;
+                }
+                assert_eq!(pos, n);
+                // balanced: lengths differ by at most one
+                if let (Some(a), Some(b)) = (
+                    ch.iter().map(|r| r.len()).min(),
+                    ch.iter().map(|r| r.len()).max(),
+                ) {
+                    assert!(b - a <= 1, "n={n} parts={parts}: {ch:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_ignores_thread_count_by_construction() {
+        // the partition is a pure function of (n, parts): computing it
+        // twice — or on pools of different widths — yields the same cuts
+        assert_eq!(partition_rows(32), partition_rows(32));
+        assert_eq!(partition_rows(32).len(), FIXED_PARTITIONS);
+        assert_eq!(partition_rows(3).len(), 3);
+    }
+
+    #[test]
+    fn for_chunks_touches_every_index_once() {
+        let par = Parallelism::new(4);
+        let n = 1000;
+        let counters: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let chunks = fixed_partition(n, FIXED_PARTITIONS);
+        par.for_chunks(&chunks, |_, r| {
+            for i in r {
+                counters[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(counters.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn ordered_reduce_matches_serial_sum_bitwise() {
+        // f32 partial sums merged in partition order must equal the same
+        // chunked computation done serially, at every thread count
+        let data: Vec<f32> = (0..4096)
+            .map(|i| ((i as f32) * 0.371).sin() * 1e3)
+            .collect();
+        let chunks = fixed_partition(data.len(), FIXED_PARTITIONS);
+        let serial: f32 = chunks
+            .iter()
+            .map(|r| data[r.clone()].iter().sum::<f32>())
+            .fold(0.0f32, |a, b| a + b);
+        for threads in [1usize, 2, 4, 8] {
+            let par = Parallelism::new(threads);
+            let got = par.ordered_reduce(
+                &chunks,
+                |_, r| data[r].iter().sum::<f32>(),
+                0.0f32,
+                |a, b| a + b,
+            );
+            assert_eq!(got.to_bits(), serial.to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn split_rows_yields_disjoint_strided_chunks() {
+        let mut buf = vec![0i32; 24];
+        let chunks = fixed_partition(6, 4); // 6 rows, stride 4 elements
+        let parts = split_rows(&mut buf, &chunks, 4);
+        assert_eq!(parts.len(), 4);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 24);
+        for (i, p) in parts.into_iter().enumerate() {
+            p.fill(i as i32 + 1);
+        }
+        assert!(buf.iter().all(|&v| v != 0));
+    }
+
+    #[test]
+    fn nested_run_completes() {
+        let par = Parallelism::new(3);
+        let outer = AtomicUsize::new(0);
+        let chunks = fixed_partition(4, 4);
+        par.for_chunks(&chunks, |_, _| {
+            // nested scope from inside a task
+            let inner: usize = par.ordered_reduce(
+                &fixed_partition(100, FIXED_PARTITIONS),
+                |_, r| r.len(),
+                0usize,
+                |a, b| a + b,
+            );
+            outer.fetch_add(inner, Ordering::SeqCst);
+        });
+        assert_eq!(outer.load(Ordering::SeqCst), 400);
+    }
+
+    #[test]
+    fn map_chunks_results_come_back_in_chunk_order() {
+        let par = Parallelism::new(4);
+        let chunks = fixed_partition(64, FIXED_PARTITIONS);
+        let got = par.map_chunks(&chunks, |i, r| (i, r.start));
+        for (i, (gi, gs)) in got.iter().enumerate() {
+            assert_eq!(*gi, i);
+            assert_eq!(*gs, chunks[i].start);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool panicked")]
+    fn task_panic_propagates_to_submitter() {
+        let par = Parallelism::new(2);
+        let tasks: Vec<Task<'_>> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 2 {
+                        panic!("boom");
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        par.run(tasks);
+    }
+}

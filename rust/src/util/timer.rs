@@ -1,5 +1,9 @@
-//! Measurement helpers shared by the bench harness and the perf pass.
+//! Measurement helpers shared by the bench harness and the perf pass,
+//! plus the machine-readable bench report (`results/BENCH_<name>.json`)
+//! that tracks the perf trajectory across PRs.
 
+use std::io::Write;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// Robust timing summary over repeated runs.
@@ -57,9 +61,61 @@ fn summarize(samples_ns: &mut [f64]) -> Timing {
     }
 }
 
+/// Machine-readable bench output: one row per measured op, written as
+/// `results/BENCH_<name>.json` so the perf trajectory is comparable
+/// across PRs (and across `--threads` values).
+pub struct BenchReport {
+    name: &'static str,
+    rows: Vec<(String, usize, f64)>,
+}
+
+impl BenchReport {
+    pub fn new(name: &'static str) -> BenchReport {
+        BenchReport { name, rows: Vec::new() }
+    }
+
+    /// Record one measurement: op name, thread count, ns per iteration.
+    pub fn add(&mut self, op: &str, threads: usize, ns_per_iter: f64) {
+        self.rows.push((op.to_string(), threads, ns_per_iter));
+    }
+
+    /// Serialize to `results/BENCH_<name>.json`; returns the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = PathBuf::from("results");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{{\n  \"bench\": \"{}\",\n  \"rows\": [", self.name)?;
+        for (i, (op, threads, ns)) in self.rows.iter().enumerate() {
+            let comma = if i + 1 == self.rows.len() { "" } else { "," };
+            writeln!(
+                f,
+                "    {{\"op\": \"{op}\", \"threads\": {threads}, \"ns_per_iter\": {ns:.1}}}{comma}"
+            )?;
+        }
+        writeln!(f, "  ]\n}}")?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_report_serializes_valid_json() {
+        let mut r = BenchReport::new("unit_test");
+        r.add("op_a", 1, 1234.5);
+        r.add("op_b", 4, 7.0);
+        let path = r.write().expect("write report");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let parsed = crate::util::json::parse(&text).expect("valid json");
+        assert_eq!(parsed.get("bench").as_str(), Some("unit_test"));
+        let rows = parsed.get("rows").as_arr().expect("rows array");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("threads").as_usize(), Some(4));
+        let _ = std::fs::remove_file(path);
+    }
 
     #[test]
     fn bench_returns_sane_stats() {

@@ -9,6 +9,9 @@
 //! 3. scratch-arena hygiene — repeated evaluation through the reused
 //!    buffers is bit-stable.
 
+// golden vectors are transcribed from ref.py at full printed precision
+#![allow(clippy::excessive_precision)]
+
 use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
 use sigmaquant::coordinator::zones::Targets;
 use sigmaquant::coordinator::{SearchConfig, SearchOutcome, SigmaQuant};

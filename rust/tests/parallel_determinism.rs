@@ -1,0 +1,140 @@
+//! The determinism contract of the parallel execution engine
+//! (DESIGN.md §8): same seed ⇒ bit-identical results at every
+//! `--threads` value. Kernels fan out over a fixed batch-row partition
+//! with ordered reductions, and Phase 2 evaluates its candidate moves on
+//! forked sessions with a serial decision rule, so nothing observable
+//! may depend on the worker count.
+
+use sigmaquant::coordinator::qat::{pretrain, TrainCursor};
+use sigmaquant::coordinator::zones::Targets;
+use sigmaquant::coordinator::{SearchConfig, SearchOutcome, SigmaQuant};
+use sigmaquant::data::SynthDataset;
+use sigmaquant::quant::{int8_size_bytes, BitAssignment};
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
+use sigmaquant::util::pool::Parallelism;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn backend(threads: usize) -> NativeBackend {
+    NativeBackend::with_parallelism(Parallelism::new(threads))
+}
+
+/// Full two-phase search (budget-reduced), pinned per thread count.
+fn tiny_search(threads: usize, seed: u64) -> SearchOutcome {
+    let be = backend(threads);
+    let mut s = ModelSession::load(&be, "alexnet_mini", seed).expect("load");
+    let data = SynthDataset::new(be.dataset().clone(), seed);
+    let mut cursor = TrainCursor::default();
+    pretrain(&mut s, &data, &mut cursor, 0.05, 20, 0).expect("pretrain");
+    let int8 = int8_size_bytes(&s.arch);
+    let targets = Targets {
+        acc_target: 0.30,
+        size_target: int8 * 0.55,
+        acc_buffer: 0.05,
+        size_buffer: int8 * 0.05,
+        abandon_factor: 8.0,
+    };
+    let mut cfg = SearchConfig::defaults(targets);
+    cfg.qat_steps_p1 = 4;
+    cfg.qat_steps_p2 = 3;
+    cfg.max_phase1_iters = 2;
+    cfg.max_phase2_iters = 3;
+    cfg.eval_samples = 128;
+    cfg.seed = seed;
+    let sq = SigmaQuant::new(cfg, &data);
+    sq.run(&mut s, &data, &mut cursor).expect("search")
+}
+
+fn assert_outcomes_identical(a: &SearchOutcome, b: &SearchOutcome, what: &str) {
+    assert_eq!(a.wbits.bits, b.wbits.bits, "{what}: wbits");
+    assert_eq!(a.abits.bits, b.abits.bits, "{what}: abits");
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{what}: accuracy");
+    assert_eq!(a.resource.to_bits(), b.resource.to_bits(), "{what}: resource");
+    assert_eq!(a.int8_accuracy.to_bits(), b.int8_accuracy.to_bits(), "{what}: int8 acc");
+    assert_eq!(a.met, b.met, "{what}: met");
+    assert_eq!(a.zone, b.zone, "{what}: zone");
+    assert_eq!(a.trajectory.len(), b.trajectory.len(), "{what}: trajectory length");
+    for (pa, pb) in a.trajectory.points.iter().zip(&b.trajectory.points) {
+        assert_eq!(pa.bits_summary, pb.bits_summary, "{what}: bits at {}/{}", pa.phase, pa.iter);
+        assert_eq!(
+            pa.accuracy.to_bits(),
+            pb.accuracy.to_bits(),
+            "{what}: accuracy at {}/{}",
+            pa.phase,
+            pa.iter
+        );
+        assert_eq!(pa.action, pb.action, "{what}: action at {}/{}", pa.phase, pa.iter);
+    }
+}
+
+#[test]
+fn search_outcome_is_bit_identical_across_thread_counts() {
+    let reference = tiny_search(THREAD_COUNTS[0], 11);
+    for &threads in &THREAD_COUNTS[1..] {
+        let o = tiny_search(threads, 11);
+        assert_outcomes_identical(&reference, &o, &format!("threads=1 vs {threads}"));
+    }
+}
+
+/// Train + evaluate bit-parity at the session level, on an arch that
+/// exercises the residual-add path (disjoint-row writes + shard merges).
+#[test]
+fn train_and_eval_are_bit_identical_across_thread_counts() {
+    let mut final_params: Vec<Vec<u32>> = Vec::new();
+    let mut evals: Vec<(u64, u64)> = Vec::new();
+    for &threads in &THREAD_COUNTS {
+        let be = backend(threads);
+        let mut s = ModelSession::load(&be, "resnet18_mini", 5).expect("load");
+        let data = SynthDataset::new(be.dataset().clone(), 5);
+        let l = s.num_qlayers();
+        let w4 = BitAssignment::uniform(l, 4);
+        let b = be.dataset().train_batch;
+        for i in 0..4 {
+            let (x, y) = data.train_batch(i, b);
+            s.train_step(&x, &y, &w4, &w4, 0.02).expect("step");
+        }
+        let (xs, ys) = data.eval_set(be.dataset().eval_batch);
+        let r = s.evaluate(&xs, &ys, &w4, &w4).expect("eval");
+        evals.push((r.accuracy.to_bits(), r.loss.to_bits()));
+        final_params.push(
+            s.params()
+                .iter()
+                .flat_map(|p| p.iter().map(|v| v.to_bits()))
+                .collect(),
+        );
+    }
+    for (i, &threads) in THREAD_COUNTS.iter().enumerate().skip(1) {
+        assert_eq!(evals[0], evals[i], "eval diverged at {threads} threads");
+        assert_eq!(
+            final_params[0], final_params[i],
+            "parameters diverged at {threads} threads"
+        );
+    }
+}
+
+/// A forked session must be an exact functional clone: same eval result,
+/// and training the fork must not disturb the original.
+#[test]
+fn fork_for_eval_is_isolated_and_exact() {
+    let be = backend(2);
+    let mut s = ModelSession::load(&be, "alexnet_mini", 9).expect("load");
+    let data = SynthDataset::new(be.dataset().clone(), 9);
+    let mut cursor = TrainCursor::default();
+    pretrain(&mut s, &data, &mut cursor, 0.05, 6, 0).expect("pretrain");
+    let l = s.num_qlayers();
+    let w8 = BitAssignment::uniform(l, 8);
+    let (xs, ys) = data.eval_set(be.dataset().eval_batch);
+    let base_eval = s.evaluate(&xs, &ys, &w8, &w8).expect("eval");
+
+    let mut fork = s.fork_for_eval().expect("fork");
+    let fork_eval = fork.evaluate(&xs, &ys, &w8, &w8).expect("fork eval");
+    assert_eq!(base_eval.accuracy.to_bits(), fork_eval.accuracy.to_bits());
+    assert_eq!(base_eval.loss.to_bits(), fork_eval.loss.to_bits());
+
+    // mutate the fork; the original must be untouched
+    let (x, y) = data.train_batch(99, be.dataset().train_batch);
+    fork.train_step(&x, &y, &w8, &w8, 0.05).expect("fork step");
+    let after = s.evaluate(&xs, &ys, &w8, &w8).expect("eval after fork step");
+    assert_eq!(base_eval.accuracy.to_bits(), after.accuracy.to_bits());
+    assert_eq!(base_eval.loss.to_bits(), after.loss.to_bits());
+}

@@ -25,7 +25,7 @@ fn alexnet_init_train_eval_roundtrip() {
     let w8 = BitAssignment::uniform(l, 8);
     let (xs, ys) = data.eval_set(be.dataset().eval_batch);
     let r = s.evaluate(&xs, &ys, &w8, &w8).expect("eval");
-    assert!(r.accuracy >= 0.0 && r.accuracy <= 1.0);
+    assert!((0.0..=1.0).contains(&r.accuracy));
     assert!(r.loss.is_finite());
     assert_eq!(r.samples, be.dataset().eval_batch);
 
