@@ -1,0 +1,259 @@
+//! Kernel-core micro-benchmark: the cache-blocked im2col/GEMM path
+//! (`runtime::native::gemm`) against the retired naive loops
+//! (`ops::*_naive`, retained as the bitwise reference) at the zoo's
+//! actual conv/dense shapes — the workloads that dominate every QAT
+//! fine-tune + evaluate cycle.
+//!
+//! Each shape is measured at a partition-sized row block (what one pool
+//! task executes), forward and backward, with packing included in the
+//! blocked timings so the comparison is end-to-end honest. Outputs are
+//! cross-checked bitwise against the naive reference on every shape
+//! before timing — the bench doubles as a smoke test of the
+//! accumulation-order-preservation contract.
+//!
+//! Run via `cargo bench --bench bench_gemm`; pass `-- --quick` for the
+//! CI smoke mode. Emits `results/BENCH_gemm.json` (op, threads,
+//! ns/iter); ops are paired `<shape>/naive` vs `<shape>/blocked` so
+//! `scripts/bench_compare` can track both absolute latency and the
+//! blocked-over-naive speedup across PRs. The full (non-quick) run also
+//! prints the README's before/after throughput table in markdown.
+
+use sigmaquant::runtime::native::gemm::{self, PackScratch};
+use sigmaquant::runtime::native::graph::{zoo, Node};
+use sigmaquant::runtime::native::ops::Conv2d;
+use sigmaquant::util::rng::Rng;
+use sigmaquant::util::timer::{bench, BenchReport};
+use std::collections::BTreeSet;
+
+/// Rows per measured block: one partition's share of a batch (32-row
+/// train batch / 8 partitions, 128-row eval batch / 32 partitions).
+const ROWS: usize = 4;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Zero about half the entries, mimicking post-ReLU/fake-quant sparsity —
+/// the regime the naive kernels' zero-skip was tuned for, so the
+/// reported speedup does not flatter the dense GEMM path.
+fn sparsify(v: &mut [f32], seed: u64) {
+    let mut rng = Rng::new(seed);
+    for x in v.iter_mut() {
+        if rng.below(2) == 0 {
+            *x = 0.0;
+        }
+    }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: blocked != naive at {i}: {x} vs {y}");
+    }
+}
+
+struct Row {
+    label: String,
+    fwd_naive_ns: f64,
+    fwd_blocked_ns: f64,
+    bwd_naive_ns: f64,
+    bwd_blocked_ns: f64,
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (iters, budget_ms) = if quick { (1, 1.0) } else { (10, 300.0) };
+    println!("# bench_gemm — blocked im2col/GEMM core vs retained naive loops (zoo shapes, {ROWS}-row blocks)");
+    let mut report = BenchReport::new("gemm");
+
+    // unique conv shapes over the whole zoo: (h, w, cin, cout, k, stride, same)
+    let mut conv_shapes: BTreeSet<(usize, usize, usize, usize, usize, usize, bool)> = BTreeSet::new();
+    let mut dense_shapes: BTreeSet<(usize, usize)> = BTreeSet::new();
+    for arch in zoo() {
+        for (vid, node) in arch.nodes.iter().enumerate() {
+            match node {
+                Node::Conv { input, k, stride, same, q, .. } => {
+                    let (h, w, cin) = arch.shapes[*input].hwc();
+                    let cout = arch.spec.qlayers[*q].out_channels;
+                    conv_shapes.insert((h, w, cin, cout, *k, *stride, *same));
+                }
+                Node::Dense { input, .. } => {
+                    dense_shapes.insert((arch.shapes[*input].numel(), arch.shapes[vid].numel()));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut speedups: Vec<f64> = Vec::new();
+    for &(h, w, cin, cout, k, stride, same) in &conv_shapes {
+        let cv = Conv2d::new(h, w, cin, cout, k, stride, same);
+        let label = format!("conv{h}x{w}x{cin}-{cout}k{k}s{stride}{}", if same { "p" } else { "v" });
+        let in_len = ROWS * h * w * cin;
+        let out_len = ROWS * cv.oh * cv.ow * cout;
+        let mut x = randv(in_len, 11);
+        sparsify(&mut x, 17);
+        let kern = randv(k * k * cin * cout, 12);
+        let dy = randv(out_len, 13);
+        let kdim = gemm::conv_kdim(&cv);
+        let mut wpack = vec![0.0f32; gemm::packed_b_len(kdim, cout)];
+        let mut wpack_t = vec![0.0f32; gemm::packed_b_len(cout, kdim)];
+        let mut ps = PackScratch::default();
+        let (col, apack, bpack) = gemm::conv_scratch_sizes(&cv);
+        ps.ensure(col, apack, bpack);
+        let mut out_a = vec![0.0f32; out_len];
+        let mut out_b = vec![0.0f32; out_len];
+        let (mut dx_a, mut dk_a) = (vec![0.0f32; in_len], vec![0.0f32; kern.len()]);
+        let (mut dx_b, mut dk_b) = (vec![0.0f32; in_len], vec![0.0f32; kern.len()]);
+
+        // bitwise cross-check before timing
+        cv.forward_naive(ROWS, &x, &kern, &mut out_a);
+        gemm::pack_b(kdim, cout, &kern, &mut wpack);
+        gemm::conv_forward(&cv, ROWS, &x, &wpack, &mut out_b, &mut ps);
+        assert_bits_eq(&out_a, &out_b, &label);
+        cv.backward_naive(ROWS, &x, &kern, &dy, &mut dx_a, &mut dk_a);
+        gemm::pack_b_t(cout, kdim, &kern, &mut wpack_t);
+        gemm::conv_backward(&cv, ROWS, &x, Some(&wpack_t), &dy, Some(&mut dx_b), &mut dk_b, &mut ps);
+        assert_bits_eq(&dx_a, &dx_b, &label);
+        assert_bits_eq(&dk_a, &dk_b, &label);
+
+        let t_fn = bench(iters, budget_ms, || {
+            cv.forward_naive(ROWS, &x, &kern, &mut out_a);
+        });
+        let t_fb = bench(iters, budget_ms, || {
+            gemm::pack_b(kdim, cout, &kern, &mut wpack);
+            gemm::conv_forward(&cv, ROWS, &x, &wpack, &mut out_b, &mut ps);
+        });
+        let t_bn = bench(iters, budget_ms, || {
+            dx_a.fill(0.0);
+            dk_a.fill(0.0);
+            cv.backward_naive(ROWS, &x, &kern, &dy, &mut dx_a, &mut dk_a);
+        });
+        let t_bb = bench(iters, budget_ms, || {
+            dx_b.fill(0.0);
+            dk_b.fill(0.0);
+            gemm::pack_b_t(cout, kdim, &kern, &mut wpack_t);
+            gemm::conv_backward(&cv, ROWS, &x, Some(&wpack_t), &dy, Some(&mut dx_b), &mut dk_b, &mut ps);
+        });
+        println!(
+            "{label:<24} fwd {:>9.1}us -> {:>9.1}us ({:.2}x) | bwd {:>9.1}us -> {:>9.1}us ({:.2}x)",
+            t_fn.mean_ns / 1e3,
+            t_fb.mean_ns / 1e3,
+            t_fn.mean_ns / t_fb.mean_ns,
+            t_bn.mean_ns / 1e3,
+            t_bb.mean_ns / 1e3,
+            t_bn.mean_ns / t_bb.mean_ns,
+        );
+        report.add(&format!("conv_fwd/{label}/naive"), 1, t_fn.mean_ns);
+        report.add(&format!("conv_fwd/{label}/blocked"), 1, t_fb.mean_ns);
+        report.add(&format!("conv_bwd/{label}/naive"), 1, t_bn.mean_ns);
+        report.add(&format!("conv_bwd/{label}/blocked"), 1, t_bb.mean_ns);
+        speedups.push(t_fn.mean_ns / t_fb.mean_ns);
+        speedups.push(t_bn.mean_ns / t_bb.mean_ns);
+        rows.push(Row {
+            label,
+            fwd_naive_ns: t_fn.mean_ns,
+            fwd_blocked_ns: t_fb.mean_ns,
+            bwd_naive_ns: t_bn.mean_ns,
+            bwd_blocked_ns: t_bb.mean_ns,
+        });
+    }
+
+    for &(cin, cout) in &dense_shapes {
+        let label = format!("dense{cin}-{cout}");
+        let mut a = randv(ROWS * cin, 21);
+        sparsify(&mut a, 27);
+        let kern = randv(cin * cout, 22);
+        let bias = randv(cout, 23);
+        let dy = randv(ROWS * cout, 24);
+        let mut wpack = vec![0.0f32; gemm::packed_b_len(cin, cout)];
+        let mut wpack_t = vec![0.0f32; gemm::packed_b_len(cout, cin)];
+        let mut ps = PackScratch::default();
+        let (apack, bpack) = gemm::dense_scratch_sizes(ROWS, cin, cout);
+        ps.ensure(0, apack, bpack);
+        let mut out_a = vec![0.0f32; ROWS * cout];
+        let mut out_b = vec![0.0f32; ROWS * cout];
+        let (mut da_a, mut dk_a, mut db_a) =
+            (vec![0.0f32; ROWS * cin], vec![0.0f32; kern.len()], vec![0.0f32; cout]);
+        let (mut da_b, mut dk_b, mut db_b) =
+            (vec![0.0f32; ROWS * cin], vec![0.0f32; kern.len()], vec![0.0f32; cout]);
+
+        sigmaquant::runtime::native::ops::dense_forward_naive(ROWS, cin, cout, &a, &kern, &bias, &mut out_a);
+        gemm::pack_b(cin, cout, &kern, &mut wpack);
+        gemm::dense_forward(ROWS, cin, cout, &a, &wpack, &bias, &mut out_b, &mut ps);
+        assert_bits_eq(&out_a, &out_b, &label);
+        sigmaquant::runtime::native::ops::dense_backward_naive(
+            ROWS, cin, cout, &a, &kern, &dy, &mut da_a, &mut dk_a, &mut db_a,
+        );
+        gemm::pack_b_t(cout, cin, &kern, &mut wpack_t);
+        gemm::dense_backward(ROWS, cin, cout, &a, &wpack_t, &dy, &mut da_b, &mut dk_b, &mut ps);
+        sigmaquant::runtime::native::ops::bias_backward(ROWS, cout, &dy, &mut db_b);
+        assert_bits_eq(&da_a, &da_b, &label);
+        assert_bits_eq(&dk_a, &dk_b, &label);
+        assert_bits_eq(&db_a, &db_b, &label);
+
+        let t_fn = bench(iters, budget_ms, || {
+            sigmaquant::runtime::native::ops::dense_forward_naive(
+                ROWS, cin, cout, &a, &kern, &bias, &mut out_a,
+            );
+        });
+        let t_fb = bench(iters, budget_ms, || {
+            gemm::pack_b(cin, cout, &kern, &mut wpack);
+            gemm::dense_forward(ROWS, cin, cout, &a, &wpack, &bias, &mut out_b, &mut ps);
+        });
+        let t_bn = bench(iters, budget_ms, || {
+            da_a.fill(0.0);
+            dk_a.fill(0.0);
+            db_a.fill(0.0);
+            sigmaquant::runtime::native::ops::dense_backward_naive(
+                ROWS, cin, cout, &a, &kern, &dy, &mut da_a, &mut dk_a, &mut db_a,
+            );
+        });
+        let t_bb = bench(iters, budget_ms, || {
+            da_b.fill(0.0);
+            dk_b.fill(0.0);
+            db_b.fill(0.0);
+            gemm::pack_b_t(cout, cin, &kern, &mut wpack_t);
+            gemm::dense_backward(ROWS, cin, cout, &a, &wpack_t, &dy, &mut da_b, &mut dk_b, &mut ps);
+            sigmaquant::runtime::native::ops::bias_backward(ROWS, cout, &dy, &mut db_b);
+        });
+        println!(
+            "{label:<24} fwd {:>9.1}us -> {:>9.1}us ({:.2}x) | bwd {:>9.1}us -> {:>9.1}us ({:.2}x)",
+            t_fn.mean_ns / 1e3,
+            t_fb.mean_ns / 1e3,
+            t_fn.mean_ns / t_fb.mean_ns,
+            t_bn.mean_ns / 1e3,
+            t_bb.mean_ns / 1e3,
+            t_bn.mean_ns / t_bb.mean_ns,
+        );
+        report.add(&format!("dense_fwd/{label}/naive"), 1, t_fn.mean_ns);
+        report.add(&format!("dense_fwd/{label}/blocked"), 1, t_fb.mean_ns);
+        report.add(&format!("dense_bwd/{label}/naive"), 1, t_bn.mean_ns);
+        report.add(&format!("dense_bwd/{label}/blocked"), 1, t_bb.mean_ns);
+    }
+
+    if !speedups.is_empty() {
+        let gmean = (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp();
+        println!("conv geometric-mean blocked speedup: {gmean:.2}x over {} measurements", speedups.len());
+    }
+    if !quick {
+        println!("\nREADME table (| shape | fwd naive | fwd blocked | bwd naive | bwd blocked | speedup |):");
+        for r in &rows {
+            let sp = (r.fwd_naive_ns + r.bwd_naive_ns) / (r.fwd_blocked_ns + r.bwd_blocked_ns);
+            println!(
+                "| `{}` | {:.1} µs | {:.1} µs | {:.1} µs | {:.1} µs | {:.2}× |",
+                r.label,
+                r.fwd_naive_ns / 1e3,
+                r.fwd_blocked_ns / 1e3,
+                r.bwd_naive_ns / 1e3,
+                r.bwd_blocked_ns / 1e3,
+                sp
+            );
+        }
+    }
+    match report.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench report write failed: {e}"),
+    }
+}

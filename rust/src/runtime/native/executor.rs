@@ -24,17 +24,26 @@
 //! their partition inline — the queue round-trips would cost more than
 //! the compute. Scheduling only: the partition is the same either way.
 //!
+//! Conv and dense matrix work routes through the cache-blocked GEMM
+//! kernel core (`super::gemm`, DESIGN.md §9): weights are packed into
+//! B panels once per node before the fan-out, and each partition task
+//! packs its own im2col/A panels from per-partition scratch. The GEMM
+//! path reproduces the naive loops' accumulation order bit for bit, so
+//! this is purely a throughput change.
+//!
 //! All intermediate tensors live in a reusable scratch arena behind a
 //! `RefCell`: full-batch activation/gradient buffers that workers write
-//! disjoint row ranges of, plus per-partition gradient shards (the
-//! "per-worker arenas" — one shard per partition, reused across nodes
-//! and steps). Buffers are grown once to the largest batch seen, so the
-//! Phase-2 snapshot → QAT → evaluate → restore loop performs no
-//! per-iteration activation allocation; the steady-state allocations
-//! are the small per-channel BN reduction temporaries and the
-//! O(partitions) task boxes per parallel-dispatched node.
+//! disjoint row ranges of, plus per-partition gradient shards and GEMM
+//! packing buffers (the "per-worker arenas" — one shard + pack scratch
+//! per partition, reused across nodes and steps). Buffers are grown
+//! once to the largest batch seen, so the Phase-2 snapshot → QAT →
+//! evaluate → restore loop performs no per-iteration activation or
+//! packing allocation; the steady-state allocations are the small
+//! per-channel BN reduction temporaries and the O(partitions) task
+//! boxes per parallel-dispatched node.
 
 use super::fakequant::{act_minmax, fake_quant_act_range, fake_quant_weight};
+use super::gemm::{self, PackScratch};
 use super::graph::{NativeArch, Node};
 use super::ops;
 use crate::manifest::{ArchSpec, DatasetSpec, ParamKind};
@@ -80,7 +89,37 @@ struct Scratch {
     /// Per-partition gradient shards: one `kernel+bias`-sized arena per
     /// fixed partition. Workers accumulate into their partition's shard;
     /// the interpreter merges shards into `pgrads` in partition order.
+    /// Grown to the batch's partition count in [`NativeExecutor::ensure_batch`].
     shards: Vec<Vec<f32>>,
+    /// Packed-B weight panels for the GEMM core (forward conv/dense):
+    /// packed once per node before the partition fan-out, read-only
+    /// inside the tasks.
+    wpack: Vec<f32>,
+    /// Packed-Bᵀ weight panels for the input-gradient GEMMs.
+    wpack_t: Vec<f32>,
+    /// Per-partition GEMM packing scratch (im2col columns + packed A/B
+    /// panels) — the "per-worker arenas" of the kernel core, one per
+    /// fixed partition so concurrent tasks never share buffers.
+    parts: Vec<PackScratch>,
+}
+
+/// Batch-independent scratch sizing derived from the graph once at
+/// construction (the dense operands additionally scale with the
+/// batch-partition row bound; see [`NativeExecutor::ensure_batch`]).
+struct ArenaSizes {
+    /// Largest `kernel+bias` pair any node accumulates into.
+    shard: usize,
+    /// Largest packed weight panel (`max` over conv `kdim×cout`, dense
+    /// `cin×cout`).
+    wpack: usize,
+    /// Largest packed transposed-weight panel.
+    wpack_t: usize,
+    /// Largest row-major im2col buffer (`oh·ow × k·k·cin`).
+    col: usize,
+    /// Largest packed-A operand over all conv GEMMs.
+    apack: usize,
+    /// Largest packed-B per-partition operand over all conv GEMMs.
+    bpack: usize,
 }
 
 /// Native CPU executor for one architecture.
@@ -90,6 +129,7 @@ pub struct NativeExecutor {
     /// Conv geometry per node id (None for non-conv nodes).
     conv_dims: Vec<Option<ops::Conv2d>>,
     par: Parallelism,
+    sizes: ArenaSizes,
     scratch: RefCell<Scratch>,
 }
 
@@ -163,20 +203,35 @@ impl NativeExecutor {
                 conv_dims[vid] = Some(ops::Conv2d::new(h, w, cin, cout, *k, *stride, *same));
             }
         }
-        // one gradient shard per fixed partition, sized for the largest
-        // kernel+bias pair any single node accumulates into
-        let mut shard_len = 0usize;
-        for node in arch.nodes.iter() {
+        // arena sizing: gradient shards (largest kernel+bias pair any
+        // single node accumulates into) plus the GEMM-core packing
+        // buffers (largest packed operand over all conv/dense GEMMs; the
+        // dense per-partition operands additionally scale with the batch
+        // and are folded in by ensure_batch)
+        let mut sizes = ArenaSizes { shard: 0, wpack: 0, wpack_t: 0, col: 0, apack: 0, bpack: 0 };
+        for (vid, node) in arch.nodes.iter().enumerate() {
             match node {
                 Node::Conv { kernel, bias, .. } => {
                     let k = arch.spec.params[*kernel].size;
                     let b = bias.map(|bp| arch.spec.params[bp].size).unwrap_or(0);
-                    shard_len = shard_len.max(k + b);
+                    sizes.shard = sizes.shard.max(k + b);
+                    let cv = conv_dims[vid].expect("conv dims precomputed");
+                    let kd = gemm::conv_kdim(&cv);
+                    sizes.wpack = sizes.wpack.max(gemm::packed_b_len(kd, cv.cout));
+                    sizes.wpack_t = sizes.wpack_t.max(gemm::packed_b_len(cv.cout, kd));
+                    let (col, apack, bpack) = gemm::conv_scratch_sizes(&cv);
+                    sizes.col = sizes.col.max(col);
+                    sizes.apack = sizes.apack.max(apack);
+                    sizes.bpack = sizes.bpack.max(bpack);
                 }
-                Node::Dense { kernel, bias, .. } => {
+                Node::Dense { input, kernel, bias, .. } => {
                     let k = arch.spec.params[*kernel].size;
                     let b = arch.spec.params[*bias].size;
-                    shard_len = shard_len.max(k + b);
+                    sizes.shard = sizes.shard.max(k + b);
+                    let cin = arch.shapes[*input].numel();
+                    let cout = arch.shapes[vid].numel();
+                    sizes.wpack = sizes.wpack.max(gemm::packed_b_len(cin, cout));
+                    sizes.wpack_t = sizes.wpack_t.max(gemm::packed_b_len(cout, cin));
                 }
                 _ => {}
             }
@@ -207,12 +262,18 @@ impl NativeExecutor {
                 })
                 .collect(),
             pgrads: arch.spec.params.iter().map(|p| vec![0.0; p.size]).collect(),
-            shards: (0..FIXED_PARTITIONS).map(|_| vec![0.0; shard_len]).collect(),
+            // shards + parts are grown to the batch's partition count by
+            // ensure_batch on first use
+            shards: Vec::new(),
+            wpack: vec![0.0; sizes.wpack],
+            wpack_t: vec![0.0; sizes.wpack_t],
+            parts: Vec::new(),
         };
-        NativeExecutor { arch, dataset, conv_dims, par, scratch: RefCell::new(scratch) }
+        NativeExecutor { arch, dataset, conv_dims, par, sizes, scratch: RefCell::new(scratch) }
     }
 
-    /// Grow activation/gradient buffers to hold `batch` samples.
+    /// Grow activation/gradient buffers to hold `batch` samples, and the
+    /// per-partition shard/packing arenas to the batch's partition count.
     fn ensure_batch(&self, scr: &mut Scratch, batch: usize) {
         if scr.batch >= batch {
             return;
@@ -232,6 +293,32 @@ impl NativeExecutor {
                 }
             }
         }
+        // Dense GEMM operands scale with the partition's row count. Size
+        // against the loose-but-monotone bound ceil(batch / floor) —
+        // every partition of every batch' <= batch fits, so the early
+        // return above stays safe even though the exact per-batch row
+        // count is not monotone in the batch size.
+        let r_bound = batch.div_ceil(FIXED_PARTITIONS).max(1);
+        let (mut apack, mut bpack) = (self.sizes.apack, self.sizes.bpack);
+        for (vid, node) in self.arch.nodes.iter().enumerate() {
+            if let Node::Dense { input, .. } = node {
+                let cin = self.arch.shapes[*input].numel();
+                let cout = self.arch.shapes[vid].numel();
+                let (a, b) = gemm::dense_scratch_sizes(r_bound, cin, cout);
+                apack = apack.max(a);
+                bpack = bpack.max(b);
+            }
+        }
+        let nparts = partition_rows(batch).len();
+        while scr.shards.len() < nparts {
+            scr.shards.push(vec![0.0; self.sizes.shard]);
+        }
+        if scr.parts.len() < nparts {
+            scr.parts.resize_with(nparts, PackScratch::default);
+        }
+        for ps in scr.parts.iter_mut() {
+            ps.ensure(self.sizes.col, apack, bpack);
+        }
         scr.batch = batch;
     }
 
@@ -250,7 +337,7 @@ impl NativeExecutor {
         let shapes = &self.arch.shapes;
         let par = &self.par;
         let chunks = partition_rows(batch);
-        let Scratch { acts, qact, qw, qscales, bn_mean, bn_inv, .. } = scr;
+        let Scratch { acts, qact, qw, qscales, bn_mean, bn_inv, wpack, parts, .. } = scr;
         acts[0][..x.len()].copy_from_slice(x);
         for vid in 1..self.arch.nodes.len() {
             match &self.arch.nodes[vid] {
@@ -272,18 +359,23 @@ impl NativeExecutor {
                     let ab = abits.bits[*q];
                     let range =
                         act_range(par, batch * in_st >= MIN_PARALLEL_WORK, &chunks, xin, in_st, ab);
-                    let qw_ref: &[f32] = &qw[*q];
+                    let kdim = gemm::conv_kdim(&cv);
+                    gemm::pack_b(kdim, cv.cout, &qw[*q], wpack);
+                    let wpack_ref: &[f32] = &wpack[..gemm::packed_b_len(kdim, cv.cout)];
                     let bias_ref: Option<&[f32]> = bias.map(|bp| params[bp].as_slice());
                     let qa_chunks = split_rows(&mut qact[vid], &chunks, in_st);
                     let out_chunks = split_rows(&mut ahi[0], &chunks, out_st);
                     let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
-                    for ((qa, oc), r) in
-                        qa_chunks.into_iter().zip(out_chunks).zip(chunks.iter().cloned())
+                    for (((qa, oc), ps), r) in qa_chunks
+                        .into_iter()
+                        .zip(out_chunks)
+                        .zip(parts.iter_mut())
+                        .zip(chunks.iter().cloned())
                     {
                         tasks.push(Box::new(move || {
                             let rows = r.end - r.start;
                             quant_rows(&xin[r.start * in_st..r.end * in_st], ab, range, qa);
-                            cv.forward(rows, qa, qw_ref, oc);
+                            gemm::conv_forward(&cv, rows, qa, wpack_ref, oc, ps);
                             if let Some(b) = bias_ref {
                                 ops::bias_forward(rows * cv.oh * cv.ow, cv.cout, b, oc);
                             }
@@ -307,18 +399,22 @@ impl NativeExecutor {
                     let ab = abits.bits[*q];
                     let range =
                         act_range(par, batch * cin >= MIN_PARALLEL_WORK, &chunks, xin, cin, ab);
-                    let qw_ref: &[f32] = &qw[*q];
+                    gemm::pack_b(cin, cout, &qw[*q], wpack);
+                    let wpack_ref: &[f32] = &wpack[..gemm::packed_b_len(cin, cout)];
                     let bias_ref: &[f32] = &params[*bias];
                     let qa_chunks = split_rows(&mut qact[vid], &chunks, cin);
                     let out_chunks = split_rows(&mut ahi[0], &chunks, cout);
                     let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
-                    for ((qa, oc), r) in
-                        qa_chunks.into_iter().zip(out_chunks).zip(chunks.iter().cloned())
+                    for (((qa, oc), ps), r) in qa_chunks
+                        .into_iter()
+                        .zip(out_chunks)
+                        .zip(parts.iter_mut())
+                        .zip(chunks.iter().cloned())
                     {
                         tasks.push(Box::new(move || {
                             let rows = r.end - r.start;
                             quant_rows(&xin[r.start * cin..r.end * cin], ab, range, qa);
-                            ops::dense_forward(rows, cin, cout, qa, qw_ref, bias_ref, oc);
+                            gemm::dense_forward(rows, cin, cout, qa, wpack_ref, bias_ref, oc, ps);
                         }));
                     }
                     par.run_gated(work >= MIN_PARALLEL_WORK, tasks);
@@ -492,7 +588,8 @@ impl NativeExecutor {
         let shapes = &self.arch.shapes;
         let par = &self.par;
         let chunks = partition_rows(batch);
-        let Scratch { acts, grads, qact, qw, bn_mean, bn_inv, pgrads, shards, .. } = scr;
+        let Scratch { acts, grads, qact, qw, bn_mean, bn_inv, pgrads, shards, wpack_t, parts, .. } =
+            scr;
         for vid in (1..self.arch.nodes.len()).rev() {
             match &self.arch.nodes[vid] {
                 Node::Input => unreachable!("input is always node 0"),
@@ -517,59 +614,53 @@ impl NativeExecutor {
                     // identity; d/d(kernel) through the weight quantizer.
                     // The image (node 0) has no consumer for its gradient,
                     // so stem convs skip the dx accumulation entirely.
-                    if *input == 0 {
-                        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(nsh);
-                        for (sh, r) in shard_slices.into_iter().zip(chunks.iter().cloned()) {
-                            tasks.push(Box::new(move || {
-                                let rows = r.end - r.start;
-                                let (dk, db) = sh.split_at_mut(klen);
-                                cv.backward_weights(
-                                    rows,
-                                    &qa[r.start * in_st..r.end * in_st],
-                                    &g[r.start * out_st..r.end * out_st],
-                                    dk,
-                                );
-                                if !db.is_empty() {
-                                    ops::bias_backward(
-                                        rows * cv.oh * cv.ow,
-                                        cv.cout,
-                                        &g[r.start * out_st..r.end * out_st],
-                                        db,
-                                    );
-                                }
-                            }));
-                        }
-                        par.run_gated(par_ok, tasks);
+                    let use_dx = *input != 0;
+                    let wt_ref: Option<&[f32]> = if use_dx {
+                        let kdim = gemm::conv_kdim(&cv);
+                        gemm::pack_b_t(cv.cout, kdim, &qw[*q], wpack_t);
+                        Some(&wpack_t[..gemm::packed_b_len(cv.cout, kdim)])
                     } else {
-                        let qw_ref: &[f32] = &qw[*q];
-                        let dx_chunks = split_rows(&mut glo[*input], &chunks, in_st);
-                        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(nsh);
-                        for ((sh, dxc), r) in
-                            shard_slices.into_iter().zip(dx_chunks).zip(chunks.iter().cloned())
-                        {
-                            tasks.push(Box::new(move || {
-                                let rows = r.end - r.start;
-                                let (dk, db) = sh.split_at_mut(klen);
-                                cv.backward(
-                                    rows,
-                                    &qa[r.start * in_st..r.end * in_st],
-                                    qw_ref,
+                        None
+                    };
+                    let dx_chunks: Vec<Option<&mut [f32]>> = if use_dx {
+                        split_rows(&mut glo[*input], &chunks, in_st)
+                            .into_iter()
+                            .map(Some)
+                            .collect()
+                    } else {
+                        chunks.iter().map(|_| None).collect()
+                    };
+                    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(nsh);
+                    for (((sh, dxc), ps), r) in shard_slices
+                        .into_iter()
+                        .zip(dx_chunks)
+                        .zip(parts.iter_mut())
+                        .zip(chunks.iter().cloned())
+                    {
+                        tasks.push(Box::new(move || {
+                            let rows = r.end - r.start;
+                            let (dk, db) = sh.split_at_mut(klen);
+                            gemm::conv_backward(
+                                &cv,
+                                rows,
+                                &qa[r.start * in_st..r.end * in_st],
+                                wt_ref,
+                                &g[r.start * out_st..r.end * out_st],
+                                dxc,
+                                dk,
+                                ps,
+                            );
+                            if !db.is_empty() {
+                                ops::bias_backward(
+                                    rows * cv.oh * cv.ow,
+                                    cv.cout,
                                     &g[r.start * out_st..r.end * out_st],
-                                    dxc,
-                                    dk,
+                                    db,
                                 );
-                                if !db.is_empty() {
-                                    ops::bias_backward(
-                                        rows * cv.oh * cv.ow,
-                                        cv.cout,
-                                        &g[r.start * out_st..r.end * out_st],
-                                        db,
-                                    );
-                                }
-                            }));
-                        }
-                        par.run_gated(par_ok, tasks);
+                            }
+                        }));
                     }
+                    par.run_gated(par_ok, tasks);
                     // merge the per-partition shards in partition order
                     let dk_main = &mut pgrads[*kernel];
                     for s in shards[..nsh].iter() {
@@ -592,7 +683,6 @@ impl NativeExecutor {
                     let (glo, ghi) = grads.split_at_mut(vid);
                     let g: &[f32] = &ghi[0][..batch * cout];
                     let qa: &[f32] = &qact[vid][..batch * cin];
-                    let qw_ref: &[f32] = &qw[*q];
                     let klen = params[*kernel].len();
                     let blen = params[*bias].len();
                     let nsh = chunks.len();
@@ -601,23 +691,34 @@ impl NativeExecutor {
                     }
                     let shard_slices: Vec<&mut [f32]> =
                         shards[..nsh].iter_mut().map(|s| &mut s[..klen + blen]).collect();
+                    gemm::pack_b_t(cout, cin, &qw[*q], wpack_t);
+                    let wt_ref: &[f32] = &wpack_t[..gemm::packed_b_len(cout, cin)];
                     let da_chunks = split_rows(&mut glo[*input], &chunks, cin);
                     let mut tasks: Vec<Task<'_>> = Vec::with_capacity(nsh);
-                    for ((sh, dac), r) in
-                        shard_slices.into_iter().zip(da_chunks).zip(chunks.iter().cloned())
+                    for (((sh, dac), ps), r) in shard_slices
+                        .into_iter()
+                        .zip(da_chunks)
+                        .zip(parts.iter_mut())
+                        .zip(chunks.iter().cloned())
                     {
                         tasks.push(Box::new(move || {
                             let rows = r.end - r.start;
                             let (dk, db) = sh.split_at_mut(klen);
-                            ops::dense_backward(
+                            gemm::dense_backward(
                                 rows,
                                 cin,
                                 cout,
                                 &qa[r.start * cin..r.end * cin],
-                                qw_ref,
+                                wt_ref,
                                 &g[r.start * cout..r.end * cout],
                                 dac,
                                 dk,
+                                ps,
+                            );
+                            ops::bias_backward(
+                                rows,
+                                cout,
+                                &g[r.start * cout..r.end * cout],
                                 db,
                             );
                         }));

@@ -1,0 +1,685 @@
+//! Cache-blocked GEMM kernel core shared by every conv/dense forward and
+//! backward pass of the native backend (DESIGN.md §9).
+//!
+//! The naive PR-2 kernels walked a 7-deep loop nest per convolution and
+//! re-loaded / re-stored the output row on every kernel tap. This module
+//! replaces that inner machinery with one register-tiled micro-kernel
+//! over packed panels:
+//!
+//! * **A panels** ([`pack_a`] / [`pack_a_t`] / [`im2col_packed`]): `MR`
+//!   rows interleaved k-major, so the micro-kernel reads `MR` operands
+//!   per k-step from one contiguous cache line run;
+//! * **B panels** ([`pack_b`] / [`pack_b_t`]): `NR` columns interleaved
+//!   k-major, zero-padded to a full panel;
+//! * **micro-kernel**: an `MR × NR` accumulator block held in registers
+//!   across the entire k loop, written back once per tile.
+//!
+//! # Accumulation-order preservation (bitwise parity with the naive loops)
+//!
+//! Every entry point here is *bitwise identical* to its retained naive
+//! reference in [`super::ops`] (`rust/tests/gemm_parity.rs` pins this
+//! property over randomized shapes). That is not an accident of testing —
+//! it is a design rule the micro-kernel enforces structurally:
+//!
+//! 1. **One chain per element, k-ascending.** An output element's value
+//!    is a single floating-point accumulation chain over the k dimension
+//!    in ascending order — exactly the naive loop's `kh→kw→ci` (conv) or
+//!    `ci`/`co` (dense) order, because the packed layouts enumerate k in
+//!    that same order. The k loop is never split: there is no `KC`
+//!    blocking, so no partial-sum re-association ever happens.
+//! 2. **Chain seeding matches the naive seed** via the [`Acc`] mode:
+//!    fresh `+0.0` ([`Acc::Store`]), the bias value ([`Acc::Bias`],
+//!    dense forward starts from `out = bias`), the current output value
+//!    ([`Acc::Extend`], so a per-image GEMM call *continues* the chain of
+//!    the previous call — the conv kernel-gradient accumulates over
+//!    `(n, oy, ox)` without re-association), or a fresh chain added once
+//!    at the end ([`Acc::Add`], matching `dx += Σ…`).
+//! 3. **Zero padding is bit-neutral.** Packed panels pad partial tiles
+//!    and out-of-bounds im2col taps with `+0.0`. The extra products are
+//!    `±0.0`; adding `±0.0` to a chain that started at `+0.0` never
+//!    changes a single bit (a chain seeded at `+0.0` can never reach
+//!    `-0.0`), which is the same argument that makes the naive loops'
+//!    `a == 0.0` skip and padding skip bit-neutral. (The one corner this
+//!    gives up is non-finite weights against exactly-zero activations —
+//!    `0·∞ = NaN` — which the naive skip would mask; training keeps all
+//!    values finite.)
+//! 4. **No FMA.** Products round to f32 before the add (`mul` then
+//!    `add`), exactly like the scalar reference; Rust never contracts
+//!    float expressions, so the codegen cannot fuse them behind our back.
+//!
+//! The kernels stay `unsafe`-free: the tile shapes are compile-time
+//! constants (`[[f32; NR]; MR]` lives in registers) and the inner loops
+//! are written so LLVM's autovectorizer sees fixed-trip-count
+//! independent lanes.
+
+use super::ops::Conv2d;
+
+/// Micro-tile rows: A-panel operands per k-step. 6 keeps
+/// `MR × NR/8 = 12` YMM accumulators plus operands inside a 16-register
+/// vector file.
+pub const MR: usize = 6;
+/// Micro-tile columns: one B-panel run per k-step (two YMM / one ZMM).
+pub const NR: usize = 16;
+
+/// `x` rounded up to a multiple of `b`.
+#[inline]
+pub fn round_up(x: usize, b: usize) -> usize {
+    x.div_ceil(b) * b
+}
+
+/// Length of the packed-A buffer for an `m × k` operand.
+#[inline]
+pub fn packed_a_len(m: usize, k: usize) -> usize {
+    round_up(m, MR) * k
+}
+
+/// Length of the packed-B buffer for a `k × n` operand.
+#[inline]
+pub fn packed_b_len(k: usize, n: usize) -> usize {
+    k * round_up(n, NR)
+}
+
+/// Pack row-major `a[m × k]` into `MR`-row panels, k-major inside each
+/// panel (`panel[kk·MR + ii] = a[(i0+ii)·k + kk]`); tail rows are
+/// zero-filled.
+pub fn pack_a(m: usize, k: usize, a: &[f32], out: &mut [f32]) {
+    for (p, panel) in out[..packed_a_len(m, k)].chunks_exact_mut(k * MR).enumerate() {
+        let i0 = p * MR;
+        let h = MR.min(m - i0);
+        for ii in 0..h {
+            let src = &a[(i0 + ii) * k..(i0 + ii) * k + k];
+            for (kk, &v) in src.iter().enumerate() {
+                panel[kk * MR + ii] = v;
+            }
+        }
+        for ii in h..MR {
+            for kk in 0..k {
+                panel[kk * MR + ii] = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack `A[m × k]` given its *transpose* `at[k × m]` (row-major) — the
+/// zero-copy way to feed `Aᵀ·B` products (conv/dense kernel gradients)
+/// through the same micro-kernel. Reads are contiguous `MR`-runs.
+pub fn pack_a_t(m: usize, k: usize, at: &[f32], out: &mut [f32]) {
+    for (p, panel) in out[..packed_a_len(m, k)].chunks_exact_mut(k * MR).enumerate() {
+        let i0 = p * MR;
+        let h = MR.min(m - i0);
+        for kk in 0..k {
+            let dst = &mut panel[kk * MR..kk * MR + MR];
+            dst[..h].copy_from_slice(&at[kk * m + i0..kk * m + i0 + h]);
+            dst[h..].fill(0.0);
+        }
+    }
+}
+
+/// Pack row-major `b[k × n]` into `NR`-column panels, k-major inside
+/// each panel; tail columns are zero-filled (the padded lanes compute
+/// values no caller stores).
+pub fn pack_b(k: usize, n: usize, b: &[f32], out: &mut [f32]) {
+    for (p, panel) in out[..packed_b_len(k, n)].chunks_exact_mut(k * NR).enumerate() {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        for kk in 0..k {
+            let dst = &mut panel[kk * NR..kk * NR + NR];
+            dst[..w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+            dst[w..].fill(0.0);
+        }
+    }
+}
+
+/// Pack `B[k × n]` given its *transpose* `bt[n × k]` (row-major) — used
+/// for the `dy·Wᵀ` input-gradient GEMMs without materializing `Wᵀ`.
+pub fn pack_b_t(k: usize, n: usize, bt: &[f32], out: &mut [f32]) {
+    for (p, panel) in out[..packed_b_len(k, n)].chunks_exact_mut(k * NR).enumerate() {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        for kk in 0..k {
+            let dst = &mut panel[kk * NR..kk * NR + NR];
+            for jj in 0..w {
+                dst[jj] = bt[(j0 + jj) * k + kk];
+            }
+            dst[w..].fill(0.0);
+        }
+    }
+}
+
+/// How a GEMM tile's accumulation chain is seeded and written back —
+/// chosen to reproduce the naive reference loop's chain exactly (see
+/// the module docs).
+#[derive(Clone, Copy)]
+pub enum Acc<'a> {
+    /// `C = Σ` — chains seeded at `+0.0`, stored (conv forward into a
+    /// zero-semantics output; gradient scratch like `dcol`).
+    Store,
+    /// `C = bias ⊕ Σ` — chains seeded with the per-column bias, matching
+    /// the dense forward's `out = bias; out += …`.
+    Bias(&'a [f32]),
+    /// `C += Σ` — fresh chains added to `C` once at the end, matching
+    /// `dx += Σ_co …` (the value may already hold other consumers'
+    /// gradient contributions).
+    Add,
+    /// Chains *continue from the current value of `C`*: load, append `k`
+    /// products, store. Used for kernel gradients so per-image GEMM calls
+    /// keep one unbroken `(n, oy, ox)`-ascending chain per element.
+    Extend,
+}
+
+/// The register-tiled inner loop: `acc[MR][NR] += Apanel ⊗ Bpanel` over
+/// the full k extent, products rounded before each add (no FMA).
+#[inline]
+fn micro_kernel(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(apanel.len() >= k * MR && bpanel.len() >= k * NR);
+    for kk in 0..k {
+        let ar = &apanel[kk * MR..kk * MR + MR];
+        let br = &bpanel[kk * NR..kk * NR + NR];
+        for i in 0..MR {
+            let av = ar[i];
+            let accr = &mut acc[i];
+            for j in 0..NR {
+                accr[j] += av * br[j];
+            }
+        }
+    }
+}
+
+/// Blocked `C[m × n] (+)= A[m × k] · B[k × n]` over packed panels.
+/// `ap` from [`pack_a`]/[`pack_a_t`]/[`im2col_packed`], `bp` from
+/// [`pack_b`]/[`pack_b_t`]; `c` is row-major with leading dimension
+/// `ldc`. The k loop is never split, so each element is one ascending
+/// accumulation chain (see [`Acc`] for how it is seeded).
+pub fn gemm(m: usize, n: usize, k: usize, ap: &[f32], bp: &[f32], c: &mut [f32], ldc: usize, mode: Acc<'_>) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (jp, bpanel) in bp[..packed_b_len(k, n)].chunks_exact(k * NR).enumerate() {
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        for (ip, apanel) in ap[..packed_a_len(m, k)].chunks_exact(k * MR).enumerate() {
+            let i0 = ip * MR;
+            let h = MR.min(m - i0);
+            match mode {
+                Acc::Store | Acc::Add => acc = [[0.0; NR]; MR],
+                Acc::Bias(bias) => {
+                    for row in acc.iter_mut() {
+                        row[..w].copy_from_slice(&bias[j0..j0 + w]);
+                        row[w..].fill(0.0);
+                    }
+                }
+                Acc::Extend => {
+                    for (i, row) in acc.iter_mut().enumerate() {
+                        if i < h {
+                            row[..w].copy_from_slice(&c[(i0 + i) * ldc + j0..(i0 + i) * ldc + j0 + w]);
+                            row[w..].fill(0.0);
+                        } else {
+                            row.fill(0.0);
+                        }
+                    }
+                }
+            }
+            micro_kernel(k, apanel, bpanel, &mut acc);
+            for i in 0..h {
+                let crow = &mut c[(i0 + i) * ldc + j0..(i0 + i) * ldc + j0 + w];
+                match mode {
+                    Acc::Store | Acc::Bias(_) | Acc::Extend => crow.copy_from_slice(&acc[i][..w]),
+                    Acc::Add => {
+                        for (cv, &av) in crow.iter_mut().zip(&acc[i][..w]) {
+                            *cv += av;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Number of GEMM rows of one image's im2col matrix (`oh·ow`).
+#[inline]
+pub fn conv_rows(cv: &Conv2d) -> usize {
+    cv.oh * cv.ow
+}
+
+/// GEMM depth of one convolution (`k·k·cin`) — the im2col column count,
+/// enumerated `kh→kw→ci` to match the naive tap order.
+#[inline]
+pub fn conv_kdim(cv: &Conv2d) -> usize {
+    cv.k * cv.k * cv.cin
+}
+
+/// A convolution whose im2col matrix *is* the input (1×1, stride 1, no
+/// padding): the packing fast paths skip the column buffer entirely.
+#[inline]
+fn is_unit(cv: &Conv2d) -> bool {
+    cv.k == 1 && cv.stride == 1 && cv.pad_h == 0 && cv.pad_w == 0
+}
+
+/// [`PackScratch`] lengths `(col, apack, bpack)` one partition needs to
+/// run every GEMM of this conv geometry ([`conv_forward`] +
+/// [`conv_backward`]) — the single source of truth for the executor
+/// arena, the parity tests, and the benches. Any new GEMM call shape
+/// added to the conv paths must be folded in here.
+pub fn conv_scratch_sizes(cv: &Conv2d) -> (usize, usize, usize) {
+    let m = conv_rows(cv);
+    let kdim = conv_kdim(cv);
+    (
+        m * kdim,
+        packed_a_len(m, kdim)
+            .max(packed_a_len(kdim, m))
+            .max(packed_a_len(m, cv.cout)),
+        packed_b_len(m, cv.cout),
+    )
+}
+
+/// [`PackScratch`] lengths `(apack, bpack)` for the dense GEMMs at a
+/// given partition row count ([`dense_forward`] + [`dense_backward`]).
+pub fn dense_scratch_sizes(rows: usize, cin: usize, cout: usize) -> (usize, usize) {
+    (
+        packed_a_len(rows, cin)
+            .max(packed_a_len(cin, rows))
+            .max(packed_a_len(rows, cout)),
+        packed_b_len(rows, cout),
+    )
+}
+
+/// Row-major im2col of one image: `col[(oy·ow+ox) · kdim + (kh·k+kw)·cin
+/// + ci]`, out-of-bounds taps zero-filled. Column order is exactly the
+/// naive loops' `kh→kw→ci` accumulation order.
+pub fn im2col(cv: &Conv2d, x: &[f32], col: &mut [f32]) {
+    let (w, h, cin, k) = (cv.w, cv.h, cv.cin, cv.k);
+    let kdim = conv_kdim(cv);
+    for oy in 0..cv.oh {
+        for ox in 0..cv.ow {
+            let row = &mut col[(oy * cv.ow + ox) * kdim..(oy * cv.ow + ox + 1) * kdim];
+            for kh in 0..k {
+                let iy = (oy * cv.stride + kh) as isize - cv.pad_h as isize;
+                let seg = &mut row[kh * k * cin..(kh + 1) * k * cin];
+                if iy < 0 || iy >= h as isize {
+                    seg.fill(0.0);
+                    continue;
+                }
+                for kw in 0..k {
+                    let ix = (ox * cv.stride + kw) as isize - cv.pad_w as isize;
+                    let tap = &mut seg[kw * cin..(kw + 1) * cin];
+                    if ix < 0 || ix >= w as isize {
+                        tap.fill(0.0);
+                    } else {
+                        let base = (iy as usize * w + ix as usize) * cin;
+                        tap.copy_from_slice(&x[base..base + cin]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// im2col of one image directly into packed-A panel layout (skips the
+/// row-major intermediate): `panel[kc·MR + ii]` for output position
+/// `i0 + ii`, `kc` enumerating `kh→kw→ci`.
+pub fn im2col_packed(cv: &Conv2d, x: &[f32], out: &mut [f32]) {
+    let (w, h, cin, k) = (cv.w, cv.h, cv.cin, cv.k);
+    let m = conv_rows(cv);
+    let kdim = conv_kdim(cv);
+    for (p, panel) in out[..packed_a_len(m, kdim)].chunks_exact_mut(kdim * MR).enumerate() {
+        let i0 = p * MR;
+        for ii in 0..MR {
+            let opos = i0 + ii;
+            if opos >= m {
+                for kc in 0..kdim {
+                    panel[kc * MR + ii] = 0.0;
+                }
+                continue;
+            }
+            let (oy, ox) = (opos / cv.ow, opos % cv.ow);
+            let mut kc = 0usize;
+            for kh in 0..k {
+                let iy = (oy * cv.stride + kh) as isize - cv.pad_h as isize;
+                for kw in 0..k {
+                    let ix = (ox * cv.stride + kw) as isize - cv.pad_w as isize;
+                    if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                        for ci in 0..cin {
+                            panel[(kc + ci) * MR + ii] = 0.0;
+                        }
+                    } else {
+                        let base = (iy as usize * w + ix as usize) * cin;
+                        for ci in 0..cin {
+                            panel[(kc + ci) * MR + ii] = x[base + ci];
+                        }
+                    }
+                    kc += cin;
+                }
+            }
+        }
+    }
+}
+
+/// Transposed-packed im2col of one image: packs `im2colᵀ [kdim × m]`
+/// directly into A panels (`panel[kk·MR + ii]` = im2col column `i0+ii`
+/// at output position `kk`), producing byte-identical output to
+/// `pack_a_t(kdim, m, im2col(...))` without materializing the row-major
+/// intermediate — the dk-GEMM packing path. The ≤ `MR` column decodes
+/// are hoisted per panel, so the hot loop is pure address arithmetic.
+pub fn im2col_packed_t(cv: &Conv2d, x: &[f32], out: &mut [f32]) {
+    let m = conv_rows(cv);
+    let kdim = conv_kdim(cv);
+    let (w, h, cin, k) = (cv.w, cv.h, cv.cin, cv.k);
+    for (p, panel) in out[..packed_a_len(kdim, m)].chunks_exact_mut(m * MR).enumerate() {
+        let i0 = p * MR;
+        let lanes = MR.min(kdim - i0);
+        // decode this panel's (kh, kw, ci) column triples once
+        let mut taps = [(0isize, 0isize, 0usize); MR];
+        for (ii, tap) in taps.iter_mut().enumerate().take(lanes) {
+            let idx = i0 + ii;
+            let kh = idx / (k * cin);
+            let rem = idx % (k * cin);
+            *tap = (kh as isize, (rem / cin) as isize, rem % cin);
+        }
+        for kk in 0..m {
+            let (oy, ox) = (kk / cv.ow, kk % cv.ow);
+            let dst = &mut panel[kk * MR..kk * MR + MR];
+            for (ii, &(kh, kw, ci)) in taps.iter().enumerate().take(lanes) {
+                let iy = (oy * cv.stride) as isize + kh - cv.pad_h as isize;
+                let ix = (ox * cv.stride) as isize + kw - cv.pad_w as isize;
+                dst[ii] = if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                    0.0
+                } else {
+                    x[(iy as usize * w + ix as usize) * cin + ci]
+                };
+            }
+            dst[lanes..].fill(0.0);
+        }
+    }
+}
+
+/// Scatter-add `dcol[m × kdim]` back into one image's `dx`, iterating
+/// rows ascending and `kh→kw→ci` within a row — the exact naive
+/// input-gradient accumulation order; out-of-bounds taps are dropped.
+pub fn col2im_add(cv: &Conv2d, dcol: &[f32], dx: &mut [f32]) {
+    let (w, h, cin, k) = (cv.w, cv.h, cv.cin, cv.k);
+    let kdim = conv_kdim(cv);
+    for oy in 0..cv.oh {
+        for ox in 0..cv.ow {
+            let row = &dcol[(oy * cv.ow + ox) * kdim..(oy * cv.ow + ox + 1) * kdim];
+            for kh in 0..k {
+                let iy = (oy * cv.stride + kh) as isize - cv.pad_h as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kw in 0..k {
+                    let ix = (ox * cv.stride + kw) as isize - cv.pad_w as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let base = (iy as usize * w + ix as usize) * cin;
+                    let tap = &row[(kh * k + kw) * cin..(kh * k + kw + 1) * cin];
+                    for (d, &g) in dx[base..base + cin].iter_mut().zip(tap) {
+                        *d += g;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-partition packing scratch, one instance per fixed partition so
+/// concurrent tasks never share buffers. Carved out of the executor's
+/// arena: sized once (`ensure`), reused across nodes and steps.
+#[derive(Default)]
+pub struct PackScratch {
+    /// Row-major im2col / dcol buffer (largest conv node).
+    pub col: Vec<f32>,
+    /// Packed-A panels (largest operand over all nodes and passes).
+    pub apack: Vec<f32>,
+    /// Packed-B panels for per-partition operands (`dy` blocks).
+    pub bpack: Vec<f32>,
+}
+
+impl PackScratch {
+    /// Grow buffers to at least the given lengths (never shrinks).
+    pub fn ensure(&mut self, col: usize, apack: usize, bpack: usize) {
+        if self.col.len() < col {
+            self.col.resize(col, 0.0);
+        }
+        if self.apack.len() < apack {
+            self.apack.resize(apack, 0.0);
+        }
+        if self.bpack.len() < bpack {
+            self.bpack.resize(bpack, 0.0);
+        }
+    }
+}
+
+/// Blocked conv forward over a block of batch rows:
+/// `out[b,oy,ox,co] = Σ_{kh,kw,ci} x·k` with per-element chains in the
+/// naive `kh→kw→ci` order. `wpack` is the HWIO kernel through
+/// [`pack_b`]`(kdim, cout, …)`. Bias (if any) is applied by the caller
+/// afterwards, exactly like the naive path.
+pub fn conv_forward(cv: &Conv2d, rows: usize, x: &[f32], wpack: &[f32], out: &mut [f32], ps: &mut PackScratch) {
+    let m = conv_rows(cv);
+    let kdim = conv_kdim(cv);
+    let in_st = cv.h * cv.w * cv.cin;
+    let out_st = m * cv.cout;
+    for n in 0..rows {
+        let xn = &x[n * in_st..(n + 1) * in_st];
+        if is_unit(cv) {
+            pack_a(m, kdim, xn, &mut ps.apack);
+        } else {
+            im2col_packed(cv, xn, &mut ps.apack);
+        }
+        gemm(m, cv.cout, kdim, &ps.apack, wpack, &mut out[n * out_st..(n + 1) * out_st], cv.cout, Acc::Store);
+    }
+}
+
+/// Blocked conv backward over a block of batch rows. Accumulates
+/// `dk += im2colᵀ·dy` (one unbroken `(n,oy,ox)`-ascending chain per
+/// element via [`Acc::Extend`]; `dk` must be zeroed by the caller per
+/// node, as the shard protocol already does) and, when `wpack_t`/`dx`
+/// are given, `dx += dy·Wᵀ` through col2im in the naive order. `wpack_t`
+/// is the kernel through [`pack_b_t`]`(cout, kdim, …)`.
+pub fn conv_backward(
+    cv: &Conv2d,
+    rows: usize,
+    x: &[f32],
+    wpack_t: Option<&[f32]>,
+    dy: &[f32],
+    mut dx: Option<&mut [f32]>,
+    dk: &mut [f32],
+    ps: &mut PackScratch,
+) {
+    let m = conv_rows(cv);
+    let kdim = conv_kdim(cv);
+    let in_st = cv.h * cv.w * cv.cin;
+    let out_st = m * cv.cout;
+    let unit = is_unit(cv);
+    for n in 0..rows {
+        let xn = &x[n * in_st..(n + 1) * in_st];
+        let dyn_ = &dy[n * out_st..(n + 1) * out_st];
+        // dk[(kh,kw,ci), co] ⟵ chain continues across images
+        if unit {
+            pack_a_t(kdim, m, xn, &mut ps.apack);
+        } else {
+            im2col_packed_t(cv, xn, &mut ps.apack);
+        }
+        pack_b(m, cv.cout, dyn_, &mut ps.bpack);
+        gemm(kdim, cv.cout, m, &ps.apack, &ps.bpack, dk, cv.cout, Acc::Extend);
+        // dx += col2im(dy · Wᵀ)
+        if let (Some(wt), Some(dxall)) = (wpack_t, dx.as_deref_mut()) {
+            pack_a(m, cv.cout, dyn_, &mut ps.apack);
+            let dxn = &mut dxall[n * in_st..(n + 1) * in_st];
+            if unit {
+                // im2col is the identity: dcol rows are dx rows
+                gemm(m, kdim, cv.cout, &ps.apack, wt, dxn, kdim, Acc::Add);
+            } else {
+                gemm(m, kdim, cv.cout, &ps.apack, wt, &mut ps.col, kdim, Acc::Store);
+                col2im_add(cv, &ps.col, dxn);
+            }
+        }
+    }
+}
+
+/// Blocked dense forward: `out[b,co] = bias[co] ⊕ Σ_ci a·k` — the chain
+/// is seeded with the bias exactly like the naive `copy_from_slice` +
+/// `+=` loop. `wpack` from [`pack_b`]`(cin, cout, …)`.
+pub fn dense_forward(
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    a: &[f32],
+    wpack: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    ps: &mut PackScratch,
+) {
+    pack_a(rows, cin, a, &mut ps.apack);
+    gemm(rows, cout, cin, &ps.apack, wpack, &mut out[..rows * cout], cout, Acc::Bias(bias));
+}
+
+/// Blocked dense backward: `dk += aᵀ·dy` (row-ascending chains via
+/// [`Acc::Extend`] into the caller-zeroed shard) and `da += dy·kᵀ`
+/// (fresh per-element chains added once, [`Acc::Add`]). The bias
+/// gradient stays on the naive `bias_backward` path. `wpack_t` from
+/// [`pack_b_t`]`(cout, cin, …)`.
+pub fn dense_backward(
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    a: &[f32],
+    wpack_t: &[f32],
+    dy: &[f32],
+    da: &mut [f32],
+    dk: &mut [f32],
+    ps: &mut PackScratch,
+) {
+    pack_a_t(cin, rows, a, &mut ps.apack);
+    pack_b(rows, cout, dy, &mut ps.bpack);
+    gemm(cin, cout, rows, &ps.apack, &ps.bpack, dk, cout, Acc::Extend);
+    pack_a(rows, cout, dy, &mut ps.apack);
+    gemm(rows, cin, cout, &ps.apack, wpack_t, &mut da[..rows * cin], cin, Acc::Add);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Serial reference: one ascending chain per element, seeded at 0.
+    fn gemm_ref(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_scalar_chain_bitwise_over_odd_shapes() {
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (5, 3, 7), (6, 16, 4), (13, 17, 29), (24, 32, 48)] {
+            let a = randv(m * k, 1 + m as u64);
+            let b = randv(k * n, 2 + n as u64);
+            let want = gemm_ref(m, n, k, &a, &b);
+            let mut ap = vec![0.0f32; packed_a_len(m, k)];
+            let mut bp = vec![0.0f32; packed_b_len(k, n)];
+            pack_a(m, k, &a, &mut ap);
+            pack_b(k, n, &b, &mut bp);
+            let mut c = vec![0.0f32; m * n];
+            gemm(m, n, k, &ap, &bp, &mut c, n, Acc::Store);
+            for (i, (g, w)) in c.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "({m},{n},{k}) idx {i}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_transpose_paths_match_direct_packing() {
+        let (m, n, k) = (11, 9, 13);
+        let a = randv(m * k, 3);
+        let b = randv(k * n, 4);
+        // transpose sources
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let mut ap = vec![0.0f32; packed_a_len(m, k)];
+        let mut ap2 = vec![1.0f32; packed_a_len(m, k)];
+        pack_a(m, k, &a, &mut ap);
+        pack_a_t(m, k, &at, &mut ap2);
+        assert_eq!(ap, ap2);
+        let mut bp = vec![0.0f32; packed_b_len(k, n)];
+        let mut bp2 = vec![1.0f32; packed_b_len(k, n)];
+        pack_b(k, n, &b, &mut bp);
+        pack_b_t(k, n, &bt, &mut bp2);
+        assert_eq!(bp, bp2);
+    }
+
+    #[test]
+    fn extend_mode_continues_the_chain_without_reassociation() {
+        // two Extend calls over k halves == one Store call over full k,
+        // because the chain is loaded and continued, never re-added
+        let (m, n, k) = (7, 5, 12);
+        let a = randv(m * k, 5);
+        let b = randv(k * n, 6);
+        let want = gemm_ref(m, n, k, &a, &b);
+        // split a/b at k/2 and run two Extend calls
+        let kh = k / 2;
+        let a1: Vec<f32> = (0..m).flat_map(|i| a[i * k..i * k + kh].to_vec()).collect();
+        let a2: Vec<f32> = (0..m).flat_map(|i| a[i * k + kh..(i + 1) * k].to_vec()).collect();
+        let b1 = &b[..kh * n];
+        let b2 = &b[kh * n..];
+        let mut c = vec![0.0f32; m * n];
+        for (aa, bb, kk) in [(&a1, b1, kh), (&a2, b2, k - kh)] {
+            let mut ap = vec![0.0f32; packed_a_len(m, kk)];
+            let mut bp = vec![0.0f32; packed_b_len(kk, n)];
+            pack_a(m, kk, aa, &mut ap);
+            pack_b(kk, n, bb, &mut bp);
+            gemm(m, n, kk, &ap, &bp, &mut c, n, Acc::Extend);
+        }
+        for (g, w) in c.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn im2col_packed_agrees_with_rowmajor_im2col() {
+        for cv in [
+            Conv2d::new(7, 6, 3, 4, 3, 2, true),
+            Conv2d::new(5, 5, 2, 3, 5, 1, true),
+            Conv2d::new(6, 4, 1, 2, 3, 1, false),
+        ] {
+            let x = randv(cv.h * cv.w * cv.cin, 9 + cv.k as u64);
+            let m = conv_rows(&cv);
+            let kdim = conv_kdim(&cv);
+            let mut col = vec![0.0f32; m * kdim];
+            im2col(&cv, &x, &mut col);
+            // direct-packed A == pack_a of the row-major im2col
+            let mut ap = vec![0.0f32; packed_a_len(m, kdim)];
+            pack_a(m, kdim, &col, &mut ap);
+            let mut ap2 = vec![1.0f32; packed_a_len(m, kdim)];
+            im2col_packed(&cv, &x, &mut ap2);
+            assert_eq!(ap, ap2);
+            // direct-packed Aᵀ == pack_a_t of the row-major im2col
+            let mut at = vec![0.0f32; packed_a_len(kdim, m)];
+            pack_a_t(kdim, m, &col, &mut at);
+            let mut at2 = vec![1.0f32; packed_a_len(kdim, m)];
+            im2col_packed_t(&cv, &x, &mut at2);
+            assert_eq!(at, at2);
+        }
+    }
+}

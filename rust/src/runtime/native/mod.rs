@@ -6,7 +6,10 @@
 //! ([`executor`]) provides init / QAT train-step / eval with the same
 //! semantics the AOT artifacts encode — STE fake-quant (bit-exact with
 //! the coordinator's quantizer and the Pallas kernel's jnp oracle),
-//! batch-stats BN, SGD with momentum and global-norm clipping.
+//! batch-stats BN, SGD with momentum and global-norm clipping. Conv and
+//! dense matrix work runs on the cache-blocked GEMM kernel core
+//! ([`gemm`], DESIGN.md §9), bitwise-equal to the retained naive
+//! reference loops in [`ops`].
 //!
 //! It is the default backend: everything in the repo (tests, benches,
 //! examples, experiment binaries) runs end-to-end on it from a clean
@@ -29,6 +32,7 @@
 
 pub mod executor;
 pub mod fakequant;
+pub mod gemm;
 pub mod graph;
 pub mod ops;
 

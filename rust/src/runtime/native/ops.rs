@@ -1,6 +1,15 @@
 //! Dense CPU kernels for the native backend: forward *and* backward
 //! passes for every SSA op the zoo emits.
 //!
+//! The conv/dense matrix work is executed by the cache-blocked GEMM core
+//! in [`super::gemm`] (register-tiled micro-kernel over packed im2col
+//! panels); the `*_naive` loops below are *retained reference
+//! implementations* — the direct transcription of the math whose
+//! floating-point accumulation order the GEMM path reproduces bit for
+//! bit (`rust/tests/gemm_parity.rs` pins blocked == naive bitwise over
+//! randomized shapes). Everything non-GEMM (BN, pools, relu, softmax,
+//! bias) executes the loops below directly.
+//!
 //! Layout conventions (matching the JAX side so weights mean the same
 //! thing on every backend):
 //! * activations: NHWC, flattened row-major per batch;
@@ -66,7 +75,10 @@ impl Conv2d {
     }
 
     /// `out[b, oh, ow, co] = Σ_{kh,kw,ci} x[b, ih, iw, ci] · k[kh, kw, ci, co]`.
-    pub fn forward(&self, batch: usize, x: &[f32], kern: &[f32], out: &mut [f32]) {
+    ///
+    /// Naive reference loop; the production path is
+    /// [`super::gemm::conv_forward`], bitwise-equal by construction.
+    pub fn forward_naive(&self, batch: usize, x: &[f32], kern: &[f32], out: &mut [f32]) {
         let (h, w, cin, cout) = (self.h, self.w, self.cin, self.cout);
         out[..batch * self.oh * self.ow * cout].fill(0.0);
         for n in 0..batch {
@@ -109,7 +121,10 @@ impl Conv2d {
     /// Kernel-gradient-only backward (`dk += conv_kernel_grad`) for convs
     /// whose input gradient has no consumer (the stem conv reading the
     /// image) — skips the per-tap `dx` multiply-accumulate entirely.
-    pub fn backward_weights(&self, batch: usize, x: &[f32], dy: &[f32], dk: &mut [f32]) {
+    ///
+    /// Naive reference; production path is [`super::gemm::conv_backward`]
+    /// with `wpack_t = None`.
+    pub fn backward_weights_naive(&self, batch: usize, x: &[f32], dy: &[f32], dk: &mut [f32]) {
         let (h, w, cin, cout) = (self.h, self.w, self.cin, self.cout);
         for n in 0..batch {
             let xn = &x[n * h * w * cin..(n + 1) * h * w * cin];
@@ -148,7 +163,9 @@ impl Conv2d {
     }
 
     /// Accumulates `dx += conv_input_grad`, `dk += conv_kernel_grad`.
-    pub fn backward(
+    ///
+    /// Naive reference; production path is [`super::gemm::conv_backward`].
+    pub fn backward_naive(
         &self,
         batch: usize,
         x: &[f32],
@@ -199,7 +216,11 @@ impl Conv2d {
 }
 
 /// `out[b, co] = Σ_ci a[b, ci] · k[ci, co] + bias[co]`.
-pub fn dense_forward(batch: usize, cin: usize, cout: usize, a: &[f32], k: &[f32], bias: &[f32], out: &mut [f32]) {
+///
+/// Naive reference; production path is [`super::gemm::dense_forward`],
+/// whose chains are seeded with the bias exactly like the
+/// `copy_from_slice` + `+=` below.
+pub fn dense_forward_naive(batch: usize, cin: usize, cout: usize, a: &[f32], k: &[f32], bias: &[f32], out: &mut [f32]) {
     for n in 0..batch {
         let an = &a[n * cin..(n + 1) * cin];
         let on = &mut out[n * cout..(n + 1) * cout];
@@ -217,7 +238,10 @@ pub fn dense_forward(batch: usize, cin: usize, cout: usize, a: &[f32], k: &[f32]
 }
 
 /// Accumulates `da += dy·kᵀ`, `dk += aᵀ·dy`, `db += Σ_b dy`.
-pub fn dense_backward(
+///
+/// Naive reference; production path is [`super::gemm::dense_backward`]
+/// (the `db` reduction stays on [`bias_backward`]).
+pub fn dense_backward_naive(
     batch: usize,
     cin: usize,
     cout: usize,
@@ -667,10 +691,10 @@ mod tests {
         let mut out = vec![0.0f32; batch * 5 * 5 * 3];
         let mut dx = vec![0.0f32; x.len()];
         let mut dk = vec![0.0f32; k.len()];
-        cv.backward(batch, &x, &k, &dy, &mut dx, &mut dk);
+        cv.backward_naive(batch, &x, &k, &dy, &mut dx, &mut dk);
         // loss = Σ out·dy; finite-difference a few kernel entries
         let loss = |cv: &Conv2d, x: &[f32], k: &[f32], out: &mut [f32]| -> f64 {
-            cv.forward(batch, x, k, out);
+            cv.forward_naive(batch, x, k, out);
             out.iter().zip(&dy).map(|(&o, &g)| (o * g) as f64).sum()
         };
         let eps = 1e-3f32;

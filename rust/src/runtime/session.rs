@@ -10,8 +10,16 @@
 use super::backend::{Backend, EvalResult, ModelExecutor, Snapshot, StepResult};
 use crate::manifest::{ArchSpec, DatasetSpec};
 use crate::quant::BitAssignment;
-use crate::util::pool::Parallelism;
+use crate::util::pool::{fixed_partition, Parallelism, Task};
 use anyhow::{bail, Result};
+use std::cell::RefCell;
+
+/// Upper bound on concurrently evaluating executors per session: bounds
+/// the forked-scratch memory footprint (each fork owns a full activation
+/// arena). Purely a scheduling knob — the per-batch merge below is in
+/// batch order regardless of how batches are grouped, so results are
+/// bit-identical at any width.
+const MAX_EVAL_PIPELINE: usize = 8;
 
 /// A loaded architecture with live parameter state, generic over the
 /// executing backend. The default executor type is the boxed trait
@@ -43,6 +51,17 @@ pub struct ModelSession<E: ModelExecutor = Box<dyn ModelExecutor>> {
     /// uses it to fan out concurrent candidate evaluations over
     /// [`ModelSession::fork_for_eval`] clones.
     par: Parallelism,
+    /// Cached forked executors for the pipelined [`ModelSession::evaluate`]
+    /// path — created lazily on the first multi-batch eval and reused
+    /// afterwards, so steady-state evaluation performs no executor (or
+    /// scratch-arena) allocation.
+    eval_forks: RefCell<Vec<Box<dyn ModelExecutor>>>,
+    /// Whether [`ModelSession::evaluate`] may pipeline batches. False on
+    /// [`ModelSession::fork_for_eval`] clones: those are short-lived and
+    /// already run concurrently with their siblings (Phase-2 candidate
+    /// moves), so pipelining inside them would allocate fork arenas per
+    /// move for no wall-clock gain on an already-saturated pool.
+    pipeline_eval: bool,
 }
 
 impl ModelSession {
@@ -69,6 +88,8 @@ impl<E: ModelExecutor> ModelSession<E> {
             params: Vec::new(),
             mom: Vec::new(),
             par: Parallelism::serial(),
+            eval_forks: RefCell::new(Vec::new()),
+            pipeline_eval: true,
         };
         s.reinit(seed)?;
         Ok(s)
@@ -103,6 +124,8 @@ impl<E: ModelExecutor> ModelSession<E> {
             params: self.params.clone(),
             mom: self.mom.clone(),
             par: self.par.clone(),
+            eval_forks: RefCell::new(Vec::new()),
+            pipeline_eval: false,
         })
     }
 
@@ -193,6 +216,18 @@ impl<E: ModelExecutor> ModelSession<E> {
     }
 
     /// Evaluate on pre-batched data (len must be a multiple of eval_batch).
+    ///
+    /// Multi-batch sets are pipelined: contiguous batch groups run
+    /// concurrently on cached forked executors
+    /// ([`ModelExecutor::fork`]), then the per-batch `(correct, loss)`
+    /// pairs are merged serially **in batch order** — the identical
+    /// floating-point chain the serial loop produces, so the result is
+    /// bit-identical at any thread count (and to the serial path). The
+    /// pipeline width is a pure scheduling choice for the same reason.
+    /// [`ModelSession::fork_for_eval`] clones always evaluate serially —
+    /// they already run concurrently with their sibling candidates, so
+    /// pipelining inside them would only burn fork arenas (see
+    /// `pipeline_eval`).
     pub fn evaluate(
         &self,
         xs: &[f32],
@@ -206,12 +241,54 @@ impl<E: ModelExecutor> ModelSession<E> {
             bail!("eval set size {} must be a positive multiple of {b}", ys.len());
         }
         let batches = ys.len() / b;
+        let width = if self.pipeline_eval {
+            self.par.threads().min(batches).min(MAX_EVAL_PIPELINE)
+        } else {
+            1
+        };
+        type BatchResults = Vec<Result<(f32, f32)>>;
+        let mut per_batch: BatchResults = Vec::with_capacity(batches);
+        if width > 1 {
+            let chunks = fixed_partition(batches, width);
+            let mut forks = self.eval_forks.borrow_mut();
+            while forks.len() < chunks.len() {
+                forks.push(self.exec.fork()?);
+            }
+            let params: &[Vec<f32>] = &self.params;
+            let mut slots: Vec<Option<BatchResults>> = Vec::with_capacity(chunks.len());
+            slots.resize_with(chunks.len(), || None);
+            {
+                let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                for ((slot, fork), r) in
+                    slots.iter_mut().zip(forks.iter_mut()).zip(chunks.iter().cloned())
+                {
+                    tasks.push(Box::new(move || {
+                        let mut out = Vec::with_capacity(r.end - r.start);
+                        for bi in r {
+                            let x = &xs[bi * b * img..(bi + 1) * b * img];
+                            let y = &ys[bi * b..(bi + 1) * b];
+                            out.push(fork.eval_batch(params, x, y, wbits, abits));
+                        }
+                        *slot = Some(out);
+                    }));
+                }
+                self.par.run(tasks);
+            }
+            for s in slots {
+                per_batch.extend(s.expect("every eval chunk ran"));
+            }
+        } else {
+            for bi in 0..batches {
+                let x = &xs[bi * b * img..(bi + 1) * b * img];
+                let y = &ys[bi * b..(bi + 1) * b];
+                per_batch.push(self.exec.eval_batch(&self.params, x, y, wbits, abits));
+            }
+        }
+        // ordered merge: one (correct, loss) chain over batches ascending
         let mut correct = 0.0f64;
         let mut loss_sum = 0.0f64;
-        for bi in 0..batches {
-            let x = &xs[bi * b * img..(bi + 1) * b * img];
-            let y = &ys[bi * b..(bi + 1) * b];
-            let (c, l) = self.exec.eval_batch(&self.params, x, y, wbits, abits)?;
+        for r in per_batch {
+            let (c, l) = r?;
             correct += c as f64;
             loss_sum += l as f64;
         }

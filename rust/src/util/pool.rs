@@ -6,7 +6,7 @@
 //!
 //! 1. **Determinism across thread counts.** Every parallel loop in the
 //!    system is split into a *fixed* partition — a pure function of the
-//!    problem size ([`fixed_partition`], [`FIXED_PARTITIONS`]) that never
+//!    problem size ([`fixed_partition`], [`partition_count`]) that never
 //!    looks at the worker count. Work either writes disjoint output
 //!    slices (bit-identical under any schedule) or produces one partial
 //!    result per partition that the caller merges in partition order
@@ -54,13 +54,32 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
-/// Number of partitions every parallel loop is split into. A *constant*,
-/// deliberately independent of the worker count: partial results are
-/// merged in partition order, so the merge tree — and therefore every
-/// floating-point bit — is identical at 1, 2, 4, … threads. Thread counts
-/// above this value stop helping inside a single kernel (they still help
-/// across concurrent candidate evaluations).
+/// Partition-count *floor* for every parallel loop. Together with
+/// [`MAX_PARTITIONS`] it brackets [`partition_count`], the deterministic
+/// per-problem-size partition function: partial results are merged in
+/// partition order, so the merge tree — and therefore every
+/// floating-point bit — depends only on the problem size, and is
+/// identical at 1, 2, 4, … threads.
 pub const FIXED_PARTITIONS: usize = 8;
+
+/// Partition-count ceiling: bounds per-partition arena counts (gradient
+/// shards, packing scratch) and the serial merge cost per node.
+pub const MAX_PARTITIONS: usize = 64;
+
+/// Rows per partition [`partition_count`] aims for before the
+/// [`MAX_PARTITIONS`] ceiling kicks in.
+const TARGET_ROWS_PER_PARTITION: usize = 4;
+
+/// Deterministic per-problem-size partition count: `n / 4` clamped to
+/// `[FIXED_PARTITIONS, MAX_PARTITIONS]`. A pure function of `n` — never
+/// of the thread count — so the determinism argument of
+/// [`fixed_partition`] is unchanged, while hosts with more than 8 cores
+/// can scale inside a single large kernel (a 128-row eval batch splits
+/// into 32 partitions, a BN reduction over `batch·h·w` rows into 64)
+/// instead of being capped at the old flat 8.
+pub fn partition_count(n: usize) -> usize {
+    (n / TARGET_ROWS_PER_PARTITION).clamp(FIXED_PARTITIONS, MAX_PARTITIONS)
+}
 
 /// A unit of scoped work. The lifetime is the scope of the submitting
 /// [`Parallelism::run`] call, which joins before returning.
@@ -89,9 +108,9 @@ pub fn fixed_partition(n: usize, parts: usize) -> Vec<Range<usize>> {
 }
 
 /// Standard row partition used by the native kernels: [`fixed_partition`]
-/// with [`FIXED_PARTITIONS`] parts.
+/// with the adaptive (but thread-count-independent) [`partition_count`].
 pub fn partition_rows(n: usize) -> Vec<Range<usize>> {
-    fixed_partition(n, FIXED_PARTITIONS)
+    fixed_partition(n, partition_count(n))
 }
 
 /// Split the leading `total_rows × stride` elements of `buf` into one
@@ -446,6 +465,24 @@ mod tests {
         assert_eq!(partition_rows(32), partition_rows(32));
         assert_eq!(partition_rows(32).len(), FIXED_PARTITIONS);
         assert_eq!(partition_rows(3).len(), 3);
+    }
+
+    #[test]
+    fn partition_count_is_adaptive_monotone_and_clamped() {
+        // floor for small problems (the PR-2 train path is unchanged)
+        assert_eq!(partition_count(1), FIXED_PARTITIONS);
+        assert_eq!(partition_count(32), FIXED_PARTITIONS);
+        // scales with the problem so >8-core hosts help inside one batch
+        assert_eq!(partition_count(128), 32);
+        // ceiling bounds arena counts and merge cost
+        assert_eq!(partition_count(1 << 20), MAX_PARTITIONS);
+        // monotone in n (so arenas sized for a batch fit every smaller one)
+        let mut prev = 0;
+        for n in 0..4096 {
+            let c = partition_count(n);
+            assert!(c >= prev, "partition_count not monotone at {n}");
+            prev = c;
+        }
     }
 
     #[test]

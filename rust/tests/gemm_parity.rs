@@ -1,0 +1,321 @@
+//! The accumulation-order-preservation contract of the blocked GEMM
+//! kernel core (DESIGN.md §9): every blocked conv/dense forward and
+//! backward must be **bitwise equal** to the retained naive reference
+//! loops in `runtime::native::ops`, across randomized shapes covering
+//! odd batch sizes, k ∈ {1, 3, 5}, stride/padding edge cases, and the
+//! micro-tile (MR/NR) boundary tails.
+//!
+//! The ref.py fake-quant goldens (`native_backend.rs`) and the
+//! thread-count determinism suite (`parallel_determinism.rs`, threads
+//! 1/2/4) ride on top of this property: the executor routes every
+//! conv/dense through the blocked path, so bitwise kernel parity is what
+//! keeps those end-to-end pins unchanged.
+
+use sigmaquant::runtime::native::gemm::{self, PackScratch};
+use sigmaquant::runtime::native::ops::{self, Conv2d};
+use sigmaquant::util::prop::{check, Gen};
+use sigmaquant::util::rng::Rng;
+
+/// One randomized convolution parity case.
+#[derive(Clone, Debug)]
+struct ConvCase {
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    same: bool,
+    batch: usize,
+    seed: u64,
+}
+
+struct ConvGen;
+
+impl Gen for ConvGen {
+    type Value = ConvCase;
+
+    fn generate(&self, rng: &mut Rng) -> ConvCase {
+        let k = [1usize, 3, 5][rng.below(3)];
+        ConvCase {
+            // VALID needs h, w >= k; spans both odd and even extents
+            h: k + rng.below(6),
+            w: k + rng.below(6),
+            cin: 1 + rng.below(6),
+            // crosses the NR=16 panel boundary
+            cout: 1 + rng.below(20),
+            k,
+            stride: 1 + rng.below(2),
+            same: rng.below(2) == 0,
+            // odd sizes exercise the MR=6 tile tail
+            batch: [1usize, 2, 3, 5, 7][rng.below(5)],
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, v: &ConvCase) -> Vec<ConvCase> {
+        let mut out = Vec::new();
+        if v.batch > 1 {
+            out.push(ConvCase { batch: 1, ..v.clone() });
+        }
+        if v.cout > 1 {
+            out.push(ConvCase { cout: v.cout / 2, ..v.clone() });
+        }
+        if v.cin > 1 {
+            out.push(ConvCase { cin: 1, ..v.clone() });
+        }
+        if v.h > v.k {
+            out.push(ConvCase { h: v.k, w: v.k, ..v.clone() });
+        }
+        out
+    }
+}
+
+fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Zero ~half the entries: the naive kernels skip zero activations, so
+/// parity on sparse inputs is exactly the bit-neutrality claim the GEMM
+/// path relies on.
+fn sparsify(v: &mut [f32], rng: &mut Rng) {
+    for x in v.iter_mut() {
+        if rng.below(2) == 0 {
+            *x = 0.0;
+        }
+    }
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> Result<(), String> {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("bit mismatch at {i}: naive {x} ({:#010x}) vs blocked {y} ({:#010x})", x.to_bits(), y.to_bits()));
+        }
+    }
+    Ok(())
+}
+
+fn conv_scratch(cv: &Conv2d) -> (Vec<f32>, Vec<f32>, PackScratch) {
+    let kdim = gemm::conv_kdim(cv);
+    let wpack = vec![0.0f32; gemm::packed_b_len(kdim, cv.cout)];
+    let wpack_t = vec![0.0f32; gemm::packed_b_len(cv.cout, kdim)];
+    let mut ps = PackScratch::default();
+    let (col, apack, bpack) = gemm::conv_scratch_sizes(cv);
+    ps.ensure(col, apack, bpack);
+    (wpack, wpack_t, ps)
+}
+
+fn conv_parity(case: &ConvCase) -> Result<(), String> {
+    let cv = Conv2d::new(case.h, case.w, case.cin, case.cout, case.k, case.stride, case.same);
+    let mut rng = Rng::new(case.seed);
+    let in_len = case.batch * case.h * case.w * case.cin;
+    let out_len = case.batch * cv.oh * cv.ow * case.cout;
+    let mut x = randv(in_len, &mut rng);
+    sparsify(&mut x, &mut rng);
+    let kern = randv(case.k * case.k * case.cin * case.cout, &mut rng);
+    let dy = randv(out_len, &mut rng);
+    let kdim = gemm::conv_kdim(&cv);
+    let (mut wpack, mut wpack_t, mut ps) = conv_scratch(&cv);
+
+    // forward
+    let mut out_n = vec![0.0f32; out_len];
+    let mut out_b = vec![0.0f32; out_len];
+    cv.forward_naive(case.batch, &x, &kern, &mut out_n);
+    gemm::pack_b(kdim, cv.cout, &kern, &mut wpack);
+    gemm::conv_forward(&cv, case.batch, &x, &wpack, &mut out_b, &mut ps);
+    bits_eq(&out_n, &out_b).map_err(|e| format!("forward: {e}"))?;
+
+    // fused backward (dx + dk); dx pre-seeded to model multi-consumer `+=`
+    let seed_dx = randv(in_len, &mut rng);
+    let mut dx_n = seed_dx.clone();
+    let mut dx_b = seed_dx;
+    let mut dk_n = vec![0.0f32; kern.len()];
+    let mut dk_b = vec![0.0f32; kern.len()];
+    cv.backward_naive(case.batch, &x, &kern, &dy, &mut dx_n, &mut dk_n);
+    gemm::pack_b_t(cv.cout, kdim, &kern, &mut wpack_t);
+    gemm::conv_backward(&cv, case.batch, &x, Some(&wpack_t), &dy, Some(&mut dx_b), &mut dk_b, &mut ps);
+    bits_eq(&dx_n, &dx_b).map_err(|e| format!("backward dx: {e}"))?;
+    bits_eq(&dk_n, &dk_b).map_err(|e| format!("backward dk: {e}"))?;
+
+    // weights-only backward (the stem-conv path)
+    let mut dkw_n = vec![0.0f32; kern.len()];
+    let mut dkw_b = vec![0.0f32; kern.len()];
+    cv.backward_weights_naive(case.batch, &x, &dy, &mut dkw_n);
+    gemm::conv_backward(&cv, case.batch, &x, None, &dy, None, &mut dkw_b, &mut ps);
+    bits_eq(&dkw_n, &dkw_b).map_err(|e| format!("backward_weights dk: {e}"))
+}
+
+#[test]
+fn blocked_conv_is_bitwise_equal_to_naive_over_random_shapes() {
+    check(0xC0541_u64, 60, &ConvGen, conv_parity);
+}
+
+/// Hand-picked edge geometries the random generator might visit rarely:
+/// 1×1 unit conv (the packing fast path), k = input extent (single
+/// output position), stride 2 with SAME padding on odd extents, and a
+/// cout exactly at / one past the NR panel boundary.
+#[test]
+fn blocked_conv_edge_geometries_are_bitwise_equal() {
+    let cases = [
+        ConvCase { h: 4, w: 4, cin: 3, cout: 8, k: 1, stride: 1, same: false, batch: 3, seed: 1 },
+        ConvCase { h: 3, w: 3, cin: 2, cout: 4, k: 3, stride: 1, same: false, batch: 1, seed: 2 },
+        ConvCase { h: 7, w: 5, cin: 4, cout: 16, k: 3, stride: 2, same: true, batch: 5, seed: 3 },
+        ConvCase { h: 6, w: 6, cin: 2, cout: 17, k: 5, stride: 2, same: true, batch: 2, seed: 4 },
+        ConvCase { h: 5, w: 5, cin: 1, cout: 1, k: 5, stride: 1, same: true, batch: 7, seed: 5 },
+    ];
+    for case in &cases {
+        conv_parity(case).unwrap_or_else(|e| panic!("{case:?}: {e}"));
+    }
+}
+
+/// One randomized dense parity case.
+#[derive(Clone, Debug)]
+struct DenseCase {
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    seed: u64,
+}
+
+struct DenseGen;
+
+impl Gen for DenseGen {
+    type Value = DenseCase;
+
+    fn generate(&self, rng: &mut Rng) -> DenseCase {
+        DenseCase {
+            rows: [1usize, 2, 3, 5, 7, 9][rng.below(6)],
+            cin: 1 + rng.below(40),
+            cout: 1 + rng.below(40),
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, v: &DenseCase) -> Vec<DenseCase> {
+        let mut out = Vec::new();
+        if v.rows > 1 {
+            out.push(DenseCase { rows: 1, ..v.clone() });
+        }
+        if v.cin > 1 {
+            out.push(DenseCase { cin: v.cin / 2, ..v.clone() });
+        }
+        if v.cout > 1 {
+            out.push(DenseCase { cout: v.cout / 2, ..v.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn blocked_dense_is_bitwise_equal_to_naive_over_random_shapes() {
+    check(0xDE45E_u64, 80, &DenseGen, |case| {
+        let DenseCase { rows, cin, cout, seed } = *case;
+        let mut rng = Rng::new(seed);
+        let mut a = randv(rows * cin, &mut rng);
+        sparsify(&mut a, &mut rng);
+        let kern = randv(cin * cout, &mut rng);
+        let bias = randv(cout, &mut rng);
+        let dy = randv(rows * cout, &mut rng);
+        let mut wpack = vec![0.0f32; gemm::packed_b_len(cin, cout)];
+        let mut wpack_t = vec![0.0f32; gemm::packed_b_len(cout, cin)];
+        let mut ps = PackScratch::default();
+        let (apack, bpack) = gemm::dense_scratch_sizes(rows, cin, cout);
+        ps.ensure(0, apack, bpack);
+
+        // forward (bias-seeded chains)
+        let mut out_n = vec![0.0f32; rows * cout];
+        let mut out_b = vec![0.0f32; rows * cout];
+        ops::dense_forward_naive(rows, cin, cout, &a, &kern, &bias, &mut out_n);
+        gemm::pack_b(cin, cout, &kern, &mut wpack);
+        gemm::dense_forward(rows, cin, cout, &a, &wpack, &bias, &mut out_b, &mut ps);
+        bits_eq(&out_n, &out_b).map_err(|e| format!("forward: {e}"))?;
+
+        // backward: da pre-seeded (multi-consumer `+=`), dk zero-seeded
+        // (shard protocol), db via the shared bias_backward path
+        let seed_da = randv(rows * cin, &mut rng);
+        let mut da_n = seed_da.clone();
+        let mut da_b = seed_da;
+        let mut dk_n = vec![0.0f32; kern.len()];
+        let mut dk_b = vec![0.0f32; kern.len()];
+        let mut db_n = vec![0.0f32; cout];
+        let mut db_b = vec![0.0f32; cout];
+        ops::dense_backward_naive(rows, cin, cout, &a, &kern, &dy, &mut da_n, &mut dk_n, &mut db_n);
+        gemm::pack_b_t(cout, cin, &kern, &mut wpack_t);
+        gemm::dense_backward(rows, cin, cout, &a, &wpack_t, &dy, &mut da_b, &mut dk_b, &mut ps);
+        ops::bias_backward(rows, cout, &dy, &mut db_b);
+        bits_eq(&da_n, &da_b).map_err(|e| format!("backward da: {e}"))?;
+        bits_eq(&dk_n, &dk_b).map_err(|e| format!("backward dk: {e}"))?;
+        bits_eq(&db_n, &db_b).map_err(|e| format!("backward db: {e}"))
+    });
+}
+
+/// The executor's partition decomposition (disjoint row blocks + zeroed
+/// per-partition dk shards merged in partition order) over the blocked
+/// kernels equals one whole-batch naive call — the end-to-end form of
+/// the §8/§9 composition argument.
+#[test]
+fn partitioned_blocked_conv_matches_whole_batch_naive() {
+    let cv = Conv2d::new(6, 6, 3, 10, 3, 1, true);
+    let batch = 7usize;
+    let mut rng = Rng::new(99);
+    let in_st = 6 * 6 * 3;
+    let out_st = cv.oh * cv.ow * 10;
+    let mut x = randv(batch * in_st, &mut rng);
+    sparsify(&mut x, &mut rng);
+    let kern = randv(3 * 3 * 3 * 10, &mut rng);
+    let dy = randv(batch * out_st, &mut rng);
+    let kdim = gemm::conv_kdim(&cv);
+
+    // whole-batch naive reference
+    let mut dx_ref = vec![0.0f32; batch * in_st];
+    let mut dk_parts: Vec<Vec<f32>> = Vec::new();
+    let mut dx_blk = vec![0.0f32; batch * in_st];
+    cv.backward_naive(batch, &x, &kern, &dy, &mut dx_ref, &mut vec![0.0f32; kern.len()]);
+
+    // partitioned blocked path: 3 uneven row blocks, one dk shard each
+    let (mut wpack, mut wpack_t, mut ps) = conv_scratch(&cv);
+    gemm::pack_b(kdim, cv.cout, &kern, &mut wpack);
+    gemm::pack_b_t(cv.cout, kdim, &kern, &mut wpack_t);
+    let cuts = [0usize, 3, 4, 7];
+    for p in 0..3 {
+        let (lo, hi) = (cuts[p], cuts[p + 1]);
+        let rows = hi - lo;
+        let mut dk_shard = vec![0.0f32; kern.len()];
+        gemm::conv_backward(
+            &cv,
+            rows,
+            &x[lo * in_st..hi * in_st],
+            Some(&wpack_t),
+            &dy[lo * out_st..hi * out_st],
+            Some(&mut dx_blk[lo * in_st..hi * in_st]),
+            &mut dk_shard,
+            &mut ps,
+        );
+        dk_parts.push(dk_shard);
+    }
+    // dx: disjoint row blocks — must equal the whole-batch reference
+    for (i, (a, b)) in dx_ref.iter().zip(&dx_blk).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "dx mismatch at {i}");
+    }
+    // dk: per-partition shards merged in partition order must equal the
+    // same naive per-partition composition (what the executor computes)
+    let mut dk_ref_merged = vec![0.0f32; kern.len()];
+    for p in 0..3 {
+        let (lo, hi) = (cuts[p], cuts[p + 1]);
+        let mut dk_shard = vec![0.0f32; kern.len()];
+        let mut dx_scratch = vec![0.0f32; (hi - lo) * in_st];
+        cv.backward_naive(hi - lo, &x[lo * in_st..hi * in_st], &kern, &dy[lo * out_st..hi * out_st], &mut dx_scratch, &mut dk_shard);
+        for (d, &v) in dk_ref_merged.iter_mut().zip(&dk_shard) {
+            *d += v;
+        }
+    }
+    let mut dk_blk_merged = vec![0.0f32; kern.len()];
+    for shard in &dk_parts {
+        for (d, &v) in dk_blk_merged.iter_mut().zip(shard) {
+            *d += v;
+        }
+    }
+    for (i, (a, b)) in dk_ref_merged.iter().zip(&dk_blk_merged).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "dk mismatch at {i}");
+    }
+}

@@ -138,3 +138,35 @@ fn fork_for_eval_is_isolated_and_exact() {
     assert_eq!(base_eval.accuracy.to_bits(), after.accuracy.to_bits());
     assert_eq!(base_eval.loss.to_bits(), after.loss.to_bits());
 }
+
+/// Multi-batch evaluation pipelines batch groups over forked executors
+/// when threads > 1, with a per-batch merge in batch order — so the
+/// pipelined result must be bit-identical to the 1-thread serial loop,
+/// and repeated evaluation through the cached forks must be bit-stable.
+#[test]
+fn pipelined_multi_batch_eval_is_bit_identical_across_thread_counts() {
+    let mut results: Vec<(u64, u64)> = Vec::new();
+    for &threads in &THREAD_COUNTS {
+        let be = backend(threads);
+        let mut s = ModelSession::load(&be, "alexnet_mini", 7).expect("load");
+        let data = SynthDataset::new(be.dataset().clone(), 7);
+        let l = s.num_qlayers();
+        let w4 = BitAssignment::uniform(l, 4);
+        let b = be.dataset().train_batch;
+        for i in 0..2 {
+            let (x, y) = data.train_batch(i, b);
+            s.train_step(&x, &y, &w4, &w4, 0.02).expect("step");
+        }
+        let (xs, ys) = data.eval_set(be.dataset().eval_batch * 4);
+        let r = s.evaluate(&xs, &ys, &w4, &w4).expect("eval");
+        // cached-fork reuse must not perturb a repeat evaluation
+        let r2 = s.evaluate(&xs, &ys, &w4, &w4).expect("repeat eval");
+        assert_eq!(r.accuracy.to_bits(), r2.accuracy.to_bits(), "threads={threads}: repeat");
+        assert_eq!(r.loss.to_bits(), r2.loss.to_bits(), "threads={threads}: repeat");
+        results.push((r.accuracy.to_bits(), r.loss.to_bits()));
+    }
+    assert!(
+        results.windows(2).all(|w| w[0] == w[1]),
+        "pipelined eval diverged across thread counts: {results:?}"
+    );
+}
