@@ -1,0 +1,200 @@
+//! Deployment-runtime benchmark: packed integer inference
+//! (`deploy::DeployEngine`) against the fake-quant f32 reference
+//! (`ModelSession::evaluate`) on real eval batches, with the
+//! measured-vs-predicted columns that close the paper's
+//! hardware-awareness loop:
+//!
+//! * **bytes**: the packed artifact's exact weight payload vs the
+//!   `quant/size.rs` memory model (asserted equal before timing);
+//! * **latency**: ns/image packed vs fake-quant, plus the shift-add PPA
+//!   model's predicted cycles/MAC for the same assignment;
+//! * **accuracy**: packed vs fake-quant accuracy and per-sample argmax
+//!   agreement (asserted == 100% before timing — the bench doubles as a
+//!   parity smoke test).
+//!
+//! Run via `cargo bench --bench bench_deploy`; pass `-- --quick` for the
+//! CI smoke mode (two archs, one batch). Emits `results/BENCH_deploy.json`
+//! with paired `<metric>/<arch>/<assignment>` rows (`bytes_*` rows carry
+//! bytes in the ns_per_iter field — deterministic values the regression
+//! gate tracks under its usual ratio threshold; the *exact*
+//! measured == predicted equality is asserted right here before timing,
+//! and pinned independently by `rust/tests/deploy_parity.rs`). The full
+//! run also prints the README's measured-vs-predicted table in markdown.
+
+use sigmaquant::data::SynthDataset;
+use sigmaquant::deploy::{argmax, format, DeployEngine, QuantizedModel};
+use sigmaquant::hw::{model_ppa, ShiftAddConfig};
+use sigmaquant::quant::{int8_size_bytes, model_size_bytes, BitAssignment};
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
+use sigmaquant::util::pool::Parallelism;
+use sigmaquant::util::timer::{bench, BenchReport};
+
+struct Row {
+    arch: String,
+    label: String,
+    bytes: f64,
+    int8_frac: f64,
+    acc_ref: f64,
+    acc_dep: f64,
+    ns_ref: f64,
+    ns_dep: f64,
+    cycles_per_mac: f64,
+}
+
+fn assignments(layers: usize) -> Vec<(String, BitAssignment)> {
+    let cycle: Vec<u8> = (0..layers).map(|i| [8u8, 6, 4, 2][i % 4]).collect();
+    vec![
+        ("w8a8".into(), BitAssignment::uniform(layers, 8)),
+        ("w4a8".into(), BitAssignment::uniform(layers, 4)),
+        ("w2a8".into(), BitAssignment::uniform(layers, 2)),
+        ("mixed".into(), BitAssignment::new(cycle).expect("cycle bits are valid")),
+    ]
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (iters, budget_ms) = if quick { (1, 1.0) } else { (5, 200.0) };
+    let archs: Vec<&str> = if quick {
+        vec!["alexnet_mini", "resnet18_mini"]
+    } else {
+        vec![
+            "alexnet_mini",
+            "resnet18_mini",
+            "resnet34_mini",
+            "resnet50_mini",
+            "inception_mini",
+        ]
+    };
+    let eval_n = if quick { 128 } else { 256 };
+    let threads = 1usize; // single-lane timings; results are thread-count-invariant
+    println!("# bench_deploy — packed integer engine vs fake-quant reference ({eval_n} samples)");
+    let mut report = BenchReport::new("deploy");
+    let mut rows: Vec<Row> = Vec::new();
+
+    let backend = NativeBackend::with_parallelism(Parallelism::new(threads));
+    let data = SynthDataset::new(backend.dataset().clone(), 7);
+    let (xs, ys) = data.eval_set(eval_n);
+    let b = backend.dataset().eval_batch;
+    let img = backend.dataset().image_len();
+    let classes = backend.dataset().classes;
+
+    for arch in &archs {
+        let mut session = ModelSession::load(&backend, arch, 7).expect("load arch");
+        // a few float steps so the logits are structured, not raw-init noise
+        let fb = BitAssignment::raw(vec![32; session.num_qlayers()]);
+        let mut cursor = 0u64;
+        for _ in 0..if quick { 2 } else { 6 } {
+            let (x, y) = data.train_batch(cursor, session.dataset().train_batch);
+            cursor += 1;
+            session.train_step(&x, &y, &fb, &fb, 0.05).expect("train step");
+        }
+        let exec = backend.native_executor(arch).expect("native executor");
+        let a8 = BitAssignment::uniform(session.num_qlayers(), 8);
+
+        for (label, wbits) in assignments(session.num_qlayers()) {
+            // export + byte accounting (measured == predicted, exactly)
+            let model = QuantizedModel::export(&session.arch, session.params(), &wbits, &a8)
+                .expect("export");
+            let bytes = model.weight_bytes();
+            let predicted = model_size_bytes(&session.arch, &wbits);
+            assert_eq!(bytes, predicted, "{arch}/{label}: packed bytes vs size model");
+            // round-trip through the serialized artifact before running
+            let blob = format::serialize(&model);
+            let model = format::deserialize(&blob, &session.arch).expect("deserialize");
+            let engine = DeployEngine::from_backend(&model, &backend).expect("engine");
+
+            // parity smoke: argmax agreement on every eval batch. A
+            // mismatch is only legal when the reference's own top-2
+            // margin is inside the numerical tie band (the two paths
+            // round the same exact value differently) — see
+            // rust/tests/deploy_parity.rs for the pinned tolerance.
+            const TIE_EPS: f32 = 1e-3;
+            let mut agree = 0usize;
+            for bi in 0..ys.len() / b {
+                let x = &xs[bi * b * img..(bi + 1) * b * img];
+                let lr = exec
+                    .eval_logits(session.params(), x, b, &wbits, &a8)
+                    .expect("reference logits");
+                let ld = engine.infer_logits(x, b).expect("packed logits");
+                for (s, (pr, pd)) in
+                    argmax(&lr, classes).into_iter().zip(argmax(&ld, classes)).enumerate()
+                {
+                    if pr == pd {
+                        agree += 1;
+                    } else {
+                        let row = &lr[s * classes..(s + 1) * classes];
+                        let margin = row[pr] - row[pd];
+                        assert!(
+                            margin.abs() <= TIE_EPS,
+                            "{arch}/{label}: argmax mismatch beyond the tie band ({margin})"
+                        );
+                    }
+                }
+            }
+
+            let acc_ref = session.evaluate(&xs, &ys, &wbits, &a8).expect("ref eval").accuracy;
+            let acc_dep = engine.evaluate(&xs, &ys).expect("packed eval").accuracy;
+            let t_ref = bench(iters, budget_ms, || {
+                session.evaluate(&xs, &ys, &wbits, &a8).expect("ref eval");
+            });
+            let t_dep = bench(iters, budget_ms, || {
+                engine.evaluate(&xs, &ys).expect("packed eval");
+            });
+            let ppa = model_ppa(
+                &session.arch,
+                &session.all_qlayer_weights(),
+                &wbits,
+                ShiftAddConfig::default(),
+            );
+            let ns_ref = t_ref.mean_ns / eval_n as f64;
+            let ns_dep = t_dep.mean_ns / eval_n as f64;
+            println!(
+                "{arch:<16} {label:<6} {bytes:>10.1} B ({:>5.1}% int8) | {:>8.1} ns/img packed vs {:>8.1} fq ({:.2}x) | acc {:.3} vs {:.3} | argmax {agree}/{}",
+                100.0 * bytes / int8_size_bytes(&session.arch),
+                ns_dep,
+                ns_ref,
+                ns_ref / ns_dep,
+                acc_dep,
+                acc_ref,
+                ys.len(),
+            );
+            report.add(&format!("deploy_eval/{arch}/{label}"), threads, ns_dep);
+            report.add(&format!("fakequant_eval/{arch}/{label}"), threads, ns_ref);
+            report.add(&format!("bytes_measured/{arch}/{label}"), threads, bytes);
+            report.add(&format!("bytes_predicted/{arch}/{label}"), threads, predicted);
+            rows.push(Row {
+                arch: arch.to_string(),
+                label,
+                bytes,
+                int8_frac: bytes / int8_size_bytes(&session.arch),
+                acc_ref,
+                acc_dep,
+                ns_ref,
+                ns_dep,
+                cycles_per_mac: ppa.mean_cycles_per_mac,
+            });
+        }
+    }
+
+    if !quick {
+        println!("\nREADME table (| arch | bits | measured B | % int8 | ns/img packed | ns/img fakequant | pred cycles/MAC | acc packed | acc fq |):");
+        for r in &rows {
+            println!(
+                "| `{}` | {} | {:.1} | {:.1}% | {:.0} | {:.0} | {:.2} | {:.3} | {:.3} |",
+                r.arch,
+                r.label,
+                r.bytes,
+                100.0 * r.int8_frac,
+                r.ns_dep,
+                r.ns_ref,
+                r.cycles_per_mac,
+                r.acc_dep,
+                r.acc_ref
+            );
+        }
+    }
+    match report.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench report write failed: {e}"),
+    }
+}

@@ -1,0 +1,183 @@
+//! Densely bit-packed storage for sub-byte integer fields.
+//!
+//! The deployment format stores each layer's weight codes at exactly its
+//! searched bitwidth: `weight_count · bits` payload bits, LSB-first
+//! within each byte, with no per-element padding — so the physical
+//! payload matches the paper's memory accounting
+//! ([`crate::quant::size::model_size_bytes`], Σ count·b/8 bytes) *by
+//! construction*, not approximately. Fields are unsigned `bits`-wide
+//! values; the signed weight codes are offset-encoded by the caller
+//! ([`super::model::PackedLayer`]).
+//!
+//! Trailing bits of the last byte are zero and [`BitPacked::from_raw`]
+//! rejects anything else, which makes serialize → deserialize →
+//! serialize byte-identical (pinned by `rust/tests/deploy_parity.rs`).
+
+use anyhow::{bail, Result};
+
+/// A vector of `len` unsigned `bits`-wide fields packed LSB-first into a
+/// byte stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitPacked {
+    bits: u8,
+    len: usize,
+    data: Vec<u8>,
+}
+
+/// Physical bytes needed for `len` fields of `bits` width.
+#[inline]
+pub fn packed_byte_len(len: usize, bits: u8) -> usize {
+    (len * bits as usize).div_ceil(8)
+}
+
+impl BitPacked {
+    /// Pack `values` at `bits` width. Panics if a value does not fit —
+    /// the caller controls the code range, so an overflow is a logic
+    /// error, not an input error.
+    pub fn pack(values: &[u32], bits: u8) -> BitPacked {
+        assert!((1..=16).contains(&bits), "field width {bits} out of range");
+        let mut data = Vec::with_capacity(packed_byte_len(values.len(), bits));
+        let mut acc: u64 = 0;
+        let mut nbits: u32 = 0;
+        for &v in values {
+            assert!(u64::from(v) < (1u64 << bits), "value {v} does not fit in {bits} bits");
+            acc |= u64::from(v) << nbits;
+            nbits += u32::from(bits);
+            while nbits >= 8 {
+                data.push((acc & 0xff) as u8);
+                acc >>= 8;
+                nbits -= 8;
+            }
+        }
+        if nbits > 0 {
+            data.push((acc & 0xff) as u8);
+        }
+        BitPacked { bits, len: values.len(), data }
+    }
+
+    /// Reconstruct from a raw byte stream (deserialization). Validates
+    /// the byte length and that unused trailing bits are zero, so a
+    /// round-trip through [`BitPacked::data`] is byte-identical.
+    pub fn from_raw(bits: u8, len: usize, data: Vec<u8>) -> Result<BitPacked> {
+        if !(1..=16).contains(&bits) {
+            bail!("field width {bits} out of range [1, 16]");
+        }
+        let want = packed_byte_len(len, bits);
+        if data.len() != want {
+            bail!("bit-packed payload is {} bytes, expected {want}", data.len());
+        }
+        let used_bits = len * bits as usize;
+        let tail = used_bits % 8;
+        if tail != 0 {
+            let last = *data.last().expect("tail != 0 implies non-empty");
+            if last >> tail != 0 {
+                bail!("bit-packed payload has non-zero trailing bits");
+            }
+        }
+        Ok(BitPacked { bits, len, data })
+    }
+
+    /// Field width in bits.
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Number of packed fields.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exact payload size in bits (`len · bits`).
+    pub fn bit_len(&self) -> u64 {
+        self.len as u64 * u64::from(self.bits)
+    }
+
+    /// The raw packed byte stream.
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Field `i` (LSB-first within the stream).
+    pub fn get(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len);
+        let bits = self.bits as usize;
+        let bit0 = i * bits;
+        let mut v: u32 = 0;
+        for b in 0..bits {
+            let bit = bit0 + b;
+            if (self.data[bit / 8] >> (bit % 8)) & 1 == 1 {
+                v |= 1 << b;
+            }
+        }
+        v
+    }
+
+    /// Unpack every field, streaming through the byte buffer once.
+    pub fn unpack(&self) -> Vec<u32> {
+        let bits = u32::from(self.bits);
+        let mask = (1u64 << bits) - 1;
+        let mut out = Vec::with_capacity(self.len);
+        let mut acc: u64 = 0;
+        let mut nbits: u32 = 0;
+        let mut bytes = self.data.iter();
+        for _ in 0..self.len {
+            while nbits < bits {
+                acc |= u64::from(*bytes.next().expect("payload length validated")) << nbits;
+                nbits += 8;
+            }
+            out.push((acc & mask) as u32);
+            acc >>= bits;
+            nbits -= bits;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(5);
+        for bits in 1u8..=16 {
+            let n = 1 + rng.below(200) as usize;
+            let values: Vec<u32> =
+                (0..n).map(|_| (rng.below(1 << bits)) as u32).collect();
+            let p = BitPacked::pack(&values, bits);
+            assert_eq!(p.bit_len(), (n * bits as usize) as u64);
+            assert_eq!(p.data().len(), packed_byte_len(n, bits));
+            assert_eq!(p.unpack(), values, "bits={bits}");
+            for (i, &v) in values.iter().enumerate() {
+                assert_eq!(p.get(i), v, "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_raw_roundtrips_and_validates() {
+        let values = [3u32, 0, 7, 5, 1];
+        let p = BitPacked::pack(&values, 3);
+        let q = BitPacked::from_raw(3, values.len(), p.data().to_vec()).unwrap();
+        assert_eq!(p, q);
+        // wrong length
+        assert!(BitPacked::from_raw(3, values.len(), vec![0u8; 1]).is_err());
+        // dirty trailing bits: 5 fields × 3 bits = 15 bits, top bit unused
+        let mut dirty = p.data().to_vec();
+        *dirty.last_mut().unwrap() |= 0x80;
+        assert!(BitPacked::from_raw(3, values.len(), dirty).is_err());
+    }
+
+    #[test]
+    fn sub_byte_payload_is_exact() {
+        // 10 fields × 2 bits = 20 bits = 2.5 bytes → 3 physical bytes
+        let p = BitPacked::pack(&[1u32; 10], 2);
+        assert_eq!(p.bit_len(), 20);
+        assert_eq!(p.data().len(), 3);
+    }
+}

@@ -1,0 +1,831 @@
+//! The packed integer inference engine: executes a [`QuantizedModel`]
+//! with real integer arithmetic (DESIGN.md §10).
+//!
+//! # Execution model
+//!
+//! The engine interprets the same SSA graph as the native training
+//! backend, but conv/dense nodes run on the integer kernel core
+//! ([`super::igemm`]): the node's input activation is quantized to
+//! integer codes `u ∈ [0, 2^a − 1]` at the layer's searched activation
+//! bitwidth (per-tensor asymmetric, the *same* lattice formula as the
+//! fake-quant trainer — `runtime/native/fakequant.rs`), the frozen
+//! weight-code panels are multiplied in exact i32 arithmetic, and a
+//! per-channel epilogue applies the zero-point correction and
+//! requantizes the accumulator back to f32:
+//!
+//! ```text
+//! S[pos, c] = Σ_k  u[k] · w_code[k, c]                        (i32, exact)
+//! y[pos, c] = (Δ_a·Δ_w[c]) · (S − zp·Σ_k w_code[k, c])  (+ bias[c])
+//! ```
+//!
+//! (the correction term is exact — integers in f64 — with the
+//! per-position valid-tap weight sums precomputed at load, so padded
+//! conv edges are handled; keeping the codes uncentered is what bounds
+//! them by `2^a − 1` even when the tensor's range excludes zero and
+//! `zp` itself is unbounded). This is algebraically identical to the
+//! fake-quant reference's `conv(fq_act(x), fq_w(W))` — the two paths
+//! differ only in f32 rounding (the reference accumulates an f32 chain;
+//! the engine sums exactly and rounds once). The activation quantizer
+//! then re-snaps both paths to a shared lattice at every subsequent
+//! layer, which keeps the divergence from compounding;
+//! `rust/tests/deploy_parity.rs` pins logits within a tolerance and
+//! argmax-exact agreement on every zoo architecture.
+//!
+//! # Graph fusion
+//!
+//! At load, an export-time fusion pass folds each conv's BatchNorm (and
+//! a trailing ReLU) into the requantization epilogue when the
+//! intermediate value has no other consumer — the zoo's
+//! `conv → bn → relu` blocks become *one* node that goes straight from
+//! i32 accumulators to the normalized, activated f32 output without
+//! materializing the conv result. BN batch statistics are recomputed per
+//! batch (the zoo trains with batch-stat BN and keeps no running
+//! averages, so a static fold does not exist — DESIGN.md §10 discusses
+//! this); only the O(channels) affine is frozen. Dense nodes fuse a
+//! trailing ReLU the same way.
+//!
+//! # Determinism and parallelism
+//!
+//! Conv/dense nodes fan out over the fixed batch-row partition
+//! (`util::pool`), BN statistics merge per-partition partials in
+//! partition order, and everything integer is exact — so the engine is
+//! bit-identical at every thread count, same contract as the trainer
+//! (DESIGN.md §8).
+
+use super::igemm::{self, IPackScratch};
+use super::model::QuantizedModel;
+use crate::manifest::{ArchSpec, DatasetSpec};
+use crate::runtime::backend::{Backend, EvalResult};
+use crate::runtime::native::fakequant::act_minmax;
+use crate::runtime::native::graph::{NativeArch, Node};
+use crate::runtime::native::ops::{self, Conv2d};
+use crate::runtime::NativeBackend;
+use crate::util::pool::{partition_rows, split_rows, Parallelism, Task, FIXED_PARTITIONS};
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::sync::Arc;
+
+/// Nodes whose estimated work (≈ MACs or touched elements) falls below
+/// this run their partition inline — same scheduling-only gate as the
+/// trainer's. Results are unchanged either way.
+const MIN_PARALLEL_WORK: usize = 16 * 1024;
+
+/// Fused execution recipe of one integer conv/dense node.
+struct GemmPlan {
+    /// Quantizable-layer index.
+    q: usize,
+    /// Manifest index of the conv/dense bias (dense always has one).
+    bias: Option<usize>,
+    /// Fused BatchNorm: manifest indices of (scale, bias).
+    bn: Option<(usize, usize)>,
+    /// Fused trailing ReLU.
+    relu: bool,
+    /// SSA value that receives the epilogue output (the last fused node).
+    out_vid: usize,
+}
+
+/// What the interpreter does at each SSA value.
+enum Step {
+    /// Produced by an earlier node's fused epilogue — nothing to run.
+    Fused,
+    /// Integer conv/dense with requantization epilogue.
+    Gemm(GemmPlan),
+    /// Plain f32 op interpreted directly.
+    Direct,
+}
+
+/// Frozen per-layer kernel data.
+struct LayerPanels {
+    /// Weight codes in `ipack_b` panel layout.
+    wpack: Vec<i16>,
+    /// Per-output-channel dequantization scales Δ_w.
+    scales: Vec<f32>,
+    /// Zero-point correction sums: `Σ_{valid taps} w_code` per output
+    /// position and channel (`positions × cout`; `positions = 1` for
+    /// dense). Edge positions of padded convs sum fewer taps, so this is
+    /// the ones-image convolution of the weight codes, computed once at
+    /// load.
+    wsum: Vec<i32>,
+}
+
+/// Reusable inference buffers; grown monotonically.
+struct DeployScratch {
+    batch: usize,
+    /// f32 activations per materialized SSA value (fused-away
+    /// intermediates stay empty — their values are never built).
+    acts: Vec<Vec<f32>>,
+    /// Uncentered activation codes of the current GEMM node's input.
+    qcode: Vec<i16>,
+    /// i32 accumulators of the current GEMM node's output.
+    acc: Vec<i32>,
+    /// Per-channel requantization factors Δ_a·Δ_w of the current node
+    /// (reused across nodes — no per-node allocation in the serve path).
+    fc: Vec<f32>,
+    /// Per-channel bias (or zeros) of the current node, reused likewise.
+    yb: Vec<f32>,
+    /// Fused-BN batch statistics of the current node (mean, 1/σ),
+    /// reused likewise — the deploy mirror of the trainer's
+    /// `bn_mean`/`bn_inv` arena buffers.
+    bn_mean: Vec<f32>,
+    bn_inv: Vec<f32>,
+    /// Per-partition integer packing scratch.
+    parts: Vec<IPackScratch>,
+}
+
+/// Split `acts` into the (read) input value and the (write) output value
+/// (SSA ids ascend, so `i < o`).
+fn io<'a>(acts: &'a mut [Vec<f32>], i: usize, o: usize, ilen: usize) -> (&'a [f32], &'a mut Vec<f32>) {
+    debug_assert!(i < o);
+    let (lo, hi) = acts.split_at_mut(o);
+    (&lo[i][..ilen], &mut hi[0])
+}
+
+/// The inputs of one SSA node.
+fn node_inputs(node: &Node) -> Vec<usize> {
+    match node {
+        Node::Input => vec![],
+        Node::Conv { input, .. }
+        | Node::Dense { input, .. }
+        | Node::Bn { input, .. }
+        | Node::Relu { input }
+        | Node::MaxPool { input, .. }
+        | Node::AvgPoolSame { input, .. }
+        | Node::Gap { input }
+        | Node::Flatten { input } => vec![*input],
+        Node::Add { a, b } => vec![*a, *b],
+        Node::Concat { ins } => ins.clone(),
+    }
+}
+
+/// Quantize one partition of activation rows to *uncentered* codes
+/// `u = clamp(round(v/Δ) + zp, 0, levels)` — the identical lattice the
+/// fake-quant trainer multiplies by Δ (`fake_quant_act_range`), kept as
+/// integers. Codes are always in `[0, 2^a − 1]` regardless of the
+/// tensor's range, so they fit i16 unconditionally; the zero point is
+/// subtracted in the epilogue via the per-channel weight-code sums
+/// (`Σ u·w − zp·Σw` — zp itself is unbounded when the range excludes
+/// zero, so centering the codes instead would overflow).
+fn quantize_codes(x: &[f32], levels: f32, scale: f32, zp: f32, out: &mut [i16]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = ((v / scale).round_ties_even() + zp).clamp(0.0, levels) as i16;
+    }
+}
+
+/// Index of the max logit per sample — the prediction the parity tests
+/// and the deploy CLI compare between engines.
+pub fn argmax(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Forward-only integer executor over one frozen [`QuantizedModel`].
+pub struct DeployEngine {
+    arch: Arc<NativeArch>,
+    dataset: DatasetSpec,
+    abits: Vec<u8>,
+    panels: Vec<LayerPanels>,
+    /// Float glue parameters by manifest index (kernels stay empty).
+    fparams: Vec<Vec<f32>>,
+    plan: Vec<Step>,
+    conv_dims: Vec<Option<Conv2d>>,
+    materialized: Vec<bool>,
+    /// Largest per-sample input / output element count over GEMM nodes.
+    max_in: usize,
+    max_out: usize,
+    par: Parallelism,
+    scratch: RefCell<DeployScratch>,
+}
+
+impl DeployEngine {
+    /// Build an engine over an explicit graph + dataset + pool handle.
+    pub fn new(
+        model: &QuantizedModel,
+        arch: Arc<NativeArch>,
+        dataset: DatasetSpec,
+        par: Parallelism,
+    ) -> Result<DeployEngine> {
+        model.validate(&arch.spec)?;
+        let n = arch.nodes.len();
+        let mut conv_dims = vec![None; n];
+        for (vid, node) in arch.nodes.iter().enumerate() {
+            if let Node::Conv { input, k, stride, same, q, .. } = node {
+                let (h, w, cin) = arch.shapes[*input].hwc();
+                let cout = arch.spec.qlayers[*q].out_channels;
+                conv_dims[vid] = Some(Conv2d::new(h, w, cin, cout, *k, *stride, *same));
+            }
+        }
+        // i32 exactness guard: the worst-case accumulator of every layer
+        // must fit (always true for the zoo; fails loudly otherwise)
+        for (vid, node) in arch.nodes.iter().enumerate() {
+            let (kdim, q) = match node {
+                Node::Conv { q, .. } => {
+                    let cv = conv_dims[vid].expect("conv dims precomputed");
+                    (cv.k * cv.k * cv.cin, *q)
+                }
+                Node::Dense { input, q, .. } => (arch.shapes[*input].numel(), *q),
+                _ => continue,
+            };
+            let bound = igemm::max_abs_acc(kdim, model.abits.bits[q], model.wbits.bits[q]);
+            if bound > i32::MAX as i64 {
+                bail!("layer {q}: worst-case accumulator {bound} exceeds i32");
+            }
+        }
+        // freeze weight codes into integer B panels, with the all-taps
+        // column sums as the default zero-point correction (exact for
+        // dense and for padding-free convs; padded convs overwrite with
+        // the per-position ones-conv below)
+        let mut panels = Vec::with_capacity(model.layers.len());
+        for (qi, p) in model.layers.iter().enumerate() {
+            let codes = p.unpack_codes();
+            let kdim = codes.len() / p.out_channels;
+            let mut wpack = vec![0i16; igemm::packed_b_len(kdim, p.out_channels)];
+            igemm::ipack_b(kdim, p.out_channels, &codes, &mut wpack);
+            debug_assert_eq!(
+                arch.spec.qlayers[qi].fanin * arch.spec.qlayers[qi].out_channels,
+                codes.len()
+            );
+            let mut wsum = vec![0i32; p.out_channels];
+            for row in codes.chunks_exact(p.out_channels) {
+                for (s, &c) in wsum.iter_mut().zip(row) {
+                    *s += i32::from(c);
+                }
+            }
+            panels.push(LayerPanels { wpack, scales: p.scales.clone(), wsum });
+        }
+        // per-position correction sums for convs: convolve a ones image
+        // with the weight codes (edge positions of padded convs see
+        // fewer valid taps)
+        for (vid, node) in arch.nodes.iter().enumerate() {
+            if let Node::Conv { q, .. } = node {
+                let cv = conv_dims[vid].expect("conv dims precomputed");
+                let m = cv.oh * cv.ow;
+                let kdim = cv.k * cv.k * cv.cin;
+                let ones = vec![1i16; cv.h * cv.w * cv.cin];
+                let mut ps = IPackScratch::default();
+                ps.ensure(igemm::packed_a_len(m, kdim));
+                let mut wsum = vec![0i32; m * cv.cout];
+                igemm::iconv_forward(&cv, 1, &ones, &panels[*q].wpack, &mut wsum, &mut ps);
+                panels[*q].wsum = wsum;
+            }
+        }
+        let mut fparams: Vec<Vec<f32>> = vec![Vec::new(); arch.spec.num_params()];
+        for (idx, v) in &model.float_params {
+            fparams[*idx as usize] = v.clone();
+        }
+        // fusion pass: consumer counts, then chain conv → bn → relu /
+        // dense → relu wherever each intermediate has a single consumer
+        let mut count = vec![0usize; n];
+        let mut sole: Vec<Option<usize>> = vec![None; n];
+        for (vid, node) in arch.nodes.iter().enumerate() {
+            for i in node_inputs(node) {
+                count[i] += 1;
+                sole[i] = Some(vid);
+            }
+        }
+        count[arch.out_id] += 1; // the logits feed the classifier head
+        let mut plan: Vec<Step> = (0..n).map(|_| Step::Direct).collect();
+        for (vid, node) in arch.nodes.iter().enumerate() {
+            let (q, bias, can_bn) = match node {
+                Node::Conv { q, bias, .. } => (*q, *bias, true),
+                Node::Dense { q, bias, .. } => (*q, Some(*bias), false),
+                _ => continue,
+            };
+            let mut out = vid;
+            let mut bn = None;
+            if can_bn && count[out] == 1 {
+                if let Some(cvid) = sole[out] {
+                    if let Node::Bn { input, scale, bias: bnb } = &arch.nodes[cvid] {
+                        if *input == out {
+                            bn = Some((*scale, *bnb));
+                            plan[cvid] = Step::Fused;
+                            out = cvid;
+                        }
+                    }
+                }
+            }
+            let mut relu = false;
+            if count[out] == 1 {
+                if let Some(rvid) = sole[out] {
+                    if let Node::Relu { input } = &arch.nodes[rvid] {
+                        if *input == out {
+                            relu = true;
+                            plan[rvid] = Step::Fused;
+                            out = rvid;
+                        }
+                    }
+                }
+            }
+            plan[vid] = Step::Gemm(GemmPlan { q, bias, bn, relu, out_vid: out });
+        }
+        // only values some step actually writes get activation buffers
+        let mut materialized = vec![false; n];
+        materialized[0] = true;
+        for (vid, step) in plan.iter().enumerate() {
+            match step {
+                Step::Direct => materialized[vid] = true,
+                Step::Gemm(g) => materialized[g.out_vid] = true,
+                Step::Fused => {}
+            }
+        }
+        let mut max_in = 0usize;
+        let mut max_out = 0usize;
+        let mut max_cout = 0usize;
+        for (vid, node) in arch.nodes.iter().enumerate() {
+            if let Node::Conv { input, .. } | Node::Dense { input, .. } = node {
+                max_in = max_in.max(arch.shapes[*input].numel());
+                max_out = max_out.max(arch.shapes[vid].numel());
+                max_cout = max_cout.max(arch.shapes[vid].channels());
+            }
+        }
+        let scratch = DeployScratch {
+            batch: 0,
+            acts: vec![Vec::new(); n],
+            qcode: Vec::new(),
+            acc: Vec::new(),
+            fc: vec![0.0; max_cout],
+            yb: vec![0.0; max_cout],
+            bn_mean: vec![0.0; max_cout],
+            bn_inv: vec![0.0; max_cout],
+            parts: Vec::new(),
+        };
+        Ok(DeployEngine {
+            arch,
+            dataset,
+            abits: model.abits.bits.clone(),
+            panels,
+            fparams,
+            plan,
+            conv_dims,
+            materialized,
+            max_in,
+            max_out,
+            par,
+            scratch: RefCell::new(scratch),
+        })
+    }
+
+    /// Convenience constructor: resolve the graph, dataset geometry and
+    /// pool handle from a [`NativeBackend`].
+    pub fn from_backend(model: &QuantizedModel, backend: &NativeBackend) -> Result<DeployEngine> {
+        DeployEngine::new(
+            model,
+            backend.arch_graph(&model.arch_name)?,
+            backend.dataset().clone(),
+            backend.parallelism(),
+        )
+    }
+
+    pub fn arch(&self) -> &ArchSpec {
+        &self.arch.spec
+    }
+
+    pub fn dataset(&self) -> &DatasetSpec {
+        &self.dataset
+    }
+
+    /// Number of conv/dense nodes whose BatchNorm was folded into the
+    /// requantization epilogue (reported by the deploy CLI).
+    pub fn fused_bn_count(&self) -> usize {
+        self.plan
+            .iter()
+            .filter(|s| matches!(s, Step::Gemm(g) if g.bn.is_some()))
+            .count()
+    }
+
+    fn ensure_batch(&self, scr: &mut DeployScratch, batch: usize) {
+        if scr.batch >= batch {
+            return;
+        }
+        for (vid, shape) in self.arch.shapes.iter().enumerate() {
+            if !self.materialized[vid] {
+                continue;
+            }
+            let want = batch * shape.numel();
+            if scr.acts[vid].len() < want {
+                scr.acts[vid].resize(want, 0.0);
+            }
+        }
+        if scr.qcode.len() < batch * self.max_in {
+            scr.qcode.resize(batch * self.max_in, 0);
+        }
+        if scr.acc.len() < batch * self.max_out {
+            scr.acc.resize(batch * self.max_out, 0);
+        }
+        // per-partition packing arenas: conv panels are batch-independent,
+        // dense panels scale with the (loose, monotone) row bound
+        let r_bound = batch.div_ceil(FIXED_PARTITIONS).max(1);
+        let mut apack = 0usize;
+        for (vid, node) in self.arch.nodes.iter().enumerate() {
+            match node {
+                Node::Conv { .. } => {
+                    let cv = self.conv_dims[vid].expect("conv dims precomputed");
+                    apack = apack.max(igemm::packed_a_len(cv.oh * cv.ow, cv.k * cv.k * cv.cin));
+                }
+                Node::Dense { input, .. } => {
+                    apack = apack.max(igemm::packed_a_len(r_bound, self.arch.shapes[*input].numel()));
+                }
+                _ => {}
+            }
+        }
+        let nparts = partition_rows(batch).len();
+        if scr.parts.len() < nparts {
+            scr.parts.resize_with(nparts, IPackScratch::default);
+        }
+        for ps in scr.parts.iter_mut() {
+            ps.ensure(apack);
+        }
+        scr.batch = batch;
+    }
+
+    /// One integer conv/dense node: dynamic act-quant → integer GEMM →
+    /// fused requantize(+BN)(+ReLU) epilogue.
+    fn run_gemm(&self, scr: &mut DeployScratch, vid: usize, g: &GemmPlan, batch: usize) {
+        let shapes = &self.arch.shapes;
+        let node = &self.arch.nodes[vid];
+        let input = match node {
+            Node::Conv { input, .. } | Node::Dense { input, .. } => *input,
+            _ => unreachable!("gemm plan on a non-gemm node"),
+        };
+        let in_st = shapes[input].numel();
+        let out_st = shapes[vid].numel();
+        let cout = shapes[vid].channels();
+        let rows_total = batch * out_st / cout;
+        let chunks = partition_rows(batch);
+        let par = &self.par;
+        let DeployScratch { acts, qcode, acc, fc, yb, bn_mean, bn_inv, parts, .. } = scr;
+
+        // 1. per-tensor dynamic range (min/max is exact, so one serial
+        //    pass equals the trainer's partitioned reduction)
+        let ab = self.abits[g.q];
+        let levels = ((1u64 << ab) - 1) as f32;
+        let (amin, amax) = {
+            let xin: &[f32] = &acts[input][..batch * in_st];
+            act_minmax(xin)
+        };
+        let scale_a = (amax - amin).max(1e-8) / levels;
+        let zp = (-amin / scale_a).round_ties_even();
+
+        // 2. quantize the input rows to *uncentered* codes (disjoint
+        //    rows) — the zero point is corrected in the epilogue, which
+        //    is what keeps the codes bounded by 2^a − 1 (see
+        //    `quantize_codes`)
+        {
+            let xin: &[f32] = &acts[input][..batch * in_st];
+            let qchunks = split_rows(&mut qcode[..batch * in_st], &chunks, in_st);
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+            for (qc, r) in qchunks.into_iter().zip(chunks.iter().cloned()) {
+                tasks.push(Box::new(move || {
+                    quantize_codes(&xin[r.start * in_st..r.end * in_st], levels, scale_a, zp, qc);
+                }));
+            }
+            par.run_gated(batch * in_st >= MIN_PARALLEL_WORK, tasks);
+        }
+
+        // 3. integer GEMM into the i32 accumulator (disjoint rows)
+        let qc: &[i16] = &qcode[..batch * in_st];
+        let wpack_ref: &[i16] = &self.panels[g.q].wpack;
+        match node {
+            Node::Conv { .. } => {
+                let cv = self.conv_dims[vid].expect("conv dims precomputed");
+                let acc_chunks = split_rows(&mut acc[..batch * out_st], &chunks, out_st);
+                let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                for ((ac, ps), r) in
+                    acc_chunks.into_iter().zip(parts.iter_mut()).zip(chunks.iter().cloned())
+                {
+                    tasks.push(Box::new(move || {
+                        let rows = r.end - r.start;
+                        igemm::iconv_forward(
+                            &cv,
+                            rows,
+                            &qc[r.start * in_st..r.end * in_st],
+                            wpack_ref,
+                            ac,
+                            ps,
+                        );
+                    }));
+                }
+                let work = batch * out_st * cv.k * cv.k * cv.cin;
+                par.run_gated(work >= MIN_PARALLEL_WORK, tasks);
+            }
+            Node::Dense { .. } => {
+                let acc_chunks = split_rows(&mut acc[..batch * out_st], &chunks, out_st);
+                let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                for ((ac, ps), r) in
+                    acc_chunks.into_iter().zip(parts.iter_mut()).zip(chunks.iter().cloned())
+                {
+                    tasks.push(Box::new(move || {
+                        let rows = r.end - r.start;
+                        igemm::idense_forward(
+                            rows,
+                            in_st,
+                            out_st,
+                            &qc[r.start * in_st..r.end * in_st],
+                            wpack_ref,
+                            ac,
+                            ps,
+                        );
+                    }));
+                }
+                par.run_gated(batch * in_st * out_st >= MIN_PARALLEL_WORK, tasks);
+            }
+            _ => unreachable!(),
+        }
+
+        // 4. requantization epilogue. The zero-point correction
+        //    `(S − zp·Σw)` centers the exact accumulator (integers in
+        //    f64, exact below 2^53), then the per-channel factor
+        //    Δ_a·Δ_w[c] maps it onto the fake-quant reference's value
+        //    lattice; bias / folded BN / ReLU ride along in the same
+        //    pass. `requant` below is that per-row mapping — positions of
+        //    padded convs index their own valid-tap sum.
+        let m_pos = out_st / cout;
+        let zp64 = zp as f64;
+        let wsum: &[i32] = &self.panels[g.q].wsum;
+        debug_assert_eq!(wsum.len(), m_pos * cout);
+        for (o, &s) in fc[..cout].iter_mut().zip(&self.panels[g.q].scales) {
+            *o = scale_a * s;
+        }
+        match g.bias {
+            Some(i) => yb[..cout].copy_from_slice(&self.fparams[i]),
+            None => yb[..cout].fill(0.0),
+        }
+        let fc_ref: &[f32] = &fc[..cout];
+        let yb_ref: &[f32] = &yb[..cout];
+        let relu = g.relu;
+        let requant = move |ri: usize, a: i32, c: usize| -> f32 {
+            let ws = wsum[(ri % m_pos) * cout + c];
+            let centered = (a as f64 - zp64 * ws as f64) as f32;
+            fc_ref[c] * centered + yb_ref[c]
+        };
+        let row_chunks = partition_rows(rows_total);
+        let par_ok = rows_total * cout >= MIN_PARALLEL_WORK;
+        let acc_ref: &[i32] = &acc[..rows_total * cout];
+        match g.bn {
+            None => {
+                let out_chunks =
+                    split_rows(&mut acts[g.out_vid][..rows_total * cout], &row_chunks, cout);
+                let mut tasks: Vec<Task<'_>> = Vec::with_capacity(row_chunks.len());
+                for (oc, r) in out_chunks.into_iter().zip(row_chunks.iter().cloned()) {
+                    tasks.push(Box::new(move || {
+                        let arows = acc_ref[r.start * cout..r.end * cout].chunks_exact(cout);
+                        for ((ri, orow), arow) in
+                            (r.start..r.end).zip(oc.chunks_exact_mut(cout)).zip(arows)
+                        {
+                            for c in 0..cout {
+                                let mut v = requant(ri, arow[c], c);
+                                if relu {
+                                    v = v.max(0.0);
+                                }
+                                orow[c] = v;
+                            }
+                        }
+                    }));
+                }
+                par.run_gated(par_ok, tasks);
+            }
+            Some((scale_idx, bias_idx)) => {
+                // batch statistics over the requantized values, two-stage
+                // like the trainer's BN (f64 partials merged in partition
+                // order)
+                let m = rows_total as f64;
+                let sums = par.map_chunks_gated(par_ok, &row_chunks, |_, r| {
+                    let mut s = vec![0.0f64; cout];
+                    for (ri, arow) in
+                        (r.start..r.end).zip(acc_ref[r.start * cout..r.end * cout].chunks_exact(cout))
+                    {
+                        for (c, sc) in s.iter_mut().enumerate() {
+                            *sc += requant(ri, arow[c], c) as f64;
+                        }
+                    }
+                    s
+                });
+                let mut mu = vec![0.0f64; cout];
+                for s in &sums {
+                    for (a, &v) in mu.iter_mut().zip(s) {
+                        *a += v;
+                    }
+                }
+                for v in mu.iter_mut() {
+                    *v /= m;
+                }
+                let mu_ref: &[f64] = &mu;
+                let vars = par.map_chunks_gated(par_ok, &row_chunks, |_, r| {
+                    let mut s = vec![0.0f64; cout];
+                    for (ri, arow) in
+                        (r.start..r.end).zip(acc_ref[r.start * cout..r.end * cout].chunks_exact(cout))
+                    {
+                        for (c, sc) in s.iter_mut().enumerate() {
+                            let d = requant(ri, arow[c], c) as f64 - mu_ref[c];
+                            *sc += d * d;
+                        }
+                    }
+                    s
+                });
+                let mut var = vec![0.0f64; cout];
+                for s in &vars {
+                    for (a, &v) in var.iter_mut().zip(s) {
+                        *a += v;
+                    }
+                }
+                for c in 0..cout {
+                    bn_mean[c] = mu[c] as f32;
+                    bn_inv[c] = (1.0 / (var[c] / m + ops::BN_EPS).sqrt()) as f32;
+                }
+                let mean_ref: &[f32] = &bn_mean[..cout];
+                let inv_ref: &[f32] = &bn_inv[..cout];
+                let bns: &[f32] = &self.fparams[scale_idx];
+                let bnb: &[f32] = &self.fparams[bias_idx];
+                let out_chunks =
+                    split_rows(&mut acts[g.out_vid][..rows_total * cout], &row_chunks, cout);
+                let mut tasks: Vec<Task<'_>> = Vec::with_capacity(row_chunks.len());
+                for (oc, r) in out_chunks.into_iter().zip(row_chunks.iter().cloned()) {
+                    tasks.push(Box::new(move || {
+                        let arows = acc_ref[r.start * cout..r.end * cout].chunks_exact(cout);
+                        for ((ri, orow), arow) in
+                            (r.start..r.end).zip(oc.chunks_exact_mut(cout)).zip(arows)
+                        {
+                            for c in 0..cout {
+                                let y = requant(ri, arow[c], c);
+                                let mut v =
+                                    (y - mean_ref[c]) * inv_ref[c] * bns[c] + bnb[c];
+                                if relu {
+                                    v = v.max(0.0);
+                                }
+                                orow[c] = v;
+                            }
+                        }
+                    }));
+                }
+                par.run_gated(par_ok, tasks);
+            }
+        }
+    }
+
+    /// One plain f32 node (pools, residual adds, concat, GAP — the glue
+    /// between integer layers). These are memory-bound and tiny next to
+    /// the GEMMs, so they run serially.
+    fn run_direct(&self, scr: &mut DeployScratch, vid: usize, batch: usize) {
+        let shapes = &self.arch.shapes;
+        let acts = &mut scr.acts;
+        match &self.arch.nodes[vid] {
+            Node::Input => unreachable!("input is always node 0"),
+            Node::Conv { .. } | Node::Dense { .. } => {
+                unreachable!("conv/dense are always planned as Gemm")
+            }
+            Node::Bn { input, scale, bias } => {
+                // unfused BN (not emitted by the zoo, kept for generality)
+                let c = shapes[vid].channels();
+                let rows_total = batch * shapes[vid].numel() / c;
+                let (xin, out) = io(acts, *input, vid, rows_total * c);
+                let mut mean = vec![0.0f32; c];
+                let mut inv = vec![0.0f32; c];
+                ops::bn_forward(
+                    rows_total,
+                    c,
+                    xin,
+                    &self.fparams[*scale],
+                    &self.fparams[*bias],
+                    out,
+                    &mut mean,
+                    &mut inv,
+                );
+            }
+            Node::Relu { input } => {
+                let n = batch * shapes[vid].numel();
+                let (xin, out) = io(acts, *input, vid, n);
+                ops::relu_forward(n, xin, out);
+            }
+            Node::Add { a, b } => {
+                let n = batch * shapes[vid].numel();
+                let (lo, hi) = acts.split_at_mut(vid);
+                let (av, bv, out) = (&lo[*a][..n], &lo[*b][..n], &mut hi[0]);
+                for i in 0..n {
+                    out[i] = av[i] + bv[i];
+                }
+            }
+            Node::Concat { ins } => {
+                let (h, w, c) = shapes[vid].hwc();
+                let (lo, hi) = acts.split_at_mut(vid);
+                let out = &mut hi[0];
+                for pos in 0..batch * h * w {
+                    let mut off = 0;
+                    for &inp in ins {
+                        let cc = shapes[inp].channels();
+                        out[pos * c + off..pos * c + off + cc]
+                            .copy_from_slice(&lo[inp][pos * cc..(pos + 1) * cc]);
+                        off += cc;
+                    }
+                }
+            }
+            Node::MaxPool { input, window, stride } => {
+                let (h, w, c) = shapes[*input].hwc();
+                let (xin, out) = io(acts, *input, vid, batch * h * w * c);
+                ops::maxpool_forward(batch, h, w, c, *window, *stride, xin, out);
+            }
+            Node::AvgPoolSame { input, window } => {
+                let (h, w, c) = shapes[*input].hwc();
+                let (xin, out) = io(acts, *input, vid, batch * h * w * c);
+                ops::avgpool_same_forward(batch, h, w, c, *window, xin, out);
+            }
+            Node::Gap { input } => {
+                let (h, w, c) = shapes[*input].hwc();
+                let (xin, out) = io(acts, *input, vid, batch * h * w * c);
+                ops::gap_forward(batch, h, w, c, xin, out);
+            }
+            Node::Flatten { input } => {
+                let n = batch * shapes[vid].numel();
+                let (xin, out) = io(acts, *input, vid, n);
+                out[..n].copy_from_slice(xin);
+            }
+        }
+    }
+
+    fn forward(&self, scr: &mut DeployScratch, x: &[f32], batch: usize) {
+        scr.acts[0][..x.len()].copy_from_slice(x);
+        for vid in 1..self.arch.nodes.len() {
+            match &self.plan[vid] {
+                Step::Fused => {}
+                Step::Gemm(g) => self.run_gemm(scr, vid, g, batch),
+                Step::Direct => self.run_direct(scr, vid, batch),
+            }
+        }
+    }
+
+    /// Raw logits of a batch (any batch size).
+    pub fn infer_logits(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let img = self.dataset.image_len();
+        if batch == 0 || x.len() != batch * img {
+            bail!("batch geometry mismatch: {batch} samples vs {} pixels (image_len {img})", x.len());
+        }
+        let classes = self.dataset.classes;
+        let mut guard = self.scratch.borrow_mut();
+        let scr = &mut *guard;
+        self.ensure_batch(scr, batch);
+        self.forward(scr, x, batch);
+        Ok(scr.acts[self.arch.out_id][..batch * classes].to_vec())
+    }
+
+    /// Forward one batch; returns `(correct_count, mean_batch_loss)` —
+    /// the same contract as `ModelExecutor::eval_batch`.
+    pub fn eval_batch(&self, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let batch = y.len();
+        let classes = self.dataset.classes as i32;
+        if let Some(&bad) = y.iter().find(|&&v| v < 0 || v >= classes) {
+            bail!("label {bad} out of range [0, {classes})");
+        }
+        let classes = self.dataset.classes;
+        let mut guard = self.scratch.borrow_mut();
+        let scr = &mut *guard;
+        let img = self.dataset.image_len();
+        if batch == 0 || x.len() != batch * img {
+            bail!("batch geometry mismatch: {batch} labels vs {} pixels", x.len());
+        }
+        self.ensure_batch(scr, batch);
+        self.forward(scr, x, batch);
+        let (loss, acc) = ops::softmax_ce(
+            batch,
+            classes,
+            &scr.acts[self.arch.out_id][..batch * classes],
+            y,
+            None,
+        );
+        Ok(((acc * batch as f32).round(), loss))
+    }
+
+    /// Evaluate a multi-batch set (len must be a multiple of
+    /// `eval_batch`), merging per-batch results in batch order — the
+    /// same ordered merge as `ModelSession::evaluate`.
+    pub fn evaluate(&self, xs: &[f32], ys: &[i32]) -> Result<EvalResult> {
+        let b = self.dataset.eval_batch;
+        let img = self.dataset.image_len();
+        if ys.is_empty() || ys.len() % b != 0 {
+            bail!("eval set size {} must be a positive multiple of {b}", ys.len());
+        }
+        let batches = ys.len() / b;
+        let mut correct = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        for bi in 0..batches {
+            let x = &xs[bi * b * img..(bi + 1) * b * img];
+            let y = &ys[bi * b..(bi + 1) * b];
+            let (c, l) = self.eval_batch(x, y)?;
+            correct += c as f64;
+            loss_sum += l as f64;
+        }
+        Ok(EvalResult {
+            accuracy: correct / ys.len() as f64,
+            loss: loss_sum / batches as f64,
+            samples: ys.len(),
+        })
+    }
+}

@@ -1,0 +1,243 @@
+//! Versioned binary serialization of [`QuantizedModel`] — the `.sqdm`
+//! deployment artifact, sibling of the float checkpoint format in
+//! [`crate::runtime::params_io`].
+//!
+//! Layout (version 1, all integers little-endian):
+//!
+//! ```text
+//! magic "SQDM" | u16 version | u16 name_len | arch name (utf-8)
+//! u32 L (quantizable layers) | u32 F (float param arrays)
+//! wbits: L × u8 | abits: L × u8
+//! L × layer:  u32 out_channels | u64 weight_count
+//!             out_channels × f32 scales
+//!             u64 payload_len | payload bytes (bit-packed codes,
+//!             LSB-first, exactly ceil(weight_count · bits / 8) bytes)
+//! F × param:  u32 manifest param index | u64 len | len × f32
+//! ```
+//!
+//! The writer emits fields in one fixed order and the bit-packed
+//! payloads forbid dirty trailing bits, so serialize → deserialize →
+//! serialize is byte-identical — the round-trip invariant the deploy
+//! tests pin. Deserialization validates everything against the
+//! architecture manifest ([`QuantizedModel::validate`]), so a stale or
+//! truncated artifact fails loudly.
+
+use super::bitpack::{packed_byte_len, BitPacked};
+use super::model::{PackedLayer, QuantizedModel};
+use crate::manifest::ArchSpec;
+use crate::quant::BitAssignment;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SQDM";
+const VERSION: u16 = 1;
+
+/// Serialize to the version-1 byte layout.
+pub fn serialize(m: &QuantizedModel) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    let name = m.arch_name.as_bytes();
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name);
+    out.extend_from_slice(&(m.layers.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(m.float_params.len() as u32).to_le_bytes());
+    out.extend_from_slice(&m.wbits.bits);
+    out.extend_from_slice(&m.abits.bits);
+    for p in &m.layers {
+        out.extend_from_slice(&(p.out_channels as u32).to_le_bytes());
+        out.extend_from_slice(&(p.weight_count as u64).to_le_bytes());
+        for &s in &p.scales {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out.extend_from_slice(&(p.codes.data().len() as u64).to_le_bytes());
+        out.extend_from_slice(p.codes.data());
+    }
+    for (idx, v) in &m.float_params {
+        out.extend_from_slice(&idx.to_le_bytes());
+        out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+        for &x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Cursor-style reader over the serialized byte stream.
+struct Reader<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() < n {
+            bail!("truncated deployment artifact ({} bytes short)", n - self.buf.len());
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Deserialize and validate against the architecture manifest.
+pub fn deserialize(bytes: &[u8], arch: &ArchSpec) -> Result<QuantizedModel> {
+    let mut r = Reader { buf: bytes };
+    if r.take(4)? != MAGIC {
+        bail!("bad magic (not a SigmaQuant deployment artifact)");
+    }
+    let version = r.u16()?;
+    if version != VERSION {
+        bail!("artifact version {version}, this build reads {VERSION}");
+    }
+    let name_len = r.u16()? as usize;
+    let name = std::str::from_utf8(r.take(name_len)?)
+        .context("artifact arch name is not utf-8")?
+        .to_string();
+    let l = r.u32()? as usize;
+    let f = r.u32()? as usize;
+    if l != arch.num_qlayers() {
+        bail!("artifact has {l} layers, manifest {:?} has {}", arch.name, arch.num_qlayers());
+    }
+    let wbits = BitAssignment::raw(r.take(l)?.to_vec());
+    let abits = BitAssignment::raw(r.take(l)?.to_vec());
+    let mut layers = Vec::with_capacity(l);
+    for qi in 0..l {
+        let out_channels = r.u32()? as usize;
+        let weight_count = r.u64()? as usize;
+        // validate against the manifest BEFORE any length arithmetic or
+        // allocation — a corrupt header must fail loudly, not overflow
+        // `len · bits` or allocate a crafted buffer size
+        let q = &arch.qlayers[qi];
+        if out_channels != q.out_channels || weight_count != q.weight_count {
+            bail!(
+                "layer {qi}: artifact geometry {out_channels}×{weight_count} vs manifest {}×{}",
+                q.out_channels,
+                q.weight_count
+            );
+        }
+        let scales = r.f32s(out_channels)?;
+        let payload_len = r.u64()? as usize;
+        let bits = wbits.bits[qi];
+        if !(2..=8).contains(&bits) {
+            bail!("layer {qi}: undeployable weight bitwidth {bits}");
+        }
+        if payload_len != packed_byte_len(weight_count, bits) {
+            bail!(
+                "layer {qi}: payload {payload_len} bytes, expected {}",
+                packed_byte_len(weight_count, bits)
+            );
+        }
+        let codes = BitPacked::from_raw(bits, weight_count, r.take(payload_len)?.to_vec())
+            .with_context(|| format!("layer {qi} codes"))?;
+        layers.push(PackedLayer { bits, out_channels, weight_count, scales, codes });
+    }
+    let mut float_params = Vec::with_capacity(f);
+    for _ in 0..f {
+        let idx = r.u32()?;
+        let len = r.u64()? as usize;
+        // same rule as the layers: manifest-validate before length math
+        let spec = arch
+            .params
+            .get(idx as usize)
+            .ok_or_else(|| anyhow::anyhow!("float param index {idx} out of range"))?;
+        if len != spec.size {
+            bail!("float param {idx}: {len} elems vs manifest {}", spec.size);
+        }
+        float_params.push((idx, r.f32s(len)?));
+    }
+    if !r.buf.is_empty() {
+        bail!("{} trailing bytes after the artifact payload", r.buf.len());
+    }
+    let m = QuantizedModel { arch_name: name, wbits, abits, layers, float_params };
+    m.validate(arch)?;
+    Ok(m)
+}
+
+/// Write a model to disk (creates parent directories).
+pub fn save_model(path: impl AsRef<Path>, m: &QuantizedModel) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, serialize(m)).with_context(|| format!("writing {path:?}"))
+}
+
+/// Read and validate a model from disk.
+pub fn load_model(path: impl AsRef<Path>, arch: &ArchSpec) -> Result<QuantizedModel> {
+    let path = path.as_ref();
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?
+        .read_to_end(&mut bytes)?;
+    deserialize(&bytes, arch).with_context(|| format!("parsing {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::size::tests::toy_arch;
+    use crate::util::rng::Rng;
+
+    fn toy_model(arch: &ArchSpec, seed: u64, bits: Vec<u8>) -> QuantizedModel {
+        let mut rng = Rng::new(seed);
+        let params: Vec<Vec<f32>> = arch
+            .params
+            .iter()
+            .map(|p| (0..p.size).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let ba = BitAssignment::new(bits).unwrap();
+        QuantizedModel::export(arch, &params, &ba, &BitAssignment::uniform(arch.num_qlayers(), 8))
+            .unwrap()
+    }
+
+    #[test]
+    fn serialize_roundtrip_is_byte_identical() {
+        let arch = toy_arch(&[30, 64]);
+        let m = toy_model(&arch, 7, vec![2, 6]);
+        let bytes = serialize(&m);
+        let back = deserialize(&bytes, &arch).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(serialize(&back), bytes);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let arch = toy_arch(&[16, 8]);
+        let m = toy_model(&arch, 3, vec![4, 8]);
+        let path = std::env::temp_dir().join("sq_deploy_test.sqdm");
+        save_model(&path, &m).unwrap();
+        let back = load_model(&path, &arch).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_arch_and_corruption() {
+        let arch = toy_arch(&[16, 8]);
+        let other = toy_arch(&[16]);
+        let m = toy_model(&arch, 3, vec![4, 8]);
+        let bytes = serialize(&m);
+        assert!(deserialize(&bytes, &other).is_err());
+        assert!(deserialize(&bytes[..bytes.len() - 1], &arch).is_err());
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(deserialize(&bad_magic, &arch).is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(deserialize(&trailing, &arch).is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! Bit-packed integer deployment runtime: execute searched bitwidth
+//! assignments *for real* (DESIGN.md §10).
+//!
+//! The coordinator's output is a per-layer bitwidth assignment that the
+//! training stack only ever simulates with f32 fake-quant. This
+//! subsystem is the serving leg: it freezes a trained
+//! [`crate::runtime::ModelSession`] + assignment into a
+//! [`QuantizedModel`] (sub-byte bit-packed integer weights whose payload
+//! equals `quant/size.rs`'s accounting *exactly*, per-channel scales,
+//! float glue parameters), serializes it as a versioned `.sqdm` artifact
+//! ([`format`]), and executes it with forward-only integer kernels
+//! ([`igemm`], i32 accumulation) behind a graph interpreter that fuses
+//! conv + BatchNorm + ReLU into the requantization epilogue
+//! ([`DeployEngine`]).
+//!
+//! * [`bitpack`] — LSB-first sub-byte field packing (the storage format).
+//! * [`model`] — [`QuantizedModel`] / [`PackedLayer`]: export + size
+//!   accounting.
+//! * [`format`] — versioned binary serialize/deserialize (`.sqdm`),
+//!   byte-identical round-trip.
+//! * [`igemm`] — integer mirror of the blocked GEMM core: packed panels,
+//!   register-tiled i32 micro-kernel, im2col with the 1×1 fast path.
+//! * [`engine`] — the interpreter: dynamic per-tensor activation
+//!   quantization, partition-parallel integer GEMMs, fused epilogues;
+//!   bit-identical at every thread count.
+//!
+//! The `deploy` CLI subcommand and `benches/bench_deploy.rs` close the
+//! loop by running packed models on eval batches and reporting measured
+//! bytes / latency / accuracy next to the `quant/size.rs` and `hw/ppa.rs`
+//! predictions. Parity with the fake-quant reference (logits within a
+//! pinned tolerance, argmax-exact) is property-tested across the zoo in
+//! `rust/tests/deploy_parity.rs`.
+
+pub mod bitpack;
+pub mod engine;
+pub mod format;
+pub mod igemm;
+pub mod model;
+
+pub use bitpack::BitPacked;
+pub use engine::{argmax, DeployEngine};
+pub use format::{load_model, save_model};
+pub use model::{PackedLayer, QuantizedModel};

@@ -1,0 +1,253 @@
+//! Freezing a trained session into a deployable [`QuantizedModel`].
+//!
+//! Export takes the host-side float parameters plus the searched weight
+//! and activation bit assignments and produces the artifact a real edge
+//! deployment would ship:
+//!
+//! * per quantizable layer, the integer weight codes of
+//!   [`crate::quant::quantize_to_int`] — the *same lattice* the
+//!   fake-quant training forward snaps weights to — offset-encoded and
+//!   bit-packed at exactly the searched width
+//!   ([`super::bitpack::BitPacked`]), with the per-output-channel scales;
+//! * every non-quantized parameter (conv/dense biases, BN scale/bias)
+//!   as plain f32 — these stay float on the edge device too (they are
+//!   O(channels), invisible next to the weights, and the paper's memory
+//!   objective deliberately excludes them: `quant/size.rs`).
+//!
+//! The packed weight payload is `Σ_ℓ weight_count(ℓ) · b_ℓ` bits, so
+//! [`QuantizedModel::weight_bytes`] equals
+//! [`crate::quant::size::model_size_bytes`] *exactly* — the deployment
+//! artifact is the proof of the search's memory accounting, not an
+//! estimate of it. `rust/tests/deploy_parity.rs` pins the equality on
+//! every zoo architecture.
+
+use super::bitpack::BitPacked;
+use crate::manifest::ArchSpec;
+use crate::quant::{quantize_to_int, BitAssignment};
+use anyhow::{bail, Result};
+
+/// One quantizable layer frozen to integer codes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedLayer {
+    /// Weight bitwidth this layer was packed at.
+    pub bits: u8,
+    pub out_channels: usize,
+    pub weight_count: usize,
+    /// Per-output-channel dequantization scale Δ_c.
+    pub scales: Vec<f32>,
+    /// Offset-encoded codes: stored field = `code + Q`, `Q = 2^(b-1)-1`,
+    /// so codes in `[-Q, Q]` occupy `[0, 2Q] ⊂ [0, 2^b - 2]`.
+    pub codes: BitPacked,
+}
+
+impl PackedLayer {
+    /// The symmetric code bound `Q = 2^(b-1) - 1` (also the storage
+    /// offset).
+    pub fn q_offset(bits: u8) -> i32 {
+        (1i32 << (bits - 1)) - 1
+    }
+
+    /// Decode the packed stream back to signed codes in `[-Q, Q]`.
+    pub fn unpack_codes(&self) -> Vec<i16> {
+        let q = Self::q_offset(self.bits) as i16;
+        self.codes.unpack().into_iter().map(|u| u as i16 - q).collect()
+    }
+}
+
+/// A frozen, deployable model: packed integer weights at the searched
+/// per-layer bitwidths plus the float "glue" parameters. Produced by
+/// [`QuantizedModel::export`], serialized by [`super::format`], executed
+/// by [`super::engine::DeployEngine`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedModel {
+    /// Zoo architecture this model was frozen from.
+    pub arch_name: String,
+    /// Per-layer weight bitwidths (the search output).
+    pub wbits: BitAssignment,
+    /// Per-layer activation bitwidths (the engine quantizes each
+    /// conv/dense input to this width at inference).
+    pub abits: BitAssignment,
+    /// One packed layer per quantizable layer, in qlayer order.
+    pub layers: Vec<PackedLayer>,
+    /// Non-quantized parameters as `(manifest param index, data)` pairs,
+    /// ascending by index; kernels are omitted (they live in `layers`).
+    pub float_params: Vec<(u32, Vec<f32>)>,
+}
+
+impl QuantizedModel {
+    /// Freeze `params` (manifest order, e.g. [`crate::runtime::ModelSession::params`])
+    /// under a searched assignment. Both assignments must be in the
+    /// deployable set `{2..8}` — float passthrough (≥ 31) has no integer
+    /// realization.
+    pub fn export(
+        arch: &ArchSpec,
+        params: &[Vec<f32>],
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+    ) -> Result<QuantizedModel> {
+        let l = arch.num_qlayers();
+        if wbits.len() != l || abits.len() != l {
+            bail!("assignment length {}/{} vs {l} quantizable layers", wbits.len(), abits.len());
+        }
+        if params.len() != arch.num_params() {
+            bail!("{} param arrays vs manifest {}", params.len(), arch.num_params());
+        }
+        for &b in wbits.bits.iter().chain(abits.bits.iter()) {
+            if !(2..=8).contains(&b) {
+                bail!("bitwidth {b} is not deployable (integer set is 2..=8)");
+            }
+        }
+        let mut layers = Vec::with_capacity(l);
+        for (qi, q) in arch.qlayers.iter().enumerate() {
+            let w = &params[q.param_idx];
+            if w.len() != q.weight_count {
+                bail!("layer {qi}: {} weights vs manifest {}", w.len(), q.weight_count);
+            }
+            let bits = wbits.bits[qi];
+            let ql = quantize_to_int(w, q.out_channels, bits);
+            let off = PackedLayer::q_offset(bits);
+            let fields: Vec<u32> = ql.codes.iter().map(|&c| (c + off) as u32).collect();
+            layers.push(PackedLayer {
+                bits,
+                out_channels: q.out_channels,
+                weight_count: q.weight_count,
+                scales: ql.scales,
+                codes: BitPacked::pack(&fields, bits),
+            });
+        }
+        let float_params = arch
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.qlayer.is_none())
+            .map(|(i, _)| (i as u32, params[i].clone()))
+            .collect();
+        Ok(QuantizedModel {
+            arch_name: arch.name.clone(),
+            wbits: wbits.clone(),
+            abits: abits.clone(),
+            layers,
+            float_params,
+        })
+    }
+
+    /// Exact packed weight payload in bytes (fractional when a layer's
+    /// bit count is not byte-aligned). Equals
+    /// [`crate::quant::size::model_size_bytes`] by construction.
+    pub fn weight_bytes(&self) -> f64 {
+        self.layers.iter().map(|p| p.codes.bit_len() as f64 / 8.0).sum()
+    }
+
+    /// Physical artifact payload: packed codes rounded up to whole bytes
+    /// per layer, plus scales and the float glue parameters (all f32).
+    pub fn container_bytes(&self) -> usize {
+        let codes: usize = self.layers.iter().map(|p| p.codes.data().len()).sum();
+        let scales: usize = self.layers.iter().map(|p| p.scales.len() * 4).sum();
+        let floats: usize = self.float_params.iter().map(|(_, v)| v.len() * 4).sum();
+        codes + scales + floats
+    }
+
+    /// Validate structural agreement with an architecture manifest.
+    pub fn validate(&self, arch: &ArchSpec) -> Result<()> {
+        if self.arch_name != arch.name {
+            bail!("model is for {:?}, manifest is {:?}", self.arch_name, arch.name);
+        }
+        let l = arch.num_qlayers();
+        if self.layers.len() != l || self.wbits.len() != l || self.abits.len() != l {
+            bail!("{} packed layers vs {l} quantizable layers", self.layers.len());
+        }
+        for (qi, (p, q)) in self.layers.iter().zip(&arch.qlayers).enumerate() {
+            if p.bits != self.wbits.bits[qi] {
+                bail!("layer {qi}: packed at {} bits but assignment says {}", p.bits, self.wbits.bits[qi]);
+            }
+            if !(2..=8).contains(&p.bits) || !(2..=8).contains(&self.abits.bits[qi]) {
+                bail!("layer {qi}: undeployable bitwidth");
+            }
+            if p.out_channels != q.out_channels
+                || p.weight_count != q.weight_count
+                || p.scales.len() != q.out_channels
+                || p.codes.len() != q.weight_count
+                || p.codes.bits() != p.bits
+            {
+                bail!("layer {qi}: packed geometry disagrees with the manifest");
+            }
+        }
+        let mut want: Vec<u32> = arch
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.qlayer.is_none())
+            .map(|(i, _)| i as u32)
+            .collect();
+        want.sort_unstable();
+        let got: Vec<u32> = self.float_params.iter().map(|(i, _)| *i).collect();
+        if got != want {
+            bail!("float parameter set disagrees with the manifest (got {got:?}, want {want:?})");
+        }
+        for (i, v) in &self.float_params {
+            if v.len() != arch.params[*i as usize].size {
+                bail!("float param {i}: {} elems vs manifest {}", v.len(), arch.params[*i as usize].size);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::size::{model_size_bytes, tests::toy_arch};
+    use crate::quant::quantize_dequantize;
+    use crate::util::rng::Rng;
+
+    fn toy_params(arch: &ArchSpec, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        arch.params
+            .iter()
+            .map(|p| (0..p.size).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn export_bytes_match_size_accounting_exactly() {
+        let arch = toy_arch(&[30, 64, 10]);
+        let params = toy_params(&arch, 3);
+        for bits in [2u8, 4, 6, 8] {
+            let ba = BitAssignment::uniform(3, bits);
+            let m = QuantizedModel::export(&arch, &params, &ba, &ba).unwrap();
+            assert_eq!(m.weight_bytes(), model_size_bytes(&arch, &ba), "bits={bits}");
+            m.validate(&arch).unwrap();
+        }
+        let mixed = BitAssignment::new(vec![2, 6, 8]).unwrap();
+        let m = QuantizedModel::export(&arch, &params, &mixed, &BitAssignment::uniform(3, 8)).unwrap();
+        assert_eq!(m.weight_bytes(), model_size_bytes(&arch, &mixed));
+    }
+
+    #[test]
+    fn codes_dequantize_to_the_fakequant_lattice() {
+        let arch = toy_arch(&[48]);
+        let params = toy_params(&arch, 9);
+        for bits in [2u8, 4, 8] {
+            let ba = BitAssignment::uniform(1, bits);
+            let m = QuantizedModel::export(&arch, &params, &ba, &ba).unwrap();
+            let p = &m.layers[0];
+            let codes = p.unpack_codes();
+            let deq: Vec<f32> = codes
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| c as f32 * p.scales[i % p.out_channels])
+                .collect();
+            assert_eq!(deq, quantize_dequantize(&params[0], 2, bits), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn export_rejects_undeployable_bits() {
+        let arch = toy_arch(&[16]);
+        let params = toy_params(&arch, 1);
+        let f32bits = BitAssignment::raw(vec![32]);
+        let b8 = BitAssignment::uniform(1, 8);
+        assert!(QuantizedModel::export(&arch, &params, &f32bits, &b8).is_err());
+        assert!(QuantizedModel::export(&arch, &params, &b8, &f32bits).is_err());
+    }
+}

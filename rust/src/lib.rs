@@ -17,6 +17,10 @@
 //!   [`runtime::ModelSession`] (host-side params, snapshot/restore), the
 //!   native CPU engine in [`runtime::native`], and the feature-gated PJRT
 //!   client that loads `artifacts/*.hlo.txt`.
+//! * [`deploy`] — the serving leg: freeze a trained session + searched
+//!   assignment into a bit-packed integer [`deploy::QuantizedModel`]
+//!   and execute it with real i32 kernels (`deploy` CLI subcommand,
+//!   `bench_deploy`), closing the loop on the hw-awareness claim.
 //! * [`quant`], [`stats`] — quantizer math, size/BOPs accounting, σ/KL.
 //! * [`hw`] — cycle-accurate shift-add MAC simulator + Table VI PPA model.
 //! * [`baselines`] — uniform / entropy / Hessian-proxy / greedy comparators.
@@ -41,6 +45,7 @@
 pub mod baselines;
 pub mod coordinator;
 pub mod data;
+pub mod deploy;
 pub mod experiments;
 pub mod hw;
 pub mod manifest;

@@ -7,14 +7,19 @@
 //! runs the two-phase search with user-specified boundary conditions,
 //! the paper's headline use-case ("adapt one model to many devices").
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
+use sigmaquant::coordinator::qat::run_qat;
 use sigmaquant::coordinator::{Objective, SearchConfig, SigmaQuant};
+use sigmaquant::deploy::{argmax, format, DeployEngine, QuantizedModel};
 use sigmaquant::experiments::common::{make_backend, Ctx};
 use sigmaquant::experiments::{ablation, fig3, fig4, fig5, table1,
                               table2, table3, table4, table5, table6};
-use sigmaquant::quant::int8_size_bytes;
+use sigmaquant::hw::{model_ppa, ShiftAddConfig};
+use sigmaquant::quant::{int8_size_bytes, model_size_bytes, BitAssignment};
+use sigmaquant::runtime::NativeBackend;
 use sigmaquant::util::cli::Args;
 use sigmaquant::util::pool::Parallelism;
+use std::time::Instant;
 
 const USAGE: &str = "\
 sigmaquant — hardware-aware heterogeneous quantization (paper reproduction)
@@ -25,6 +30,14 @@ COMMANDS
   quantize   run the two-phase search on one model
              --arch NAME  --size-frac F (of INT8, default 0.4)
              --acc-drop D (default 0.02)  --objective memory|bops
+  deploy     freeze + run the bit-packed integer model: export a bit
+             assignment to a .sqdm artifact, reload it, execute it with
+             real integer kernels and report measured bytes / latency /
+             accuracy next to the size/PPA predictions
+             --arch NAME  --bits N|a,b,... (default 8)  --abits N|a,b,...
+             --search (run the two-phase search and deploy its result)
+             --qat-steps N (fine-tune at the assignment first, default 16)
+             --out FILE (default <results dir>/deploy/<arch>.sqdm)
   table1     sigma/KL vs bits on alexnet_mini
   table2     phase-1 vs final across the ResNet family [--archs a,b,...]
   table3     comparison vs baselines [--archs resnet50_mini,inception_mini]
@@ -143,6 +156,7 @@ fn run(argv: &[String]) -> Result<()> {
             ablation::run(&ctx, "alexnet_mini", eval_n)?;
         }
         "quantize" => quantize(&a, eval_n)?,
+        "deploy" => deploy(&a, eval_n, qat)?,
         "info" => info(&a)?,
         other => bail!("unknown command {other:?}; run `sigmaquant help`"),
     }
@@ -187,6 +201,149 @@ fn quantize(a: &Args, eval_n: usize) -> Result<()> {
              o.accuracy * 100.0, o.int8_accuracy * 100.0, float_acc * 100.0);
     println!("  resource: {:.3e} ({:.1}% of INT8)",
              o.resource, 100.0 * o.resource / o.int8_resource);
+    Ok(())
+}
+
+/// Parse `--bits 4` (uniform) or `--bits 8,6,4,...` (per-layer).
+fn parse_bits(spec: &str, layers: usize) -> Result<BitAssignment> {
+    let parts: Vec<&str> = spec.split(',').filter(|s| !s.is_empty()).collect();
+    let bits: Vec<u8> = parts
+        .iter()
+        .map(|s| s.parse::<u8>().with_context(|| format!("bad bitwidth {s:?}")))
+        .collect::<Result<_>>()?;
+    let bits = match bits.len() {
+        1 => vec![bits[0]; layers],
+        n if n == layers => bits,
+        n => bail!("{n} bitwidths for {layers} quantizable layers"),
+    };
+    BitAssignment::new(bits)
+}
+
+/// Freeze a bit assignment into the packed integer artifact, reload it,
+/// run it on eval batches, and report measured bytes / latency /
+/// accuracy next to the `quant/size.rs` + `hw/ppa.rs` predictions.
+fn deploy(a: &Args, eval_n: usize, qat: usize) -> Result<()> {
+    let par = match a.get("threads") {
+        Some(_) => Parallelism::new(a.get_usize("threads", 1)),
+        None => Parallelism::available(),
+    };
+    // deployment is native-only: the engine interprets the native graph
+    let backend = NativeBackend::with_parallelism(par.clone());
+    let mut ctx = Ctx::with_backend(
+        Box::new(NativeBackend::with_parallelism(par)),
+        a.get_or("results", "results"),
+        a.get_u64("seed", 7),
+    )?;
+    ctx.pretrain_steps = a.get_usize("pretrain-steps", 300);
+    ctx.verbose = !a.flag("quiet");
+    let arch = a.get_or("arch", "resnet18_mini");
+    let (mut session, mut cursor) = ctx.pretrained_session(arch)?;
+    let layers = session.num_qlayers();
+
+    // the assignment: searched (--search) or given (--bits/--abits)
+    let (wbits, abits) = if a.flag("search") {
+        let float_acc = ctx.float_accuracy(&session, eval_n)?;
+        let mut cfg = SearchConfig::defaults(ctx.targets_from(
+            &session,
+            float_acc,
+            a.get_f64("acc-drop", 0.02),
+            a.get_f64("size-frac", 0.40),
+        ));
+        cfg.eval_samples = eval_n;
+        cfg.seed = ctx.seed;
+        let sq = SigmaQuant::new(cfg, &ctx.data);
+        let o = sq.run(&mut session, &ctx.data, &mut cursor)?;
+        println!("searched assignment: [{}] (met={})", o.wbits.summary(), o.met);
+        (o.wbits, o.abits)
+    } else {
+        let wbits = parse_bits(a.get_or("bits", "8"), layers)?;
+        let abits = parse_bits(a.get_or("abits", "8"), layers)?;
+        if qat > 0 {
+            let r = run_qat(&mut session, &ctx.data, &mut cursor, &wbits, &abits, 0.02, qat)?;
+            println!("fine-tuned {qat} QAT steps at the assignment (loss {:.3})", r.loss);
+        }
+        (wbits, abits)
+    };
+
+    // fake-quant reference on the eval set
+    let (xs, ys) = ctx.data.eval_set(eval_n);
+    let t0 = Instant::now();
+    let ref_eval = session.evaluate(&xs, &ys, &wbits, &abits)?;
+    let ref_ns = t0.elapsed().as_nanos() as f64;
+
+    // export → save → reload (round-trip checked) → engine
+    let model = QuantizedModel::export(&session.arch, session.params(), &wbits, &abits)?;
+    let measured = model.weight_bytes();
+    let predicted = model_size_bytes(&session.arch, &wbits);
+    if measured != predicted {
+        bail!("packed payload {measured} bytes != size-model prediction {predicted}");
+    }
+    let out_path = match a.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => ctx.results_path("deploy").join(format!("{arch}.sqdm")),
+    };
+    format::save_model(&out_path, &model)?;
+    let reloaded = format::load_model(&out_path, &session.arch)?;
+    let roundtrip_ok = format::serialize(&reloaded) == format::serialize(&model);
+    if !roundtrip_ok {
+        bail!("serialize → load → serialize is not byte-identical");
+    }
+    let engine = DeployEngine::from_backend(&reloaded, &backend)?;
+
+    // packed integer run + per-sample agreement with the reference
+    let t0 = Instant::now();
+    let dep_eval = engine.evaluate(&xs, &ys)?;
+    let dep_ns = t0.elapsed().as_nanos() as f64;
+    let classes = engine.dataset().classes;
+    let b = engine.dataset().eval_batch;
+    let img = engine.dataset().image_len();
+    let exec = backend.native_executor(arch)?;
+    let mut agree = 0usize;
+    for bi in 0..ys.len() / b {
+        let x = &xs[bi * b * img..(bi + 1) * b * img];
+        let lr = exec.eval_logits(session.params(), x, b, &wbits, &abits)?;
+        let ld = engine.infer_logits(x, b)?;
+        agree += argmax(&lr, classes)
+            .iter()
+            .zip(argmax(&ld, classes).iter())
+            .filter(|(a, b)| a == b)
+            .count();
+    }
+    let ppa = model_ppa(
+        &session.arch,
+        &session.all_qlayer_weights(),
+        &wbits,
+        ShiftAddConfig::default(),
+    );
+
+    println!("\ndeploy {arch}: wbits [{}] abits [{}]", wbits.summary(), abits.summary());
+    println!(
+        "  weights : measured {:.1} B packed == predicted {:.1} B ({:.1}% of INT8), container {} B",
+        measured,
+        predicted,
+        100.0 * measured / int8_size_bytes(&session.arch),
+        model.container_bytes()
+    );
+    println!(
+        "  accuracy: packed {:.2}% | fake-quant {:.2}% | argmax agreement {}/{}",
+        dep_eval.accuracy * 100.0,
+        ref_eval.accuracy * 100.0,
+        agree,
+        ys.len()
+    );
+    println!(
+        "  latency : packed {:.2} ms ({:.1} µs/img) | fake-quant {:.2} ms | ratio {:.2}x",
+        dep_ns / 1e6,
+        dep_ns / 1e3 / ys.len() as f64,
+        ref_ns / 1e6,
+        ref_ns / dep_ns
+    );
+    println!(
+        "  ppa     : predicted {:.2} cycles/MAC, energy {:.2}x INT8 (shift-add model)",
+        ppa.mean_cycles_per_mac, ppa.energy_vs_int8
+    );
+    println!("  fusion  : {} conv+BN epilogues folded", engine.fused_bn_count());
+    println!("  artifact: {} (round-trip byte-identical)", out_path.display());
     Ok(())
 }
 

@@ -108,6 +108,16 @@ pub trait ModelExecutor: Send {
     /// forked executors run concurrently on pool workers while the
     /// original keeps serving the main session.
     fn fork(&self) -> Result<Box<dyn ModelExecutor>>;
+
+    /// Notification that the caller replaced or mutated the parameter
+    /// set *outside* [`ModelExecutor::train_step`] — checkpoint load,
+    /// snapshot restore, re-init. Executors that cache weight-derived
+    /// state across calls (the native backend's fake-quant + packed-panel
+    /// cache, keyed per weight epoch) must invalidate it here.
+    /// [`crate::runtime::ModelSession`] calls this from every mutating
+    /// entry point, so parameter mutations routed through the session are
+    /// always observed. Default: no-op.
+    fn notify_params_changed(&self) {}
 }
 
 impl<T: ModelExecutor + ?Sized> ModelExecutor for Box<T> {
@@ -144,6 +154,9 @@ impl<T: ModelExecutor + ?Sized> ModelExecutor for Box<T> {
     }
     fn fork(&self) -> Result<Box<dyn ModelExecutor>> {
         (**self).fork()
+    }
+    fn notify_params_changed(&self) {
+        (**self).notify_params_changed()
     }
 }
 

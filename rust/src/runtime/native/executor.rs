@@ -31,6 +31,18 @@
 //! path reproduces the naive loops' accumulation order bit for bit, so
 //! this is purely a throughput change.
 //!
+//! Fake-quantized weights and their packed panels are *cached per weight
+//! epoch*: each quantizable layer keeps its `qw` + `pack_b` (+ backward
+//! `pack_b_t`) results tagged with `(weight epoch, bits)`, where the
+//! epoch is a monotone counter bumped after every SGD update and by
+//! [`ModelExecutor::notify_params_changed`] (which `ModelSession` calls
+//! from every external mutation point — checkpoint load, snapshot
+//! restore, re-init). Repeated evaluations at unchanged weights —
+//! multi-batch eval, the eval after a Phase-2 QAT burst — therefore skip
+//! the whole quantize + pack pass instead of redoing it per batch.
+//! Caching only elides recomputation of identical values, so results
+//! are unchanged bit for bit.
+//!
 //! All intermediate tensors live in a reusable scratch arena behind a
 //! `RefCell`: full-batch activation/gradient buffers that workers write
 //! disjoint row ranges of, plus per-partition gradient shards and GEMM
@@ -77,7 +89,7 @@ struct Scratch {
     grads: Vec<Vec<f32>>,
     /// Fake-quantized *input* activation of each conv/dense node.
     qact: Vec<Vec<f32>>,
-    /// Fake-quantized weights per quantizable layer.
+    /// Fake-quantized weights per quantizable layer, cached per `wtag`.
     qw: Vec<Vec<f32>>,
     /// Per-channel quantizer scales (scratch for `fake_quant_weight`).
     qscales: Vec<Vec<f32>>,
@@ -91,12 +103,21 @@ struct Scratch {
     /// the interpreter merges shards into `pgrads` in partition order.
     /// Grown to the batch's partition count in [`NativeExecutor::ensure_batch`].
     shards: Vec<Vec<f32>>,
-    /// Packed-B weight panels for the GEMM core (forward conv/dense):
-    /// packed once per node before the partition fan-out, read-only
-    /// inside the tasks.
-    wpack: Vec<f32>,
-    /// Packed-Bᵀ weight panels for the input-gradient GEMMs.
-    wpack_t: Vec<f32>,
+    /// Packed-B weight panels per quantizable layer (forward conv/dense
+    /// GEMMs): packed before the partition fan-out, read-only inside the
+    /// tasks, and cached across calls per `wtag`.
+    wpack: Vec<Vec<f32>>,
+    /// Packed-Bᵀ weight panels per quantizable layer (input-gradient
+    /// GEMMs), cached per `wtag_t`.
+    wpack_t: Vec<Vec<f32>>,
+    /// Cache tag `(weight epoch, bits)` under which `qw`/`wpack` of each
+    /// layer were produced. `(0, 0)` is never valid (epochs start at 1).
+    wtag: Vec<(u64, u8)>,
+    /// Cache tag of each layer's `wpack_t`.
+    wtag_t: Vec<(u64, u8)>,
+    /// Monotone weight-epoch counter: bumped after every train_step's
+    /// SGD update and by `notify_params_changed`.
+    wepoch: u64,
     /// Per-partition GEMM packing scratch (im2col columns + packed A/B
     /// panels) — the "per-worker arenas" of the kernel core, one per
     /// fixed partition so concurrent tasks never share buffers.
@@ -109,11 +130,6 @@ struct Scratch {
 struct ArenaSizes {
     /// Largest `kernel+bias` pair any node accumulates into.
     shard: usize,
-    /// Largest packed weight panel (`max` over conv `kdim×cout`, dense
-    /// `cin×cout`).
-    wpack: usize,
-    /// Largest packed transposed-weight panel.
-    wpack_t: usize,
     /// Largest row-major im2col buffer (`oh·ow × k·k·cin`).
     col: usize,
     /// Largest packed-A operand over all conv GEMMs.
@@ -207,31 +223,35 @@ impl NativeExecutor {
         // single node accumulates into) plus the GEMM-core packing
         // buffers (largest packed operand over all conv/dense GEMMs; the
         // dense per-partition operands additionally scale with the batch
-        // and are folded in by ensure_batch)
-        let mut sizes = ArenaSizes { shard: 0, wpack: 0, wpack_t: 0, col: 0, apack: 0, bpack: 0 };
+        // and are folded in by ensure_batch). Packed weight panels are
+        // per-layer (they are cached across calls), sized exactly.
+        let nq = arch.spec.qlayers.len();
+        let mut sizes = ArenaSizes { shard: 0, col: 0, apack: 0, bpack: 0 };
+        let mut wpack_len = vec![0usize; nq];
+        let mut wpack_t_len = vec![0usize; nq];
         for (vid, node) in arch.nodes.iter().enumerate() {
             match node {
-                Node::Conv { kernel, bias, .. } => {
+                Node::Conv { kernel, bias, q, .. } => {
                     let k = arch.spec.params[*kernel].size;
                     let b = bias.map(|bp| arch.spec.params[bp].size).unwrap_or(0);
                     sizes.shard = sizes.shard.max(k + b);
                     let cv = conv_dims[vid].expect("conv dims precomputed");
                     let kd = gemm::conv_kdim(&cv);
-                    sizes.wpack = sizes.wpack.max(gemm::packed_b_len(kd, cv.cout));
-                    sizes.wpack_t = sizes.wpack_t.max(gemm::packed_b_len(cv.cout, kd));
+                    wpack_len[*q] = gemm::packed_b_len(kd, cv.cout);
+                    wpack_t_len[*q] = gemm::packed_b_len(cv.cout, kd);
                     let (col, apack, bpack) = gemm::conv_scratch_sizes(&cv);
                     sizes.col = sizes.col.max(col);
                     sizes.apack = sizes.apack.max(apack);
                     sizes.bpack = sizes.bpack.max(bpack);
                 }
-                Node::Dense { input, kernel, bias, .. } => {
+                Node::Dense { input, kernel, bias, q } => {
                     let k = arch.spec.params[*kernel].size;
                     let b = arch.spec.params[*bias].size;
                     sizes.shard = sizes.shard.max(k + b);
                     let cin = arch.shapes[*input].numel();
                     let cout = arch.shapes[vid].numel();
-                    sizes.wpack = sizes.wpack.max(gemm::packed_b_len(cin, cout));
-                    sizes.wpack_t = sizes.wpack_t.max(gemm::packed_b_len(cout, cin));
+                    wpack_len[*q] = gemm::packed_b_len(cin, cout);
+                    wpack_t_len[*q] = gemm::packed_b_len(cout, cin);
                 }
                 _ => {}
             }
@@ -265,8 +285,11 @@ impl NativeExecutor {
             // shards + parts are grown to the batch's partition count by
             // ensure_batch on first use
             shards: Vec::new(),
-            wpack: vec![0.0; sizes.wpack],
-            wpack_t: vec![0.0; sizes.wpack_t],
+            wpack: wpack_len.iter().map(|&n| vec![0.0; n]).collect(),
+            wpack_t: wpack_t_len.iter().map(|&n| vec![0.0; n]).collect(),
+            wtag: vec![(0, 0); nq],
+            wtag_t: vec![(0, 0); nq],
+            wepoch: 1,
             parts: Vec::new(),
         };
         NativeExecutor { arch, dataset, conv_dims, par, sizes, scratch: RefCell::new(scratch) }
@@ -337,7 +360,8 @@ impl NativeExecutor {
         let shapes = &self.arch.shapes;
         let par = &self.par;
         let chunks = partition_rows(batch);
-        let Scratch { acts, qact, qw, qscales, bn_mean, bn_inv, wpack, parts, .. } = scr;
+        let epoch = scr.wepoch;
+        let Scratch { acts, qact, qw, qscales, bn_mean, bn_inv, wpack, wtag, parts, .. } = scr;
         acts[0][..x.len()].copy_from_slice(x);
         for vid in 1..self.arch.nodes.len() {
             match &self.arch.nodes[vid] {
@@ -348,20 +372,24 @@ impl NativeExecutor {
                     let out_st = shapes[vid].numel();
                     let (alo, ahi) = acts.split_at_mut(vid);
                     let xin: &[f32] = &alo[*input][..batch * in_st];
-                    fake_quant_weight(
-                        &params[*kernel],
-                        cv.cout,
-                        wbits.bits[*q],
-                        &mut qscales[*q],
-                        &mut qw[*q],
-                    );
+                    let kdim = gemm::conv_kdim(&cv);
+                    let tag = (epoch, wbits.bits[*q]);
+                    if wtag[*q] != tag {
+                        fake_quant_weight(
+                            &params[*kernel],
+                            cv.cout,
+                            wbits.bits[*q],
+                            &mut qscales[*q],
+                            &mut qw[*q],
+                        );
+                        gemm::pack_b(kdim, cv.cout, &qw[*q], &mut wpack[*q]);
+                        wtag[*q] = tag;
+                    }
                     let work = batch * out_st * cv.k * cv.k * cv.cin;
                     let ab = abits.bits[*q];
                     let range =
                         act_range(par, batch * in_st >= MIN_PARALLEL_WORK, &chunks, xin, in_st, ab);
-                    let kdim = gemm::conv_kdim(&cv);
-                    gemm::pack_b(kdim, cv.cout, &qw[*q], wpack);
-                    let wpack_ref: &[f32] = &wpack[..gemm::packed_b_len(kdim, cv.cout)];
+                    let wpack_ref: &[f32] = &wpack[*q];
                     let bias_ref: Option<&[f32]> = bias.map(|bp| params[bp].as_slice());
                     let qa_chunks = split_rows(&mut qact[vid], &chunks, in_st);
                     let out_chunks = split_rows(&mut ahi[0], &chunks, out_st);
@@ -388,19 +416,23 @@ impl NativeExecutor {
                     let cout = shapes[vid].numel();
                     let (alo, ahi) = acts.split_at_mut(vid);
                     let xin: &[f32] = &alo[*input][..batch * cin];
-                    fake_quant_weight(
-                        &params[*kernel],
-                        cout,
-                        wbits.bits[*q],
-                        &mut qscales[*q],
-                        &mut qw[*q],
-                    );
+                    let tag = (epoch, wbits.bits[*q]);
+                    if wtag[*q] != tag {
+                        fake_quant_weight(
+                            &params[*kernel],
+                            cout,
+                            wbits.bits[*q],
+                            &mut qscales[*q],
+                            &mut qw[*q],
+                        );
+                        gemm::pack_b(cin, cout, &qw[*q], &mut wpack[*q]);
+                        wtag[*q] = tag;
+                    }
                     let work = batch * cin * cout;
                     let ab = abits.bits[*q];
                     let range =
                         act_range(par, batch * cin >= MIN_PARALLEL_WORK, &chunks, xin, cin, ab);
-                    gemm::pack_b(cin, cout, &qw[*q], wpack);
-                    let wpack_ref: &[f32] = &wpack[..gemm::packed_b_len(cin, cout)];
+                    let wpack_ref: &[f32] = &wpack[*q];
                     let bias_ref: &[f32] = &params[*bias];
                     let qa_chunks = split_rows(&mut qact[vid], &chunks, cin);
                     let out_chunks = split_rows(&mut ahi[0], &chunks, cout);
@@ -588,8 +620,9 @@ impl NativeExecutor {
         let shapes = &self.arch.shapes;
         let par = &self.par;
         let chunks = partition_rows(batch);
-        let Scratch { acts, grads, qact, qw, bn_mean, bn_inv, pgrads, shards, wpack_t, parts, .. } =
-            scr;
+        let Scratch {
+            acts, grads, qact, qw, bn_mean, bn_inv, pgrads, shards, wpack_t, wtag, wtag_t, parts, ..
+        } = scr;
         for vid in (1..self.arch.nodes.len()).rev() {
             match &self.arch.nodes[vid] {
                 Node::Input => unreachable!("input is always node 0"),
@@ -616,9 +649,16 @@ impl NativeExecutor {
                     // so stem convs skip the dx accumulation entirely.
                     let use_dx = *input != 0;
                     let wt_ref: Option<&[f32]> = if use_dx {
-                        let kdim = gemm::conv_kdim(&cv);
-                        gemm::pack_b_t(cv.cout, kdim, &qw[*q], wpack_t);
-                        Some(&wpack_t[..gemm::packed_b_len(cv.cout, kdim)])
+                        // forward already quantized + tagged this layer in
+                        // the same step; key the Bᵀ panel off that tag
+                        let tag = wtag[*q];
+                        debug_assert_ne!(tag, (0, 0), "backward before forward");
+                        if wtag_t[*q] != tag {
+                            let kdim = gemm::conv_kdim(&cv);
+                            gemm::pack_b_t(cv.cout, kdim, &qw[*q], &mut wpack_t[*q]);
+                            wtag_t[*q] = tag;
+                        }
+                        Some(wpack_t[*q].as_slice())
                     } else {
                         None
                     };
@@ -691,8 +731,13 @@ impl NativeExecutor {
                     }
                     let shard_slices: Vec<&mut [f32]> =
                         shards[..nsh].iter_mut().map(|s| &mut s[..klen + blen]).collect();
-                    gemm::pack_b_t(cout, cin, &qw[*q], wpack_t);
-                    let wt_ref: &[f32] = &wpack_t[..gemm::packed_b_len(cout, cin)];
+                    let tag = wtag[*q];
+                    debug_assert_ne!(tag, (0, 0), "backward before forward");
+                    if wtag_t[*q] != tag {
+                        gemm::pack_b_t(cout, cin, &qw[*q], &mut wpack_t[*q]);
+                        wtag_t[*q] = tag;
+                    }
+                    let wt_ref: &[f32] = &wpack_t[*q];
                     let da_chunks = split_rows(&mut glo[*input], &chunks, cin);
                     let mut tasks: Vec<Task<'_>> = Vec::with_capacity(nsh);
                     for (((sh, dac), ps), r) in shard_slices
@@ -918,6 +963,32 @@ impl NativeExecutor {
         }
     }
 
+    /// Forward-only pass returning the raw logits of a batch. The
+    /// trait-level [`ModelExecutor::eval_batch`] only exposes aggregate
+    /// `(correct, loss)`; the deploy parity harness
+    /// (`rust/tests/deploy_parity.rs`, `crate::deploy`) compares these
+    /// per-sample logits against the packed integer engine's.
+    pub fn eval_logits(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        batch: usize,
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+    ) -> Result<Vec<f32>> {
+        self.validate_bits(wbits, abits)?;
+        let img = self.dataset.image_len();
+        if batch == 0 || x.len() != batch * img {
+            bail!("batch geometry mismatch: {batch} samples vs {} pixels (image_len {img})", x.len());
+        }
+        let classes = self.dataset.classes;
+        let mut guard = self.scratch.borrow_mut();
+        let scr = &mut *guard;
+        self.ensure_batch(scr, batch);
+        self.forward(scr, params, x, batch, wbits, abits);
+        Ok(scr.acts[self.arch.out_id][..batch * classes].to_vec())
+    }
+
     fn validate_bits(&self, wbits: &BitAssignment, abits: &BitAssignment) -> Result<()> {
         let l = self.arch.spec.num_qlayers();
         if wbits.len() != l || abits.len() != l {
@@ -1040,6 +1111,8 @@ impl ModelExecutor for NativeExecutor {
                 p[j] -= lr * m[j];
             }
         }
+        // the SGD update invalidates every weight-derived cache entry
+        scr.wepoch += 1;
         Ok(StepResult { loss, acc })
     }
 
@@ -1078,5 +1151,9 @@ impl ModelExecutor for NativeExecutor {
             self.dataset.clone(),
             self.par.clone(),
         )))
+    }
+
+    fn notify_params_changed(&self) {
+        self.scratch.borrow_mut().wepoch += 1;
     }
 }

@@ -8,7 +8,9 @@
 //!
 //! * **A panels** ([`pack_a`] / [`pack_a_t`] / [`im2col_packed`]): `MR`
 //!   rows interleaved k-major, so the micro-kernel reads `MR` operands
-//!   per k-step from one contiguous cache line run;
+//!   per k-step from one contiguous cache line run; padding-free 1×1
+//!   convs at any stride take the gather fast paths ([`pack_a_unit`] /
+//!   [`pack_a_t_unit`]) that skip the tap loops entirely;
 //! * **B panels** ([`pack_b`] / [`pack_b_t`]): `NR` columns interleaved
 //!   k-major, zero-padded to a full panel;
 //! * **micro-kernel**: an `MR × NR` accumulator block held in registers
@@ -246,11 +248,16 @@ pub fn conv_kdim(cv: &Conv2d) -> usize {
     cv.k * cv.k * cv.cin
 }
 
-/// A convolution whose im2col matrix *is* the input (1×1, stride 1, no
-/// padding): the packing fast paths skip the column buffer entirely.
+/// Stride of a padding-free 1×1 convolution, or `None` for every other
+/// geometry. A `k = 1` conv never pads (SAME resolves to zero padding at
+/// any stride), so its im2col matrix is a pure row *gather* of the input
+/// — contiguous at stride 1 (the im2col matrix *is* the input), strided
+/// otherwise — and the packing fast paths below skip the kh/kw tap loops
+/// entirely. This covers both the 1×1 bottleneck convs (stride 1) and
+/// the ResNet projection shortcuts (1×1, stride 2).
 #[inline]
-fn is_unit(cv: &Conv2d) -> bool {
-    cv.k == 1 && cv.stride == 1 && cv.pad_h == 0 && cv.pad_w == 0
+fn unit_stride(cv: &Conv2d) -> Option<usize> {
+    (cv.k == 1 && cv.pad_h == 0 && cv.pad_w == 0).then_some(cv.stride)
 }
 
 /// [`PackScratch`] lengths `(col, apack, bpack)` one partition needs to
@@ -390,6 +397,75 @@ pub fn im2col_packed_t(cv: &Conv2d, x: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Packed-A im2col fast path for padding-free 1×1 convs at any stride
+/// (`unit_stride` geometries): output position `(oy, ox)` reads exactly
+/// input pixel `(oy·s, ox·s)`, so the panel is a strided row gather — no
+/// tap loop, no bounds checks. Byte-identical output to
+/// [`im2col_packed`] (and, at stride 1, to [`pack_a`] of the input).
+pub fn pack_a_unit(cv: &Conv2d, x: &[f32], out: &mut [f32]) {
+    debug_assert!(unit_stride(cv).is_some());
+    let (w, cin, s) = (cv.w, cv.cin, cv.stride);
+    let m = conv_rows(cv);
+    for (p, panel) in out[..packed_a_len(m, cin)].chunks_exact_mut(cin * MR).enumerate() {
+        let i0 = p * MR;
+        let h = MR.min(m - i0);
+        for ii in 0..h {
+            let opos = i0 + ii;
+            let (oy, ox) = (opos / cv.ow, opos % cv.ow);
+            let base = (oy * s * w + ox * s) * cin;
+            for (kk, &v) in x[base..base + cin].iter().enumerate() {
+                panel[kk * MR + ii] = v;
+            }
+        }
+        for ii in h..MR {
+            for kk in 0..cin {
+                panel[kk * MR + ii] = 0.0;
+            }
+        }
+    }
+}
+
+/// Transposed-packed im2col fast path for padding-free 1×1 convs (the
+/// dk-GEMM A operand): lane `ii` is input channel `i0 + ii`, column `kk`
+/// is output position `kk`, read straight from the strided pixel gather.
+/// Byte-identical output to [`im2col_packed_t`] (and, at stride 1, to
+/// [`pack_a_t`]`(cin, m, x)`).
+pub fn pack_a_t_unit(cv: &Conv2d, x: &[f32], out: &mut [f32]) {
+    debug_assert!(unit_stride(cv).is_some());
+    let (w, cin, s) = (cv.w, cv.cin, cv.stride);
+    let m = conv_rows(cv);
+    for (p, panel) in out[..packed_a_len(cin, m)].chunks_exact_mut(m * MR).enumerate() {
+        let i0 = p * MR;
+        let lanes = MR.min(cin - i0);
+        for kk in 0..m {
+            let (oy, ox) = (kk / cv.ow, kk % cv.ow);
+            let base = (oy * s * w + ox * s) * cin + i0;
+            let dst = &mut panel[kk * MR..kk * MR + MR];
+            dst[..lanes].copy_from_slice(&x[base..base + lanes]);
+            dst[lanes..].fill(0.0);
+        }
+    }
+}
+
+/// Scatter `dcol[m × cin]` into one image's `dx` for padding-free 1×1
+/// convs: position `(oy, ox)` touches only pixel `(oy·s, ox·s)` (taps
+/// never overlap when `stride >= k`), but `+=` is kept because `dx` can
+/// carry other consumers' gradient contributions — the same accumulation
+/// contract as [`col2im_add`], which this is bitwise-equal to.
+pub fn col2im_add_unit(cv: &Conv2d, dcol: &[f32], dx: &mut [f32]) {
+    debug_assert!(unit_stride(cv).is_some());
+    let (w, cin, s) = (cv.w, cv.cin, cv.stride);
+    for oy in 0..cv.oh {
+        for ox in 0..cv.ow {
+            let row = &dcol[(oy * cv.ow + ox) * cin..(oy * cv.ow + ox + 1) * cin];
+            let base = (oy * s * w + ox * s) * cin;
+            for (d, &g) in dx[base..base + cin].iter_mut().zip(row) {
+                *d += g;
+            }
+        }
+    }
+}
+
 /// Scatter-add `dcol[m × kdim]` back into one image's `dx`, iterating
 /// rows ascending and `kh→kw→ci` within a row — the exact naive
 /// input-gradient accumulation order; out-of-bounds taps are dropped.
@@ -460,8 +536,8 @@ pub fn conv_forward(cv: &Conv2d, rows: usize, x: &[f32], wpack: &[f32], out: &mu
     let out_st = m * cv.cout;
     for n in 0..rows {
         let xn = &x[n * in_st..(n + 1) * in_st];
-        if is_unit(cv) {
-            pack_a(m, kdim, xn, &mut ps.apack);
+        if unit_stride(cv).is_some() {
+            pack_a_unit(cv, xn, &mut ps.apack);
         } else {
             im2col_packed(cv, xn, &mut ps.apack);
         }
@@ -489,13 +565,13 @@ pub fn conv_backward(
     let kdim = conv_kdim(cv);
     let in_st = cv.h * cv.w * cv.cin;
     let out_st = m * cv.cout;
-    let unit = is_unit(cv);
+    let unit = unit_stride(cv);
     for n in 0..rows {
         let xn = &x[n * in_st..(n + 1) * in_st];
         let dyn_ = &dy[n * out_st..(n + 1) * out_st];
         // dk[(kh,kw,ci), co] ⟵ chain continues across images
-        if unit {
-            pack_a_t(kdim, m, xn, &mut ps.apack);
+        if unit.is_some() {
+            pack_a_t_unit(cv, xn, &mut ps.apack);
         } else {
             im2col_packed_t(cv, xn, &mut ps.apack);
         }
@@ -505,12 +581,18 @@ pub fn conv_backward(
         if let (Some(wt), Some(dxall)) = (wpack_t, dx.as_deref_mut()) {
             pack_a(m, cv.cout, dyn_, &mut ps.apack);
             let dxn = &mut dxall[n * in_st..(n + 1) * in_st];
-            if unit {
+            match unit {
                 // im2col is the identity: dcol rows are dx rows
-                gemm(m, kdim, cv.cout, &ps.apack, wt, dxn, kdim, Acc::Add);
-            } else {
-                gemm(m, kdim, cv.cout, &ps.apack, wt, &mut ps.col, kdim, Acc::Store);
-                col2im_add(cv, &ps.col, dxn);
+                Some(1) => gemm(m, kdim, cv.cout, &ps.apack, wt, dxn, kdim, Acc::Add),
+                Some(_) => {
+                    // strided gather: dcol rows scatter to disjoint pixels
+                    gemm(m, kdim, cv.cout, &ps.apack, wt, &mut ps.col, kdim, Acc::Store);
+                    col2im_add_unit(cv, &ps.col, dxn);
+                }
+                None => {
+                    gemm(m, kdim, cv.cout, &ps.apack, wt, &mut ps.col, kdim, Acc::Store);
+                    col2im_add(cv, &ps.col, dxn);
+                }
             }
         }
     }
@@ -653,6 +735,42 @@ mod tests {
         }
         for (g, w) in c.iter().zip(&want) {
             assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn unit_stride_fast_paths_match_generic_packing() {
+        // k=1 convs at stride 1 and 2, even and odd extents (SAME resolves
+        // to zero padding for k=1, so all are unit geometries)
+        for cv in [
+            Conv2d::new(6, 6, 5, 3, 1, 1, true),
+            Conv2d::new(6, 6, 5, 3, 1, 2, true),
+            Conv2d::new(7, 5, 4, 9, 1, 2, true),
+            Conv2d::new(8, 8, 8, 2, 1, 2, false),
+        ] {
+            assert_eq!((cv.pad_h, cv.pad_w), (0, 0), "k=1 never pads");
+            let x = randv(cv.h * cv.w * cv.cin, 31 + cv.stride as u64);
+            let m = conv_rows(&cv);
+            let kdim = conv_kdim(&cv);
+            let mut ap = vec![1.0f32; packed_a_len(m, kdim)];
+            im2col_packed(&cv, &x, &mut ap);
+            let mut ap2 = vec![2.0f32; packed_a_len(m, kdim)];
+            pack_a_unit(&cv, &x, &mut ap2);
+            assert_eq!(ap, ap2, "pack_a_unit s={}", cv.stride);
+            let mut at = vec![1.0f32; packed_a_len(kdim, m)];
+            im2col_packed_t(&cv, &x, &mut at);
+            let mut at2 = vec![2.0f32; packed_a_len(kdim, m)];
+            pack_a_t_unit(&cv, &x, &mut at2);
+            assert_eq!(at, at2, "pack_a_t_unit s={}", cv.stride);
+            // col2im scatter: unit path == generic path
+            let dcol = randv(m * kdim, 77);
+            let mut dx1 = randv(cv.h * cv.w * cv.cin, 78);
+            let mut dx2 = dx1.clone();
+            col2im_add(&cv, &dcol, &mut dx1);
+            col2im_add_unit(&cv, &dcol, &mut dx2);
+            for (a, b) in dx1.iter().zip(&dx2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "col2im_add_unit s={}", cv.stride);
+            }
         }
     }
 

@@ -119,6 +119,12 @@ impl NativeBackend {
             self.par.clone(),
         ))
     }
+
+    /// The shared executable graph of one architecture — the structure
+    /// the deploy engine ([`crate::deploy::DeployEngine`]) interprets.
+    pub fn arch_graph(&self, name: &str) -> Result<Arc<NativeArch>> {
+        Ok(self.native_arch(name)?.clone())
+    }
 }
 
 impl Default for NativeBackend {

@@ -129,6 +129,16 @@ impl<E: ModelExecutor> ModelSession<E> {
         })
     }
 
+    /// Propagate an external parameter mutation to every executor that
+    /// may cache weight-derived state ([`ModelExecutor::notify_params_changed`]):
+    /// the primary executor and any cached eval-pipeline forks.
+    fn params_changed(&self) {
+        self.exec.notify_params_changed();
+        for f in self.eval_forks.borrow().iter() {
+            f.notify_params_changed();
+        }
+    }
+
     /// (Re-)initialize parameters from a seed; zeroes momentum.
     pub fn reinit(&mut self, seed: u64) -> Result<()> {
         let params = self.exec.init(seed)?;
@@ -146,6 +156,7 @@ impl<E: ModelExecutor> ModelSession<E> {
             .iter()
             .map(|p| vec![0.0f32; p.size])
             .collect();
+        self.params_changed();
         Ok(())
     }
 
@@ -173,6 +184,7 @@ impl<E: ModelExecutor> ModelSession<E> {
         for m in &mut self.mom {
             m.iter_mut().for_each(|v| *v = 0.0);
         }
+        self.params_changed();
         Ok(())
     }
 
@@ -185,6 +197,7 @@ impl<E: ModelExecutor> ModelSession<E> {
     pub fn restore(&mut self, s: &Snapshot) {
         self.params = s.params.clone();
         self.mom = s.mom.clone();
+        self.params_changed();
     }
 
     /// Flat weights of quantizable layer `qi` (fanin-major, cout trailing).
@@ -211,8 +224,14 @@ impl<E: ModelExecutor> ModelSession<E> {
         let ds = &self.dataset;
         debug_assert_eq!(x.len(), ds.train_batch * ds.image_len());
         debug_assert_eq!(y.len(), ds.train_batch);
-        self.exec
-            .train_step(&mut self.params, &mut self.mom, x, y, wbits, abits, lr)
+        let r = self
+            .exec
+            .train_step(&mut self.params, &mut self.mom, x, y, wbits, abits, lr);
+        // the primary executor invalidates its own caches inside
+        // train_step, but cached eval-pipeline forks must observe the
+        // mutation too
+        self.params_changed();
+        r
     }
 
     /// Evaluate on pre-batched data (len must be a multiple of eval_batch).

@@ -1,0 +1,232 @@
+//! Deployment-runtime correctness pins (DESIGN.md §10):
+//!
+//! 1. **accounting** — the packed artifact's weight payload equals the
+//!    `quant/size.rs` memory model *exactly*, on every zoo architecture
+//!    and at mixed per-layer bitwidths;
+//! 2. **round-trip** — export → serialize → deserialize → serialize is
+//!    byte-identical (and survives the filesystem);
+//! 3. **parity** — packed integer inference agrees with the fake-quant
+//!    f32 reference on every zoo architecture: per-logit divergence
+//!    inside the pinned tolerance, and argmax-exact except where the
+//!    reference's own top-2 margin sits inside the numerical tie band
+//!    (the two paths compute the same exact value with different f32
+//!    rounding; a tie can land either way);
+//! 4. **determinism** — the engine is bit-identical across thread
+//!    counts (everything integer is exact; the f32 epilogues merge
+//!    per-partition partials in partition order);
+//! 5. **cache hygiene** — the trainer's per-epoch weight-pack cache
+//!    (PR-4 satellite) must invalidate across train/restore cycles, so
+//!    repeated evaluation around a snapshot is bit-stable.
+
+use sigmaquant::data::SynthDataset;
+use sigmaquant::deploy::{argmax, format, DeployEngine, QuantizedModel};
+use sigmaquant::manifest::DatasetSpec;
+use sigmaquant::quant::{model_size_bytes, BitAssignment};
+use sigmaquant::runtime::native::default_dataset;
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
+use sigmaquant::util::pool::Parallelism;
+
+/// Pinned parity tolerance: per-sample, the logit divergence must stay
+/// inside `3e-2 · max(1, ‖logits‖∞)`. The per-layer divergence is pure
+/// f32 rounding (~1e-6 relative); the band budgets for occasional
+/// activation-lattice rounding flips on deep models. A formula error
+/// (wrong zero-point, scale, BN fold) shows up at O(1).
+const REL_TOL: f32 = 3e-2;
+/// Reference top-2 margins below this are numerical ties; argmax may
+/// legally differ there.
+const TIE_EPS: f32 = 1e-3;
+
+fn small_backend(threads: usize) -> NativeBackend {
+    let ds = DatasetSpec { train_batch: 8, eval_batch: 16, ..default_dataset() };
+    NativeBackend::with_dataset_parallelism(ds, Parallelism::new(threads))
+}
+
+/// Deterministic mixed per-layer assignment covering all of {2,4,6,8}.
+fn mixed_bits(layers: usize, salt: usize) -> BitAssignment {
+    let bits: Vec<u8> = (0..layers).map(|i| [2u8, 4, 6, 8][(i * 3 + salt) % 4]).collect();
+    BitAssignment::new(bits).expect("mixed bits are valid")
+}
+
+#[test]
+fn packed_bytes_match_size_model_on_every_arch_and_bitwidth() {
+    let be = small_backend(1);
+    for (ai, name) in be.arch_names().iter().enumerate() {
+        let s = ModelSession::load(&be, name, 3).unwrap();
+        let l = s.num_qlayers();
+        let mut assignments = vec![mixed_bits(l, ai)];
+        for b in [2u8, 4, 6, 8] {
+            assignments.push(BitAssignment::uniform(l, b));
+        }
+        for wbits in assignments {
+            let m = QuantizedModel::export(&s.arch, s.params(), &wbits, &BitAssignment::uniform(l, 8))
+                .unwrap();
+            assert_eq!(
+                m.weight_bytes(),
+                model_size_bytes(&s.arch, &wbits),
+                "{name}: [{}]",
+                wbits.summary()
+            );
+            m.validate(&s.arch).unwrap();
+        }
+    }
+}
+
+#[test]
+fn artifact_roundtrip_is_byte_identical_on_every_arch() {
+    let be = small_backend(1);
+    for (ai, name) in be.arch_names().iter().enumerate() {
+        let s = ModelSession::load(&be, name, 5).unwrap();
+        let l = s.num_qlayers();
+        let m = QuantizedModel::export(
+            &s.arch,
+            s.params(),
+            &mixed_bits(l, ai),
+            &mixed_bits(l, ai + 1),
+        )
+        .unwrap();
+        let bytes = format::serialize(&m);
+        let back = format::deserialize(&bytes, &s.arch).unwrap();
+        assert_eq!(back, m, "{name}: value round-trip");
+        assert_eq!(format::serialize(&back), bytes, "{name}: byte round-trip");
+    }
+    // and through the filesystem
+    let s = ModelSession::load(&be, "alexnet_mini", 5).unwrap();
+    let m = QuantizedModel::export(
+        &s.arch,
+        s.params(),
+        &mixed_bits(s.num_qlayers(), 0),
+        &BitAssignment::uniform(s.num_qlayers(), 8),
+    )
+    .unwrap();
+    let path = std::env::temp_dir().join("sq_deploy_parity.sqdm");
+    format::save_model(&path, &m).unwrap();
+    let back = format::load_model(&path, &s.arch).unwrap();
+    assert_eq!(format::serialize(&back), format::serialize(&m));
+    std::fs::remove_file(path).ok();
+}
+
+/// The headline pin: on every zoo architecture, packed integer inference
+/// reproduces the fake-quant reference — logits inside the pinned
+/// tolerance, argmax-exact modulo numerical ties — after a short QAT
+/// burst so the weights (and logit margins) are structured.
+#[test]
+fn deploy_matches_fakequant_on_every_zoo_arch() {
+    let be = small_backend(1);
+    let data = SynthDataset::new(be.dataset().clone(), 13);
+    let b = be.dataset().eval_batch;
+    let img = be.dataset().image_len();
+    let classes = be.dataset().classes;
+    let (xs, ys) = data.eval_set(2 * b);
+    for (ai, name) in be.arch_names().iter().enumerate() {
+        let mut s = ModelSession::load(&be, name, 7).unwrap();
+        let l = s.num_qlayers();
+        let wbits = mixed_bits(l, ai);
+        let abits = BitAssignment::uniform(l, 8);
+        for step in 0..4u64 {
+            let (x, y) = data.train_batch(step, be.dataset().train_batch);
+            s.train_step(&x, &y, &wbits, &abits, 0.02).unwrap();
+        }
+        let m = QuantizedModel::export(&s.arch, s.params(), &wbits, &abits).unwrap();
+        let engine = DeployEngine::from_backend(&m, &be).unwrap();
+        let exec = be.native_executor(name).unwrap();
+        let mut mismatches_beyond_ties = 0usize;
+        for bi in 0..ys.len() / b {
+            let x = &xs[bi * b * img..(bi + 1) * b * img];
+            let lr = exec.eval_logits(s.params(), x, b, &wbits, &abits).unwrap();
+            let ld = engine.infer_logits(x, b).unwrap();
+            assert_eq!(lr.len(), ld.len());
+            for smp in 0..b {
+                let rr = &lr[smp * classes..(smp + 1) * classes];
+                let rd = &ld[smp * classes..(smp + 1) * classes];
+                let linf = rr.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let tol = REL_TOL * linf.max(1.0);
+                for (c, (&a, &d)) in rr.iter().zip(rd).enumerate() {
+                    assert!(
+                        (a - d).abs() <= tol,
+                        "{name} batch {bi} sample {smp} class {c}: {a} vs {d} (tol {tol})"
+                    );
+                }
+            }
+            for (smp, (pr, pd)) in
+                argmax(&lr, classes).into_iter().zip(argmax(&ld, classes)).enumerate()
+            {
+                if pr != pd {
+                    let row = &lr[smp * classes..(smp + 1) * classes];
+                    let margin = (row[pr] - row[pd]).abs();
+                    assert!(
+                        margin <= TIE_EPS,
+                        "{name} batch {bi} sample {smp}: argmax {pr} vs {pd}, margin {margin}"
+                    );
+                    mismatches_beyond_ties += 1;
+                }
+            }
+        }
+        // ties must be rare even when legal
+        assert!(
+            mismatches_beyond_ties <= ys.len() / 8,
+            "{name}: {mismatches_beyond_ties} tie-band argmax flips out of {}",
+            ys.len()
+        );
+        // aggregate evaluation runs end to end and scores sanely
+        let r = engine.evaluate(&xs, &ys).unwrap();
+        assert_eq!(r.samples, ys.len(), "{name}");
+        assert!(r.loss.is_finite() && (0.0..=1.0).contains(&r.accuracy), "{name}");
+    }
+}
+
+#[test]
+fn engine_is_bit_identical_across_thread_counts() {
+    let ds = DatasetSpec { train_batch: 8, eval_batch: 16, ..default_dataset() };
+    let data = SynthDataset::new(ds.clone(), 23);
+    let (xs, _ys) = data.eval_set(16);
+    let mut logits: Vec<Vec<f32>> = Vec::new();
+    for threads in [1usize, 3] {
+        let be = NativeBackend::with_dataset_parallelism(ds.clone(), Parallelism::new(threads));
+        let s = ModelSession::load(&be, "resnet18_mini", 9).unwrap();
+        let l = s.num_qlayers();
+        let m = QuantizedModel::export(
+            &s.arch,
+            s.params(),
+            &mixed_bits(l, 1),
+            &BitAssignment::uniform(l, 8),
+        )
+        .unwrap();
+        let engine = DeployEngine::from_backend(&m, &be).unwrap();
+        logits.push(engine.infer_logits(&xs, 16).unwrap());
+    }
+    for (a, b) in logits[0].iter().zip(&logits[1]) {
+        assert_eq!(a.to_bits(), b.to_bits(), "thread-count dependence");
+    }
+}
+
+/// Regression for the per-epoch weight-pack cache: external parameter
+/// mutations (train step, snapshot restore) must invalidate cached
+/// fake-quant panels, so evaluation around a train/restore cycle is
+/// bit-stable — and repeated evaluation (the cache-hit path) too.
+#[test]
+fn weight_pack_cache_invalidates_across_train_and_restore() {
+    let be = small_backend(2);
+    let data = SynthDataset::new(be.dataset().clone(), 31);
+    let mut s = ModelSession::load(&be, "alexnet_mini", 11).unwrap();
+    let w = BitAssignment::uniform(s.num_qlayers(), 4);
+    let (xs, ys) = data.eval_set(32);
+    let r1 = s.evaluate(&xs, &ys, &w, &w).unwrap();
+    // cache-hit path: identical
+    let r1b = s.evaluate(&xs, &ys, &w, &w).unwrap();
+    assert_eq!(r1.loss.to_bits(), r1b.loss.to_bits());
+    assert_eq!(r1.accuracy.to_bits(), r1b.accuracy.to_bits());
+    // mutate → evaluate → restore → evaluate must reproduce r1 exactly
+    let snap = s.snapshot();
+    let (x, y) = data.train_batch(0, be.dataset().train_batch);
+    s.train_step(&x, &y, &w, &w, 0.05).unwrap();
+    let r2 = s.evaluate(&xs, &ys, &w, &w).unwrap();
+    assert_ne!(r1.loss.to_bits(), r2.loss.to_bits(), "training had no observable effect");
+    s.restore(&snap);
+    let r3 = s.evaluate(&xs, &ys, &w, &w).unwrap();
+    assert_eq!(r1.loss.to_bits(), r3.loss.to_bits(), "stale pack cache after restore");
+    assert_eq!(r1.accuracy.to_bits(), r3.accuracy.to_bits());
+    // and a different bitwidth at the same weights re-quantizes
+    let w8 = BitAssignment::uniform(s.num_qlayers(), 8);
+    let r8 = s.evaluate(&xs, &ys, &w8, &w8).unwrap();
+    assert_ne!(r1.loss.to_bits(), r8.loss.to_bits(), "bits ignored by the cache");
+}

@@ -162,6 +162,10 @@ fn blocked_conv_edge_geometries_are_bitwise_equal() {
         ConvCase { h: 7, w: 5, cin: 4, cout: 16, k: 3, stride: 2, same: true, batch: 5, seed: 3 },
         ConvCase { h: 6, w: 6, cin: 2, cout: 17, k: 5, stride: 2, same: true, batch: 2, seed: 4 },
         ConvCase { h: 5, w: 5, cin: 1, cout: 1, k: 5, stride: 1, same: true, batch: 7, seed: 5 },
+        // strided 1×1 projections (the unit-stride gather fast path):
+        // even and odd extents, cout across the NR boundary
+        ConvCase { h: 8, w: 8, cin: 5, cout: 7, k: 1, stride: 2, same: true, batch: 3, seed: 6 },
+        ConvCase { h: 7, w: 7, cin: 3, cout: 17, k: 1, stride: 2, same: true, batch: 2, seed: 7 },
     ];
     for case in &cases {
         conv_parity(case).unwrap_or_else(|e| panic!("{case:?}: {e}"));
