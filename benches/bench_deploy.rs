@@ -10,7 +10,12 @@
 //!   model's predicted cycles/MAC for the same assignment;
 //! * **accuracy**: packed vs fake-quant accuracy and per-sample argmax
 //!   agreement (asserted == 100% before timing — the bench doubles as a
-//!   parity smoke test).
+//!   parity smoke test);
+//! * **throughput**: multi-batch serving, serial vs pipelined
+//!   `DeployEngine::evaluate` in images/sec (the PR-5 serve-path
+//!   batching; argmax- and bit-parity-checked before timing — the
+//!   `deploy_tput_*` rows, tracked by the `scripts/bench_compare` gate
+//!   in quick mode like every other row here).
 //!
 //! Run via `cargo bench --bench bench_deploy`; pass `-- --quick` for the
 //! CI smoke mode (two archs, one batch). Emits `results/BENCH_deploy.json`
@@ -176,6 +181,83 @@ fn main() {
         }
     }
 
+    // --- multi-batch serving throughput: serial vs pipelined engine ---
+    // The PR-5 serve path: `DeployEngine::evaluate` pipelines batch
+    // groups over cached forked engines. Bit-identical to the serial
+    // loop by contract (asserted below before timing, argmax included),
+    // so the only thing this section measures is throughput.
+    // pinned (not available_parallelism): the bench_compare gate matches
+    // rows on (op, threads), so a machine-dependent count would silently
+    // de-pair the gated pipelined row across runners — same convention
+    // as bench_runtime/bench_search's fixed thread sweep
+    let tp_threads = 4usize;
+    let tp_archs: Vec<&str> = if quick { vec!["alexnet_mini"] } else { vec!["alexnet_mini", "resnet18_mini"] };
+    let tp_n = if quick { 2 * b } else { 8 * b }; // 2 / 8 eval batches
+    let (txs, tys) = data.eval_set(tp_n);
+    let mt = NativeBackend::with_parallelism(Parallelism::new(tp_threads));
+    println!("\n# serve-path batching ({tp_n} samples, {} batches, pipeline over {tp_threads} threads)", tp_n / b);
+    struct TputRow {
+        arch: String,
+        ips_serial: f64,
+        ips_pipe: f64,
+    }
+    let mut tput_rows: Vec<TputRow> = Vec::new();
+    for arch in &tp_archs {
+        let mut session = ModelSession::load(&mt, arch, 7).expect("load arch");
+        let fb = BitAssignment::raw(vec![32; session.num_qlayers()]);
+        for step in 0..if quick { 2 } else { 6 } {
+            let (x, y) = data.train_batch(100 + step, session.dataset().train_batch);
+            session.train_step(&x, &y, &fb, &fb, 0.05).expect("train step");
+        }
+        let layers = session.num_qlayers();
+        let cycle: Vec<u8> = (0..layers).map(|i| [8u8, 6, 4, 2][i % 4]).collect();
+        let wbits = BitAssignment::new(cycle).expect("cycle bits are valid");
+        let a8 = BitAssignment::uniform(layers, 8);
+        let model =
+            QuantizedModel::export(&session.arch, session.params(), &wbits, &a8).expect("export");
+        let eng_serial = DeployEngine::from_backend(&model, &backend).expect("serial engine");
+        let eng_pipe = DeployEngine::from_backend(&model, &mt).expect("pipelined engine");
+        // parity before timing: per-batch argmax agreement (bitwise
+        // logits, in fact — the engines share one frozen model) and a
+        // bit-identical aggregate evaluate
+        for bi in 0..tys.len() / b {
+            let x = &txs[bi * b * img..(bi + 1) * b * img];
+            let ls = eng_serial.infer_logits(x, b).expect("serial logits");
+            let lp = eng_pipe.infer_logits(x, b).expect("pipelined logits");
+            assert_eq!(
+                argmax(&ls, classes),
+                argmax(&lp, classes),
+                "{arch}: serial vs pipelined argmax disagree (batch {bi})"
+            );
+            for (a, p) in ls.iter().zip(&lp) {
+                assert_eq!(a.to_bits(), p.to_bits(), "{arch}: logit bits diverge (batch {bi})");
+            }
+        }
+        let rs = eng_serial.evaluate(&txs, &tys).expect("serial eval");
+        let rp = eng_pipe.evaluate(&txs, &tys).expect("pipelined eval");
+        assert_eq!(rs.accuracy.to_bits(), rp.accuracy.to_bits(), "{arch}: accuracy bits");
+        assert_eq!(rs.loss.to_bits(), rp.loss.to_bits(), "{arch}: loss bits");
+        let t_s = bench(iters, budget_ms, || {
+            eng_serial.evaluate(&txs, &tys).expect("serial eval");
+        });
+        let t_p = bench(iters, budget_ms, || {
+            eng_pipe.evaluate(&txs, &tys).expect("pipelined eval");
+        });
+        let ips_serial = 1e9 * tp_n as f64 / t_s.mean_ns;
+        let ips_pipe = 1e9 * tp_n as f64 / t_p.mean_ns;
+        println!(
+            "{arch:<16} mixed  | {ips_serial:>9.1} img/s serial | {ips_pipe:>9.1} img/s pipelined ({:.2}x)",
+            ips_pipe / ips_serial,
+        );
+        report.add(&format!("deploy_tput_serial/{arch}/mixed"), 1, t_s.mean_ns / tp_n as f64);
+        report.add(
+            &format!("deploy_tput_pipelined/{arch}/mixed"),
+            tp_threads,
+            t_p.mean_ns / tp_n as f64,
+        );
+        tput_rows.push(TputRow { arch: arch.to_string(), ips_serial, ips_pipe });
+    }
+
     if !quick {
         println!("\nREADME table (| arch | bits | measured B | % int8 | ns/img packed | ns/img fakequant | pred cycles/MAC | acc packed | acc fq |):");
         for r in &rows {
@@ -190,6 +272,17 @@ fn main() {
                 r.cycles_per_mac,
                 r.acc_dep,
                 r.acc_ref
+            );
+        }
+        println!("\nREADME throughput table (| arch | batches | serial img/s | pipelined img/s | speedup |):");
+        for r in &tput_rows {
+            println!(
+                "| `{}` | {} | {:.0} | {:.0} | {:.2}x |",
+                r.arch,
+                tp_n / b,
+                r.ips_serial,
+                r.ips_pipe,
+                r.ips_pipe / r.ips_serial
             );
         }
     }

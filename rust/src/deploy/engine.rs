@@ -50,7 +50,12 @@
 //! (`util::pool`), BN statistics merge per-partition partials in
 //! partition order, and everything integer is exact — so the engine is
 //! bit-identical at every thread count, same contract as the trainer
-//! (DESIGN.md §8).
+//! (DESIGN.md §8). On top of the per-node fan-out,
+//! [`DeployEngine::evaluate`] pipelines multi-batch sets over cached
+//! forked engines (shared frozen `EngineCore`, per-fork scratch) with
+//! the per-batch results merged in batch order — the serve-path mirror
+//! of `ModelSession::evaluate`, bit-identical to the serial loop at any
+//! pipeline width.
 
 use super::igemm::{self, IPackScratch};
 use super::model::QuantizedModel;
@@ -60,7 +65,7 @@ use crate::runtime::native::fakequant::act_minmax;
 use crate::runtime::native::graph::{NativeArch, Node};
 use crate::runtime::native::ops::{self, Conv2d};
 use crate::runtime::NativeBackend;
-use crate::util::pool::{partition_rows, split_rows, Parallelism, Task, FIXED_PARTITIONS};
+use crate::util::pool::{fixed_partition, partition_rows, split_rows, Parallelism, Task, FIXED_PARTITIONS};
 use anyhow::{bail, Result};
 use std::cell::RefCell;
 use std::sync::Arc;
@@ -69,6 +74,14 @@ use std::sync::Arc;
 /// this run their partition inline — same scheduling-only gate as the
 /// trainer's. Results are unchanged either way.
 const MIN_PARALLEL_WORK: usize = 16 * 1024;
+
+/// Upper bound on concurrently evaluating forked engines per engine:
+/// bounds the forked-scratch memory footprint (each fork owns a full
+/// activation arena). Purely a scheduling knob — the per-batch merge in
+/// [`DeployEngine::evaluate`] is in batch order regardless of how
+/// batches are grouped, so results are bit-identical at any width (the
+/// same contract as `ModelSession::evaluate`).
+const MAX_EVAL_PIPELINE: usize = 8;
 
 /// Fused execution recipe of one integer conv/dense node.
 struct GemmPlan {
@@ -132,6 +145,26 @@ struct DeployScratch {
     parts: Vec<IPackScratch>,
 }
 
+impl DeployScratch {
+    /// An empty arena for an engine over `nodes` SSA values with a
+    /// `max_cout`-channel epilogue — the single constructor both the
+    /// load path and [`DeployEngine::fork`] use, so the two can never
+    /// drift on sizing.
+    fn new(nodes: usize, max_cout: usize) -> DeployScratch {
+        DeployScratch {
+            batch: 0,
+            acts: vec![Vec::new(); nodes],
+            qcode: Vec::new(),
+            acc: Vec::new(),
+            fc: vec![0.0; max_cout],
+            yb: vec![0.0; max_cout],
+            bn_mean: vec![0.0; max_cout],
+            bn_inv: vec![0.0; max_cout],
+            parts: Vec::new(),
+        }
+    }
+}
+
 /// Split `acts` into the (read) input value and the (write) output value
 /// (SSA ids ascend, so `i < o`).
 fn io<'a>(acts: &'a mut [Vec<f32>], i: usize, o: usize, ilen: usize) -> (&'a [f32], &'a mut Vec<f32>) {
@@ -189,8 +222,10 @@ pub fn argmax(logits: &[f32], classes: usize) -> Vec<usize> {
         .collect()
 }
 
-/// Forward-only integer executor over one frozen [`QuantizedModel`].
-pub struct DeployEngine {
+/// The frozen, immutable half of an engine: graph, panels, plan, glue
+/// parameters. Shared (`Arc`) between an engine and its eval-pipeline
+/// forks, so forking costs one scratch arena — never a re-pack.
+struct EngineCore {
     arch: Arc<NativeArch>,
     dataset: DatasetSpec,
     abits: Vec<u8>,
@@ -203,8 +238,28 @@ pub struct DeployEngine {
     /// Largest per-sample input / output element count over GEMM nodes.
     max_in: usize,
     max_out: usize,
+    /// Largest GEMM-node channel count (sizes the per-channel epilogue
+    /// scratch of every engine over this core).
+    max_cout: usize,
+}
+
+/// Forward-only integer executor over one frozen [`QuantizedModel`]:
+/// a shared `EngineCore` plus this engine's own scratch arena and
+/// cached eval-pipeline forks.
+pub struct DeployEngine {
+    core: Arc<EngineCore>,
     par: Parallelism,
+    /// Whether [`DeployEngine::evaluate`] may pipeline batches over
+    /// forked engines. False on forks themselves — they already run
+    /// concurrently with their siblings, so nesting would only burn
+    /// scratch arenas.
+    pipeline_eval: bool,
     scratch: RefCell<DeployScratch>,
+    /// Cached forked engines for the pipelined batch path — created
+    /// lazily on the first wide multi-batch eval and reused afterwards,
+    /// so steady-state serving performs no engine (or scratch-arena)
+    /// allocation.
+    eval_forks: RefCell<Vec<DeployEngine>>,
 }
 
 impl DeployEngine {
@@ -226,7 +281,9 @@ impl DeployEngine {
             }
         }
         // i32 exactness guard: the worst-case accumulator of every layer
-        // must fit (always true for the zoo; fails loudly otherwise)
+        // must fit (always true for the zoo; fails loudly otherwise —
+        // naming the layer and the bound so an out-of-range model is
+        // diagnosable from the error alone)
         for (vid, node) in arch.nodes.iter().enumerate() {
             let (kdim, q) = match node {
                 Node::Conv { q, .. } => {
@@ -236,9 +293,20 @@ impl DeployEngine {
                 Node::Dense { input, q, .. } => (arch.shapes[*input].numel(), *q),
                 _ => continue,
             };
-            let bound = igemm::max_abs_acc(kdim, model.abits.bits[q], model.wbits.bits[q]);
+            let (ab, wb) = (model.abits.bits[q], model.wbits.bits[q]);
+            let bound = igemm::max_abs_acc(kdim, ab, wb);
             if bound > i32::MAX as i64 {
-                bail!("layer {q}: worst-case accumulator {bound} exceeds i32");
+                let spec = &arch.spec.qlayers[q];
+                bail!(
+                    "deploy load rejected: layer {q} ({}, {}) at a{ab}/w{wb} has a \
+                     worst-case i32 accumulator of {bound} (= kdim {kdim} × (2^{ab}−1) × \
+                     (2^{}−1)), which exceeds i32::MAX ({}); lower the layer's bitwidths \
+                     or split its fan-in",
+                    spec.name,
+                    spec.kind,
+                    wb - 1,
+                    i32::MAX
+                );
             }
         }
         // freeze weight codes into integer B panels, with the all-taps
@@ -273,7 +341,7 @@ impl DeployEngine {
                 let kdim = cv.k * cv.k * cv.cin;
                 let ones = vec![1i16; cv.h * cv.w * cv.cin];
                 let mut ps = IPackScratch::default();
-                ps.ensure(igemm::packed_a_len(m, kdim));
+                ps.ensure(0, igemm::packed_a_len(m, kdim), 0);
                 let mut wsum = vec![0i32; m * cv.cout];
                 igemm::iconv_forward(&cv, 1, &ones, &panels[*q].wpack, &mut wsum, &mut ps);
                 panels[*q].wsum = wsum;
@@ -348,31 +416,42 @@ impl DeployEngine {
                 max_cout = max_cout.max(arch.shapes[vid].channels());
             }
         }
-        let scratch = DeployScratch {
-            batch: 0,
-            acts: vec![Vec::new(); n],
-            qcode: Vec::new(),
-            acc: Vec::new(),
-            fc: vec![0.0; max_cout],
-            yb: vec![0.0; max_cout],
-            bn_mean: vec![0.0; max_cout],
-            bn_inv: vec![0.0; max_cout],
-            parts: Vec::new(),
-        };
+        let scratch = DeployScratch::new(n, max_cout);
         Ok(DeployEngine {
-            arch,
-            dataset,
-            abits: model.abits.bits.clone(),
-            panels,
-            fparams,
-            plan,
-            conv_dims,
-            materialized,
-            max_in,
-            max_out,
+            core: Arc::new(EngineCore {
+                arch,
+                dataset,
+                abits: model.abits.bits.clone(),
+                panels,
+                fparams,
+                plan,
+                conv_dims,
+                materialized,
+                max_in,
+                max_out,
+                max_cout,
+            }),
             par,
+            pipeline_eval: true,
             scratch: RefCell::new(scratch),
+            eval_forks: RefCell::new(Vec::new()),
         })
+    }
+
+    /// Cheap fork for concurrent batch serving: shares the frozen
+    /// `EngineCore` (panels, plan, glue params — never re-packed) and
+    /// owns a fresh scratch arena. Forks evaluate serially
+    /// (`pipeline_eval = false`): they already run concurrently with
+    /// their siblings inside [`DeployEngine::evaluate`].
+    pub fn fork(&self) -> DeployEngine {
+        let core = &self.core;
+        DeployEngine {
+            core: core.clone(),
+            par: self.par.clone(),
+            pipeline_eval: false,
+            scratch: RefCell::new(DeployScratch::new(core.arch.nodes.len(), core.max_cout)),
+            eval_forks: RefCell::new(Vec::new()),
+        }
     }
 
     /// Convenience constructor: resolve the graph, dataset geometry and
@@ -387,22 +466,25 @@ impl DeployEngine {
     }
 
     pub fn arch(&self) -> &ArchSpec {
-        &self.arch.spec
+        &self.core.arch.spec
     }
 
     pub fn dataset(&self) -> &DatasetSpec {
-        &self.dataset
+        &self.core.dataset
     }
 
     /// Number of conv/dense nodes whose BatchNorm was folded into the
     /// requantization epilogue (reported by the deploy CLI).
     pub fn fused_bn_count(&self) -> usize {
-        self.plan
+        self.core
+            .plan
             .iter()
             .filter(|s| matches!(s, Step::Gemm(g) if g.bn.is_some()))
             .count()
     }
+}
 
+impl EngineCore {
     fn ensure_batch(&self, scr: &mut DeployScratch, batch: usize) {
         if scr.batch >= batch {
             return;
@@ -443,14 +525,14 @@ impl DeployEngine {
             scr.parts.resize_with(nparts, IPackScratch::default);
         }
         for ps in scr.parts.iter_mut() {
-            ps.ensure(apack);
+            ps.ensure(0, apack, 0);
         }
         scr.batch = batch;
     }
 
     /// One integer conv/dense node: dynamic act-quant → integer GEMM →
-    /// fused requantize(+BN)(+ReLU) epilogue.
-    fn run_gemm(&self, scr: &mut DeployScratch, vid: usize, g: &GemmPlan, batch: usize) {
+    /// fused requantize(+BN)(+ReLU) epilogue, fanned over `par`.
+    fn run_gemm(&self, par: &Parallelism, scr: &mut DeployScratch, vid: usize, g: &GemmPlan, batch: usize) {
         let shapes = &self.arch.shapes;
         let node = &self.arch.nodes[vid];
         let input = match node {
@@ -462,7 +544,6 @@ impl DeployEngine {
         let cout = shapes[vid].channels();
         let rows_total = batch * out_st / cout;
         let chunks = partition_rows(batch);
-        let par = &self.par;
         let DeployScratch { acts, qcode, acc, fc, yb, bn_mean, bn_inv, parts, .. } = scr;
 
         // 1. per-tensor dynamic range (min/max is exact, so one serial
@@ -751,52 +832,54 @@ impl DeployEngine {
         }
     }
 
-    fn forward(&self, scr: &mut DeployScratch, x: &[f32], batch: usize) {
+    fn forward(&self, par: &Parallelism, scr: &mut DeployScratch, x: &[f32], batch: usize) {
         scr.acts[0][..x.len()].copy_from_slice(x);
         for vid in 1..self.arch.nodes.len() {
             match &self.plan[vid] {
                 Step::Fused => {}
-                Step::Gemm(g) => self.run_gemm(scr, vid, g, batch),
+                Step::Gemm(g) => self.run_gemm(par, scr, vid, g, batch),
                 Step::Direct => self.run_direct(scr, vid, batch),
             }
         }
     }
+}
 
+impl DeployEngine {
     /// Raw logits of a batch (any batch size).
     pub fn infer_logits(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
-        let img = self.dataset.image_len();
+        let img = self.core.dataset.image_len();
         if batch == 0 || x.len() != batch * img {
             bail!("batch geometry mismatch: {batch} samples vs {} pixels (image_len {img})", x.len());
         }
-        let classes = self.dataset.classes;
+        let classes = self.core.dataset.classes;
         let mut guard = self.scratch.borrow_mut();
         let scr = &mut *guard;
-        self.ensure_batch(scr, batch);
-        self.forward(scr, x, batch);
-        Ok(scr.acts[self.arch.out_id][..batch * classes].to_vec())
+        self.core.ensure_batch(scr, batch);
+        self.core.forward(&self.par, scr, x, batch);
+        Ok(scr.acts[self.core.arch.out_id][..batch * classes].to_vec())
     }
 
     /// Forward one batch; returns `(correct_count, mean_batch_loss)` —
     /// the same contract as `ModelExecutor::eval_batch`.
     pub fn eval_batch(&self, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
         let batch = y.len();
-        let classes = self.dataset.classes as i32;
+        let classes = self.core.dataset.classes as i32;
         if let Some(&bad) = y.iter().find(|&&v| v < 0 || v >= classes) {
             bail!("label {bad} out of range [0, {classes})");
         }
-        let classes = self.dataset.classes;
+        let classes = self.core.dataset.classes;
         let mut guard = self.scratch.borrow_mut();
         let scr = &mut *guard;
-        let img = self.dataset.image_len();
+        let img = self.core.dataset.image_len();
         if batch == 0 || x.len() != batch * img {
             bail!("batch geometry mismatch: {batch} labels vs {} pixels", x.len());
         }
-        self.ensure_batch(scr, batch);
-        self.forward(scr, x, batch);
+        self.core.ensure_batch(scr, batch);
+        self.core.forward(&self.par, scr, x, batch);
         let (loss, acc) = ops::softmax_ce(
             batch,
             classes,
-            &scr.acts[self.arch.out_id][..batch * classes],
+            &scr.acts[self.core.arch.out_id][..batch * classes],
             y,
             None,
         );
@@ -806,19 +889,72 @@ impl DeployEngine {
     /// Evaluate a multi-batch set (len must be a multiple of
     /// `eval_batch`), merging per-batch results in batch order — the
     /// same ordered merge as `ModelSession::evaluate`.
+    ///
+    /// Multi-batch sets are pipelined: contiguous batch groups run
+    /// concurrently on cached forked engines ([`DeployEngine::fork`] —
+    /// each shares the frozen panels and owns only a scratch arena),
+    /// then the per-batch `(correct, loss)` pairs are merged serially
+    /// **in batch order**. Every batch's integer computation is exact
+    /// and its f32 epilogue merges partials in partition order, so each
+    /// fork produces the very bits the serial loop would — the pipeline
+    /// is bit-identical to serial execution at any thread count and any
+    /// width (`rust/tests/deploy_parity.rs` pins this at threads 1/2/4).
+    /// Width is capped (`MAX_EVAL_PIPELINE`) to bound fork-arena
+    /// memory; the cap is a pure scheduling choice for the same reason.
     pub fn evaluate(&self, xs: &[f32], ys: &[i32]) -> Result<EvalResult> {
-        let b = self.dataset.eval_batch;
-        let img = self.dataset.image_len();
+        let b = self.core.dataset.eval_batch;
+        let img = self.core.dataset.image_len();
         if ys.is_empty() || ys.len() % b != 0 {
             bail!("eval set size {} must be a positive multiple of {b}", ys.len());
         }
         let batches = ys.len() / b;
+        let width = if self.pipeline_eval {
+            self.par.threads().min(batches).min(MAX_EVAL_PIPELINE)
+        } else {
+            1
+        };
+        type BatchResults = Vec<Result<(f32, f32)>>;
+        let mut per_batch: BatchResults = Vec::with_capacity(batches);
+        if width > 1 {
+            let chunks = fixed_partition(batches, width);
+            let mut forks = self.eval_forks.borrow_mut();
+            while forks.len() < chunks.len() {
+                forks.push(self.fork());
+            }
+            let mut slots: Vec<Option<BatchResults>> = Vec::with_capacity(chunks.len());
+            slots.resize_with(chunks.len(), || None);
+            {
+                let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+                for ((slot, fork), r) in
+                    slots.iter_mut().zip(forks.iter_mut()).zip(chunks.iter().cloned())
+                {
+                    tasks.push(Box::new(move || {
+                        let mut out = Vec::with_capacity(r.end - r.start);
+                        for bi in r {
+                            let x = &xs[bi * b * img..(bi + 1) * b * img];
+                            let y = &ys[bi * b..(bi + 1) * b];
+                            out.push(fork.eval_batch(x, y));
+                        }
+                        *slot = Some(out);
+                    }));
+                }
+                self.par.run(tasks);
+            }
+            for s in slots {
+                per_batch.extend(s.expect("every eval chunk ran"));
+            }
+        } else {
+            for bi in 0..batches {
+                let x = &xs[bi * b * img..(bi + 1) * b * img];
+                let y = &ys[bi * b..(bi + 1) * b];
+                per_batch.push(self.eval_batch(x, y));
+            }
+        }
+        // ordered merge: one (correct, loss) chain over batches ascending
         let mut correct = 0.0f64;
         let mut loss_sum = 0.0f64;
-        for bi in 0..batches {
-            let x = &xs[bi * b * img..(bi + 1) * b * img];
-            let y = &ys[bi * b..(bi + 1) * b];
-            let (c, l) = self.eval_batch(x, y)?;
+        for r in per_batch {
+            let (c, l) = r?;
             correct += c as f64;
             loss_sum += l as f64;
         }

@@ -1,12 +1,13 @@
-//! Integer GEMM kernel core for the deployment runtime.
+//! The i16 deployment instantiation of the shared packed-panel kernel
+//! core ([`crate::runtime::native::kernel`], DESIGN.md §9/§10).
 //!
-//! The same panel / micro-kernel structure as the f32 training core
-//! ([`crate::runtime::native::gemm`], DESIGN.md §9) — `MR`-row A panels,
-//! `NR`-column B panels, a register-tiled accumulator block, direct
-//! packed im2col with the padding-free 1×1 gather fast path — but with
-//! `i16` operands and `i32` accumulation. The panel geometry helpers
-//! (`packed_a_len` / `packed_b_len`, `MR`, `NR`) are shared with the f32
-//! core: they are pure index arithmetic.
+//! This module used to carry a hand-synchronized copy of the f32
+//! trainer's packers and micro-kernel; it is now *only* re-exports and
+//! thin forward drivers over the generic core — the panel index
+//! arithmetic exists exactly once, so the deployed integer layout can
+//! never drift from the layout the QAT search simulated (CI greps this
+//! file to keep it that way). Operands are `i16`, accumulation is exact
+//! `i32` via the [`crate::runtime::native::kernel::PanelElem`] impl.
 //!
 //! Operand ranges make the arithmetic *exact*: activation codes are
 //! uncentered `u ∈ [0, 2^a − 1]` (a ≤ 8 ⇒ u ≤ 255 — the zero point is
@@ -19,8 +20,23 @@
 //! needs no accumulation-order contract: any partition, any schedule,
 //! any tiling produces the same integers.
 
-pub use crate::runtime::native::gemm::{packed_a_len, packed_b_len, MR, NR};
+use crate::runtime::native::kernel::{self, Acc};
 use crate::runtime::native::ops::Conv2d;
+
+// The shared layout + packing surface, instantiated at i16 by the
+// callers' operand types. `iim2col_packed` is the generic direct-packed
+// im2col (the conv driver below dispatches 1×1 padding-free geometries
+// to the gather fast path, exactly like the trainer's conv driver).
+pub use crate::runtime::native::kernel::{
+    im2col_packed as iim2col_packed, pack_a as ipack_a, pack_a_unit as ipack_a_unit,
+    pack_b as ipack_b, packed_a_len, packed_b_len, MR, NR,
+};
+
+/// Per-partition packing scratch for the integer kernels — the deploy
+/// instantiation of the generic `PackScratch` (the engine keeps one per
+/// fixed partition; only the A-panel region is used on the forward-only
+/// path, so callers `ensure(0, apack, 0)`).
+pub type IPackScratch = kernel::PackScratch<i16>;
 
 /// Worst-case |accumulator| of a `k`-deep integer MAC chain at the given
 /// activation/weight bitwidths — callers assert `<= i32::MAX` per layer.
@@ -30,177 +46,27 @@ pub fn max_abs_acc(kdim: usize, abits: u8, wbits: u8) -> i64 {
     kdim as i64 * qa * qw
 }
 
-/// Pack row-major `a[m × k]` into `MR`-row panels, k-major inside each
-/// panel; tail rows zero-filled. Integer mirror of `gemm::pack_a`.
-pub fn ipack_a(m: usize, k: usize, a: &[i16], out: &mut [i16]) {
-    for (p, panel) in out[..packed_a_len(m, k)].chunks_exact_mut(k * MR).enumerate() {
-        let i0 = p * MR;
-        let h = MR.min(m - i0);
-        for ii in 0..h {
-            let src = &a[(i0 + ii) * k..(i0 + ii) * k + k];
-            for (kk, &v) in src.iter().enumerate() {
-                panel[kk * MR + ii] = v;
-            }
-        }
-        for ii in h..MR {
-            for kk in 0..k {
-                panel[kk * MR + ii] = 0;
-            }
-        }
-    }
-}
-
-/// Pack row-major `b[k × n]` into `NR`-column panels, k-major inside
-/// each panel; tail columns zero-filled. Integer mirror of
-/// `gemm::pack_b` — used once per layer at model load to freeze the
-/// weight codes into panels.
-pub fn ipack_b(k: usize, n: usize, b: &[i16], out: &mut [i16]) {
-    for (p, panel) in out[..packed_b_len(k, n)].chunks_exact_mut(k * NR).enumerate() {
-        let j0 = p * NR;
-        let w = NR.min(n - j0);
-        for kk in 0..k {
-            let dst = &mut panel[kk * NR..kk * NR + NR];
-            dst[..w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
-            dst[w..].fill(0);
-        }
-    }
-}
-
-/// Direct-packed im2col of one image of quantized activation codes:
-/// panel lane `ii` is output position `i0 + ii`, k-major `kh→kw→ci`
-/// columns, out-of-bounds taps zero — padded taps contribute nothing to
-/// `S = Σ u·w`, and the engine's per-position zero-point correction
-/// (`zp · Σ_valid w`) accounts for the pad's lattice value exactly.
-/// Padding-free 1×1 geometries take the strided row-gather fast path.
-pub fn iim2col_packed(cv: &Conv2d, x: &[i16], out: &mut [i16]) {
-    let (w, h, cin, k, s) = (cv.w, cv.h, cv.cin, cv.k, cv.stride);
-    let m = cv.oh * cv.ow;
-    let kdim = k * k * cin;
-    if k == 1 && cv.pad_h == 0 && cv.pad_w == 0 {
-        for (p, panel) in out[..packed_a_len(m, cin)].chunks_exact_mut(cin * MR).enumerate() {
-            let i0 = p * MR;
-            let hh = MR.min(m - i0);
-            for ii in 0..hh {
-                let opos = i0 + ii;
-                let (oy, ox) = (opos / cv.ow, opos % cv.ow);
-                let base = (oy * s * w + ox * s) * cin;
-                for (kk, &v) in x[base..base + cin].iter().enumerate() {
-                    panel[kk * MR + ii] = v;
-                }
-            }
-            for ii in hh..MR {
-                for kk in 0..cin {
-                    panel[kk * MR + ii] = 0;
-                }
-            }
-        }
-        return;
-    }
-    for (p, panel) in out[..packed_a_len(m, kdim)].chunks_exact_mut(kdim * MR).enumerate() {
-        let i0 = p * MR;
-        for ii in 0..MR {
-            let opos = i0 + ii;
-            if opos >= m {
-                for kc in 0..kdim {
-                    panel[kc * MR + ii] = 0;
-                }
-                continue;
-            }
-            let (oy, ox) = (opos / cv.ow, opos % cv.ow);
-            let mut kc = 0usize;
-            for kh in 0..k {
-                let iy = (oy * s + kh) as isize - cv.pad_h as isize;
-                for kw in 0..k {
-                    let ix = (ox * s + kw) as isize - cv.pad_w as isize;
-                    if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
-                        for ci in 0..cin {
-                            panel[(kc + ci) * MR + ii] = 0;
-                        }
-                    } else {
-                        let base = (iy as usize * w + ix as usize) * cin;
-                        for ci in 0..cin {
-                            panel[(kc + ci) * MR + ii] = x[base + ci];
-                        }
-                    }
-                    kc += cin;
-                }
-            }
-        }
-    }
-}
-
-/// The register-tiled integer inner loop:
-/// `acc[MR][NR] += Apanel ⊗ Bpanel` over the full k extent, exact i32.
-#[inline]
-fn imicro_kernel(k: usize, apanel: &[i16], bpanel: &[i16], acc: &mut [[i32; NR]; MR]) {
-    debug_assert!(apanel.len() >= k * MR && bpanel.len() >= k * NR);
-    for kk in 0..k {
-        let ar = &apanel[kk * MR..kk * MR + MR];
-        let br = &bpanel[kk * NR..kk * NR + NR];
-        for i in 0..MR {
-            let av = i32::from(ar[i]);
-            let accr = &mut acc[i];
-            for j in 0..NR {
-                accr[j] += av * i32::from(br[j]);
-            }
-        }
-    }
-}
-
 /// Blocked `C[m × n] = A[m × k] · B[k × n]` over packed integer panels;
-/// `c` is row-major with leading dimension `ldc`.
+/// `c` is row-major with leading dimension `ldc`. Always
+/// [`Acc::Store`]-seeded: the integer engine recomputes each
+/// accumulator from scratch and applies its epilogue afterwards.
 pub fn igemm(m: usize, n: usize, k: usize, ap: &[i16], bp: &[i16], c: &mut [i32], ldc: usize) {
-    let mut acc = [[0i32; NR]; MR];
-    for (jp, bpanel) in bp[..packed_b_len(k, n)].chunks_exact(k * NR).enumerate() {
-        let j0 = jp * NR;
-        let w = NR.min(n - j0);
-        for (ip, apanel) in ap[..packed_a_len(m, k)].chunks_exact(k * MR).enumerate() {
-            let i0 = ip * MR;
-            let h = MR.min(m - i0);
-            acc = [[0; NR]; MR];
-            imicro_kernel(k, apanel, bpanel, &mut acc);
-            for i in 0..h {
-                c[(i0 + i) * ldc + j0..(i0 + i) * ldc + j0 + w].copy_from_slice(&acc[i][..w]);
-            }
-        }
-    }
-}
-
-/// Per-partition packing scratch for the integer kernels (the deploy
-/// engine keeps one per fixed partition, mirroring `gemm::PackScratch`).
-#[derive(Default)]
-pub struct IPackScratch {
-    /// Packed-A panels (im2col codes / dense rows).
-    pub apack: Vec<i16>,
-}
-
-impl IPackScratch {
-    pub fn ensure(&mut self, apack: usize) {
-        if self.apack.len() < apack {
-            self.apack.resize(apack, 0);
-        }
-    }
+    kernel::gemm(m, n, k, ap, bp, c, ldc, Acc::Store);
 }
 
 /// Integer conv over a block of batch rows:
 /// `acc[b, pos, co] = Σ_{kh,kw,ci} q_a · q_w` with `wpack` from
-/// [`ipack_b`]`(k·k·cin, cout, codes)`.
+/// [`ipack_b`]`(k·k·cin, cout, codes)` — the i16 instantiation of the
+/// shared conv driver (padding-free 1×1 geometries take the same gather
+/// fast path as the trainer).
 pub fn iconv_forward(cv: &Conv2d, rows: usize, x: &[i16], wpack: &[i16], out: &mut [i32], ps: &mut IPackScratch) {
-    let m = cv.oh * cv.ow;
-    let kdim = cv.k * cv.k * cv.cin;
-    let in_st = cv.h * cv.w * cv.cin;
-    let out_st = m * cv.cout;
-    for n in 0..rows {
-        iim2col_packed(cv, &x[n * in_st..(n + 1) * in_st], &mut ps.apack);
-        igemm(m, cv.cout, kdim, &ps.apack, wpack, &mut out[n * out_st..(n + 1) * out_st], cv.cout);
-    }
+    kernel::conv_forward(cv, rows, x, wpack, out, ps);
 }
 
 /// Integer dense over a block of batch rows: `acc[b, co] = Σ_ci q_a · q_w`
 /// with `wpack` from [`ipack_b`]`(cin, cout, codes)`.
 pub fn idense_forward(rows: usize, cin: usize, cout: usize, a: &[i16], wpack: &[i16], out: &mut [i32], ps: &mut IPackScratch) {
-    ipack_a(rows, cin, a, &mut ps.apack);
-    igemm(rows, cout, cin, &ps.apack, wpack, &mut out[..rows * cout], cout);
+    kernel::dense_forward(rows, cin, cout, a, wpack, Acc::Store, out, ps);
 }
 
 #[cfg(test)]
@@ -291,7 +157,7 @@ mod tests {
             let mut wpack = vec![0i16; packed_b_len(kdim, cv.cout)];
             ipack_b(kdim, cv.cout, &kern, &mut wpack);
             let mut ps = IPackScratch::default();
-            ps.ensure(packed_a_len(cv.oh * cv.ow, kdim));
+            ps.ensure(0, packed_a_len(cv.oh * cv.ow, kdim), 0);
             let mut out = vec![0i32; want.len()];
             iconv_forward(&cv, batch, &x, &wpack, &mut out, &mut ps);
             assert_eq!(out, want, "k={} s={}", cv.k, cv.stride);

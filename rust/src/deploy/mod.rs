@@ -18,11 +18,16 @@
 //!   accounting.
 //! * [`format`] — versioned binary serialize/deserialize (`.sqdm`),
 //!   byte-identical round-trip.
-//! * [`igemm`] — integer mirror of the blocked GEMM core: packed panels,
-//!   register-tiled i32 micro-kernel, im2col with the 1×1 fast path.
+//! * [`igemm`] — the i16/i32 instantiation of the *shared* packed-panel
+//!   kernel core ([`crate::runtime::native::kernel`]): re-exports + thin
+//!   forward drivers, zero local packer/micro-kernel copies (CI greps
+//!   this invariant), so the deployed layout can never drift from the
+//!   one the QAT search simulated.
 //! * [`engine`] — the interpreter: dynamic per-tensor activation
 //!   quantization, partition-parallel integer GEMMs, fused epilogues;
-//!   bit-identical at every thread count.
+//!   bit-identical at every thread count, with multi-batch serving
+//!   pipelined over cached forked engines (bit-identical to the serial
+//!   loop).
 //!
 //! The `deploy` CLI subcommand and `benches/bench_deploy.rs` close the
 //! loop by running packed models on eval batches and reporting measured

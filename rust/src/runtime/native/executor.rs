@@ -25,11 +25,15 @@
 //! the compute. Scheduling only: the partition is the same either way.
 //!
 //! Conv and dense matrix work routes through the cache-blocked GEMM
-//! kernel core (`super::gemm`, DESIGN.md §9): weights are packed into
-//! B panels once per node before the fan-out, and each partition task
-//! packs its own im2col/A panels from per-partition scratch. The GEMM
-//! path reproduces the naive loops' accumulation order bit for bit, so
-//! this is purely a throughput change.
+//! kernel core (`super::gemm` — the f32 instantiation of the generic
+//! packed-panel layer `super::kernel` shared with the deploy engine,
+//! DESIGN.md §9): weights are packed into B panels once per node before
+//! the fan-out, and each partition task packs its own im2col/A panels
+//! from per-partition scratch. Every arena region is sized through the
+//! kernel layer's shared layout functions (`conv_scratch_sizes` /
+//! `dense_scratch_sizes` / `packed_b_len`), never by local arithmetic.
+//! The GEMM path reproduces the naive loops' accumulation order bit for
+//! bit, so this is purely a throughput change.
 //!
 //! Fake-quantized weights and their packed panels are *cached per weight
 //! epoch*: each quantizable layer keeps its `qw` + `pack_b` (+ backward

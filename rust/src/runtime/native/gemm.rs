@@ -1,20 +1,15 @@
-//! Cache-blocked GEMM kernel core shared by every conv/dense forward and
-//! backward pass of the native backend (DESIGN.md §9).
+//! The f32 trainer instantiation of the shared packed-panel kernel core
+//! ([`super::kernel`], DESIGN.md §9) — plus the float-specific pieces
+//! the generic layer deliberately does not own: the backward passes
+//! (kernel/input gradients with their `Acc` chain choreography) and the
+//! col2im gradient scatter.
 //!
-//! The naive PR-2 kernels walked a 7-deep loop nest per convolution and
-//! re-loaded / re-stored the output row on every kernel tap. This module
-//! replaces that inner machinery with one register-tiled micro-kernel
-//! over packed panels:
-//!
-//! * **A panels** ([`pack_a`] / [`pack_a_t`] / [`im2col_packed`]): `MR`
-//!   rows interleaved k-major, so the micro-kernel reads `MR` operands
-//!   per k-step from one contiguous cache line run; padding-free 1×1
-//!   convs at any stride take the gather fast paths ([`pack_a_unit`] /
-//!   [`pack_a_t_unit`]) that skip the tap loops entirely;
-//! * **B panels** ([`pack_b`] / [`pack_b_t`]): `NR` columns interleaved
-//!   k-major, zero-padded to a full panel;
-//! * **micro-kernel**: an `MR × NR` accumulator block held in registers
-//!   across the entire k loop, written back once per tile.
+//! Panel packers, layout functions and the `MR × NR` micro-kernel live
+//! in [`super::kernel`] and are re-exported here unchanged, so every
+//! existing `gemm::pack_a(...)`-style call site keeps reading naturally
+//! while the index arithmetic exists exactly once (the integer deploy
+//! kernels, [`crate::deploy::igemm`], instantiate the same functions at
+//! `i16`).
 //!
 //! # Accumulation-order preservation (bitwise parity with the naive loops)
 //!
@@ -46,251 +41,39 @@
 //!    `0·∞ = NaN` — which the naive skip would mask; training keeps all
 //!    values finite.)
 //! 4. **No FMA.** Products round to f32 before the add (`mul` then
-//!    `add`), exactly like the scalar reference; Rust never contracts
-//!    float expressions, so the codegen cannot fuse them behind our back.
+//!    `add`), exactly like the scalar reference; the f32
+//!    [`super::kernel::PanelElem`] impl spells the MAC as `acc + a * b`
+//!    and Rust never contracts float expressions, so the codegen cannot
+//!    fuse them behind our back. Genericizing the skeleton changes none
+//!    of this: monomorphization inlines the trait call back to the exact
+//!    pre-generic arithmetic.
 //!
 //! The kernels stay `unsafe`-free: the tile shapes are compile-time
 //! constants (`[[f32; NR]; MR]` lives in registers) and the inner loops
 //! are written so LLVM's autovectorizer sees fixed-trip-count
 //! independent lanes.
 
+pub use super::kernel::{
+    conv_kdim, conv_rows, conv_scratch_sizes, dense_scratch_sizes, gemm, im2col_packed,
+    im2col_packed_t, pack_a, pack_a_t, pack_a_t_unit, pack_a_unit, pack_b, pack_b_t, packed_a_len,
+    packed_b_len, round_up, Acc, MR, NR,
+};
+
+use super::kernel::{self, unit_stride};
 use super::ops::Conv2d;
 
-/// Micro-tile rows: A-panel operands per k-step. 6 keeps
-/// `MR × NR/8 = 12` YMM accumulators plus operands inside a 16-register
-/// vector file.
-pub const MR: usize = 6;
-/// Micro-tile columns: one B-panel run per k-step (two YMM / one ZMM).
-pub const NR: usize = 16;
-
-/// `x` rounded up to a multiple of `b`.
-#[inline]
-pub fn round_up(x: usize, b: usize) -> usize {
-    x.div_ceil(b) * b
-}
-
-/// Length of the packed-A buffer for an `m × k` operand.
-#[inline]
-pub fn packed_a_len(m: usize, k: usize) -> usize {
-    round_up(m, MR) * k
-}
-
-/// Length of the packed-B buffer for a `k × n` operand.
-#[inline]
-pub fn packed_b_len(k: usize, n: usize) -> usize {
-    k * round_up(n, NR)
-}
-
-/// Pack row-major `a[m × k]` into `MR`-row panels, k-major inside each
-/// panel (`panel[kk·MR + ii] = a[(i0+ii)·k + kk]`); tail rows are
-/// zero-filled.
-pub fn pack_a(m: usize, k: usize, a: &[f32], out: &mut [f32]) {
-    for (p, panel) in out[..packed_a_len(m, k)].chunks_exact_mut(k * MR).enumerate() {
-        let i0 = p * MR;
-        let h = MR.min(m - i0);
-        for ii in 0..h {
-            let src = &a[(i0 + ii) * k..(i0 + ii) * k + k];
-            for (kk, &v) in src.iter().enumerate() {
-                panel[kk * MR + ii] = v;
-            }
-        }
-        for ii in h..MR {
-            for kk in 0..k {
-                panel[kk * MR + ii] = 0.0;
-            }
-        }
-    }
-}
-
-/// Pack `A[m × k]` given its *transpose* `at[k × m]` (row-major) — the
-/// zero-copy way to feed `Aᵀ·B` products (conv/dense kernel gradients)
-/// through the same micro-kernel. Reads are contiguous `MR`-runs.
-pub fn pack_a_t(m: usize, k: usize, at: &[f32], out: &mut [f32]) {
-    for (p, panel) in out[..packed_a_len(m, k)].chunks_exact_mut(k * MR).enumerate() {
-        let i0 = p * MR;
-        let h = MR.min(m - i0);
-        for kk in 0..k {
-            let dst = &mut panel[kk * MR..kk * MR + MR];
-            dst[..h].copy_from_slice(&at[kk * m + i0..kk * m + i0 + h]);
-            dst[h..].fill(0.0);
-        }
-    }
-}
-
-/// Pack row-major `b[k × n]` into `NR`-column panels, k-major inside
-/// each panel; tail columns are zero-filled (the padded lanes compute
-/// values no caller stores).
-pub fn pack_b(k: usize, n: usize, b: &[f32], out: &mut [f32]) {
-    for (p, panel) in out[..packed_b_len(k, n)].chunks_exact_mut(k * NR).enumerate() {
-        let j0 = p * NR;
-        let w = NR.min(n - j0);
-        for kk in 0..k {
-            let dst = &mut panel[kk * NR..kk * NR + NR];
-            dst[..w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
-            dst[w..].fill(0.0);
-        }
-    }
-}
-
-/// Pack `B[k × n]` given its *transpose* `bt[n × k]` (row-major) — used
-/// for the `dy·Wᵀ` input-gradient GEMMs without materializing `Wᵀ`.
-pub fn pack_b_t(k: usize, n: usize, bt: &[f32], out: &mut [f32]) {
-    for (p, panel) in out[..packed_b_len(k, n)].chunks_exact_mut(k * NR).enumerate() {
-        let j0 = p * NR;
-        let w = NR.min(n - j0);
-        for kk in 0..k {
-            let dst = &mut panel[kk * NR..kk * NR + NR];
-            for jj in 0..w {
-                dst[jj] = bt[(j0 + jj) * k + kk];
-            }
-            dst[w..].fill(0.0);
-        }
-    }
-}
-
-/// How a GEMM tile's accumulation chain is seeded and written back —
-/// chosen to reproduce the naive reference loop's chain exactly (see
-/// the module docs).
-#[derive(Clone, Copy)]
-pub enum Acc<'a> {
-    /// `C = Σ` — chains seeded at `+0.0`, stored (conv forward into a
-    /// zero-semantics output; gradient scratch like `dcol`).
-    Store,
-    /// `C = bias ⊕ Σ` — chains seeded with the per-column bias, matching
-    /// the dense forward's `out = bias; out += …`.
-    Bias(&'a [f32]),
-    /// `C += Σ` — fresh chains added to `C` once at the end, matching
-    /// `dx += Σ_co …` (the value may already hold other consumers'
-    /// gradient contributions).
-    Add,
-    /// Chains *continue from the current value of `C`*: load, append `k`
-    /// products, store. Used for kernel gradients so per-image GEMM calls
-    /// keep one unbroken `(n, oy, ox)`-ascending chain per element.
-    Extend,
-}
-
-/// The register-tiled inner loop: `acc[MR][NR] += Apanel ⊗ Bpanel` over
-/// the full k extent, products rounded before each add (no FMA).
-#[inline]
-fn micro_kernel(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
-    debug_assert!(apanel.len() >= k * MR && bpanel.len() >= k * NR);
-    for kk in 0..k {
-        let ar = &apanel[kk * MR..kk * MR + MR];
-        let br = &bpanel[kk * NR..kk * NR + NR];
-        for i in 0..MR {
-            let av = ar[i];
-            let accr = &mut acc[i];
-            for j in 0..NR {
-                accr[j] += av * br[j];
-            }
-        }
-    }
-}
-
-/// Blocked `C[m × n] (+)= A[m × k] · B[k × n]` over packed panels.
-/// `ap` from [`pack_a`]/[`pack_a_t`]/[`im2col_packed`], `bp` from
-/// [`pack_b`]/[`pack_b_t`]; `c` is row-major with leading dimension
-/// `ldc`. The k loop is never split, so each element is one ascending
-/// accumulation chain (see [`Acc`] for how it is seeded).
-pub fn gemm(m: usize, n: usize, k: usize, ap: &[f32], bp: &[f32], c: &mut [f32], ldc: usize, mode: Acc<'_>) {
-    let mut acc = [[0.0f32; NR]; MR];
-    for (jp, bpanel) in bp[..packed_b_len(k, n)].chunks_exact(k * NR).enumerate() {
-        let j0 = jp * NR;
-        let w = NR.min(n - j0);
-        for (ip, apanel) in ap[..packed_a_len(m, k)].chunks_exact(k * MR).enumerate() {
-            let i0 = ip * MR;
-            let h = MR.min(m - i0);
-            match mode {
-                Acc::Store | Acc::Add => acc = [[0.0; NR]; MR],
-                Acc::Bias(bias) => {
-                    for row in acc.iter_mut() {
-                        row[..w].copy_from_slice(&bias[j0..j0 + w]);
-                        row[w..].fill(0.0);
-                    }
-                }
-                Acc::Extend => {
-                    for (i, row) in acc.iter_mut().enumerate() {
-                        if i < h {
-                            row[..w].copy_from_slice(&c[(i0 + i) * ldc + j0..(i0 + i) * ldc + j0 + w]);
-                            row[w..].fill(0.0);
-                        } else {
-                            row.fill(0.0);
-                        }
-                    }
-                }
-            }
-            micro_kernel(k, apanel, bpanel, &mut acc);
-            for i in 0..h {
-                let crow = &mut c[(i0 + i) * ldc + j0..(i0 + i) * ldc + j0 + w];
-                match mode {
-                    Acc::Store | Acc::Bias(_) | Acc::Extend => crow.copy_from_slice(&acc[i][..w]),
-                    Acc::Add => {
-                        for (cv, &av) in crow.iter_mut().zip(&acc[i][..w]) {
-                            *cv += av;
-                        }
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// Number of GEMM rows of one image's im2col matrix (`oh·ow`).
-#[inline]
-pub fn conv_rows(cv: &Conv2d) -> usize {
-    cv.oh * cv.ow
-}
-
-/// GEMM depth of one convolution (`k·k·cin`) — the im2col column count,
-/// enumerated `kh→kw→ci` to match the naive tap order.
-#[inline]
-pub fn conv_kdim(cv: &Conv2d) -> usize {
-    cv.k * cv.k * cv.cin
-}
-
-/// Stride of a padding-free 1×1 convolution, or `None` for every other
-/// geometry. A `k = 1` conv never pads (SAME resolves to zero padding at
-/// any stride), so its im2col matrix is a pure row *gather* of the input
-/// — contiguous at stride 1 (the im2col matrix *is* the input), strided
-/// otherwise — and the packing fast paths below skip the kh/kw tap loops
-/// entirely. This covers both the 1×1 bottleneck convs (stride 1) and
-/// the ResNet projection shortcuts (1×1, stride 2).
-#[inline]
-fn unit_stride(cv: &Conv2d) -> Option<usize> {
-    (cv.k == 1 && cv.pad_h == 0 && cv.pad_w == 0).then_some(cv.stride)
-}
-
-/// [`PackScratch`] lengths `(col, apack, bpack)` one partition needs to
-/// run every GEMM of this conv geometry ([`conv_forward`] +
-/// [`conv_backward`]) — the single source of truth for the executor
-/// arena, the parity tests, and the benches. Any new GEMM call shape
-/// added to the conv paths must be folded in here.
-pub fn conv_scratch_sizes(cv: &Conv2d) -> (usize, usize, usize) {
-    let m = conv_rows(cv);
-    let kdim = conv_kdim(cv);
-    (
-        m * kdim,
-        packed_a_len(m, kdim)
-            .max(packed_a_len(kdim, m))
-            .max(packed_a_len(m, cv.cout)),
-        packed_b_len(m, cv.cout),
-    )
-}
-
-/// [`PackScratch`] lengths `(apack, bpack)` for the dense GEMMs at a
-/// given partition row count ([`dense_forward`] + [`dense_backward`]).
-pub fn dense_scratch_sizes(rows: usize, cin: usize, cout: usize) -> (usize, usize) {
-    (
-        packed_a_len(rows, cin)
-            .max(packed_a_len(cin, rows))
-            .max(packed_a_len(rows, cout)),
-        packed_b_len(rows, cout),
-    )
-}
+/// Per-partition f32 packing scratch — the trainer's instantiation of
+/// the generic [`kernel::PackScratch`]; one instance per fixed partition
+/// so concurrent tasks never share buffers. Carved out of the executor's
+/// arena: sized once (`ensure`, through [`conv_scratch_sizes`] /
+/// [`dense_scratch_sizes`]), reused across nodes and steps.
+pub type PackScratch = kernel::PackScratch<f32>;
 
 /// Row-major im2col of one image: `col[(oy·ow+ox) · kdim + (kh·k+kw)·cin
 /// + ci]`, out-of-bounds taps zero-filled. Column order is exactly the
-/// naive loops' `kh→kw→ci` accumulation order.
+/// naive loops' `kh→kw→ci` accumulation order. (The packed paths below
+/// never materialize this; it survives as the `dcol` gradient scratch
+/// and as the parity tests' layout oracle.)
 pub fn im2col(cv: &Conv2d, x: &[f32], col: &mut [f32]) {
     let (w, h, cin, k) = (cv.w, cv.h, cv.cin, cv.k);
     let kdim = conv_kdim(cv);
@@ -315,134 +98,6 @@ pub fn im2col(cv: &Conv2d, x: &[f32], col: &mut [f32]) {
                     }
                 }
             }
-        }
-    }
-}
-
-/// im2col of one image directly into packed-A panel layout (skips the
-/// row-major intermediate): `panel[kc·MR + ii]` for output position
-/// `i0 + ii`, `kc` enumerating `kh→kw→ci`.
-pub fn im2col_packed(cv: &Conv2d, x: &[f32], out: &mut [f32]) {
-    let (w, h, cin, k) = (cv.w, cv.h, cv.cin, cv.k);
-    let m = conv_rows(cv);
-    let kdim = conv_kdim(cv);
-    for (p, panel) in out[..packed_a_len(m, kdim)].chunks_exact_mut(kdim * MR).enumerate() {
-        let i0 = p * MR;
-        for ii in 0..MR {
-            let opos = i0 + ii;
-            if opos >= m {
-                for kc in 0..kdim {
-                    panel[kc * MR + ii] = 0.0;
-                }
-                continue;
-            }
-            let (oy, ox) = (opos / cv.ow, opos % cv.ow);
-            let mut kc = 0usize;
-            for kh in 0..k {
-                let iy = (oy * cv.stride + kh) as isize - cv.pad_h as isize;
-                for kw in 0..k {
-                    let ix = (ox * cv.stride + kw) as isize - cv.pad_w as isize;
-                    if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
-                        for ci in 0..cin {
-                            panel[(kc + ci) * MR + ii] = 0.0;
-                        }
-                    } else {
-                        let base = (iy as usize * w + ix as usize) * cin;
-                        for ci in 0..cin {
-                            panel[(kc + ci) * MR + ii] = x[base + ci];
-                        }
-                    }
-                    kc += cin;
-                }
-            }
-        }
-    }
-}
-
-/// Transposed-packed im2col of one image: packs `im2colᵀ [kdim × m]`
-/// directly into A panels (`panel[kk·MR + ii]` = im2col column `i0+ii`
-/// at output position `kk`), producing byte-identical output to
-/// `pack_a_t(kdim, m, im2col(...))` without materializing the row-major
-/// intermediate — the dk-GEMM packing path. The ≤ `MR` column decodes
-/// are hoisted per panel, so the hot loop is pure address arithmetic.
-pub fn im2col_packed_t(cv: &Conv2d, x: &[f32], out: &mut [f32]) {
-    let m = conv_rows(cv);
-    let kdim = conv_kdim(cv);
-    let (w, h, cin, k) = (cv.w, cv.h, cv.cin, cv.k);
-    for (p, panel) in out[..packed_a_len(kdim, m)].chunks_exact_mut(m * MR).enumerate() {
-        let i0 = p * MR;
-        let lanes = MR.min(kdim - i0);
-        // decode this panel's (kh, kw, ci) column triples once
-        let mut taps = [(0isize, 0isize, 0usize); MR];
-        for (ii, tap) in taps.iter_mut().enumerate().take(lanes) {
-            let idx = i0 + ii;
-            let kh = idx / (k * cin);
-            let rem = idx % (k * cin);
-            *tap = (kh as isize, (rem / cin) as isize, rem % cin);
-        }
-        for kk in 0..m {
-            let (oy, ox) = (kk / cv.ow, kk % cv.ow);
-            let dst = &mut panel[kk * MR..kk * MR + MR];
-            for (ii, &(kh, kw, ci)) in taps.iter().enumerate().take(lanes) {
-                let iy = (oy * cv.stride) as isize + kh - cv.pad_h as isize;
-                let ix = (ox * cv.stride) as isize + kw - cv.pad_w as isize;
-                dst[ii] = if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
-                    0.0
-                } else {
-                    x[(iy as usize * w + ix as usize) * cin + ci]
-                };
-            }
-            dst[lanes..].fill(0.0);
-        }
-    }
-}
-
-/// Packed-A im2col fast path for padding-free 1×1 convs at any stride
-/// (`unit_stride` geometries): output position `(oy, ox)` reads exactly
-/// input pixel `(oy·s, ox·s)`, so the panel is a strided row gather — no
-/// tap loop, no bounds checks. Byte-identical output to
-/// [`im2col_packed`] (and, at stride 1, to [`pack_a`] of the input).
-pub fn pack_a_unit(cv: &Conv2d, x: &[f32], out: &mut [f32]) {
-    debug_assert!(unit_stride(cv).is_some());
-    let (w, cin, s) = (cv.w, cv.cin, cv.stride);
-    let m = conv_rows(cv);
-    for (p, panel) in out[..packed_a_len(m, cin)].chunks_exact_mut(cin * MR).enumerate() {
-        let i0 = p * MR;
-        let h = MR.min(m - i0);
-        for ii in 0..h {
-            let opos = i0 + ii;
-            let (oy, ox) = (opos / cv.ow, opos % cv.ow);
-            let base = (oy * s * w + ox * s) * cin;
-            for (kk, &v) in x[base..base + cin].iter().enumerate() {
-                panel[kk * MR + ii] = v;
-            }
-        }
-        for ii in h..MR {
-            for kk in 0..cin {
-                panel[kk * MR + ii] = 0.0;
-            }
-        }
-    }
-}
-
-/// Transposed-packed im2col fast path for padding-free 1×1 convs (the
-/// dk-GEMM A operand): lane `ii` is input channel `i0 + ii`, column `kk`
-/// is output position `kk`, read straight from the strided pixel gather.
-/// Byte-identical output to [`im2col_packed_t`] (and, at stride 1, to
-/// [`pack_a_t`]`(cin, m, x)`).
-pub fn pack_a_t_unit(cv: &Conv2d, x: &[f32], out: &mut [f32]) {
-    debug_assert!(unit_stride(cv).is_some());
-    let (w, cin, s) = (cv.w, cv.cin, cv.stride);
-    let m = conv_rows(cv);
-    for (p, panel) in out[..packed_a_len(cin, m)].chunks_exact_mut(m * MR).enumerate() {
-        let i0 = p * MR;
-        let lanes = MR.min(cin - i0);
-        for kk in 0..m {
-            let (oy, ox) = (kk / cv.ow, kk % cv.ow);
-            let base = (oy * s * w + ox * s) * cin + i0;
-            let dst = &mut panel[kk * MR..kk * MR + MR];
-            dst[..lanes].copy_from_slice(&x[base..base + lanes]);
-            dst[lanes..].fill(0.0);
         }
     }
 }
@@ -496,53 +151,14 @@ pub fn col2im_add(cv: &Conv2d, dcol: &[f32], dx: &mut [f32]) {
     }
 }
 
-/// Per-partition packing scratch, one instance per fixed partition so
-/// concurrent tasks never share buffers. Carved out of the executor's
-/// arena: sized once (`ensure`), reused across nodes and steps.
-#[derive(Default)]
-pub struct PackScratch {
-    /// Row-major im2col / dcol buffer (largest conv node).
-    pub col: Vec<f32>,
-    /// Packed-A panels (largest operand over all nodes and passes).
-    pub apack: Vec<f32>,
-    /// Packed-B panels for per-partition operands (`dy` blocks).
-    pub bpack: Vec<f32>,
-}
-
-impl PackScratch {
-    /// Grow buffers to at least the given lengths (never shrinks).
-    pub fn ensure(&mut self, col: usize, apack: usize, bpack: usize) {
-        if self.col.len() < col {
-            self.col.resize(col, 0.0);
-        }
-        if self.apack.len() < apack {
-            self.apack.resize(apack, 0.0);
-        }
-        if self.bpack.len() < bpack {
-            self.bpack.resize(bpack, 0.0);
-        }
-    }
-}
-
-/// Blocked conv forward over a block of batch rows:
+/// Blocked conv forward over a block of batch rows — the f32
+/// instantiation of [`kernel::conv_forward`]:
 /// `out[b,oy,ox,co] = Σ_{kh,kw,ci} x·k` with per-element chains in the
 /// naive `kh→kw→ci` order. `wpack` is the HWIO kernel through
 /// [`pack_b`]`(kdim, cout, …)`. Bias (if any) is applied by the caller
 /// afterwards, exactly like the naive path.
 pub fn conv_forward(cv: &Conv2d, rows: usize, x: &[f32], wpack: &[f32], out: &mut [f32], ps: &mut PackScratch) {
-    let m = conv_rows(cv);
-    let kdim = conv_kdim(cv);
-    let in_st = cv.h * cv.w * cv.cin;
-    let out_st = m * cv.cout;
-    for n in 0..rows {
-        let xn = &x[n * in_st..(n + 1) * in_st];
-        if unit_stride(cv).is_some() {
-            pack_a_unit(cv, xn, &mut ps.apack);
-        } else {
-            im2col_packed(cv, xn, &mut ps.apack);
-        }
-        gemm(m, cv.cout, kdim, &ps.apack, wpack, &mut out[n * out_st..(n + 1) * out_st], cv.cout, Acc::Store);
-    }
+    kernel::conv_forward(cv, rows, x, wpack, out, ps);
 }
 
 /// Blocked conv backward over a block of batch rows. Accumulates
@@ -600,7 +216,8 @@ pub fn conv_backward(
 
 /// Blocked dense forward: `out[b,co] = bias[co] ⊕ Σ_ci a·k` — the chain
 /// is seeded with the bias exactly like the naive `copy_from_slice` +
-/// `+=` loop. `wpack` from [`pack_b`]`(cin, cout, …)`.
+/// `+=` loop ([`kernel::dense_forward`] in [`Acc::Bias`] mode). `wpack`
+/// from [`pack_b`]`(cin, cout, …)`.
 pub fn dense_forward(
     rows: usize,
     cin: usize,
@@ -611,8 +228,7 @@ pub fn dense_forward(
     out: &mut [f32],
     ps: &mut PackScratch,
 ) {
-    pack_a(rows, cin, a, &mut ps.apack);
-    gemm(rows, cout, cin, &ps.apack, wpack, &mut out[..rows * cout], cout, Acc::Bias(bias));
+    kernel::dense_forward(rows, cin, cout, a, wpack, Acc::Bias(bias), out, ps);
 }
 
 /// Blocked dense backward: `dk += aᵀ·dy` (row-ascending chains via

@@ -1,0 +1,164 @@
+//! The register-tiled micro-kernel skeleton and the blocked GEMM/conv/
+//! dense forward drivers, generic over [`PanelElem`].
+//!
+//! The tile walk (panel enumeration, tail handling, write-back) is
+//! shared; the arithmetic is one trait call per MAC, which monomorphizes
+//! to exactly the pre-generic f32 code on the trainer side (`mul` then
+//! `add`, no FMA — see the [`PanelElem`] docs for why the f32 chains are
+//! untouched) and to exact widened i32 accumulation on the deploy side.
+//! The k loop is never split, so an output element is always one
+//! k-ascending accumulation chain — the structural rule the §9 bitwise
+//! parity contract rests on, inherited for free by every instantiation.
+
+use super::{
+    conv_kdim, conv_rows, im2col_packed, pack_a, pack_a_unit, packed_a_len, packed_b_len,
+    unit_stride, PackScratch, PanelElem, MR, NR,
+};
+use crate::runtime::native::ops::Conv2d;
+
+/// How a GEMM tile's accumulation chain is seeded and written back —
+/// chosen to reproduce the calling kernel's reference loop exactly
+/// (trainer callers pick per-pass; the integer engine always uses
+/// [`Acc::Store`], exactness makes the others unnecessary).
+#[derive(Clone, Copy)]
+pub enum Acc<'a, A> {
+    /// `C = Σ` — chains seeded at zero, stored (conv forward into a
+    /// zero-semantics output; gradient scratch like `dcol`; every
+    /// integer GEMM).
+    Store,
+    /// `C = bias ⊕ Σ` — chains seeded with the per-column bias, matching
+    /// the dense forward's `out = bias; out += …`.
+    Bias(&'a [A]),
+    /// `C += Σ` — fresh chains added to `C` once at the end, matching
+    /// `dx += Σ_co …` (the value may already hold other consumers'
+    /// gradient contributions).
+    Add,
+    /// Chains *continue from the current value of `C`*: load, append `k`
+    /// products, store. Used for kernel gradients so per-image GEMM calls
+    /// keep one unbroken `(n, oy, ox)`-ascending chain per element.
+    Extend,
+}
+
+/// The register-tiled inner loop: `acc[MR][NR] ⊕= Apanel ⊗ Bpanel` over
+/// the full k extent, one [`PanelElem::mul_acc`] per element.
+#[inline]
+fn micro_kernel<E: PanelElem>(k: usize, apanel: &[E], bpanel: &[E], acc: &mut [[E::Acc; NR]; MR]) {
+    debug_assert!(apanel.len() >= k * MR && bpanel.len() >= k * NR);
+    for kk in 0..k {
+        let ar = &apanel[kk * MR..kk * MR + MR];
+        let br = &bpanel[kk * NR..kk * NR + NR];
+        for i in 0..MR {
+            let av = ar[i];
+            let accr = &mut acc[i];
+            for j in 0..NR {
+                accr[j] = E::mul_acc(accr[j], av, br[j]);
+            }
+        }
+    }
+}
+
+/// Blocked `C[m × n] (⊕)= A[m × k] · B[k × n]` over packed panels.
+/// `ap` from [`pack_a`]/[`super::pack_a_t`]/[`im2col_packed`], `bp` from
+/// [`super::pack_b`]/[`super::pack_b_t`]; `c` is row-major with leading
+/// dimension `ldc` in the element's accumulator type. The k loop is
+/// never split, so each element is one ascending accumulation chain
+/// (see [`Acc`] for how it is seeded).
+pub fn gemm<E: PanelElem>(
+    m: usize,
+    n: usize,
+    k: usize,
+    ap: &[E],
+    bp: &[E],
+    c: &mut [E::Acc],
+    ldc: usize,
+    mode: Acc<'_, E::Acc>,
+) {
+    let mut acc = [[E::ZERO_ACC; NR]; MR];
+    for (jp, bpanel) in bp[..packed_b_len(k, n)].chunks_exact(k * NR).enumerate() {
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        for (ip, apanel) in ap[..packed_a_len(m, k)].chunks_exact(k * MR).enumerate() {
+            let i0 = ip * MR;
+            let h = MR.min(m - i0);
+            match mode {
+                Acc::Store | Acc::Add => acc = [[E::ZERO_ACC; NR]; MR],
+                Acc::Bias(bias) => {
+                    for row in acc.iter_mut() {
+                        row[..w].copy_from_slice(&bias[j0..j0 + w]);
+                        row[w..].fill(E::ZERO_ACC);
+                    }
+                }
+                Acc::Extend => {
+                    for (i, row) in acc.iter_mut().enumerate() {
+                        if i < h {
+                            row[..w].copy_from_slice(&c[(i0 + i) * ldc + j0..(i0 + i) * ldc + j0 + w]);
+                            row[w..].fill(E::ZERO_ACC);
+                        } else {
+                            row.fill(E::ZERO_ACC);
+                        }
+                    }
+                }
+            }
+            micro_kernel(k, apanel, bpanel, &mut acc);
+            for i in 0..h {
+                let crow = &mut c[(i0 + i) * ldc + j0..(i0 + i) * ldc + j0 + w];
+                match mode {
+                    Acc::Store | Acc::Bias(_) | Acc::Extend => crow.copy_from_slice(&acc[i][..w]),
+                    Acc::Add => {
+                        for (cv, &av) in crow.iter_mut().zip(&acc[i][..w]) {
+                            *cv = E::acc_add(*cv, av);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Blocked conv forward over a block of batch rows:
+/// `out[b,oy,ox,co] = Σ_{kh,kw,ci} x·k` with per-element chains in the
+/// naive `kh→kw→ci` order, dispatching padding-free 1×1 geometries to
+/// the gather fast path. `wpack` is the HWIO kernel through
+/// [`super::pack_b`]`(kdim, cout, …)`. Output is accumulator-typed
+/// (`f32` trainer / `i32` deploy); bias — and on the deploy side the
+/// whole requantization epilogue — is applied by the caller afterwards.
+pub fn conv_forward<E: PanelElem>(
+    cv: &Conv2d,
+    rows: usize,
+    x: &[E],
+    wpack: &[E],
+    out: &mut [E::Acc],
+    ps: &mut PackScratch<E>,
+) {
+    let m = conv_rows(cv);
+    let kdim = conv_kdim(cv);
+    let in_st = cv.h * cv.w * cv.cin;
+    let out_st = m * cv.cout;
+    for n in 0..rows {
+        let xn = &x[n * in_st..(n + 1) * in_st];
+        if unit_stride(cv).is_some() {
+            pack_a_unit(cv, xn, &mut ps.apack);
+        } else {
+            im2col_packed(cv, xn, &mut ps.apack);
+        }
+        gemm(m, cv.cout, kdim, &ps.apack, wpack, &mut out[n * out_st..(n + 1) * out_st], cv.cout, Acc::Store);
+    }
+}
+
+/// Blocked dense forward over a block of batch rows:
+/// `out[b,co] = seed ⊕ Σ_ci a·k` with the chain seeded per `mode`
+/// ([`Acc::Bias`] on the trainer side, [`Acc::Store`] on the integer
+/// side). `wpack` from [`super::pack_b`]`(cin, cout, …)`.
+pub fn dense_forward<E: PanelElem>(
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    a: &[E],
+    wpack: &[E],
+    mode: Acc<'_, E::Acc>,
+    out: &mut [E::Acc],
+    ps: &mut PackScratch<E>,
+) {
+    pack_a(rows, cin, a, &mut ps.apack);
+    gemm(rows, cout, cin, &ps.apack, wpack, &mut out[..rows * cout], cout, mode);
+}

@@ -1,0 +1,289 @@
+//! The generic packed-panel kernel core shared by the f32 trainer and
+//! the integer deployment engine (DESIGN.md §9).
+//!
+//! SigmaQuant's central claim is that one searched assignment runs on
+//! real integer hardware with the *same lattice* the QAT search
+//! simulated — which only holds if the f32 training kernels
+//! ([`super::gemm`]) and the i16 deployment kernels
+//! ([`crate::deploy::igemm`]) stay in exact structural lockstep. Panel
+//! packing and the micro-kernel walk are pure index arithmetic — nothing
+//! about them is float-specific — so this module is the *single*
+//! implementation both sides instantiate:
+//!
+//! * **A panels** ([`pack_a`] / [`pack_a_t`] / [`im2col_packed`] /
+//!   [`im2col_packed_t`]): `MR` rows interleaved k-major, so the
+//!   micro-kernel reads `MR` operands per k-step from one contiguous
+//!   cache-line run; padding-free 1×1 convs at any stride take the
+//!   gather fast paths ([`pack_a_unit`] / [`pack_a_t_unit`]) that skip
+//!   the tap loops entirely;
+//! * **B panels** ([`pack_b`] / [`pack_b_t`]): `NR` columns interleaved
+//!   k-major, zero-padded to a full panel;
+//! * **micro-kernel** ([`gemm`]): an `MR × NR` accumulator block held in
+//!   registers across the entire k loop, written back once per tile,
+//!   with the [`Acc`] seeding modes that reproduce every caller's
+//!   accumulation chain.
+//!
+//! # The genericization argument
+//!
+//! The element type is abstracted behind [`PanelElem`]: a `Copy +
+//! Default` operand with an associated accumulator and a single
+//! multiply-accumulate rule. Two instantiations exist:
+//!
+//! * `f32 → f32` (the trainer): [`PanelElem::mul_acc`] is `acc + a * b`
+//!   — the product rounds to f32 *before* the add and Rust never
+//!   contracts float expressions into FMA, so the generic body compiles
+//!   to exactly the arithmetic the pre-generic f32 kernel performed.
+//!   Zero fill is `f32::default() = +0.0`, the bit-neutral seed of the
+//!   §9 padding argument. The f32 accumulation chains are therefore
+//!   untouched by construction, and `rust/tests/gemm_parity.rs` keeps
+//!   pinning blocked == naive **bitwise** through the generic core.
+//! * `i16 → i32` (the deploy engine): `mul_acc` widens both operands
+//!   and accumulates exactly — integer arithmetic has no ordering
+//!   sensitivity, so the deploy side needs no chain contract at all;
+//!   it inherits the layout (and the layout *only*) from the trainer.
+//!
+//! Because both sides share one packer, a weight panel frozen at export
+//! time and an im2col panel packed at serve time are laid out by the
+//! same index arithmetic the QAT search exercised — drift between the
+//! two copies (the failure mode this module exists to kill) is now a
+//! type error, not a test escape.
+//!
+//! The layout helpers ([`packed_a_len`] / [`packed_b_len`],
+//! [`conv_scratch_sizes`] / [`dense_scratch_sizes`]) are the single
+//! source of truth for every scratch arena: the trainer's executor, the
+//! deploy engine, the parity tests and the benches all size through
+//! them.
+
+pub mod micro;
+pub mod pack;
+
+pub use micro::{conv_forward, dense_forward, gemm, Acc};
+pub use pack::{
+    im2col_packed, im2col_packed_t, pack_a, pack_a_t, pack_a_unit, pack_a_t_unit, pack_b, pack_b_t,
+};
+
+use crate::runtime::native::ops::Conv2d;
+
+/// Micro-tile rows: A-panel operands per k-step. 6 keeps
+/// `MR × NR/8 = 12` YMM accumulators plus operands inside a 16-register
+/// vector file (for both the f32 and the widened-i32 instantiation).
+pub const MR: usize = 6;
+/// Micro-tile columns: one B-panel run per k-step (two YMM / one ZMM).
+pub const NR: usize = 16;
+
+/// A packable operand element: the one abstraction point between the
+/// f32 trainer kernels and the i16 deployment kernels. Everything else
+/// in this module — panel layout, tile walk, scratch sizing — is shared
+/// index arithmetic.
+pub trait PanelElem: Copy + Default + Send + Sync + 'static {
+    /// The accumulator an `MR × NR` tile of this element type holds.
+    type Acc: Copy + Default + Send + Sync + 'static;
+
+    /// The accumulator's additive identity (`+0.0` / `0`) — the chain
+    /// seed of [`Acc::Store`] tiles and the panel tail fill.
+    const ZERO_ACC: Self::Acc;
+
+    /// One multiply-accumulate step: `acc ⊕ a·b`.
+    ///
+    /// The f32 instantiation must round the product before the add
+    /// (`mul` then `add`, never FMA) — that is the §9 accumulation-order
+    /// contract. The i16 instantiation widens to i32 and is exact.
+    fn mul_acc(acc: Self::Acc, a: Self, b: Self) -> Self::Acc;
+
+    /// Accumulator addition, for the [`Acc::Add`] write-back mode
+    /// (`C += Σ`: a fresh chain added to the output once at the end).
+    fn acc_add(a: Self::Acc, b: Self::Acc) -> Self::Acc;
+}
+
+impl PanelElem for f32 {
+    type Acc = f32;
+
+    const ZERO_ACC: f32 = 0.0;
+
+    #[inline(always)]
+    fn mul_acc(acc: f32, a: f32, b: f32) -> f32 {
+        // product rounds to f32, then one add — bitwise the naive loops'
+        // `acc += a * b` (Rust never contracts this into an FMA)
+        acc + a * b
+    }
+
+    #[inline(always)]
+    fn acc_add(a: f32, b: f32) -> f32 {
+        a + b
+    }
+}
+
+impl PanelElem for i16 {
+    type Acc = i32;
+
+    const ZERO_ACC: i32 = 0;
+
+    #[inline(always)]
+    fn mul_acc(acc: i32, a: i16, b: i16) -> i32 {
+        // exact: |a| ≤ 2^8−1, |b| ≤ 2^7−1 ⇒ each product < 2^15; the
+        // per-layer load guard (`deploy::igemm::max_abs_acc`) asserts
+        // the full k-chain fits i32
+        acc + i32::from(a) * i32::from(b)
+    }
+
+    #[inline(always)]
+    fn acc_add(a: i32, b: i32) -> i32 {
+        a + b
+    }
+}
+
+/// `x` rounded up to a multiple of `b`.
+#[inline]
+pub fn round_up(x: usize, b: usize) -> usize {
+    x.div_ceil(b) * b
+}
+
+/// Length of the packed-A buffer for an `m × k` operand (element count —
+/// element-type independent, like every layout function here).
+#[inline]
+pub fn packed_a_len(m: usize, k: usize) -> usize {
+    round_up(m, MR) * k
+}
+
+/// Length of the packed-B buffer for a `k × n` operand.
+#[inline]
+pub fn packed_b_len(k: usize, n: usize) -> usize {
+    k * round_up(n, NR)
+}
+
+/// Number of GEMM rows of one image's im2col matrix (`oh·ow`).
+#[inline]
+pub fn conv_rows(cv: &Conv2d) -> usize {
+    cv.oh * cv.ow
+}
+
+/// GEMM depth of one convolution (`k·k·cin`) — the im2col column count,
+/// enumerated `kh→kw→ci` to match the naive tap order.
+#[inline]
+pub fn conv_kdim(cv: &Conv2d) -> usize {
+    cv.k * cv.k * cv.cin
+}
+
+/// Stride of a padding-free 1×1 convolution, or `None` for every other
+/// geometry. A `k = 1` conv never pads (SAME resolves to zero padding at
+/// any stride), so its im2col matrix is a pure row *gather* of the input
+/// — contiguous at stride 1 (the im2col matrix *is* the input), strided
+/// otherwise — and the packing fast paths take over. This covers both
+/// the 1×1 bottleneck convs (stride 1) and the ResNet projection
+/// shortcuts (1×1, stride 2).
+#[inline]
+pub fn unit_stride(cv: &Conv2d) -> Option<usize> {
+    (cv.k == 1 && cv.pad_h == 0 && cv.pad_w == 0).then_some(cv.stride)
+}
+
+/// [`PackScratch`] lengths `(col, apack, bpack)` one partition needs to
+/// run every GEMM of this conv geometry (forward + backward) — the
+/// single source of truth for the trainer's executor arena, the parity
+/// tests, and the benches. Any new GEMM call shape added to the conv
+/// paths must be folded in here. (The forward-only deploy engine needs
+/// just the `packed_a_len(conv_rows, conv_kdim)` component; it sizes
+/// through [`packed_a_len`] directly.)
+pub fn conv_scratch_sizes(cv: &Conv2d) -> (usize, usize, usize) {
+    let m = conv_rows(cv);
+    let kdim = conv_kdim(cv);
+    (
+        m * kdim,
+        packed_a_len(m, kdim)
+            .max(packed_a_len(kdim, m))
+            .max(packed_a_len(m, cv.cout)),
+        packed_b_len(m, cv.cout),
+    )
+}
+
+/// [`PackScratch`] lengths `(apack, bpack)` for the dense GEMMs at a
+/// given partition row count (forward + backward).
+pub fn dense_scratch_sizes(rows: usize, cin: usize, cout: usize) -> (usize, usize) {
+    (
+        packed_a_len(rows, cin)
+            .max(packed_a_len(cin, rows))
+            .max(packed_a_len(rows, cout)),
+        packed_b_len(rows, cout),
+    )
+}
+
+/// Per-partition packing scratch, one instance per fixed partition so
+/// concurrent tasks never share buffers — generic over the element type
+/// (`PackScratch<f32>` in the trainer's arena, `PackScratch<i16>` in the
+/// deploy engine). Sized once through the layout functions above and
+/// reused across nodes and steps.
+#[derive(Default)]
+pub struct PackScratch<E: PanelElem> {
+    /// Row-major dcol buffer of the input-gradient scatter (accumulator
+    /// typed; unused by forward-only instantiations).
+    pub col: Vec<E::Acc>,
+    /// Packed-A panels (largest operand over all nodes and passes).
+    pub apack: Vec<E>,
+    /// Packed-B panels for per-partition operands (`dy` blocks).
+    pub bpack: Vec<E>,
+}
+
+impl<E: PanelElem> PackScratch<E> {
+    /// Grow buffers to at least the given lengths (never shrinks).
+    pub fn ensure(&mut self, col: usize, apack: usize, bpack: usize) {
+        if self.col.len() < col {
+            self.col.resize(col, E::ZERO_ACC);
+        }
+        if self.apack.len() < apack {
+            self.apack.resize(apack, E::default());
+        }
+        if self.bpack.len() < bpack {
+            self.bpack.resize(bpack, E::default());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The two instantiations lay panels out identically: packing the
+    /// same integers as f32 and as i16 yields element-for-element equal
+    /// panels (the structural-lockstep property the deploy engine rides
+    /// on).
+    #[test]
+    fn both_instantiations_share_one_panel_layout() {
+        let (m, n, k) = (7usize, 18usize, 5usize);
+        let af: Vec<f32> = (0..m * k).map(|i| (i as i32 % 17 - 8) as f32).collect();
+        let ai: Vec<i16> = af.iter().map(|&v| v as i16).collect();
+        let mut apf = vec![9.0f32; packed_a_len(m, k)];
+        let mut api = vec![9i16; packed_a_len(m, k)];
+        pack_a(m, k, &af, &mut apf);
+        pack_a(m, k, &ai, &mut api);
+        for (f, i) in apf.iter().zip(&api) {
+            assert_eq!(*f, f32::from(*i));
+        }
+        let bf: Vec<f32> = (0..k * n).map(|i| (i as i32 % 13 - 6) as f32).collect();
+        let bi: Vec<i16> = bf.iter().map(|&v| v as i16).collect();
+        let mut bpf = vec![9.0f32; packed_b_len(k, n)];
+        let mut bpi = vec![9i16; packed_b_len(k, n)];
+        pack_b(k, n, &bf, &mut bpf);
+        pack_b(k, n, &bi, &mut bpi);
+        for (f, i) in bpf.iter().zip(&bpi) {
+            assert_eq!(*f, f32::from(*i));
+        }
+        // and the GEMMs over them agree on integer-valued data
+        let mut cf = vec![0.0f32; m * n];
+        let mut ci = vec![0i32; m * n];
+        gemm(m, n, k, &apf, &bpf, &mut cf, n, Acc::Store);
+        gemm(m, n, k, &api, &bpi, &mut ci, n, Acc::Store);
+        for (f, i) in cf.iter().zip(&ci) {
+            assert_eq!(*f as i32, *i);
+        }
+    }
+
+    #[test]
+    fn scratch_grows_monotonically_at_both_element_types() {
+        let mut f: PackScratch<f32> = PackScratch::default();
+        f.ensure(4, 8, 2);
+        f.ensure(1, 1, 1);
+        assert_eq!((f.col.len(), f.apack.len(), f.bpack.len()), (4, 8, 2));
+        let mut i: PackScratch<i16> = PackScratch::default();
+        i.ensure(0, 16, 0);
+        assert_eq!((i.col.len(), i.apack.len(), i.bpack.len()), (0, 16, 0));
+    }
+}

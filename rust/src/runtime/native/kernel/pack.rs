@@ -1,0 +1,204 @@
+//! The panel packers: pure index arithmetic over a generic
+//! [`PanelElem`], shared verbatim by the f32 trainer and the i16 deploy
+//! engine. Layouts are documented per function; zero fill is
+//! `E::default()` (`+0.0` / `0`), which is what makes partial-tile and
+//! out-of-bounds padding bit-neutral on the f32 side (§9) and
+//! contribution-free on the integer side (§10).
+
+use super::{conv_kdim, conv_rows, packed_a_len, packed_b_len, unit_stride, PanelElem, MR, NR};
+use crate::runtime::native::ops::Conv2d;
+
+/// Pack row-major `a[m × k]` into `MR`-row panels, k-major inside each
+/// panel (`panel[kk·MR + ii] = a[(i0+ii)·k + kk]`); tail rows are
+/// zero-filled.
+pub fn pack_a<E: PanelElem>(m: usize, k: usize, a: &[E], out: &mut [E]) {
+    for (p, panel) in out[..packed_a_len(m, k)].chunks_exact_mut(k * MR).enumerate() {
+        let i0 = p * MR;
+        let h = MR.min(m - i0);
+        for ii in 0..h {
+            let src = &a[(i0 + ii) * k..(i0 + ii) * k + k];
+            for (kk, &v) in src.iter().enumerate() {
+                panel[kk * MR + ii] = v;
+            }
+        }
+        for ii in h..MR {
+            for kk in 0..k {
+                panel[kk * MR + ii] = E::default();
+            }
+        }
+    }
+}
+
+/// Pack `A[m × k]` given its *transpose* `at[k × m]` (row-major) — the
+/// zero-copy way to feed `Aᵀ·B` products (conv/dense kernel gradients)
+/// through the same micro-kernel. Reads are contiguous `MR`-runs.
+pub fn pack_a_t<E: PanelElem>(m: usize, k: usize, at: &[E], out: &mut [E]) {
+    for (p, panel) in out[..packed_a_len(m, k)].chunks_exact_mut(k * MR).enumerate() {
+        let i0 = p * MR;
+        let h = MR.min(m - i0);
+        for kk in 0..k {
+            let dst = &mut panel[kk * MR..kk * MR + MR];
+            dst[..h].copy_from_slice(&at[kk * m + i0..kk * m + i0 + h]);
+            dst[h..].fill(E::default());
+        }
+    }
+}
+
+/// Pack row-major `b[k × n]` into `NR`-column panels, k-major inside
+/// each panel; tail columns are zero-filled (the padded lanes compute
+/// values no caller stores).
+pub fn pack_b<E: PanelElem>(k: usize, n: usize, b: &[E], out: &mut [E]) {
+    for (p, panel) in out[..packed_b_len(k, n)].chunks_exact_mut(k * NR).enumerate() {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        for kk in 0..k {
+            let dst = &mut panel[kk * NR..kk * NR + NR];
+            dst[..w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+            dst[w..].fill(E::default());
+        }
+    }
+}
+
+/// Pack `B[k × n]` given its *transpose* `bt[n × k]` (row-major) — used
+/// for the `dy·Wᵀ` input-gradient GEMMs without materializing `Wᵀ`.
+pub fn pack_b_t<E: PanelElem>(k: usize, n: usize, bt: &[E], out: &mut [E]) {
+    for (p, panel) in out[..packed_b_len(k, n)].chunks_exact_mut(k * NR).enumerate() {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        for kk in 0..k {
+            let dst = &mut panel[kk * NR..kk * NR + NR];
+            for jj in 0..w {
+                dst[jj] = bt[(j0 + jj) * k + kk];
+            }
+            dst[w..].fill(E::default());
+        }
+    }
+}
+
+/// im2col of one image directly into packed-A panel layout (skips the
+/// row-major intermediate): `panel[kc·MR + ii]` for output position
+/// `i0 + ii`, `kc` enumerating `kh→kw→ci`.
+pub fn im2col_packed<E: PanelElem>(cv: &Conv2d, x: &[E], out: &mut [E]) {
+    let (w, h, cin, k) = (cv.w, cv.h, cv.cin, cv.k);
+    let m = conv_rows(cv);
+    let kdim = conv_kdim(cv);
+    for (p, panel) in out[..packed_a_len(m, kdim)].chunks_exact_mut(kdim * MR).enumerate() {
+        let i0 = p * MR;
+        for ii in 0..MR {
+            let opos = i0 + ii;
+            if opos >= m {
+                for kc in 0..kdim {
+                    panel[kc * MR + ii] = E::default();
+                }
+                continue;
+            }
+            let (oy, ox) = (opos / cv.ow, opos % cv.ow);
+            let mut kc = 0usize;
+            for kh in 0..k {
+                let iy = (oy * cv.stride + kh) as isize - cv.pad_h as isize;
+                for kw in 0..k {
+                    let ix = (ox * cv.stride + kw) as isize - cv.pad_w as isize;
+                    if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                        for ci in 0..cin {
+                            panel[(kc + ci) * MR + ii] = E::default();
+                        }
+                    } else {
+                        let base = (iy as usize * w + ix as usize) * cin;
+                        for ci in 0..cin {
+                            panel[(kc + ci) * MR + ii] = x[base + ci];
+                        }
+                    }
+                    kc += cin;
+                }
+            }
+        }
+    }
+}
+
+/// Transposed-packed im2col of one image: packs `im2colᵀ [kdim × m]`
+/// directly into A panels (`panel[kk·MR + ii]` = im2col column `i0+ii`
+/// at output position `kk`), producing element-identical output to
+/// `pack_a_t(kdim, m, im2col(...))` without materializing the row-major
+/// intermediate — the dk-GEMM packing path. The ≤ `MR` column decodes
+/// are hoisted per panel, so the hot loop is pure address arithmetic.
+pub fn im2col_packed_t<E: PanelElem>(cv: &Conv2d, x: &[E], out: &mut [E]) {
+    let m = conv_rows(cv);
+    let kdim = conv_kdim(cv);
+    let (w, h, cin, k) = (cv.w, cv.h, cv.cin, cv.k);
+    for (p, panel) in out[..packed_a_len(kdim, m)].chunks_exact_mut(m * MR).enumerate() {
+        let i0 = p * MR;
+        let lanes = MR.min(kdim - i0);
+        // decode this panel's (kh, kw, ci) column triples once
+        let mut taps = [(0isize, 0isize, 0usize); MR];
+        for (ii, tap) in taps.iter_mut().enumerate().take(lanes) {
+            let idx = i0 + ii;
+            let kh = idx / (k * cin);
+            let rem = idx % (k * cin);
+            *tap = (kh as isize, (rem / cin) as isize, rem % cin);
+        }
+        for kk in 0..m {
+            let (oy, ox) = (kk / cv.ow, kk % cv.ow);
+            let dst = &mut panel[kk * MR..kk * MR + MR];
+            for (ii, &(kh, kw, ci)) in taps.iter().enumerate().take(lanes) {
+                let iy = (oy * cv.stride) as isize + kh - cv.pad_h as isize;
+                let ix = (ox * cv.stride) as isize + kw - cv.pad_w as isize;
+                dst[ii] = if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                    E::default()
+                } else {
+                    x[(iy as usize * w + ix as usize) * cin + ci]
+                };
+            }
+            dst[lanes..].fill(E::default());
+        }
+    }
+}
+
+/// Packed-A im2col fast path for padding-free 1×1 convs at any stride
+/// ([`unit_stride`] geometries): output position `(oy, ox)` reads
+/// exactly input pixel `(oy·s, ox·s)`, so the panel is a strided row
+/// gather — no tap loop, no bounds checks. Element-identical output to
+/// [`im2col_packed`] (and, at stride 1, to [`pack_a`] of the input).
+pub fn pack_a_unit<E: PanelElem>(cv: &Conv2d, x: &[E], out: &mut [E]) {
+    debug_assert!(unit_stride(cv).is_some());
+    let (w, cin, s) = (cv.w, cv.cin, cv.stride);
+    let m = conv_rows(cv);
+    for (p, panel) in out[..packed_a_len(m, cin)].chunks_exact_mut(cin * MR).enumerate() {
+        let i0 = p * MR;
+        let h = MR.min(m - i0);
+        for ii in 0..h {
+            let opos = i0 + ii;
+            let (oy, ox) = (opos / cv.ow, opos % cv.ow);
+            let base = (oy * s * w + ox * s) * cin;
+            for (kk, &v) in x[base..base + cin].iter().enumerate() {
+                panel[kk * MR + ii] = v;
+            }
+        }
+        for ii in h..MR {
+            for kk in 0..cin {
+                panel[kk * MR + ii] = E::default();
+            }
+        }
+    }
+}
+
+/// Transposed-packed im2col fast path for padding-free 1×1 convs (the
+/// dk-GEMM A operand): lane `ii` is input channel `i0 + ii`, column `kk`
+/// is output position `kk`, read straight from the strided pixel gather.
+/// Element-identical output to [`im2col_packed_t`] (and, at stride 1, to
+/// [`pack_a_t`]`(cin, m, x)`).
+pub fn pack_a_t_unit<E: PanelElem>(cv: &Conv2d, x: &[E], out: &mut [E]) {
+    debug_assert!(unit_stride(cv).is_some());
+    let (w, cin, s) = (cv.w, cv.cin, cv.stride);
+    let m = conv_rows(cv);
+    for (p, panel) in out[..packed_a_len(cin, m)].chunks_exact_mut(m * MR).enumerate() {
+        let i0 = p * MR;
+        let lanes = MR.min(cin - i0);
+        for kk in 0..m {
+            let (oy, ox) = (kk / cv.ow, kk % cv.ow);
+            let base = (oy * s * w + ox * s) * cin + i0;
+            let dst = &mut panel[kk * MR..kk * MR + MR];
+            dst[..lanes].copy_from_slice(&x[base..base + lanes]);
+            dst[lanes..].fill(E::default());
+        }
+    }
+}

@@ -7,9 +7,11 @@
 //! semantics the AOT artifacts encode — STE fake-quant (bit-exact with
 //! the coordinator's quantizer and the Pallas kernel's jnp oracle),
 //! batch-stats BN, SGD with momentum and global-norm clipping. Conv and
-//! dense matrix work runs on the cache-blocked GEMM kernel core
-//! ([`gemm`], DESIGN.md §9), bitwise-equal to the retained naive
-//! reference loops in [`ops`].
+//! dense matrix work runs on the cache-blocked GEMM kernel core — the
+//! f32 instantiation ([`gemm`]) of the generic packed-panel layer
+//! ([`kernel`], DESIGN.md §9) that the integer deploy engine also
+//! instantiates — bitwise-equal to the retained naive reference loops
+//! in [`ops`].
 //!
 //! It is the default backend: everything in the repo (tests, benches,
 //! examples, experiment binaries) runs end-to-end on it from a clean
@@ -34,6 +36,7 @@ pub mod executor;
 pub mod fakequant;
 pub mod gemm;
 pub mod graph;
+pub mod kernel;
 pub mod ops;
 
 pub use executor::NativeExecutor;

@@ -2,11 +2,13 @@
 //! passes for every SSA op the zoo emits.
 //!
 //! The conv/dense matrix work is executed by the cache-blocked GEMM core
-//! in [`super::gemm`] (register-tiled micro-kernel over packed im2col
-//! panels); the `*_naive` loops below are *retained reference
-//! implementations* — the direct transcription of the math whose
-//! floating-point accumulation order the GEMM path reproduces bit for
-//! bit (`rust/tests/gemm_parity.rs` pins blocked == naive bitwise over
+//! in [`super::gemm`] — the f32 instantiation of the generic
+//! packed-panel layer [`super::kernel`] (register-tiled micro-kernel
+//! over packed im2col panels, shared with the integer deploy engine);
+//! the `*_naive` loops below are *retained reference implementations* —
+//! the direct transcription of the math whose floating-point
+//! accumulation order the GEMM path reproduces bit for bit
+//! (`rust/tests/gemm_parity.rs` pins blocked == naive bitwise over
 //! randomized shapes). Everything non-GEMM (BN, pools, relu, softmax,
 //! bias) executes the loops below directly.
 //!

@@ -16,7 +16,10 @@
 //!    per-partition partials in partition order);
 //! 5. **cache hygiene** — the trainer's per-epoch weight-pack cache
 //!    (PR-4 satellite) must invalidate across train/restore cycles, so
-//!    repeated evaluation around a snapshot is bit-stable.
+//!    repeated evaluation around a snapshot is bit-stable;
+//! 6. **serving** — the pipelined multi-batch `DeployEngine::evaluate`
+//!    (PR-5 serve-path batching) is bit-identical to the serial
+//!    per-batch loop at threads 1/2/4, including over its cached forks.
 
 use sigmaquant::data::SynthDataset;
 use sigmaquant::deploy::{argmax, format, DeployEngine, QuantizedModel};
@@ -229,4 +232,60 @@ fn weight_pack_cache_invalidates_across_train_and_restore() {
     let w8 = BitAssignment::uniform(s.num_qlayers(), 8);
     let r8 = s.evaluate(&xs, &ys, &w8, &w8).unwrap();
     assert_ne!(r1.loss.to_bits(), r8.loss.to_bits(), "bits ignored by the cache");
+}
+
+/// PR-5 serve-path batching: the pipelined multi-batch
+/// `DeployEngine::evaluate` (cached forked engines over a shared frozen
+/// core) must be bit-identical to an explicit serial per-batch loop —
+/// and to itself across thread counts 1/2/4 (widths 1/2/4 on a 4-batch
+/// set). Everything integer is exact and the per-batch merge is in
+/// batch order, so any divergence is a scheduling bug, not noise.
+#[test]
+fn pipelined_evaluate_is_bit_identical_to_the_serial_loop() {
+    let ds = DatasetSpec { train_batch: 8, eval_batch: 16, ..default_dataset() };
+    let data = SynthDataset::new(ds.clone(), 41);
+    let (xs, ys) = data.eval_set(64); // 4 eval batches of 16
+    let b = ds.eval_batch;
+    let img = ds.image_len();
+    let mut results: Vec<(u64, u64)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let be = NativeBackend::with_dataset_parallelism(ds.clone(), Parallelism::new(threads));
+        let s = ModelSession::load(&be, "resnet18_mini", 9).unwrap();
+        let l = s.num_qlayers();
+        let m = QuantizedModel::export(
+            &s.arch,
+            s.params(),
+            &mixed_bits(l, 2),
+            &BitAssignment::uniform(l, 8),
+        )
+        .unwrap();
+        let engine = DeployEngine::from_backend(&m, &be).unwrap();
+        // the explicit serial reference: per-batch eval_batch calls
+        // merged in batch order — exactly the pre-pipeline loop
+        let mut correct = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        for bi in 0..ys.len() / b {
+            let (c, l2) = engine
+                .eval_batch(&xs[bi * b * img..(bi + 1) * b * img], &ys[bi * b..(bi + 1) * b])
+                .unwrap();
+            correct += c as f64;
+            loss_sum += l2 as f64;
+        }
+        let serial_acc = correct / ys.len() as f64;
+        let serial_loss = loss_sum / (ys.len() / b) as f64;
+        // the engine path (pipelined whenever threads > 1)
+        let r = engine.evaluate(&xs, &ys).unwrap();
+        assert_eq!(r.accuracy.to_bits(), serial_acc.to_bits(), "threads {threads}: accuracy");
+        assert_eq!(r.loss.to_bits(), serial_loss.to_bits(), "threads {threads}: loss");
+        // repeat over the cached forks: steady-state serving is bit-stable
+        let r2 = engine.evaluate(&xs, &ys).unwrap();
+        assert_eq!(r.accuracy.to_bits(), r2.accuracy.to_bits(), "threads {threads}: re-eval");
+        assert_eq!(r.loss.to_bits(), r2.loss.to_bits(), "threads {threads}: re-eval loss");
+        results.push((r.accuracy.to_bits(), r.loss.to_bits()));
+    }
+    // and the three thread counts agree with each other bit for bit
+    for (acc, loss) in &results[1..] {
+        assert_eq!(*acc, results[0].0, "thread-count dependence in pipelined evaluate");
+        assert_eq!(*loss, results[0].1, "thread-count dependence in pipelined evaluate");
+    }
 }

@@ -10,8 +10,19 @@
 //! 1/2/4) ride on top of this property: the executor routes every
 //! conv/dense through the blocked path, so bitwise kernel parity is what
 //! keeps those end-to-end pins unchanged.
+//!
+//! Since PR 5 the blocked kernels are instantiations of the *generic*
+//! packed-panel core (`runtime::native::kernel`) shared with the integer
+//! deploy engine, so this suite additionally drives the generic core at
+//! both element types on the same shapes (f32 chains stay bitwise-naive;
+//! the two instantiations agree element-for-element on integer-valued
+//! data) and pins the i16 panel layout against literal pre-refactor
+//! panels — layout drift between trainer and deploy is a test failure
+//! here before it is an accuracy bug in serving.
 
+use sigmaquant::deploy::igemm;
 use sigmaquant::runtime::native::gemm::{self, PackScratch};
+use sigmaquant::runtime::native::kernel::{self, Acc};
 use sigmaquant::runtime::native::ops::{self, Conv2d};
 use sigmaquant::util::prop::{check, Gen};
 use sigmaquant::util::rng::Rng;
@@ -322,4 +333,116 @@ fn partitioned_blocked_conv_matches_whole_batch_naive() {
     for (i, (a, b)) in dk_ref_merged.iter().zip(&dk_blk_merged).enumerate() {
         assert_eq!(a.to_bits(), b.to_bits(), "dk mismatch at {i}");
     }
+}
+
+/// The generic core, driven directly at both element types on the same
+/// random shapes: the f32 instantiation's chains stay bitwise equal to
+/// the scalar naive chain (the §9 contract survives genericization),
+/// the i16 instantiation is exactly the widened integer sum, and on
+/// integer-valued data the two instantiations agree element for element
+/// — packers and GEMM alike (the structural-lockstep property the
+/// deploy engine's lattice claim rests on).
+#[test]
+fn generic_core_is_one_implementation_for_f32_and_i16() {
+    let mut rng = Rng::new(0x9E1C);
+    for &(m, n, k) in &[(1usize, 1usize, 1usize), (5, 3, 7), (7, 19, 11), (13, 17, 29), (24, 32, 48)] {
+        // activation-code range × weight-code range: integer-valued and
+        // small enough that every f32 product and k-chain is exact
+        let ai: Vec<i16> = (0..m * k).map(|_| (rng.below(511) as i32 - 255) as i16).collect();
+        let bi: Vec<i16> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i16).collect();
+        let af: Vec<f32> = ai.iter().map(|&v| f32::from(v)).collect();
+        let bf: Vec<f32> = bi.iter().map(|&v| f32::from(v)).collect();
+        // one generic packer, two instantiations — identical layout
+        let mut apf = vec![-1.0f32; kernel::packed_a_len(m, k)];
+        let mut api = vec![-1i16; kernel::packed_a_len(m, k)];
+        kernel::pack_a(m, k, &af, &mut apf);
+        kernel::pack_a(m, k, &ai, &mut api);
+        for (f, i) in apf.iter().zip(&api) {
+            assert_eq!(*f, f32::from(*i), "A-panel layout drift at ({m},{n},{k})");
+        }
+        let mut bpf = vec![-1.0f32; kernel::packed_b_len(k, n)];
+        let mut bpi = vec![-1i16; kernel::packed_b_len(k, n)];
+        kernel::pack_b(k, n, &bf, &mut bpf);
+        kernel::pack_b(k, n, &bi, &mut bpi);
+        for (f, i) in bpf.iter().zip(&bpi) {
+            assert_eq!(*f, f32::from(*i), "B-panel layout drift at ({m},{n},{k})");
+        }
+        // one generic micro-kernel, two accumulator types
+        let mut cf = vec![0.0f32; m * n];
+        let mut ci = vec![0i32; m * n];
+        kernel::gemm(m, n, k, &apf, &bpf, &mut cf, n, Acc::Store);
+        kernel::gemm(m, n, k, &api, &bpi, &mut ci, n, Acc::Store);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                let mut iacc = 0i32;
+                for kk in 0..k {
+                    acc += af[i * k + kk] * bf[kk * n + j];
+                    iacc += i32::from(ai[i * k + kk]) * i32::from(bi[kk * n + j]);
+                }
+                assert_eq!(cf[i * n + j].to_bits(), acc.to_bits(), "f32 chain at ({i},{j}) of ({m},{n},{k})");
+                assert_eq!(ci[i * n + j], iacc, "i32 sum at ({i},{j}) of ({m},{n},{k})");
+                assert_eq!(cf[i * n + j] as i32, ci[i * n + j], "instantiations diverge at ({i},{j})");
+            }
+        }
+    }
+}
+
+/// The i16 panel layout the deploy engine freezes weights into, pinned
+/// as literal expected panels (the exact buffers the pre-refactor
+/// `deploy/igemm.rs` packers produced). If the generic core ever
+/// reorders a panel, every shipped `.sqdm` artifact's packed panels
+/// would silently mean something else — this test turns that into a
+/// literal diff.
+#[test]
+fn i16_panel_layout_is_pinned_to_the_pre_refactor_packing() {
+    // pack_a: a[3 × 2] into one MR=6 panel, k-major, zero tail rows
+    let a: Vec<i16> = vec![1, 2, 3, 4, 5, 6];
+    let mut ap = vec![-9i16; igemm::packed_a_len(3, 2)];
+    igemm::ipack_a(3, 2, &a, &mut ap);
+    assert_eq!(ap, vec![1, 3, 5, 0, 0, 0, 2, 4, 6, 0, 0, 0]);
+
+    // pack_b: b[2 × 3] into one NR=16 panel, k-major, zero tail columns
+    let b: Vec<i16> = vec![10, 11, 12, 13, 14, 15];
+    let mut bp = vec![-9i16; igemm::packed_b_len(2, 3)];
+    igemm::ipack_b(2, 3, &b, &mut bp);
+    let mut want_b = vec![0i16; 32];
+    want_b[..3].copy_from_slice(&[10, 11, 12]);
+    want_b[16..19].copy_from_slice(&[13, 14, 15]);
+    assert_eq!(bp, want_b);
+
+    // im2col_packed: 2×2×1 input, 3×3 SAME conv (pad 1) — m = 4 output
+    // positions in lanes 0..4, kdim = 9 k-steps, kh→kw→ci tap order,
+    // out-of-bounds taps zero, lanes 4..6 zero (MR tail)
+    let cv = Conv2d::new(2, 2, 1, 1, 3, 1, true);
+    assert_eq!((cv.oh, cv.ow, cv.pad_h, cv.pad_w), (2, 2, 1, 1));
+    let x: Vec<i16> = vec![1, 2, 3, 4];
+    let mut col = vec![-9i16; igemm::packed_a_len(4, 9)];
+    igemm::iim2col_packed(&cv, &x, &mut col);
+    #[rustfmt::skip]
+    let want: Vec<i16> = vec![
+        0, 0, 0, 1, 0, 0, // k-step 0: tap (kh=0, kw=0)
+        0, 0, 1, 2, 0, 0, // k-step 1: tap (0, 1)
+        0, 0, 2, 0, 0, 0, // k-step 2: tap (0, 2)
+        0, 1, 0, 3, 0, 0, // k-step 3: tap (1, 0)
+        1, 2, 3, 4, 0, 0, // k-step 4: tap (1, 1) — the center tap sees x
+        2, 0, 4, 0, 0, 0, // k-step 5: tap (1, 2)
+        0, 3, 0, 0, 0, 0, // k-step 6: tap (2, 0)
+        3, 4, 0, 0, 0, 0, // k-step 7: tap (2, 1)
+        4, 0, 0, 0, 0, 0, // k-step 8: tap (2, 2)
+    ];
+    assert_eq!(col, want);
+
+    // the 1×1 any-stride gather fast path lays out identically to the
+    // generic im2col on its geometries (stride-2 projection shortcut)
+    let cv1 = Conv2d::new(4, 4, 2, 3, 1, 2, true);
+    let x1: Vec<i16> = (0..4 * 4 * 2).map(|v| v as i16).collect();
+    let mut fast = vec![-9i16; igemm::packed_a_len(4, 2)];
+    igemm::ipack_a_unit(&cv1, &x1, &mut fast);
+    let mut generic = vec![-7i16; igemm::packed_a_len(4, 2)];
+    igemm::iim2col_packed(&cv1, &x1, &mut generic);
+    assert_eq!(fast, generic);
+    // ...and that layout is the literal strided pixel gather: output
+    // positions (0,0),(0,1),(1,0),(1,1) read pixels (0,0),(0,2),(2,0),(2,2)
+    assert_eq!(generic, vec![0, 4, 16, 20, 0, 0, 1, 5, 17, 21, 0, 0]);
 }
