@@ -27,7 +27,9 @@
 //! run also prints the README's measured-vs-predicted table in markdown.
 
 use sigmaquant::data::SynthDataset;
-use sigmaquant::deploy::{argmax, format, DeployEngine, QuantizedModel};
+use sigmaquant::deploy::{
+    argmax, format, DeployEngine, QuantizedModel, Response, ServeConfig, ServeDaemon,
+};
 use sigmaquant::hw::{model_ppa, ShiftAddConfig};
 use sigmaquant::quant::{int8_size_bytes, model_size_bytes, BitAssignment};
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
@@ -256,6 +258,123 @@ fn main() {
             t_p.mean_ns / tp_n as f64,
         );
         tput_rows.push(TputRow { arch: arch.to_string(), ips_serial, ips_pipe });
+    }
+
+    // --- serve daemon: closed-loop request latency / throughput ---
+    // The PR-6 bounded-queue daemon (`deploy::serve`): single-image
+    // closed-loop clients against a 2-worker daemon with per-tick
+    // coalescing. Responses are bit-identical to the serial engine by
+    // contract (spot-asserted against the oracle before timing, and the
+    // accepted == completed zero-drop audit after), so the rows measure
+    // scheduling, not arithmetic: req/s plus p50/p99 request latency,
+    // keyed (op, clients) for the bench_compare gate.
+    let sv_per = if quick { 8usize } else { 64 };
+    println!("\n# serve daemon (2 workers on {tp_threads} lanes, queue 128, closed-loop single-image clients x {sv_per})");
+    for arch in &tp_archs {
+        let mut session = ModelSession::load(&mt, arch, 7).expect("load arch");
+        let fb = BitAssignment::raw(vec![32; session.num_qlayers()]);
+        for step in 0..if quick { 2 } else { 6 } {
+            let (x, y) = data.train_batch(200 + step, session.dataset().train_batch);
+            session.train_step(&x, &y, &fb, &fb, 0.05).expect("train step");
+        }
+        let layers = session.num_qlayers();
+        let cycle: Vec<u8> = (0..layers).map(|i| [8u8, 6, 4, 2][i % 4]).collect();
+        let wbits = BitAssignment::new(cycle).expect("cycle bits are valid");
+        let a8 = BitAssignment::uniform(layers, 8);
+        let model =
+            QuantizedModel::export(&session.arch, session.params(), &wbits, &a8).expect("export");
+        let oracle = DeployEngine::from_backend(&model, &backend).expect("oracle engine");
+        let engine = DeployEngine::from_backend(&model, &mt).expect("serve engine");
+        let daemon = ServeDaemon::new(
+            ServeConfig { queue_cap: 128, max_batch: 8, workers: 2 },
+            Parallelism::new(tp_threads),
+        );
+        let handle = daemon.handle();
+        handle.deploy(arch, &engine).expect("deploy");
+        // no panics inside the scope: an assert before shutdown() would
+        // deadlock against the still-running server — collect, verify
+        // after
+        let mut parity: Vec<Result<Response, String>> = Vec::new();
+        let mut client_err: Option<String> = None;
+        std::thread::scope(|s| {
+            let server = s.spawn(|| daemon.run());
+            // parity probes before timing: served bits == oracle bits
+            for i in 0..4usize {
+                let x = &txs[i * img..(i + 1) * img];
+                parity.push(
+                    handle
+                        .submit(arch, x.to_vec())
+                        .map_err(|e| e.to_string())
+                        .and_then(|t| t.wait().map_err(|e| e.to_string())),
+                );
+            }
+            for clients in [1usize, 4, 8] {
+                if client_err.is_some() {
+                    break;
+                }
+                let t0 = std::time::Instant::now();
+                let mut lats: Vec<u64> = Vec::with_capacity(clients * sv_per);
+                let joins: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let h = handle.clone();
+                        let txs = &txs;
+                        s.spawn(move || -> Result<Vec<u64>, String> {
+                            let mut l = Vec::with_capacity(sv_per);
+                            for r in 0..sv_per {
+                                let i = (c * sv_per + r) % tp_n;
+                                let x = txs[i * img..(i + 1) * img].to_vec();
+                                let q0 = std::time::Instant::now();
+                                h.submit(arch, x)
+                                    .map_err(|e| e.to_string())?
+                                    .wait()
+                                    .map_err(|e| e.to_string())?;
+                                l.push(q0.elapsed().as_nanos() as u64);
+                            }
+                            Ok(l)
+                        })
+                    })
+                    .collect();
+                for j in joins {
+                    match j.join() {
+                        Ok(Ok(l)) => lats.extend(l),
+                        Ok(Err(e)) => client_err = Some(e),
+                        Err(_) => client_err = Some("client thread panicked".to_string()),
+                    }
+                }
+                if client_err.is_some() {
+                    break;
+                }
+                let total_ns = t0.elapsed().as_nanos() as f64;
+                lats.sort_unstable();
+                let n = lats.len();
+                let p50 = lats[n / 2] as f64;
+                let p99 = lats[((n * 99) / 100).min(n - 1)] as f64;
+                let rps = 1e9 * n as f64 / total_ns;
+                println!(
+                    "{arch:<16} c{clients:<2}    | {rps:>9.1} req/s | p50 {:>8.1} µs | p99 {:>8.1} µs",
+                    p50 / 1e3,
+                    p99 / 1e3,
+                );
+                report.add(&format!("serve_req/{arch}"), clients, total_ns / n as f64);
+                report.add(&format!("serve_p50/{arch}"), clients, p50);
+                report.add(&format!("serve_p99/{arch}"), clients, p99);
+            }
+            handle.shutdown();
+            server.join().expect("server thread");
+        });
+        assert!(client_err.is_none(), "{arch}: serve client failed: {client_err:?}");
+        for (i, r) in parity.into_iter().enumerate() {
+            let r = r.expect("parity probe");
+            let want =
+                oracle.infer_logits(&txs[i * img..(i + 1) * img], 1).expect("oracle logits");
+            for (a, o) in r.logits.iter().zip(&want) {
+                assert_eq!(a.to_bits(), o.to_bits(), "{arch}: served logits vs serial oracle");
+            }
+        }
+        let st = handle.stats();
+        assert_eq!(st.errored, 0, "{arch}: serve errors: {st:?}");
+        assert_eq!(st.rejected, 0, "{arch}: closed-loop clients never overflow: {st:?}");
+        assert_eq!(st.accepted, st.completed, "{arch}: dropped requests: {st:?}");
     }
 
     if !quick {

@@ -165,6 +165,81 @@ impl DeployScratch {
     }
 }
 
+/// Shared partition plumbing of the requantization epilogues. Every
+/// fused epilogue shape — plain requantize, +bias, +BN, +ReLU — is one
+/// of two passes over the same fixed row partition, so the scaffolding
+/// (chunking, disjoint output splits, ordered partial merges) lives here
+/// exactly once instead of being copied per shape (it used to mirror the
+/// trainer's two-stage BN plumbing three times over):
+///
+/// * [`epilogue_map`] writes `post(c, requant(ri, acc[ri, c], c))` into
+///   the output rows — disjoint rows per partition, so the result is
+///   bit-identical under any schedule;
+/// * [`epilogue_sums`] reduces `term(c, requant(ri, acc[ri, c], c))`
+///   into one f64 partial per channel and partition and merges the
+///   partials **in partition order** — the BN statistics passes.
+///
+/// `requant` is the zero-point-corrected accumulator mapping built in
+/// `run_gemm`. The combinators never change the per-element arithmetic
+/// or its order — `rust/tests/deploy_parity.rs` pins fake-quant parity
+/// and cross-thread bit-identity over all three fused shapes as the
+/// regression guard for this refactor.
+fn epilogue_map(
+    par: &Parallelism,
+    par_ok: bool,
+    chunks: &[std::ops::Range<usize>],
+    acc: &[i32],
+    out: &mut [f32],
+    cout: usize,
+    requant: impl Fn(usize, i32, usize) -> f32 + Copy + Send + Sync,
+    post: impl Fn(usize, f32) -> f32 + Copy + Send + Sync,
+) {
+    let out_chunks = split_rows(out, chunks, cout);
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+    for (oc, r) in out_chunks.into_iter().zip(chunks.iter().cloned()) {
+        tasks.push(Box::new(move || {
+            let arows = acc[r.start * cout..r.end * cout].chunks_exact(cout);
+            for ((ri, orow), arow) in (r.start..r.end).zip(oc.chunks_exact_mut(cout)).zip(arows) {
+                for c in 0..cout {
+                    orow[c] = post(c, requant(ri, arow[c], c));
+                }
+            }
+        }));
+    }
+    par.run_gated(par_ok, tasks);
+}
+
+/// See [`epilogue_map`]: the per-channel f64 reduction half of the
+/// shared epilogue plumbing (partials merged in partition order).
+fn epilogue_sums(
+    par: &Parallelism,
+    par_ok: bool,
+    chunks: &[std::ops::Range<usize>],
+    acc: &[i32],
+    cout: usize,
+    requant: impl Fn(usize, i32, usize) -> f32 + Sync,
+    term: impl Fn(usize, f64) -> f64 + Sync,
+) -> Vec<f64> {
+    let partials = par.map_chunks_gated(par_ok, chunks, |_, r| {
+        let mut s = vec![0.0f64; cout];
+        for (ri, arow) in
+            (r.start..r.end).zip(acc[r.start * cout..r.end * cout].chunks_exact(cout))
+        {
+            for (c, sc) in s.iter_mut().enumerate() {
+                *sc += term(c, requant(ri, arow[c], c) as f64);
+            }
+        }
+        s
+    });
+    let mut total = vec![0.0f64; cout];
+    for p in &partials {
+        for (a, &v) in total.iter_mut().zip(p) {
+            *a += v;
+        }
+    }
+    total
+}
+
 /// Split `acts` into the (read) input value and the (write) output value
 /// (SSA ids ascend, so `i < o`).
 fn io<'a>(acts: &'a mut [Vec<f32>], i: usize, o: usize, ilen: usize) -> (&'a [f32], &'a mut Vec<f32>) {
@@ -444,14 +519,17 @@ impl DeployEngine {
     /// (`pipeline_eval = false`): they already run concurrently with
     /// their siblings inside [`DeployEngine::evaluate`].
     pub fn fork(&self) -> DeployEngine {
-        let core = &self.core;
-        DeployEngine {
-            core: core.clone(),
-            par: self.par.clone(),
-            pipeline_eval: false,
-            scratch: RefCell::new(DeployScratch::new(core.arch.nodes.len(), core.max_cout)),
-            eval_forks: RefCell::new(Vec::new()),
-        }
+        self.core_handle().fork()
+    }
+
+    /// A `Send + Sync` handle on this engine's frozen core — the
+    /// cross-thread currency of the serve daemon's model registry
+    /// ([`super::serve`]). `DeployEngine` itself is `!Sync` (interior
+    /// scratch), so the registry stores handles and each worker forks
+    /// its own engine from one; hot-swap is an atomic `Arc` replace of
+    /// the entry holding the handle.
+    pub fn core_handle(&self) -> CoreHandle {
+        CoreHandle { core: self.core.clone(), par: self.par.clone() }
     }
 
     /// Convenience constructor: resolve the graph, dataset geometry and
@@ -481,6 +559,54 @@ impl DeployEngine {
             .iter()
             .filter(|s| matches!(s, Step::Gemm(g) if g.bn.is_some()))
             .count()
+    }
+}
+
+/// Shared, immutable view of one loaded model: the frozen
+/// [`EngineCore`] plus the pool handle engines over it run on. Unlike
+/// [`DeployEngine`] this is `Send + Sync` (no scratch), so it can sit
+/// in a registry behind an `Arc` and be resolved from any worker
+/// thread; [`CoreHandle::fork`] then mints a private engine whose
+/// integer work is bit-identical to any other engine over the same
+/// core.
+#[derive(Clone)]
+pub struct CoreHandle {
+    core: Arc<EngineCore>,
+    par: Parallelism,
+}
+
+impl CoreHandle {
+    /// Mint a fresh engine over the shared core: one scratch-arena
+    /// allocation, never a re-pack. Equivalent to
+    /// [`DeployEngine::fork`] on any engine holding this core.
+    pub fn fork(&self) -> DeployEngine {
+        DeployEngine {
+            core: self.core.clone(),
+            par: self.par.clone(),
+            pipeline_eval: false,
+            scratch: RefCell::new(DeployScratch::new(self.core.arch.nodes.len(), self.core.max_cout)),
+            eval_forks: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// [`CoreHandle::fork`], but the minted engine runs its kernels
+    /// serially (no pool fan-out inside a request). This is what the
+    /// serve workers use: they are themselves long-lived pool lanes
+    /// ([`Parallelism::run_services`]) and must not open nested pool
+    /// scopes, so per-request concurrency comes from the lanes, not
+    /// from intra-request fan-out. Results are unchanged — the engine
+    /// is bit-identical at every thread count (DESIGN.md §8, pinned by
+    /// `rust/tests/deploy_parity.rs`).
+    pub fn fork_serial(&self) -> DeployEngine {
+        CoreHandle { core: self.core.clone(), par: Parallelism::serial() }.fork()
+    }
+
+    pub fn dataset(&self) -> &DatasetSpec {
+        &self.core.dataset
+    }
+
+    pub fn arch_name(&self) -> &str {
+        &self.core.arch.spec.name
     }
 }
 
@@ -652,73 +778,31 @@ impl EngineCore {
         let row_chunks = partition_rows(rows_total);
         let par_ok = rows_total * cout >= MIN_PARALLEL_WORK;
         let acc_ref: &[i32] = &acc[..rows_total * cout];
+        let out = &mut acts[g.out_vid][..rows_total * cout];
         match g.bn {
             None => {
-                let out_chunks =
-                    split_rows(&mut acts[g.out_vid][..rows_total * cout], &row_chunks, cout);
-                let mut tasks: Vec<Task<'_>> = Vec::with_capacity(row_chunks.len());
-                for (oc, r) in out_chunks.into_iter().zip(row_chunks.iter().cloned()) {
-                    tasks.push(Box::new(move || {
-                        let arows = acc_ref[r.start * cout..r.end * cout].chunks_exact(cout);
-                        for ((ri, orow), arow) in
-                            (r.start..r.end).zip(oc.chunks_exact_mut(cout)).zip(arows)
-                        {
-                            for c in 0..cout {
-                                let mut v = requant(ri, arow[c], c);
-                                if relu {
-                                    v = v.max(0.0);
-                                }
-                                orow[c] = v;
-                            }
-                        }
-                    }));
-                }
-                par.run_gated(par_ok, tasks);
+                epilogue_map(par, par_ok, &row_chunks, acc_ref, out, cout, requant, |_, v| {
+                    if relu {
+                        v.max(0.0)
+                    } else {
+                        v
+                    }
+                });
             }
             Some((scale_idx, bias_idx)) => {
                 // batch statistics over the requantized values, two-stage
                 // like the trainer's BN (f64 partials merged in partition
                 // order)
                 let m = rows_total as f64;
-                let sums = par.map_chunks_gated(par_ok, &row_chunks, |_, r| {
-                    let mut s = vec![0.0f64; cout];
-                    for (ri, arow) in
-                        (r.start..r.end).zip(acc_ref[r.start * cout..r.end * cout].chunks_exact(cout))
-                    {
-                        for (c, sc) in s.iter_mut().enumerate() {
-                            *sc += requant(ri, arow[c], c) as f64;
-                        }
-                    }
-                    s
-                });
-                let mut mu = vec![0.0f64; cout];
-                for s in &sums {
-                    for (a, &v) in mu.iter_mut().zip(s) {
-                        *a += v;
-                    }
-                }
+                let mut mu = epilogue_sums(par, par_ok, &row_chunks, acc_ref, cout, requant, |_, y| y);
                 for v in mu.iter_mut() {
                     *v /= m;
                 }
                 let mu_ref: &[f64] = &mu;
-                let vars = par.map_chunks_gated(par_ok, &row_chunks, |_, r| {
-                    let mut s = vec![0.0f64; cout];
-                    for (ri, arow) in
-                        (r.start..r.end).zip(acc_ref[r.start * cout..r.end * cout].chunks_exact(cout))
-                    {
-                        for (c, sc) in s.iter_mut().enumerate() {
-                            let d = requant(ri, arow[c], c) as f64 - mu_ref[c];
-                            *sc += d * d;
-                        }
-                    }
-                    s
+                let var = epilogue_sums(par, par_ok, &row_chunks, acc_ref, cout, requant, |c, y| {
+                    let d = y - mu_ref[c];
+                    d * d
                 });
-                let mut var = vec![0.0f64; cout];
-                for s in &vars {
-                    for (a, &v) in var.iter_mut().zip(s) {
-                        *a += v;
-                    }
-                }
                 for c in 0..cout {
                     bn_mean[c] = mu[c] as f32;
                     bn_inv[c] = (1.0 / (var[c] / m + ops::BN_EPS).sqrt()) as f32;
@@ -727,28 +811,14 @@ impl EngineCore {
                 let inv_ref: &[f32] = &bn_inv[..cout];
                 let bns: &[f32] = &self.fparams[scale_idx];
                 let bnb: &[f32] = &self.fparams[bias_idx];
-                let out_chunks =
-                    split_rows(&mut acts[g.out_vid][..rows_total * cout], &row_chunks, cout);
-                let mut tasks: Vec<Task<'_>> = Vec::with_capacity(row_chunks.len());
-                for (oc, r) in out_chunks.into_iter().zip(row_chunks.iter().cloned()) {
-                    tasks.push(Box::new(move || {
-                        let arows = acc_ref[r.start * cout..r.end * cout].chunks_exact(cout);
-                        for ((ri, orow), arow) in
-                            (r.start..r.end).zip(oc.chunks_exact_mut(cout)).zip(arows)
-                        {
-                            for c in 0..cout {
-                                let y = requant(ri, arow[c], c);
-                                let mut v =
-                                    (y - mean_ref[c]) * inv_ref[c] * bns[c] + bnb[c];
-                                if relu {
-                                    v = v.max(0.0);
-                                }
-                                orow[c] = v;
-                            }
-                        }
-                    }));
-                }
-                par.run_gated(par_ok, tasks);
+                epilogue_map(par, par_ok, &row_chunks, acc_ref, out, cout, requant, |c, y| {
+                    let v = (y - mean_ref[c]) * inv_ref[c] * bns[c] + bnb[c];
+                    if relu {
+                        v.max(0.0)
+                    } else {
+                        v
+                    }
+                });
             }
         }
     }

@@ -167,6 +167,35 @@ pub fn deserialize(bytes: &[u8], arch: &ArchSpec) -> Result<QuantizedModel> {
     Ok(m)
 }
 
+/// Read just the architecture name from a serialized artifact's header
+/// (magic + version checked, nothing else touched). The serve CLI uses
+/// this to resolve the [`ArchSpec`] that full [`deserialize`]-with-
+/// validation needs, without the caller having to say the arch twice.
+pub fn peek_arch_name(bytes: &[u8]) -> Result<String> {
+    let mut r = Reader { buf: bytes };
+    if r.take(4)? != MAGIC {
+        bail!("bad magic (not a SigmaQuant deployment artifact)");
+    }
+    let version = r.u16()?;
+    if version != VERSION {
+        bail!("artifact version {version}, this build reads {VERSION}");
+    }
+    let name_len = r.u16()? as usize;
+    Ok(std::str::from_utf8(r.take(name_len)?)
+        .context("artifact arch name is not utf-8")?
+        .to_string())
+}
+
+/// [`peek_arch_name`] straight from a file on disk.
+pub fn read_arch_name(path: impl AsRef<Path>) -> Result<String> {
+    let path = path.as_ref();
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?
+        .read_to_end(&mut bytes)?;
+    peek_arch_name(&bytes).with_context(|| format!("parsing {path:?}"))
+}
+
 /// Write a model to disk (creates parent directories).
 pub fn save_model(path: impl AsRef<Path>, m: &QuantizedModel) -> Result<()> {
     let path = path.as_ref();
@@ -223,6 +252,18 @@ mod tests {
         let back = load_model(&path, &arch).unwrap();
         assert_eq!(back, m);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn peek_arch_name_reads_the_header_only() {
+        let arch = toy_arch(&[16, 8]);
+        let m = toy_model(&arch, 3, vec![4, 8]);
+        let bytes = serialize(&m);
+        assert_eq!(peek_arch_name(&bytes).unwrap(), m.arch_name);
+        // the header is self-contained: the payload can be truncated away
+        let header_end = 4 + 2 + 2 + m.arch_name.len();
+        assert_eq!(peek_arch_name(&bytes[..header_end]).unwrap(), m.arch_name);
+        assert!(peek_arch_name(&bytes[..3]).is_err());
     }
 
     #[test]

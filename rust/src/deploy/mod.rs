@@ -28,21 +28,34 @@
 //!   bit-identical at every thread count, with multi-batch serving
 //!   pipelined over cached forked engines (bit-identical to the serial
 //!   loop).
+//! * [`serve`] — the long-running serving daemon (DESIGN.md §11):
+//!   bounded-queue submit/poll API with explicit back-pressure, a
+//!   multi-model registry routed by id, per-tick request coalescing,
+//!   and atomic hot-swap of a live model via `Arc` core replacement —
+//!   responses stay bit-identical to the serial engine and every
+//!   accepted request completes ([`serve::ServeStats`]).
 //!
-//! The `deploy` CLI subcommand and `benches/bench_deploy.rs` close the
-//! loop by running packed models on eval batches and reporting measured
-//! bytes / latency / accuracy next to the `quant/size.rs` and `hw/ppa.rs`
+//! The `deploy` and `serve` CLI subcommands and
+//! `benches/bench_deploy.rs` close the loop by running packed models on
+//! eval batches and live request streams, reporting measured bytes /
+//! latency / accuracy next to the `quant/size.rs` and `hw/ppa.rs`
 //! predictions. Parity with the fake-quant reference (logits within a
 //! pinned tolerance, argmax-exact) is property-tested across the zoo in
-//! `rust/tests/deploy_parity.rs`.
+//! `rust/tests/deploy_parity.rs`; the serve path's concurrency contract
+//! (oracle bit-parity, swap-under-load, back-pressure) is pinned in
+//! `rust/tests/serve_loop.rs`.
 
 pub mod bitpack;
 pub mod engine;
 pub mod format;
 pub mod igemm;
 pub mod model;
+pub mod serve;
 
 pub use bitpack::BitPacked;
-pub use engine::{argmax, DeployEngine};
-pub use format::{load_model, save_model};
+pub use engine::{argmax, CoreHandle, DeployEngine};
+pub use format::{load_model, read_arch_name, save_model};
 pub use model::{PackedLayer, QuantizedModel};
+pub use serve::{
+    Response, ServeConfig, ServeDaemon, ServeError, ServeHandle, ServeStats, SubmitError, Ticket,
+};

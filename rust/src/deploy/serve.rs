@@ -1,0 +1,537 @@
+//! Long-running multi-model serving daemon over the deploy runtime
+//! (DESIGN.md §11).
+//!
+//! The deploy engine evaluates pre-materialized eval sets; this module
+//! is the production shape the `Arc<EngineCore>` + fork split was built
+//! for — a bounded-queue request loop that serves *many* models, keeps
+//! serving while one of them is replaced, and never changes a single
+//! output bit relative to the serial engine:
+//!
+//! * **Submit/poll API.** [`ServeHandle::submit`] enqueues a request
+//!   and returns a [`Ticket`]; the caller polls [`Ticket::ready`] or
+//!   blocks on [`Ticket::wait`]. Submission never blocks: a full queue
+//!   is an explicit [`SubmitError::QueueFull`] (back-pressure the
+//!   caller can see and retry on), not an unbounded buffer.
+//! * **Workers as pool services.** [`ServeDaemon::run`] parks
+//!   `workers` service loops on the existing [`Parallelism`] pool
+//!   ([`Parallelism::run_services`]). Each worker owns a cache of
+//!   engines minted from the registry's [`CoreHandle`]s
+//!   ([`CoreHandle::fork_serial`]) — forking costs one scratch arena,
+//!   never a re-pack — and coalesces up to `max_batch` queued requests
+//!   for the same model per tick (one lock round-trip and one registry
+//!   resolution for the group, warm panels across its requests).
+//! * **Bit-identical responses.** Each request executes as its *own*
+//!   forward batch. Dynamic per-tensor activation quantization and
+//!   batch-stat BN make logits a function of batch composition, so
+//!   fusing concurrent requests into one forward would change bits
+//!   with arrival timing; per-request execution on an engine that is
+//!   itself bit-identical at every thread count (DESIGN.md §8) makes
+//!   every response equal to a serial [`DeployEngine::evaluate`] /
+//!   `infer_logits` oracle on the same image bytes, regardless of
+//!   worker count or interleaving. `rust/tests/serve_loop.rs` pins
+//!   this at server threads 1/2/4.
+//! * **Hot-swap.** [`ServeHandle::deploy`] on a live id atomically
+//!   replaces the registry entry (an `Arc` swap) and bumps its
+//!   version. Workers resolve the entry *after* popping a group, so
+//!   requests submitted after `deploy` returns run on the new core,
+//!   in-flight groups finish on the old one, and nothing is dropped;
+//!   every [`Response`] carries the version that produced it so
+//!   callers (and the swap race test) know which oracle to compare
+//!   against.
+//! * **Drain on shutdown.** [`ServeHandle::shutdown`] stops intake
+//!   (`SubmitError::ShuttingDown`) but workers drain the queue before
+//!   exiting: every accepted request is completed or errored, never
+//!   dropped ([`ServeStats`] makes that auditable).
+
+use super::engine::{CoreHandle, DeployEngine};
+use crate::util::pool::{Parallelism, Task};
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Serving knobs; every field has a safe default.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Bounded request-queue capacity; a submit past this returns
+    /// [`SubmitError::QueueFull`].
+    pub queue_cap: usize,
+    /// Most requests a worker coalesces into one tick (and the most
+    /// images one request may carry).
+    pub max_batch: usize,
+    /// Worker service loops; [`ServeDaemon::run`] clamps this to the
+    /// pool's lane count.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { queue_cap: 64, max_batch: 8, workers: 2 }
+    }
+}
+
+/// Why a submission was rejected (the request was **not** enqueued).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity — explicit back-pressure; the
+    /// caller may retry after draining.
+    QueueFull { cap: usize },
+    /// No model registered under this id.
+    UnknownModel(String),
+    /// Request geometry is invalid for the target model (empty, not a
+    /// whole number of images, or more images than `max_batch`).
+    BadRequest(String),
+    /// [`ServeHandle::shutdown`] was already called.
+    ShuttingDown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { cap } => write!(f, "request queue full (capacity {cap})"),
+            SubmitError::UnknownModel(id) => write!(f, "no model registered under id {id:?}"),
+            SubmitError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            SubmitError::ShuttingDown => write!(f, "daemon is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why an *accepted* request failed (reported through its [`Ticket`],
+/// so accepted = completed + errored always holds).
+#[derive(Debug, Clone)]
+pub enum ServeError {
+    /// The engine rejected the request at execution time.
+    Engine(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Engine(msg) => write!(f, "engine error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A completed request: raw logits (`images × classes`, bit-identical
+/// to the serial engine on the same bytes) plus the registry version of
+/// the model that produced them — the hot-swap audit trail.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub images: usize,
+    /// Registry version of the artifact that served this request
+    /// (1 for the first [`ServeHandle::deploy`] of an id, +1 per swap).
+    pub version: u64,
+}
+
+/// One-shot completion slot shared between a [`Ticket`] and the worker
+/// that fulfills it.
+struct TicketState {
+    slot: Mutex<Option<Result<Response, ServeError>>>,
+    cv: Condvar,
+}
+
+/// The caller's side of one accepted request.
+pub struct Ticket {
+    state: Arc<TicketState>,
+}
+
+impl Ticket {
+    /// Non-blocking poll: has the response landed?
+    pub fn ready(&self) -> bool {
+        self.state.slot.lock().unwrap().is_some()
+    }
+
+    /// Block until the response lands. Every accepted ticket completes
+    /// (drain-on-shutdown), so this never waits forever against a
+    /// running or shut-down daemon.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        let mut slot = self.state.slot.lock().unwrap();
+        loop {
+            if let Some(res) = slot.take() {
+                return res;
+            }
+            slot = self.state.cv.wait(slot).unwrap();
+        }
+    }
+}
+
+/// One registry slot: the frozen core of a loaded model plus the
+/// request geometry submits are validated against. Immutable — a swap
+/// replaces the whole `Arc<ModelEntry>`.
+struct ModelEntry {
+    version: u64,
+    core: CoreHandle,
+    image_len: usize,
+    classes: usize,
+}
+
+/// One queued request.
+struct Pending {
+    model: Arc<str>,
+    x: Vec<f32>,
+    images: usize,
+    ticket: Arc<TicketState>,
+}
+
+/// Serving counters, all monotone; snapshot via [`ServeHandle::stats`].
+/// `accepted == completed + errored` after shutdown is the zero-drop
+/// invariant the serve tests assert.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests enqueued (their tickets will complete).
+    pub accepted: u64,
+    /// Submissions bounced with [`SubmitError::QueueFull`].
+    pub rejected: u64,
+    /// Tickets fulfilled with a [`Response`].
+    pub completed: u64,
+    /// Tickets fulfilled with a [`ServeError`].
+    pub errored: u64,
+    /// Hot-swaps ([`ServeHandle::deploy`] on an already-live id).
+    pub swaps: u64,
+    /// Worker ticks (coalesced groups processed).
+    pub ticks: u64,
+    /// Deepest the bounded queue has been.
+    pub queue_high_watermark: u64,
+}
+
+impl ServeStats {
+    /// Accepted requests whose ticket has not completed yet.
+    pub fn in_flight(&self) -> u64 {
+        self.accepted.saturating_sub(self.completed + self.errored)
+    }
+}
+
+/// State shared by the daemon, its handles, and the workers.
+struct Shared {
+    cfg: ServeConfig,
+    queue: Mutex<VecDeque<Pending>>,
+    /// Signalled on enqueue and at shutdown.
+    work_cv: Condvar,
+    registry: Mutex<HashMap<String, Arc<ModelEntry>>>,
+    shutdown: AtomicBool,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    errored: AtomicU64,
+    swaps: AtomicU64,
+    ticks: AtomicU64,
+    depth_hwm: AtomicU64,
+}
+
+/// Cheap, cloneable, `Send + Sync` client handle: register/swap models,
+/// submit requests, observe stats, signal shutdown.
+#[derive(Clone)]
+pub struct ServeHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServeHandle {
+    /// Register `engine`'s frozen core under `id`, or hot-swap it in if
+    /// `id` is already live. Returns the registry version now serving
+    /// the id (1 on first deploy, previous + 1 on swap).
+    ///
+    /// A swap is one `Arc` replacement under the registry lock: workers
+    /// resolve the entry after popping a request group, so groups
+    /// popped before the swap finish on the old core while every
+    /// request submitted after this returns is served by the new one —
+    /// the queue is never touched and nothing is dropped. The
+    /// replacement must keep the id's request geometry (image length
+    /// and class count) so queued requests validated against the old
+    /// entry stay valid for the new one.
+    pub fn deploy(&self, id: &str, engine: &DeployEngine) -> Result<u64> {
+        let ds = engine.dataset();
+        let (image_len, classes) = (ds.image_len(), ds.classes);
+        let mut reg = self.shared.registry.lock().unwrap();
+        let version = match reg.get(id) {
+            Some(old) => {
+                if old.image_len != image_len || old.classes != classes {
+                    anyhow::bail!(
+                        "hot-swap of {id:?} changes request geometry: live entry serves \
+                         {}-pixel images with {} classes, replacement wants {image_len} \
+                         pixels with {classes} classes",
+                        old.image_len,
+                        old.classes
+                    );
+                }
+                self.shared.swaps.fetch_add(1, Ordering::SeqCst);
+                old.version + 1
+            }
+            None => 1,
+        };
+        reg.insert(
+            id.to_string(),
+            Arc::new(ModelEntry { version, core: engine.core_handle(), image_len, classes }),
+        );
+        Ok(version)
+    }
+
+    /// Enqueue one request (`x` = `images × image_len` pixels for
+    /// `model`) and return its [`Ticket`]. Never blocks: a full queue
+    /// is [`SubmitError::QueueFull`], invalid geometry or an unknown id
+    /// is rejected before touching the queue.
+    pub fn submit(&self, model: &str, x: Vec<f32>) -> Result<Ticket, SubmitError> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let image_len = {
+            let reg = self.shared.registry.lock().unwrap();
+            match reg.get(model) {
+                Some(e) => e.image_len,
+                None => return Err(SubmitError::UnknownModel(model.to_string())),
+            }
+        };
+        if x.is_empty() || x.len() % image_len != 0 {
+            return Err(SubmitError::BadRequest(format!(
+                "{} pixels is not a positive multiple of the model's image length {image_len}",
+                x.len()
+            )));
+        }
+        let images = x.len() / image_len;
+        if images > self.shared.cfg.max_batch {
+            return Err(SubmitError::BadRequest(format!(
+                "{images} images exceeds max_batch {}",
+                self.shared.cfg.max_batch
+            )));
+        }
+        let ticket = Arc::new(TicketState { slot: Mutex::new(None), cv: Condvar::new() });
+        let pending = Pending { model: Arc::from(model), x, images, ticket: ticket.clone() };
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            // re-check under the queue lock: shutdown stores its flag
+            // under this lock, so an accepted request is provably
+            // enqueued before the drain begins
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                return Err(SubmitError::ShuttingDown);
+            }
+            if q.len() >= self.shared.cfg.queue_cap {
+                self.shared.rejected.fetch_add(1, Ordering::SeqCst);
+                return Err(SubmitError::QueueFull { cap: self.shared.cfg.queue_cap });
+            }
+            q.push_back(pending);
+            self.shared.depth_hwm.fetch_max(q.len() as u64, Ordering::SeqCst);
+            self.shared.accepted.fetch_add(1, Ordering::SeqCst);
+            self.shared.work_cv.notify_one();
+        }
+        Ok(Ticket { state: ticket })
+    }
+
+    /// Stop intake and wake the workers. Already-accepted requests are
+    /// drained (their tickets complete); new submits fail with
+    /// [`SubmitError::ShuttingDown`]. [`ServeDaemon::run`] returns once
+    /// the drain finishes.
+    pub fn shutdown(&self) {
+        // store under the queue lock: a worker's empty-check + cv-wait
+        // is atomic w.r.t. this store (same pattern as the pool's own
+        // shutdown), so the wakeup cannot be missed
+        let _q = self.shared.queue.lock().unwrap();
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+    }
+
+    /// Consistent-enough snapshot of the serving counters (each counter
+    /// is individually exact and monotone).
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            accepted: self.shared.accepted.load(Ordering::SeqCst),
+            rejected: self.shared.rejected.load(Ordering::SeqCst),
+            completed: self.shared.completed.load(Ordering::SeqCst),
+            errored: self.shared.errored.load(Ordering::SeqCst),
+            swaps: self.shared.swaps.load(Ordering::SeqCst),
+            ticks: self.shared.ticks.load(Ordering::SeqCst),
+            queue_high_watermark: self.shared.depth_hwm.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Registered model ids with their current versions, id-sorted.
+    pub fn models(&self) -> Vec<(String, u64)> {
+        let reg = self.shared.registry.lock().unwrap();
+        let mut out: Vec<(String, u64)> =
+            reg.iter().map(|(id, e)| (id.clone(), e.version)).collect();
+        out.sort();
+        out
+    }
+}
+
+/// The daemon: owns the configuration and the pool the worker services
+/// run on. Construct, register models through [`ServeDaemon::handle`],
+/// then call [`ServeDaemon::run`] (typically from a dedicated thread —
+/// it blocks until shutdown + drain).
+pub struct ServeDaemon {
+    shared: Arc<Shared>,
+    par: Parallelism,
+}
+
+impl ServeDaemon {
+    pub fn new(cfg: ServeConfig, par: Parallelism) -> ServeDaemon {
+        ServeDaemon {
+            shared: Arc::new(Shared {
+                cfg,
+                queue: Mutex::new(VecDeque::new()),
+                work_cv: Condvar::new(),
+                registry: Mutex::new(HashMap::new()),
+                shutdown: AtomicBool::new(false),
+                accepted: AtomicU64::new(0),
+                rejected: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                errored: AtomicU64::new(0),
+                swaps: AtomicU64::new(0),
+                ticks: AtomicU64::new(0),
+                depth_hwm: AtomicU64::new(0),
+            }),
+            par,
+        }
+    }
+
+    /// A client handle (cheap to clone, safe to hand to any thread).
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle { shared: self.shared.clone() }
+    }
+
+    /// Park the worker services on the pool and serve until
+    /// [`ServeHandle::shutdown`] *and* the queue has drained. The
+    /// worker count is clamped to the pool's lane count — each service
+    /// occupies a whole lane for its lifetime
+    /// ([`Parallelism::run_services`]).
+    pub fn run(&self) {
+        let workers = self.shared.cfg.workers.clamp(1, self.par.threads());
+        let shared = &self.shared;
+        let tasks: Vec<Task<'_>> =
+            (0..workers).map(|_| Box::new(move || worker_loop(shared)) as Task<'_>).collect();
+        self.par.run_services(tasks);
+    }
+}
+
+/// One worker service: pop a request, coalesce same-model neighbors up
+/// to `max_batch`, resolve the model entry (post-pop, so swaps take
+/// effect here), run every request of the group as its own forward
+/// batch on a cached serial fork of the entry's core, fulfill the
+/// tickets. Exits when shutdown is signalled *and* the queue is empty —
+/// the drain that makes accepted = completed + errored.
+fn worker_loop(shared: &Shared) {
+    // engine cache: id → (registry version it was forked from, engine).
+    // Re-forked when the version moves; dropping the old engine drops
+    // the last reference to a swapped-out core once the registry no
+    // longer holds it.
+    let mut engines: HashMap<String, (u64, DeployEngine)> = HashMap::new();
+    loop {
+        let group = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(first) = q.pop_front() {
+                    let mut group = vec![first];
+                    while group.len() < shared.cfg.max_batch {
+                        match q.front() {
+                            Some(next) if next.model == group[0].model => {
+                                group.push(q.pop_front().expect("front just checked"));
+                            }
+                            _ => break,
+                        }
+                    }
+                    break Some(group);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        let group = match group {
+            Some(g) => g,
+            None => return,
+        };
+        shared.ticks.fetch_add(1, Ordering::SeqCst);
+        let id: &str = &group[0].model;
+        // resolve AFTER popping: requests submitted after a deploy()
+        // returned can only be in post-pop groups, so they are always
+        // served by the new (or a newer) version
+        let entry = shared.registry.lock().unwrap().get(id).cloned();
+        let entry = match entry {
+            Some(e) => e,
+            None => {
+                // unreachable through the public API (submit validates
+                // the id and the registry never removes entries), but a
+                // worker must never wedge the drain — error the tickets
+                for p in &group {
+                    complete(
+                        shared,
+                        &p.ticket,
+                        Err(ServeError::Engine(format!("model {id:?} vanished from the registry"))),
+                    );
+                }
+                continue;
+            }
+        };
+        let stale = match engines.get(id) {
+            Some((v, _)) => *v != entry.version,
+            None => true,
+        };
+        if stale {
+            engines.insert(id.to_string(), (entry.version, entry.core.fork_serial()));
+        }
+        let engine = &engines.get(id).expect("cached or just forked").1;
+        for p in &group {
+            // one forward *per request*: dynamic activation ranges and
+            // batch-stat BN depend on batch composition, so this — not
+            // cross-request fusion — is what keeps every response
+            // bit-identical to the serial oracle (module docs)
+            let res = match engine.infer_logits(&p.x, p.images) {
+                Ok(logits) => {
+                    Ok(Response { logits, images: p.images, version: entry.version })
+                }
+                Err(e) => Err(ServeError::Engine(e.to_string())),
+            };
+            complete(shared, &p.ticket, res);
+        }
+    }
+}
+
+/// Land a result in a ticket's slot and wake its waiter.
+fn complete(shared: &Shared, ticket: &TicketState, res: Result<Response, ServeError>) {
+    match &res {
+        Ok(_) => shared.completed.fetch_add(1, Ordering::SeqCst),
+        Err(_) => shared.errored.fetch_add(1, Ordering::SeqCst),
+    };
+    let mut slot = ticket.slot.lock().unwrap();
+    *slot = Some(res);
+    ticket.cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_against_empty_registry_is_unknown_model() {
+        let daemon = ServeDaemon::new(ServeConfig::default(), Parallelism::serial());
+        let h = daemon.handle();
+        let err = h.submit("nope", vec![0.0; 4]).map(|_| ()).unwrap_err();
+        assert_eq!(err, SubmitError::UnknownModel("nope".to_string()));
+        assert_eq!(h.stats(), ServeStats::default());
+        assert!(h.models().is_empty());
+    }
+
+    #[test]
+    fn shutdown_rejects_new_submissions() {
+        let daemon = ServeDaemon::new(ServeConfig::default(), Parallelism::serial());
+        let h = daemon.handle();
+        h.shutdown();
+        let err = h.submit("any", vec![0.0; 4]).map(|_| ()).unwrap_err();
+        assert_eq!(err, SubmitError::ShuttingDown);
+        // run() on a shut-down daemon with an empty queue returns at once
+        daemon.run();
+    }
+
+    #[test]
+    fn submit_errors_format_usefully() {
+        let full = SubmitError::QueueFull { cap: 8 }.to_string();
+        assert!(full.contains('8'), "{full}");
+        let unknown = SubmitError::UnknownModel("m".into()).to_string();
+        assert!(unknown.contains("\"m\""), "{unknown}");
+    }
+}

@@ -18,9 +18,12 @@
 //!   native CPU engine in [`runtime::native`], and the feature-gated PJRT
 //!   client that loads `artifacts/*.hlo.txt`.
 //! * [`deploy`] — the serving leg: freeze a trained session + searched
-//!   assignment into a bit-packed integer [`deploy::QuantizedModel`]
-//!   and execute it with real i32 kernels (`deploy` CLI subcommand,
-//!   `bench_deploy`), closing the loop on the hw-awareness claim.
+//!   assignment into a bit-packed integer [`deploy::QuantizedModel`],
+//!   execute it with real i32 kernels, and serve it from the
+//!   bounded-queue multi-model daemon ([`deploy::serve`]: back-pressure,
+//!   request coalescing, zero-drop hot-swap; `deploy` / `serve` CLI
+//!   subcommands, `bench_deploy`), closing the loop on the hw-awareness
+//!   claim.
 //! * [`quant`], [`stats`] — quantizer math, size/BOPs accounting, σ/KL.
 //! * [`hw`] — cycle-accurate shift-add MAC simulator + Table VI PPA model.
 //! * [`baselines`] — uniform / entropy / Hessian-proxy / greedy comparators.

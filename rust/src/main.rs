@@ -10,13 +10,16 @@
 use anyhow::{bail, Context as _, Result};
 use sigmaquant::coordinator::qat::run_qat;
 use sigmaquant::coordinator::{Objective, SearchConfig, SigmaQuant};
-use sigmaquant::deploy::{argmax, format, DeployEngine, QuantizedModel};
+use sigmaquant::data::SynthDataset;
+use sigmaquant::deploy::{
+    argmax, format, DeployEngine, QuantizedModel, ServeConfig, ServeDaemon, SubmitError,
+};
 use sigmaquant::experiments::common::{make_backend, Ctx};
 use sigmaquant::experiments::{ablation, fig3, fig4, fig5, table1,
                               table2, table3, table4, table5, table6};
 use sigmaquant::hw::{model_ppa, ShiftAddConfig};
 use sigmaquant::quant::{int8_size_bytes, model_size_bytes, BitAssignment};
-use sigmaquant::runtime::NativeBackend;
+use sigmaquant::runtime::{Backend, NativeBackend};
 use sigmaquant::util::cli::Args;
 use sigmaquant::util::pool::Parallelism;
 use std::time::Instant;
@@ -38,6 +41,16 @@ COMMANDS
              --search (run the two-phase search and deploy its result)
              --qat-steps N (fine-tune at the assignment first, default 16)
              --out FILE (default <results dir>/deploy/<arch>.sqdm)
+  serve      start the bounded-queue multi-model serving daemon on packed
+             artifacts and drive it with closed-loop synthetic clients;
+             reports req/s, p50/p99 latency and the zero-drop audit
+             --model ID=FILE[,ID=FILE...] (arch read from each artifact)
+             or --arch NAME (export on the fly; --bits/--abits/--qat-steps)
+             --queue-cap N (default 64)  --max-batch N (default 8)
+             --workers N (default 2)     --clients N (default 4)
+             --requests N per client (default 64)
+             --swap (hot-swap the first model mid-run: a re-trained
+             export with --arch, a re-loaded artifact with --model)
   table1     sigma/KL vs bits on alexnet_mini
   table2     phase-1 vs final across the ResNet family [--archs a,b,...]
   table3     comparison vs baselines [--archs resnet50_mini,inception_mini]
@@ -157,6 +170,7 @@ fn run(argv: &[String]) -> Result<()> {
         }
         "quantize" => quantize(&a, eval_n)?,
         "deploy" => deploy(&a, eval_n, qat)?,
+        "serve" => serve(&a, qat)?,
         "info" => info(&a)?,
         other => bail!("unknown command {other:?}; run `sigmaquant help`"),
     }
@@ -344,6 +358,212 @@ fn deploy(a: &Args, eval_n: usize, qat: usize) -> Result<()> {
     );
     println!("  fusion  : {} conv+BN epilogues folded", engine.fused_bn_count());
     println!("  artifact: {} (round-trip byte-identical)", out_path.display());
+    Ok(())
+}
+
+/// Start the bounded-queue serving daemon (`deploy::serve`,
+/// DESIGN.md §11) on one or more packed models and drive it with
+/// closed-loop synthetic client traffic: throughput, latency
+/// percentiles, optional mid-run hot-swap, and the zero-drop audit
+/// (accepted == completed, nothing errored).
+fn serve(a: &Args, qat: usize) -> Result<()> {
+    let par = match a.get("threads") {
+        Some(_) => Parallelism::new(a.get_usize("threads", 1)),
+        None => Parallelism::available(),
+    };
+    // serving is native-only, same as deploy
+    let backend = NativeBackend::with_parallelism(par.clone());
+
+    // models to register: --model ID=FILE[,...] loads artifacts (arch
+    // resolved from each file's own header), otherwise one model is
+    // exported on the fly from --arch at --bits/--abits
+    let mut engines: Vec<(String, DeployEngine)> = Vec::new();
+    let mut swap_engine: Option<(String, DeployEngine)> = None;
+    if let Some(spec) = a.get("model") {
+        for part in spec.split(',').filter(|s| !s.is_empty()) {
+            let (id, path) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--model expects ID=FILE, got {part:?}"))?;
+            let arch_name = format::read_arch_name(path)?;
+            let m = format::load_model(path, backend.arch(&arch_name)?)?;
+            engines.push((id.to_string(), DeployEngine::from_backend(&m, &backend)?));
+        }
+        if engines.is_empty() {
+            bail!("--model lists no ID=FILE pairs");
+        }
+        if a.flag("swap") {
+            // re-load the first artifact as the replacement: a real
+            // registry swap (fresh core, bumped version) even when the
+            // artifact bytes are unchanged
+            let part = spec.split(',').find(|s| !s.is_empty()).expect("checked non-empty");
+            let (id, path) = part.split_once('=').expect("parsed above");
+            let arch_name = format::read_arch_name(path)?;
+            let m = format::load_model(path, backend.arch(&arch_name)?)?;
+            swap_engine = Some((id.to_string(), DeployEngine::from_backend(&m, &backend)?));
+        }
+    } else {
+        let mut ctx = Ctx::with_backend(
+            Box::new(NativeBackend::with_parallelism(par.clone())),
+            a.get_or("results", "results"),
+            a.get_u64("seed", 7),
+        )?;
+        ctx.pretrain_steps = a.get_usize("pretrain-steps", 300);
+        ctx.verbose = !a.flag("quiet");
+        let arch = a.get_or("arch", "alexnet_mini");
+        let (mut session, mut cursor) = ctx.pretrained_session(arch)?;
+        let layers = session.num_qlayers();
+        let wbits = parse_bits(a.get_or("bits", "8"), layers)?;
+        let abits = parse_bits(a.get_or("abits", "8"), layers)?;
+        if qat > 0 {
+            run_qat(&mut session, &ctx.data, &mut cursor, &wbits, &abits, 0.02, qat)?;
+        }
+        let m = QuantizedModel::export(&session.arch, session.params(), &wbits, &abits)?;
+        engines.push((arch.to_string(), DeployEngine::from_backend(&m, &backend)?));
+        if a.flag("swap") {
+            // a re-trained v2 of the same model, exported BEFORE serving
+            // starts — the mid-run swap itself is a registry operation
+            run_qat(&mut session, &ctx.data, &mut cursor, &wbits, &abits, 0.02, 2)?;
+            let m2 = QuantizedModel::export(&session.arch, session.params(), &wbits, &abits)?;
+            swap_engine = Some((arch.to_string(), DeployEngine::from_backend(&m2, &backend)?));
+        }
+    }
+
+    let cfg = ServeConfig {
+        queue_cap: a.get_usize("queue-cap", 64).max(1),
+        max_batch: a.get_usize("max-batch", 8).max(1),
+        workers: a.get_usize("workers", 2).max(1),
+    };
+    let daemon = ServeDaemon::new(cfg, par);
+    let handle = daemon.handle();
+    for (id, engine) in &engines {
+        let v = handle.deploy(id, engine)?;
+        println!(
+            "registered {id:?} v{v} ({}, {} fused BN epilogues)",
+            engine.arch().name,
+            engine.fused_bn_count()
+        );
+    }
+
+    // request pool: synthetic eval images at the first model's geometry
+    // (round-robin traffic needs every registered model to share it)
+    let ds = engines[0].1.dataset().clone();
+    let img = ds.image_len();
+    for (id, e) in &engines {
+        if e.dataset().image_len() != img || e.dataset().classes != ds.classes {
+            bail!("model {id:?} has a different request geometry than the first model");
+        }
+    }
+    let pool_n = 64usize;
+    let (xs, _ys) = SynthDataset::new(ds, a.get_u64("seed", 7)).eval_set(pool_n);
+
+    let clients = a.get_usize("clients", 4).max(1);
+    let per_client = a.get_usize("requests", 64).max(1);
+    let total = clients * per_client;
+    let ids: Vec<&str> = engines.iter().map(|(id, _)| id.as_str()).collect();
+    let max_batch = cfg.max_batch;
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(total);
+    std::thread::scope(|s| -> Result<()> {
+        let server = s.spawn(|| daemon.run());
+        let mut joins = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let h = handle.clone();
+            let xs = &xs;
+            let ids = &ids;
+            joins.push(s.spawn(move || -> Result<Vec<f64>, String> {
+                let mut lats = Vec::with_capacity(per_client);
+                for r in 0..per_client {
+                    let n = c * per_client + r;
+                    // mostly single-image requests, every 4th a small batch
+                    let images = if n % 4 == 3 { 2usize.min(max_batch) } else { 1 };
+                    let i = n % (pool_n - images + 1);
+                    let x = xs[i * img..(i + images) * img].to_vec();
+                    let id = ids[n % ids.len()];
+                    let t = Instant::now();
+                    let ticket = loop {
+                        // closed loop with back-pressure: retry QueueFull
+                        match h.submit(id, x.clone()) {
+                            Ok(t) => break t,
+                            Err(SubmitError::QueueFull { .. }) => std::thread::yield_now(),
+                            Err(e) => return Err(e.to_string()),
+                        }
+                    };
+                    ticket.wait().map_err(|e| e.to_string())?;
+                    lats.push(t.elapsed().as_nanos() as f64);
+                }
+                Ok(lats)
+            }));
+        }
+        // optional hot-swap once a quarter of the traffic has landed.
+        // NOTE: failures in here must not early-return — the server
+        // thread only exits after shutdown(), and the scope joins it.
+        let mut fail: Option<String> = None;
+        if let Some((id, engine)) = &swap_engine {
+            while handle.stats().completed < (total as u64) / 4 && fail.is_none() {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                if handle.stats().errored > 0 {
+                    fail = Some("request errored while waiting to hot-swap".to_string());
+                }
+            }
+            if fail.is_none() {
+                match handle.deploy(id, engine) {
+                    Ok(v) => println!(
+                        "hot-swapped {id:?} -> v{v} mid-run ({} requests already completed)",
+                        handle.stats().completed
+                    ),
+                    Err(e) => fail = Some(format!("hot-swap failed: {e}")),
+                }
+            }
+        }
+        for j in joins {
+            match j.join() {
+                Ok(Ok(lats)) => latencies.extend(lats),
+                Ok(Err(e)) => fail = Some(format!("client request failed: {e}")),
+                Err(_) => fail = Some("client thread panicked".to_string()),
+            }
+        }
+        handle.shutdown();
+        server.join().expect("server thread");
+        match fail {
+            Some(e) => bail!("{e}"),
+            None => Ok(()),
+        }
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    latencies.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize] / 1e3;
+    let st = handle.stats();
+    println!(
+        "\nserve: {total} requests from {clients} clients in {wall:.2} s ({:.0} req/s)",
+        total as f64 / wall
+    );
+    println!("  latency : p50 {:.1} us | p99 {:.1} us", pct(0.50), pct(0.99));
+    println!(
+        "  queue   : cap {} | high watermark {} | back-pressure rejections {}",
+        cfg.queue_cap, st.queue_high_watermark, st.rejected
+    );
+    println!(
+        "  ticks   : {} coalesced groups ({:.2} requests/tick)",
+        st.ticks,
+        st.completed as f64 / st.ticks.max(1) as f64
+    );
+    for (id, v) in handle.models() {
+        println!("  model   : {id:?} now v{v}");
+    }
+    if st.errored != 0 || st.accepted != st.completed {
+        bail!(
+            "zero-drop audit failed: accepted {} completed {} errored {}",
+            st.accepted,
+            st.completed,
+            st.errored
+        );
+    }
+    println!(
+        "  audit   : accepted {} == completed {} (zero dropped, zero errored)",
+        st.accepted, st.completed
+    );
     Ok(())
 }
 

@@ -320,6 +320,42 @@ impl Parallelism {
         }
     }
 
+    /// Run long-lived *service* loops on the pool — tasks that block on
+    /// their own condition variables until an external shutdown signal
+    /// rather than computing and returning (the serve daemon's workers,
+    /// `deploy/serve.rs`). Blocks until every service returns.
+    ///
+    /// The contract differs from [`Parallelism::run`]'s compute tasks:
+    ///
+    /// * **At most one service per lane** (asserted): a service blocks
+    ///   its lane for its whole lifetime, so a service queued behind a
+    ///   blocked one would never start. With `tasks.len() <= threads`
+    ///   every service is picked up by its own lane and all of them run
+    ///   concurrently.
+    /// * **Services must exit promptly on their shutdown signal** —
+    ///   this call (and the pool's own drop) joins only after every
+    ///   service returns.
+    /// * **Services should not open nested pool scopes.** A nested
+    ///   participate loop can adopt a sibling service that no worker
+    ///   has popped yet and suspend its own scope behind that service's
+    ///   unbounded lifetime. The serve workers therefore run their
+    ///   engines serially; concurrency comes from the service lanes
+    ///   themselves (and results are unchanged — every engine is
+    ///   bit-identical at every thread count).
+    ///
+    /// With `threads == 1` the single permitted service runs inline on
+    /// the caller.
+    pub fn run_services<'s>(&self, tasks: Vec<Task<'s>>) {
+        assert!(
+            tasks.len() <= self.threads,
+            "{} service loops on a {}-lane pool: a service blocks its lane until shutdown, \
+             so every service needs its own lane",
+            tasks.len(),
+            self.threads
+        );
+        self.run(tasks);
+    }
+
     /// [`Parallelism::run`], but inline in submission order when
     /// `parallel` is false — for callers that know the per-task work is
     /// too small to amortize queue overhead. Purely a scheduling
@@ -564,6 +600,45 @@ mod tests {
             assert_eq!(*gi, i);
             assert_eq!(*gs, chunks[i].start);
         }
+    }
+
+    #[test]
+    fn service_loops_run_until_shutdown_and_join() {
+        // three services on a 3-lane pool: all must be live at once
+        // (service 0 only signals shutdown after seeing the other two
+        // start), and run_services must not return before all exit
+        let par = Parallelism::new(3);
+        let started = AtomicUsize::new(0);
+        let stop = AtomicBool::new(false);
+        let services: Vec<Task<'_>> = (0..3)
+            .map(|i| {
+                let started = &started;
+                let stop = &stop;
+                Box::new(move || {
+                    started.fetch_add(1, Ordering::SeqCst);
+                    if i == 0 {
+                        while started.load(Ordering::SeqCst) < 3 {
+                            thread::yield_now();
+                        }
+                        stop.store(true, Ordering::SeqCst);
+                    }
+                    while !stop.load(Ordering::SeqCst) {
+                        thread::yield_now();
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        par.run_services(services);
+        assert_eq!(started.load(Ordering::SeqCst), 3);
+        assert!(stop.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    #[should_panic(expected = "service loops")]
+    fn run_services_rejects_oversubscription() {
+        let par = Parallelism::new(2);
+        let services: Vec<Task<'_>> = (0..3).map(|_| Box::new(|| {}) as Task<'_>).collect();
+        par.run_services(services);
     }
 
     #[test]

@@ -289,3 +289,62 @@ fn pipelined_evaluate_is_bit_identical_to_the_serial_loop() {
         assert_eq!(*loss, results[0].1, "thread-count dependence in pipelined evaluate");
     }
 }
+
+/// PR-6 epilogue refactor guard: the requant/BN/ReLU epilogues now run
+/// through the shared `epilogue_map` / `epilogue_sums` combinators in
+/// `deploy/engine.rs` instead of four hand-unrolled loops. This pins the
+/// refactor on both epilogue shapes — conv+ReLU / dense (alexnet_mini,
+/// the `bn: None` arm) and conv+BN+ReLU (resnet18_mini, the two-pass
+/// batch-stat arm) — bit-identical across thread counts 1/2/4 (the
+/// combinators must preserve the partition boundaries and the f64 merge
+/// order) and still inside the fake-quant parity tolerance.
+#[test]
+fn epilogue_combinator_keeps_parity_and_thread_bit_identity() {
+    let ds = DatasetSpec { train_batch: 8, eval_batch: 16, ..default_dataset() };
+    let data = SynthDataset::new(ds.clone(), 29);
+    let b = ds.eval_batch;
+    let classes = ds.classes;
+    let (xs, _ys) = data.eval_set(b);
+    for (ai, name) in ["alexnet_mini", "resnet18_mini"].iter().enumerate() {
+        // one briefly-trained export, shared by every thread count (the
+        // training path is not part of the cross-thread pin)
+        let be1 = NativeBackend::with_dataset_parallelism(ds.clone(), Parallelism::new(1));
+        let mut s = ModelSession::load(&be1, name, 31).unwrap();
+        let l = s.num_qlayers();
+        let wbits = mixed_bits(l, ai);
+        let abits = BitAssignment::uniform(l, 8);
+        for step in 0..2u64 {
+            let (x, y) = data.train_batch(step, ds.train_batch);
+            s.train_step(&x, &y, &wbits, &abits, 0.02).unwrap();
+        }
+        let m = QuantizedModel::export(&s.arch, s.params(), &wbits, &abits).unwrap();
+        let mut per_thread: Vec<Vec<f32>> = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let be = NativeBackend::with_dataset_parallelism(ds.clone(), Parallelism::new(threads));
+            let engine = DeployEngine::from_backend(&m, &be).unwrap();
+            per_thread.push(engine.infer_logits(&xs, b).unwrap());
+        }
+        for ld in &per_thread[1..] {
+            for (a, d) in per_thread[0].iter().zip(ld) {
+                assert_eq!(a.to_bits(), d.to_bits(), "{name}: epilogue thread-count dependence");
+            }
+        }
+        // and the combinator output still sits inside the fake-quant
+        // parity envelope
+        let exec = be1.native_executor(name).unwrap();
+        let lr = exec.eval_logits(s.params(), &xs, b, &wbits, &abits).unwrap();
+        let ld = &per_thread[0];
+        for smp in 0..b {
+            let rr = &lr[smp * classes..(smp + 1) * classes];
+            let rd = &ld[smp * classes..(smp + 1) * classes];
+            let linf = rr.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let tol = REL_TOL * linf.max(1.0);
+            for (c, (&a, &d)) in rr.iter().zip(rd).enumerate() {
+                assert!(
+                    (a - d).abs() <= tol,
+                    "{name} sample {smp} class {c}: {a} vs {d} (tol {tol})"
+                );
+            }
+        }
+    }
+}
