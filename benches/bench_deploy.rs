@@ -32,6 +32,7 @@ use sigmaquant::deploy::{
 };
 use sigmaquant::hw::{model_ppa, ShiftAddConfig};
 use sigmaquant::quant::{int8_size_bytes, model_size_bytes, BitAssignment};
+use sigmaquant::runtime::native::kernel::{selected, set_kernel, KernelKind};
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 use sigmaquant::util::pool::Parallelism;
 use sigmaquant::util::timer::{bench, BenchReport};
@@ -74,8 +75,11 @@ fn main() {
     };
     let eval_n = if quick { 128 } else { 256 };
     let threads = 1usize; // single-lane timings; results are thread-count-invariant
+    let sel = selected();
     println!("# bench_deploy — packed integer engine vs fake-quant reference ({eval_n} samples)");
+    println!("# i16 kernel: {} ({})", sel.kind.name(), sel.reason);
     let mut report = BenchReport::new("deploy");
+    report.set_kernel(sel.kind.name(), sel.reason);
     let mut rows: Vec<Row> = Vec::new();
 
     let backend = NativeBackend::with_parallelism(Parallelism::new(threads));
@@ -181,6 +185,48 @@ fn main() {
                 cycles_per_mac: ppa.mean_cycles_per_mac,
             });
         }
+    }
+
+    // --- i16 kernel dispatch: whole-engine forced-scalar vs dispatched ---
+    // One arch/assignment; the two runs are bit-identical by the
+    // exactness contract (asserted on accuracy/loss bits before timing),
+    // so the paired rows expose the end-to-end SIMD speedup on a full
+    // integer forward — quantize + pack + GEMM + epilogue, not just the
+    // tile loop bench_gemm isolates.
+    {
+        let mut session = ModelSession::load(&backend, "alexnet_mini", 7).expect("load arch");
+        let fb = BitAssignment::raw(vec![32; session.num_qlayers()]);
+        for step in 0..2u64 {
+            let (x, y) = data.train_batch(300 + step, session.dataset().train_batch);
+            session.train_step(&x, &y, &fb, &fb, 0.05).expect("train step");
+        }
+        let layers = session.num_qlayers();
+        let cycle: Vec<u8> = (0..layers).map(|i| [8u8, 6, 4, 2][i % 4]).collect();
+        let wbits = BitAssignment::new(cycle).expect("cycle bits are valid");
+        let a8 = BitAssignment::uniform(layers, 8);
+        let model =
+            QuantizedModel::export(&session.arch, session.params(), &wbits, &a8).expect("export");
+        let engine = DeployEngine::from_backend(&model, &backend).expect("engine");
+        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        let rs = engine.evaluate(&xs, &ys).expect("scalar eval");
+        let t_s = bench(iters, budget_ms, || {
+            engine.evaluate(&xs, &ys).expect("scalar eval");
+        });
+        set_kernel(sel.kind).expect("previously selected kernel");
+        let rd = engine.evaluate(&xs, &ys).expect("dispatched eval");
+        assert_eq!(rs.accuracy.to_bits(), rd.accuracy.to_bits(), "kernel accuracy bits");
+        assert_eq!(rs.loss.to_bits(), rd.loss.to_bits(), "kernel loss bits");
+        let t_d = bench(iters, budget_ms, || {
+            engine.evaluate(&xs, &ys).expect("dispatched eval");
+        });
+        let (ns_s, ns_d) = (t_s.mean_ns / eval_n as f64, t_d.mean_ns / eval_n as f64);
+        println!(
+            "\n# kernel dispatch (alexnet_mini/mixed): {ns_s:.1} ns/img scalar vs {ns_d:.1} ns/img `{}` ({:.2}x)",
+            sel.kind.name(),
+            ns_s / ns_d,
+        );
+        report.add("deploy_eval_scalar/alexnet_mini/mixed", threads, ns_s);
+        report.add("deploy_eval_simd/alexnet_mini/mixed", threads, ns_d);
     }
 
     // --- multi-batch serving throughput: serial vs pipelined engine ---

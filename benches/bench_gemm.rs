@@ -17,9 +17,18 @@
 //! `scripts/bench_compare` can track both absolute latency and the
 //! blocked-over-naive speedup across PRs. The full (non-quick) run also
 //! prints the README's before/after throughput table in markdown.
+//!
+//! The i16 deploy kernel is measured twice per shape — forced scalar vs
+//! the dispatched SIMD kernel (`igemm_fwd/<shape>/scalar` vs `…/simd`)
+//! — with the outputs cross-checked **bitwise** first (exact i32
+//! accumulation makes any kernel order-identical). The dispatched ISA +
+//! reason is printed in the header and stamped into the JSON as
+//! `"kernel"`, so `scripts/bench_compare` never diffs rows across ISAs.
 
+use sigmaquant::deploy::igemm::{self, IPackScratch};
 use sigmaquant::runtime::native::gemm::{self, PackScratch};
 use sigmaquant::runtime::native::graph::{zoo, Node};
+use sigmaquant::runtime::native::kernel::{selected, set_kernel, KernelKind};
 use sigmaquant::runtime::native::ops::Conv2d;
 use sigmaquant::util::rng::Rng;
 use sigmaquant::util::timer::{bench, BenchReport};
@@ -60,11 +69,21 @@ struct Row {
     bwd_blocked_ns: f64,
 }
 
+/// Uncentered activation codes `u ∈ [0, 255]` / weight codes
+/// `∈ [-127, 127]` — the ranges the deploy load guard admits.
+fn randq(n: usize, lo: i32, hi: i32, seed: u64) -> Vec<i16> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (lo + rng.below((hi - lo + 1) as usize) as i32) as i16).collect()
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let (iters, budget_ms) = if quick { (1, 1.0) } else { (10, 300.0) };
+    let sel = selected();
     println!("# bench_gemm — blocked im2col/GEMM core vs retained naive loops (zoo shapes, {ROWS}-row blocks)");
+    println!("# i16 kernel: {} ({})", sel.kind.name(), sel.reason);
     let mut report = BenchReport::new("gemm");
+    report.set_kernel(sel.kind.name(), sel.reason);
 
     // unique conv shapes over the whole zoo: (h, w, cin, cout, k, stride, same)
     let mut conv_shapes: BTreeSet<(usize, usize, usize, usize, usize, usize, bool)> = BTreeSet::new();
@@ -233,9 +252,104 @@ fn main() {
         report.add(&format!("dense_bwd/{label}/blocked"), 1, t_bb.mean_ns);
     }
 
+    // ---- i16 deploy kernel: forced scalar vs the dispatched SIMD ----
+    // Bitwise cross-checked before timing (exact i32 accumulation makes
+    // every selectable kernel order-identical); ns rows land under
+    // ISA-independent op names, the file-level "kernel" tag carries the
+    // ISA so bench_compare only diffs within one.
+    println!(
+        "\n# i16 deploy kernel — forced scalar vs dispatched `{}` (zoo shapes, {ROWS}-row blocks)",
+        sel.kind.name()
+    );
+    let mut ispeedups: Vec<f64> = Vec::new();
+    for &(h, w, cin, cout, k, stride, same) in &conv_shapes {
+        let cv = Conv2d::new(h, w, cin, cout, k, stride, same);
+        let label = format!("conv{h}x{w}x{cin}-{cout}k{k}s{stride}{}", if same { "p" } else { "v" });
+        let x = randq(ROWS * h * w * cin, 0, 255, 31);
+        let kern = randq(k * k * cin * cout, -127, 127, 32);
+        let kdim = gemm::conv_kdim(&cv);
+        let mut wpack = vec![0i16; igemm::packed_b_len(kdim, cout)];
+        igemm::ipack_b(kdim, cout, &kern, &mut wpack);
+        let mut ps = IPackScratch::default();
+        ps.ensure(0, igemm::packed_a_len(cv.oh * cv.ow, kdim), 0);
+        let out_len = ROWS * cv.oh * cv.ow * cout;
+        let mut out_s = vec![0i32; out_len];
+        let mut out_d = vec![0i32; out_len];
+
+        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        igemm::iconv_forward(&cv, ROWS, &x, &wpack, &mut out_s, &mut ps);
+        set_kernel(sel.kind).expect("previously selected kernel");
+        igemm::iconv_forward(&cv, ROWS, &x, &wpack, &mut out_d, &mut ps);
+        assert_eq!(out_s, out_d, "{label}: dispatched i16 kernel != scalar");
+
+        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        let t_s = bench(iters, budget_ms, || {
+            igemm::iconv_forward(&cv, ROWS, &x, &wpack, &mut out_s, &mut ps);
+        });
+        set_kernel(sel.kind).expect("previously selected kernel");
+        let t_d = bench(iters, budget_ms, || {
+            igemm::iconv_forward(&cv, ROWS, &x, &wpack, &mut out_d, &mut ps);
+        });
+        println!(
+            "{label:<24} i16 {:>9.1}us -> {:>9.1}us ({:.2}x)",
+            t_s.mean_ns / 1e3,
+            t_d.mean_ns / 1e3,
+            t_s.mean_ns / t_d.mean_ns,
+        );
+        report.add(&format!("igemm_fwd/{label}/scalar"), 1, t_s.mean_ns);
+        report.add(&format!("igemm_fwd/{label}/simd"), 1, t_d.mean_ns);
+        ispeedups.push(t_s.mean_ns / t_d.mean_ns);
+    }
+    for &(cin, cout) in &dense_shapes {
+        let label = format!("dense{cin}-{cout}");
+        let a = randq(ROWS * cin, 0, 255, 41);
+        let kern = randq(cin * cout, -127, 127, 42);
+        let mut wpack = vec![0i16; igemm::packed_b_len(cin, cout)];
+        igemm::ipack_b(cin, cout, &kern, &mut wpack);
+        let mut ps = IPackScratch::default();
+        ps.ensure(0, igemm::packed_a_len(ROWS, cin), 0);
+        let mut out_s = vec![0i32; ROWS * cout];
+        let mut out_d = vec![0i32; ROWS * cout];
+
+        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        igemm::idense_forward(ROWS, cin, cout, &a, &wpack, &mut out_s, &mut ps);
+        set_kernel(sel.kind).expect("previously selected kernel");
+        igemm::idense_forward(ROWS, cin, cout, &a, &wpack, &mut out_d, &mut ps);
+        assert_eq!(out_s, out_d, "{label}: dispatched i16 kernel != scalar");
+
+        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        let t_s = bench(iters, budget_ms, || {
+            igemm::idense_forward(ROWS, cin, cout, &a, &wpack, &mut out_s, &mut ps);
+        });
+        set_kernel(sel.kind).expect("previously selected kernel");
+        let t_d = bench(iters, budget_ms, || {
+            igemm::idense_forward(ROWS, cin, cout, &a, &wpack, &mut out_d, &mut ps);
+        });
+        println!(
+            "{label:<24} i16 {:>9.1}us -> {:>9.1}us ({:.2}x)",
+            t_s.mean_ns / 1e3,
+            t_d.mean_ns / 1e3,
+            t_s.mean_ns / t_d.mean_ns,
+        );
+        report.add(&format!("igemm_fwd/{label}/scalar"), 1, t_s.mean_ns);
+        report.add(&format!("igemm_fwd/{label}/simd"), 1, t_d.mean_ns);
+    }
+
     if !speedups.is_empty() {
         let gmean = (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp();
         println!("conv geometric-mean blocked speedup: {gmean:.2}x over {} measurements", speedups.len());
+    }
+    if !ispeedups.is_empty() {
+        let gmean = (ispeedups.iter().map(|s| s.ln()).sum::<f64>() / ispeedups.len() as f64).exp();
+        if sel.kind == KernelKind::Scalar {
+            println!("i16 conv: no SIMD kernel on this host — dispatched == scalar (geomean {gmean:.2}x, expect ~1)");
+        } else {
+            println!(
+                "i16 conv geometric-mean `{}` speedup over scalar: {gmean:.2}x over {} shapes (target >= 2x)",
+                sel.kind.name(),
+                ispeedups.len()
+            );
+        }
     }
     if !quick {
         println!("\nREADME table (| shape | fwd naive | fwd blocked | bwd naive | bwd blocked | speedup |):");

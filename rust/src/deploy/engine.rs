@@ -63,6 +63,7 @@ use crate::manifest::{ArchSpec, DatasetSpec};
 use crate::runtime::backend::{Backend, EvalResult};
 use crate::runtime::native::fakequant::act_minmax;
 use crate::runtime::native::graph::{NativeArch, Node};
+use crate::runtime::native::kernel;
 use crate::runtime::native::ops::{self, Conv2d};
 use crate::runtime::NativeBackend;
 use crate::util::pool::{fixed_partition, partition_rows, split_rows, Parallelism, Task, FIXED_PARTITIONS};
@@ -357,8 +358,14 @@ impl DeployEngine {
         }
         // i32 exactness guard: the worst-case accumulator of every layer
         // must fit (always true for the zoo; fails loudly otherwise —
-        // naming the layer and the bound so an out-of-range model is
-        // diagnosable from the error alone)
+        // naming the layer, the bound, and the dispatched kernel so an
+        // out-of-range model is diagnosable from the error alone). The
+        // one bound covers every kernel the dispatcher can select: a
+        // SIMD lane's running value is a sub-chain of the k chain, and
+        // the AVX2 `madd_epi16` pairwise partial is bounded by
+        // `madd_partial_bound(kdim, ..) ≤ max_abs_acc(kdim, ..)` —
+        // asserted here so the coverage claim is machine-checked at
+        // every load, not just in the igemm unit tests.
         for (vid, node) in arch.nodes.iter().enumerate() {
             let (kdim, q) = match node {
                 Node::Conv { q, .. } => {
@@ -370,17 +377,25 @@ impl DeployEngine {
             };
             let (ab, wb) = (model.abits.bits[q], model.wbits.bits[q]);
             let bound = igemm::max_abs_acc(kdim, ab, wb);
+            assert!(
+                igemm::madd_partial_bound(kdim, ab, wb) <= bound,
+                "madd partial exceeds the k-sum bound at layer {q} (kdim {kdim}, \
+                 a{ab}/w{wb}) — SIMD coverage invariant broken"
+            );
             if bound > i32::MAX as i64 {
                 let spec = &arch.spec.qlayers[q];
+                let sel = kernel::selected();
                 bail!(
                     "deploy load rejected: layer {q} ({}, {}) at a{ab}/w{wb} has a \
                      worst-case i32 accumulator of {bound} (= kdim {kdim} × (2^{ab}−1) × \
-                     (2^{}−1)), which exceeds i32::MAX ({}); lower the layer's bitwidths \
-                     or split its fan-in",
+                     (2^{}−1)), which exceeds i32::MAX ({}) on the `{}` kernel ({}); \
+                     lower the layer's bitwidths or split its fan-in",
                     spec.name,
                     spec.kind,
                     wb - 1,
-                    i32::MAX
+                    i32::MAX,
+                    sel.kind.name(),
+                    sel.reason
                 );
             }
         }

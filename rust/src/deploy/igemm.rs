@@ -40,10 +40,32 @@ pub type IPackScratch = kernel::PackScratch<i16>;
 
 /// Worst-case |accumulator| of a `k`-deep integer MAC chain at the given
 /// activation/weight bitwidths — callers assert `<= i32::MAX` per layer.
+///
+/// The bound covers every *intermediate* of the selected kernel too, not
+/// just the final sum: each SIMD lane's running value is a sub-chain of
+/// the full k chain with all products of one sign bounded the same way,
+/// so it never exceeds the k-deep worst case. See [`madd_partial_bound`]
+/// for the one instruction-level partial that is not literally a
+/// sub-chain prefix.
 pub fn max_abs_acc(kdim: usize, abits: u8, wbits: u8) -> i64 {
     let qa = (1i64 << abits) - 1;
     let qw = (1i64 << (wbits - 1)) - 1;
     kdim as i64 * qa * qw
+}
+
+/// Worst-case |pairwise partial| produced *inside* the AVX2 kernel's
+/// `_mm256_madd_epi16` step: two adjacent products summed in i32 before
+/// reaching the accumulator (`2·q_a·q_w` per pair, or one product when
+/// the odd-k tail pairs with zero). At our code bounds this is
+/// `min(kdim, 2)·(2^a − 1)·(2^(w−1) − 1) ≤` [`max_abs_acc`]`(kdim, ..)`
+/// for every `kdim ≥ 1` — so the load-time guard that admits a layer's
+/// full k-sum automatically admits every madd partial, and the SIMD path
+/// can never saturate where the scalar path wouldn't. (The generic
+/// `madd_epi16` worst case `2·32767²` *would* overflow-saturate; it is
+/// unreachable because deploy codes never exceed `u ≤ 255`, `|w| ≤ 127`
+/// — the engine asserts both bounds at load.)
+pub fn madd_partial_bound(kdim: usize, abits: u8, wbits: u8) -> i64 {
+    max_abs_acc(kdim.min(2), abits, wbits)
 }
 
 /// Blocked `C[m × n] = A[m × k] · B[k × n]` over packed integer panels;
@@ -170,5 +192,26 @@ mod tests {
         assert!(max_abs_acc(3 * 3 * 64, 8, 8) <= i32::MAX as i64);
         // and the bound really is the max: 1-deep chain, extreme codes
         assert_eq!(max_abs_acc(1, 8, 8), 255 * 127);
+    }
+
+    #[test]
+    fn madd_partial_is_covered_by_the_k_sum_bound() {
+        // the SIMD-coverage invariant the engine's load guard asserts:
+        // for every admissible (kdim, a, w), the madd pairwise partial
+        // is within the k-sum bound the guard already checks
+        for kdim in [1usize, 2, 3, 9, 64, 3 * 3 * 512] {
+            for abits in 1..=8u8 {
+                for wbits in 2..=8u8 {
+                    assert!(
+                        madd_partial_bound(kdim, abits, wbits) <= max_abs_acc(kdim, abits, wbits),
+                        "kdim={kdim} a={abits} w={wbits}"
+                    );
+                }
+            }
+        }
+        // the partial itself: 2 extreme products for k ≥ 2, 1 for k = 1
+        assert_eq!(madd_partial_bound(1, 8, 8), 255 * 127);
+        assert_eq!(madd_partial_bound(2, 8, 8), 2 * 255 * 127);
+        assert_eq!(madd_partial_bound(1000, 8, 8), 2 * 255 * 127);
     }
 }

@@ -19,6 +19,7 @@ use sigmaquant::experiments::{ablation, fig3, fig4, fig5, table1,
                               table2, table3, table4, table5, table6};
 use sigmaquant::hw::{model_ppa, ShiftAddConfig};
 use sigmaquant::quant::{int8_size_bytes, model_size_bytes, BitAssignment};
+use sigmaquant::runtime::native::kernel;
 use sigmaquant::runtime::{Backend, NativeBackend};
 use sigmaquant::util::cli::Args;
 use sigmaquant::util::pool::Parallelism;
@@ -357,6 +358,8 @@ fn deploy(a: &Args, eval_n: usize, qat: usize) -> Result<()> {
         ppa.mean_cycles_per_mac, ppa.energy_vs_int8
     );
     println!("  fusion  : {} conv+BN epilogues folded", engine.fused_bn_count());
+    let sel = kernel::selected();
+    println!("  kernel  : {} ({})", sel.kind.name(), sel.reason);
     println!("  artifact: {} (round-trip byte-identical)", out_path.display());
     Ok(())
 }
@@ -435,6 +438,8 @@ fn serve(a: &Args, qat: usize) -> Result<()> {
     };
     let daemon = ServeDaemon::new(cfg, par);
     let handle = daemon.handle();
+    let sel = kernel::selected();
+    println!("integer kernel: {} ({})", sel.kind.name(), sel.reason);
     for (id, engine) in &engines {
         let v = handle.deploy(id, engine)?;
         println!(

@@ -391,7 +391,7 @@ mod tests {
     }
 
     #[test]
-    fn im2col_packed_agrees_with_rowmajor_im2col() {
+    fn direct_packed_im2col_agrees_with_rowmajor() {
         for cv in [
             Conv2d::new(7, 6, 3, 4, 3, 2, true),
             Conv2d::new(5, 5, 2, 3, 5, 1, true),

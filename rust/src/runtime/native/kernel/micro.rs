@@ -40,10 +40,15 @@ pub enum Acc<'a, A> {
 }
 
 /// The register-tiled inner loop: `acc[MR][NR] ⊕= Apanel ⊗ Bpanel` over
-/// the full k extent, one [`PanelElem::mul_acc`] per element.
+/// the full k extent — dispatched to the element's SIMD kernel when one
+/// is selected ([`PanelElem::simd_micro_kernel`], bit-identical by
+/// contract), else one [`PanelElem::mul_acc`] per element.
 #[inline]
 fn micro_kernel<E: PanelElem>(k: usize, apanel: &[E], bpanel: &[E], acc: &mut [[E::Acc; NR]; MR]) {
     debug_assert!(apanel.len() >= k * MR && bpanel.len() >= k * NR);
+    if E::simd_micro_kernel(k, apanel, bpanel, acc) {
+        return;
+    }
     for kk in 0..k {
         let ar = &apanel[kk * MR..kk * MR + MR];
         let br = &bpanel[kk * NR..kk * NR + NR];

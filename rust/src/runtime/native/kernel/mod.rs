@@ -21,7 +21,11 @@
 //! * **micro-kernel** ([`gemm`]): an `MR × NR` accumulator block held in
 //!   registers across the entire k loop, written back once per tile,
 //!   with the [`Acc`] seeding modes that reproduce every caller's
-//!   accumulation chain.
+//!   accumulation chain;
+//! * **SIMD dispatch** ([`simd`]): explicit AVX2/NEON instantiations of
+//!   the i16 tile, selected once per process by CPU feature detection
+//!   (override: `SIGMAQUANT_KERNEL`), bit-identical to the scalar loop
+//!   because exact i32 accumulation is reassociation-free.
 //!
 //! # The genericization argument
 //!
@@ -56,11 +60,13 @@
 
 pub mod micro;
 pub mod pack;
+pub mod simd;
 
 pub use micro::{conv_forward, dense_forward, gemm, Acc};
 pub use pack::{
     im2col_packed, im2col_packed_t, pack_a, pack_a_t, pack_a_unit, pack_a_t_unit, pack_b, pack_b_t,
 };
+pub use simd::{available_kernels, selected, set_kernel, KernelKind, Selection, KERNEL_ENV};
 
 use crate::runtime::native::ops::Conv2d;
 
@@ -93,6 +99,24 @@ pub trait PanelElem: Copy + Default + Send + Sync + 'static {
     /// Accumulator addition, for the [`Acc::Add`] write-back mode
     /// (`C += Σ`: a fresh chain added to the output once at the end).
     fn acc_add(a: Self::Acc, b: Self::Acc) -> Self::Acc;
+
+    /// SIMD escape hatch for the tile loop: run the whole
+    /// `acc[MR][NR] ⊕= Apanel ⊗ Bpanel` k extent with an explicit SIMD
+    /// kernel and return `true`, or return `false` (the default) to run
+    /// the generic scalar loop. An override must be **bit-identical** to
+    /// the scalar chains — the i16 instantiation qualifies anywhere
+    /// (exact i32 arithmetic is reassociation-free, see
+    /// [`simd`]), an f32 AVX-512/SVE tile would have to reproduce the
+    /// §9 no-FMA chain order exactly to plug in here.
+    #[inline(always)]
+    fn simd_micro_kernel(
+        _k: usize,
+        _apanel: &[Self],
+        _bpanel: &[Self],
+        _acc: &mut [[Self::Acc; NR]; MR],
+    ) -> bool {
+        false
+    }
 }
 
 impl PanelElem for f32 {
@@ -129,6 +153,13 @@ impl PanelElem for i16 {
     #[inline(always)]
     fn acc_add(a: i32, b: i32) -> i32 {
         a + b
+    }
+
+    #[inline(always)]
+    fn simd_micro_kernel(k: usize, ap: &[i16], bp: &[i16], acc: &mut [[i32; NR]; MR]) -> bool {
+        // exact i32 accumulation ⇒ any SIMD summation order is bitwise
+        // the scalar chain; dispatch resolves the host's best ISA once
+        simd::mac_tile_i16(k, ap, bp, acc)
     }
 }
 

@@ -4,6 +4,15 @@
 //! `E::default()` (`+0.0` / `0`), which is what makes partial-tile and
 //! out-of-bounds padding bit-neutral on the f32 side (§9) and
 //! contribution-free on the integer side (§10).
+//!
+//! These layouts are also what the explicit SIMD tiles ([`super::simd`])
+//! consume *as-is*: a k-major `NR = 16`-column B panel row is one
+//! contiguous 256-bit i16 load (two 128-bit on NEON), the
+//! `MR`-interleaved A panel gives the per-row broadcast operands, and
+//! the zero-filled tails mean SIMD lanes past the logical edge compute
+//! exact zero contributions — so no packer changes were needed to go
+//! wide, and tail geometries are handled by the same write-back masking
+//! as the scalar core.
 
 use super::{conv_kdim, conv_rows, packed_a_len, packed_b_len, unit_stride, PanelElem, MR, NR};
 use crate::runtime::native::ops::Conv2d;

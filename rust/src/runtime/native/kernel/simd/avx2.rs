@@ -1,0 +1,113 @@
+//! AVX2 i16 micro-kernel: the 2-way packed-dot tile
+//! (`_mm256_madd_epi16` + `_mm256_add_epi32`).
+//!
+//! One `MR × NR` tile is held as 12 YMM accumulators (`MR = 6` rows ×
+//! two i32×8 halves of the `NR = 16` columns), fed `NR` B operands per
+//! k-step from one contiguous 256-bit load of the k-major B panel and
+//! `MR` broadcast A operands from the `MR`-interleaved A panel — the
+//! packed layout was sized for exactly this register file (§9), so the
+//! kernel reads the panels as-is.
+//!
+//! # The madd pairing
+//!
+//! `_mm256_madd_epi16(a, b)` multiplies 16 i16 lanes pairwise and adds
+//! adjacent products into 8 i32 lanes: lane `l` gets
+//! `a[2l]·b[2l] + a[2l+1]·b[2l+1]`. The kernel therefore walks k two
+//! steps at a time: the two B panel rows `kk`/`kk+1` are interleaved
+//! with `unpacklo/hi_epi16` so each 32-bit lane holds one column's
+//! `(b[kk][j], b[kk+1][j])` pair, and the matching A pair
+//! `(a[kk][i], a[kk+1][i])` is broadcast as one 32-bit word — each madd
+//! then contributes exactly the two scalar products
+//! `a[kk][i]·b[kk][j] + a[kk+1][i]·b[kk+1][j]`. An odd k tail pairs the
+//! final step with zeros (a `0·0` product adds nothing).
+//!
+//! Because the 256-bit unpacks interleave *per 128-bit lane*, the
+//! column order inside the two accumulators is the fixed permutation
+//! `lo = [j0..j3 | j8..j11]`, `hi = [j4..j7 | j12..j15]`; the
+//! accumulator block is swizzled into that order at load and swizzled
+//! back at store with two `permute2x128` each, once per tile.
+//!
+//! # Exactness
+//!
+//! Every intermediate is exact i32: operand codes are bounded by the
+//! deploy load guard (activations `≤ 2^a − 1 ≤ 255`, weights
+//! `|·| ≤ 2^(w−1) − 1 ≤ 127`), so a 2-product madd partial is
+//! `≤ 2·(2^a−1)·(2^(w−1)−1)` — covered by the same worst-case k-sum
+//! bound the guard already checks (`deploy::igemm::madd_partial_bound`)
+//! — and the per-lane running sums are sub-chains of the full k chain.
+//! Integer addition is associative and commutative, so the tile result
+//! is **bit-identical** to the scalar core's for any pairing/ordering;
+//! `rust/tests/gemm_parity.rs` pins forced-AVX2 == forced-scalar across
+//! the zoo shapes and the random-shape suite.
+
+use super::super::{MR, NR};
+use core::arch::x86_64::*;
+
+/// Runtime CPU support for this kernel.
+pub(super) fn available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// `acc[MR][NR] += Apanel ⊗ Bpanel` over the full k extent — the AVX2
+/// instantiation of the scalar core's tile loop, bit-identical by
+/// exactness. Panics (rather than reading out of bounds) on short
+/// panels; the generic driver always passes exact-length panel slices.
+#[inline]
+pub(super) fn mac_tile(k: usize, apanel: &[i16], bpanel: &[i16], acc: &mut [[i32; NR]; MR]) {
+    assert!(apanel.len() >= k * MR && bpanel.len() >= k * NR, "short panel");
+    // SAFETY: panel bounds asserted above; the dispatcher selects this
+    // kernel only after `is_x86_feature_detected!("avx2")`.
+    unsafe { mac_tile_avx2(k, apanel, bpanel, acc) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn mac_tile_avx2(k: usize, apanel: &[i16], bpanel: &[i16], acc: &mut [[i32; NR]; MR]) {
+    let ap = apanel.as_ptr();
+    let bp = bpanel.as_ptr();
+    // load the i32 accumulator block and swizzle it into madd lane
+    // order: lo = columns [0..4 | 8..12], hi = columns [4..8 | 12..16]
+    let mut lo = [_mm256_setzero_si256(); MR];
+    let mut hi = [_mm256_setzero_si256(); MR];
+    for i in 0..MR {
+        let c0 = _mm256_loadu_si256(acc[i].as_ptr().cast());
+        let c1 = _mm256_loadu_si256(acc[i].as_ptr().add(8).cast());
+        lo[i] = _mm256_permute2x128_si256(c0, c1, 0x20);
+        hi[i] = _mm256_permute2x128_si256(c0, c1, 0x31);
+    }
+    let mut kk = 0usize;
+    while kk + 1 < k {
+        // two k-major B rows, interleaved into per-column (kk, kk+1)
+        // i16 pairs (per 128-bit lane — hence the fixed column swizzle)
+        let b0 = _mm256_loadu_si256(bp.add(kk * NR).cast());
+        let b1 = _mm256_loadu_si256(bp.add((kk + 1) * NR).cast());
+        let blo = _mm256_unpacklo_epi16(b0, b1);
+        let bhi = _mm256_unpackhi_epi16(b0, b1);
+        for i in 0..MR {
+            let a0 = *ap.add(kk * MR + i) as u16 as u32;
+            let a1 = *ap.add((kk + 1) * MR + i) as u16 as u32;
+            let av = _mm256_set1_epi32(((a1 << 16) | a0) as i32);
+            lo[i] = _mm256_add_epi32(lo[i], _mm256_madd_epi16(av, blo));
+            hi[i] = _mm256_add_epi32(hi[i], _mm256_madd_epi16(av, bhi));
+        }
+        kk += 2;
+    }
+    if kk < k {
+        // odd k tail: pair the final step with zeros
+        let b0 = _mm256_loadu_si256(bp.add(kk * NR).cast());
+        let z = _mm256_setzero_si256();
+        let blo = _mm256_unpacklo_epi16(b0, z);
+        let bhi = _mm256_unpackhi_epi16(b0, z);
+        for i in 0..MR {
+            let av = _mm256_set1_epi32(*ap.add(kk * MR + i) as u16 as u32 as i32);
+            lo[i] = _mm256_add_epi32(lo[i], _mm256_madd_epi16(av, blo));
+            hi[i] = _mm256_add_epi32(hi[i], _mm256_madd_epi16(av, bhi));
+        }
+    }
+    // swizzle back to natural column order and store
+    for i in 0..MR {
+        let c0 = _mm256_permute2x128_si256(lo[i], hi[i], 0x20);
+        let c1 = _mm256_permute2x128_si256(lo[i], hi[i], 0x31);
+        _mm256_storeu_si256(acc[i].as_mut_ptr().cast(), c0);
+        _mm256_storeu_si256(acc[i].as_mut_ptr().add(8).cast(), c1);
+    }
+}

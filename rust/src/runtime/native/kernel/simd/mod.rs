@@ -1,0 +1,343 @@
+//! Runtime-dispatched SIMD micro-kernels behind the generic panel core
+//! (DESIGN.md §9, "SIMD dispatch").
+//!
+//! The generic scalar tile loop in [`super::micro`] is the semantic
+//! oracle; this module holds explicit SIMD instantiations of the i16
+//! tile and the one-time selection logic that picks between them:
+//!
+//! * `avx2` (x86_64; the module is cfg-gated, hence no doc link): the
+//!   2-way packed dot — `_mm256_madd_epi16` + `_mm256_add_epi32`,
+//!   selected when `is_x86_feature_detected!` reports AVX2;
+//! * `neon` (aarch64): the `vmlal_s16` widening MAC, baseline on
+//!   aarch64 so selected unconditionally;
+//! * scalar everywhere else — **zero behavior change**, because i16
+//!   products accumulate exactly in i32 and integer addition is
+//!   associative and commutative: every kernel here is *bit-identical*
+//!   to the scalar core by construction, not by tolerance. (That is
+//!   also why the f32 trainer tile stays scalar: its no-FMA
+//!   accumulation chains are bit-pinned and re-association would move
+//!   results. The dispatch hook, [`super::PanelElem::simd_micro_kernel`],
+//!   is element-generic so f32 AVX-512/SVE tiles can opt in later with
+//!   their own chain argument.)
+//!
+//! # Selection
+//!
+//! [`selected`] resolves once per process: the `SIGMAQUANT_KERNEL` env
+//! override (`scalar` | `avx2` | `neon`) wins if set — and *panics* on
+//! an unknown or unavailable value, because a silent fallback would
+//! invalidate forced-kernel CI runs — otherwise CPU feature detection
+//! picks the best available ISA. The cached choice lives in one
+//! `AtomicU8`; [`set_kernel`] lets tests and benches switch kernels
+//! programmatically (env mutation in a threaded test binary is a race,
+//! a global switch between bit-identical kernels is benign).
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use super::{MR, NR};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Env var forcing the kernel choice: `scalar` | `avx2` | `neon`.
+/// Unknown or unavailable values abort at first kernel use (fail-fast:
+/// a forced-kernel test run must never silently measure the wrong ISA).
+pub const KERNEL_ENV: &str = "SIGMAQUANT_KERNEL";
+
+/// An i16 micro-kernel implementation the dispatcher can select.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelKind {
+    /// The generic scalar tile loop in [`super::micro`] — the oracle,
+    /// available everywhere.
+    Scalar,
+    /// The `avx2` tile: 2-way packed dot (`madd_epi16`), x86_64 with AVX2.
+    Avx2,
+    /// The `neon` tile: widening MAC (`vmlal_s16`), aarch64 baseline.
+    Neon,
+}
+
+impl KernelKind {
+    /// The canonical lowercase name (the `SIGMAQUANT_KERNEL` value and
+    /// the ISA tag benches stamp into `BENCH_*.json`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Parse a kernel name (case-insensitive); `None` if unknown.
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelKind::Scalar),
+            "avx2" => Some(KernelKind::Avx2),
+            "neon" => Some(KernelKind::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this kernel can run on the current host (compile target
+    /// *and* runtime CPU features).
+    pub fn available(self) -> bool {
+        match self {
+            KernelKind::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => avx2::available(),
+            #[cfg(target_arch = "aarch64")]
+            KernelKind::Neon => neon::available(),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    fn from_code(code: u8) -> Self {
+        match code {
+            0 => KernelKind::Scalar,
+            1 => KernelKind::Avx2,
+            _ => KernelKind::Neon,
+        }
+    }
+}
+
+/// Why a kernel was selected — stamped into bench reports so baselines
+/// are only compared within one ISA, and into the deploy load guard's
+/// error report.
+#[derive(Clone, Copy, Debug)]
+pub struct Selection {
+    /// The kernel every i16 GEMM tile now runs through.
+    pub kind: KernelKind,
+    /// How it was chosen (detection / baseline / override).
+    pub reason: &'static str,
+}
+
+const REASONS: [&str; 5] = [
+    "avx2 detected at runtime",
+    "aarch64 baseline",
+    "no simd feature available",
+    "SIGMAQUANT_KERNEL override",
+    "programmatic override",
+];
+const R_DETECT_AVX2: u8 = 0;
+const R_BASELINE_NEON: u8 = 1;
+const R_NO_SIMD: u8 = 2;
+const R_ENV: u8 = 3;
+const R_SET: u8 = 4;
+
+/// Cached selection: `0` = undecided, else `1 + kind + 4·reason`.
+/// Relaxed ordering suffices — every encodable state is a valid,
+/// bit-identical kernel, so racing initializers/raw switches are benign.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+fn encode(kind: KernelKind, reason: u8) -> u8 {
+    1 + kind as u8 + 4 * reason
+}
+
+fn decode(state: u8) -> Selection {
+    let v = state - 1;
+    Selection {
+        kind: KernelKind::from_code(v % 4),
+        reason: REASONS[(v / 4) as usize],
+    }
+}
+
+fn detect() -> (KernelKind, u8) {
+    if KernelKind::Neon.available() {
+        (KernelKind::Neon, R_BASELINE_NEON)
+    } else if KernelKind::Avx2.available() {
+        (KernelKind::Avx2, R_DETECT_AVX2)
+    } else {
+        (KernelKind::Scalar, R_NO_SIMD)
+    }
+}
+
+fn init() -> u8 {
+    let (kind, reason) = match std::env::var(KERNEL_ENV) {
+        Ok(v) => {
+            let kind = KernelKind::from_name(&v).unwrap_or_else(|| {
+                panic!("{KERNEL_ENV}={v:?}: unknown kernel (valid: scalar | avx2 | neon)")
+            });
+            assert!(
+                kind.available(),
+                "{KERNEL_ENV}={v:?}: kernel `{}` is not available on this host",
+                kind.name()
+            );
+            (kind, R_ENV)
+        }
+        Err(_) => detect(),
+    };
+    encode(kind, reason)
+}
+
+/// The kernel every i16 GEMM tile dispatches to, resolved once per
+/// process (env override, else CPU feature detection) and cached.
+pub fn selected() -> Selection {
+    let state = STATE.load(Ordering::Relaxed);
+    if state != 0 {
+        return decode(state);
+    }
+    let fresh = init();
+    STATE.store(fresh, Ordering::Relaxed);
+    decode(fresh)
+}
+
+/// Force the kernel programmatically (tests / benches): errors if the
+/// kernel is not available on this host. Safe to call at any time from
+/// any thread — all selectable kernels are bit-identical, so in-flight
+/// GEMMs finishing on the previous kernel produce the same bits.
+pub fn set_kernel(kind: KernelKind) -> Result<(), String> {
+    if !kind.available() {
+        return Err(format!(
+            "kernel `{}` is not available on this host (available: {})",
+            kind.name(),
+            available_kernels()
+                .iter()
+                .map(|k| k.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+    }
+    STATE.store(encode(kind, R_SET), Ordering::Relaxed);
+    Ok(())
+}
+
+/// Every kernel that can run on this host (always contains
+/// [`KernelKind::Scalar`]) — what forced-kernel test loops iterate.
+pub fn available_kernels() -> Vec<KernelKind> {
+    [KernelKind::Scalar, KernelKind::Avx2, KernelKind::Neon]
+        .into_iter()
+        .filter(|k| k.available())
+        .collect()
+}
+
+/// The i16 dispatch entry the [`super::PanelElem`] hook calls: runs the
+/// selected SIMD tile and returns `true`, or returns `false` to send
+/// the caller down the generic scalar loop.
+pub(super) fn mac_tile_i16(k: usize, ap: &[i16], bp: &[i16], acc: &mut [[i32; NR]; MR]) -> bool {
+    match selected().kind {
+        KernelKind::Scalar => false,
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => {
+            avx2::mac_tile(k, ap, bp, acc);
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => {
+            neon::mac_tile(k, ap, bp, acc);
+            true
+        }
+        #[allow(unreachable_patterns)]
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip_and_unknown_is_rejected() {
+        for k in [KernelKind::Scalar, KernelKind::Avx2, KernelKind::Neon] {
+            assert_eq!(KernelKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::from_name(" AVX2 "), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::from_name("avx512"), None);
+        assert_eq!(KernelKind::from_name(""), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(KernelKind::Scalar.available());
+        assert!(available_kernels().contains(&KernelKind::Scalar));
+        // at most one SIMD ISA can be compiled in
+        assert!(available_kernels().len() <= 2);
+    }
+
+    #[test]
+    fn state_encoding_roundtrips() {
+        for kind in [KernelKind::Scalar, KernelKind::Avx2, KernelKind::Neon] {
+            for reason in 0..REASONS.len() as u8 {
+                let s = decode(encode(kind, reason));
+                assert_eq!(s.kind, kind);
+                assert_eq!(s.reason, REASONS[reason as usize]);
+            }
+        }
+    }
+
+    /// One sequential test owns all global-state assertions (other tests
+    /// in this binary may run GEMMs concurrently — that is benign, but
+    /// *asserting* on the global from two tests at once would race).
+    #[test]
+    fn set_kernel_forces_and_rejects_unavailable() {
+        let before = STATE.load(Ordering::Relaxed);
+        for k in available_kernels() {
+            set_kernel(k).unwrap();
+            let sel = selected();
+            assert_eq!(sel.kind, k);
+            assert_eq!(sel.reason, REASONS[R_SET as usize]);
+        }
+        for k in [KernelKind::Avx2, KernelKind::Neon] {
+            if !k.available() {
+                let err = set_kernel(k).unwrap_err();
+                assert!(err.contains(k.name()), "{err}");
+                assert!(err.contains("scalar"), "{err}");
+            }
+        }
+        // restore whatever was decided (or undecided) before this test
+        STATE.store(before, Ordering::Relaxed);
+    }
+
+    /// Unit-level bit-identity: the SIMD tile (when one is compiled in
+    /// and the CPU supports it) equals the scalar reference on the raw
+    /// panel interface, across odd/even k and a seeded accumulator —
+    /// calling the arch module directly, so this test never touches the
+    /// global dispatch state. The full-GEMM and whole-engine versions of
+    /// this assertion live in `rust/tests/gemm_parity.rs` /
+    /// `deploy_parity.rs`.
+    #[test]
+    fn simd_tile_matches_scalar_reference() {
+        fn host_simd_tile(k: usize, ap: &[i16], bp: &[i16], acc: &mut [[i32; NR]; MR]) -> bool {
+            #[cfg(target_arch = "x86_64")]
+            if avx2::available() {
+                avx2::mac_tile(k, ap, bp, acc);
+                return true;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if neon::available() {
+                neon::mac_tile(k, ap, bp, acc);
+                return true;
+            }
+            let _ = (k, ap, bp, acc);
+            false
+        }
+        let mut rng = 0x00C0_FFEEu32;
+        let mut next = move |m: i32| {
+            rng = rng.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+            ((rng >> 16) as i32 % m) as i16
+        };
+        for k in [1usize, 2, 3, 7, 8, 27, 45] {
+            let ap: Vec<i16> = (0..k * MR).map(|_| next(256).abs()).collect();
+            let bp: Vec<i16> = (0..k * NR).map(|_| next(255) - 127).collect();
+            let mut seed = [[0i32; NR]; MR];
+            for row in seed.iter_mut() {
+                for v in row.iter_mut() {
+                    *v = i32::from(next(2)) * 1_000_003;
+                }
+            }
+            // scalar reference on the same panels + seed
+            let mut want = seed;
+            for kk in 0..k {
+                for i in 0..MR {
+                    let av = i32::from(ap[kk * MR + i]);
+                    for j in 0..NR {
+                        want[i][j] += av * i32::from(bp[kk * NR + j]);
+                    }
+                }
+            }
+            let mut got = seed;
+            if host_simd_tile(k, &ap, &bp, &mut got) {
+                assert_eq!(got, want, "k={k}");
+            }
+        }
+    }
+}

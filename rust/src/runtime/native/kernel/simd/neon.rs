@@ -1,0 +1,70 @@
+//! NEON i16 micro-kernel: the widening multiply-accumulate tile
+//! (`vmlal_s16`: `int32x4 += int16x4 · int16x4`).
+//!
+//! One `MR × NR` tile is held as 24 of the 32 NEON v-registers (`MR = 6`
+//! rows × four i32×4 quarters of the `NR = 16` columns), fed `NR` B
+//! operands per k-step from two contiguous 128-bit loads of the k-major
+//! B panel and `MR` broadcast A operands (`vdup_n_s16`) from the
+//! `MR`-interleaved A panel — the packed layout was sized for exactly
+//! this register file (§9), so the kernel reads the panels as-is.
+//!
+//! Unlike AVX2 there is no pairing trick and no lane swizzle: `vmlal_s16`
+//! widens each i16 product to i32 before accumulating, so the kernel is
+//! a direct transcription of the scalar k-loop — one widened MAC per
+//! element, in the same k-ascending order, on naturally ordered columns.
+//! Exactness of i16×i16→i32 then makes the tile **bit-identical** to the
+//! scalar core's for free (no ordering argument even needed).
+//!
+//! NEON is baseline on `aarch64` (this module only compiles there), so
+//! there is no runtime feature probe to fail: dispatch selects this
+//! kernel unconditionally unless overridden.
+
+use super::super::{MR, NR};
+use core::arch::aarch64::*;
+
+/// NEON is architecturally guaranteed on aarch64.
+pub(super) fn available() -> bool {
+    true
+}
+
+/// `acc[MR][NR] += Apanel ⊗ Bpanel` over the full k extent — the NEON
+/// instantiation of the scalar core's tile loop, bit-identical by
+/// exactness. Panics (rather than reading out of bounds) on short
+/// panels; the generic driver always passes exact-length panel slices.
+#[inline]
+pub(super) fn mac_tile(k: usize, apanel: &[i16], bpanel: &[i16], acc: &mut [[i32; NR]; MR]) {
+    assert!(apanel.len() >= k * MR && bpanel.len() >= k * NR, "short panel");
+    // SAFETY: panel bounds asserted above; NEON is baseline on aarch64.
+    unsafe { mac_tile_neon(k, apanel, bpanel, acc) }
+}
+
+unsafe fn mac_tile_neon(k: usize, apanel: &[i16], bpanel: &[i16], acc: &mut [[i32; NR]; MR]) {
+    let ap = apanel.as_ptr();
+    let bp = bpanel.as_ptr();
+    // 6 rows × 4 quarters = 24 live accumulator registers
+    let mut c = [[vdupq_n_s32(0); 4]; MR];
+    for i in 0..MR {
+        for q in 0..4 {
+            c[i][q] = vld1q_s32(acc[i].as_ptr().add(4 * q));
+        }
+    }
+    for kk in 0..k {
+        // one k-major B row = columns [0..8) and [8..16)
+        let b01 = vld1q_s16(bp.add(kk * NR));
+        let b23 = vld1q_s16(bp.add(kk * NR + 8));
+        let (b0, b1) = (vget_low_s16(b01), vget_high_s16(b01));
+        let (b2, b3) = (vget_low_s16(b23), vget_high_s16(b23));
+        for i in 0..MR {
+            let av = vdup_n_s16(*ap.add(kk * MR + i));
+            c[i][0] = vmlal_s16(c[i][0], b0, av);
+            c[i][1] = vmlal_s16(c[i][1], b1, av);
+            c[i][2] = vmlal_s16(c[i][2], b2, av);
+            c[i][3] = vmlal_s16(c[i][3], b3, av);
+        }
+    }
+    for i in 0..MR {
+        for q in 0..4 {
+            vst1q_s32(acc[i].as_mut_ptr().add(4 * q), c[i][q]);
+        }
+    }
+}

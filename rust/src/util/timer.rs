@@ -67,11 +67,21 @@ fn summarize(samples_ns: &mut [f64]) -> Timing {
 pub struct BenchReport {
     name: &'static str,
     rows: Vec<(String, usize, f64)>,
+    /// Dispatched integer-kernel ISA + selection reason, stamped as
+    /// top-level `"kernel"` / `"kernel_reason"` fields so
+    /// `scripts/bench_compare` only compares baselines within one ISA.
+    kernel: Option<(String, String)>,
 }
 
 impl BenchReport {
     pub fn new(name: &'static str) -> BenchReport {
-        BenchReport { name, rows: Vec::new() }
+        BenchReport { name, rows: Vec::new(), kernel: None }
+    }
+
+    /// Record the dispatched integer kernel (ISA name + selection
+    /// reason) this run's rows were measured under.
+    pub fn set_kernel(&mut self, name: &str, reason: &str) {
+        self.kernel = Some((name.to_string(), reason.to_string()));
     }
 
     /// Record one measurement: op name, thread count, ns per iteration.
@@ -85,7 +95,12 @@ impl BenchReport {
         std::fs::create_dir_all(&dir)?;
         let path = dir.join(format!("BENCH_{}.json", self.name));
         let mut f = std::fs::File::create(&path)?;
-        writeln!(f, "{{\n  \"bench\": \"{}\",\n  \"rows\": [", self.name)?;
+        writeln!(f, "{{\n  \"bench\": \"{}\",", self.name)?;
+        if let Some((kname, kreason)) = &self.kernel {
+            writeln!(f, "  \"kernel\": \"{kname}\",")?;
+            writeln!(f, "  \"kernel_reason\": \"{kreason}\",")?;
+        }
+        writeln!(f, "  \"rows\": [")?;
         for (i, (op, threads, ns)) in self.rows.iter().enumerate() {
             let comma = if i + 1 == self.rows.len() { "" } else { "," };
             writeln!(
@@ -114,6 +129,23 @@ mod tests {
         let rows = parsed.get("rows").as_arr().expect("rows array");
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[1].get("threads").as_usize(), Some(4));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn bench_report_stamps_the_dispatched_kernel() {
+        let mut r = BenchReport::new("unit_test_kernel");
+        r.set_kernel("avx2", "avx2 detected at runtime");
+        r.add("op_a", 1, 10.0);
+        let path = r.write().expect("write report");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let parsed = crate::util::json::parse(&text).expect("valid json");
+        assert_eq!(parsed.get("kernel").as_str(), Some("avx2"));
+        assert_eq!(
+            parsed.get("kernel_reason").as_str(),
+            Some("avx2 detected at runtime")
+        );
+        assert_eq!(parsed.get("rows").as_arr().map(|r| r.len()), Some(1));
         let _ = std::fs::remove_file(path);
     }
 

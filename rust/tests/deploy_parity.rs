@@ -12,8 +12,10 @@
 //!    (the two paths compute the same exact value with different f32
 //!    rounding; a tie can land either way);
 //! 4. **determinism** — the engine is bit-identical across thread
-//!    counts (everything integer is exact; the f32 epilogues merge
-//!    per-partition partials in partition order);
+//!    counts *and* across dispatched i16 kernels (scalar/AVX2/NEON):
+//!    everything integer is exact, the f32 epilogues merge
+//!    per-partition partials in partition order, and SIMD tiling is a
+//!    pure reordering of an exact sum;
 //! 5. **cache hygiene** — the trainer's per-epoch weight-pack cache
 //!    (PR-4 satellite) must invalidate across train/restore cycles, so
 //!    repeated evaluation around a snapshot is bit-stable;
@@ -26,6 +28,7 @@ use sigmaquant::deploy::{argmax, format, DeployEngine, QuantizedModel};
 use sigmaquant::manifest::DatasetSpec;
 use sigmaquant::quant::{model_size_bytes, BitAssignment};
 use sigmaquant::runtime::native::default_dataset;
+use sigmaquant::runtime::native::kernel;
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 use sigmaquant::util::pool::Parallelism;
 
@@ -177,28 +180,46 @@ fn deploy_matches_fakequant_on_every_zoo_arch() {
     }
 }
 
+/// Thread-count bit-identity, swept over every available i16 kernel
+/// (scalar plus whatever SIMD the host dispatches): the 2×2 matrix of
+/// {threads} × {kernels} must produce one identical logit vector —
+/// thread partitioning and SIMD tiling are both pure reorderings of an
+/// exact integer sum.
 #[test]
-fn engine_is_bit_identical_across_thread_counts() {
+fn engine_is_bit_identical_across_thread_counts_and_kernels() {
     let ds = DatasetSpec { train_batch: 8, eval_batch: 16, ..default_dataset() };
     let data = SynthDataset::new(ds.clone(), 23);
     let (xs, _ys) = data.eval_set(16);
-    let mut logits: Vec<Vec<f32>> = Vec::new();
-    for threads in [1usize, 3] {
-        let be = NativeBackend::with_dataset_parallelism(ds.clone(), Parallelism::new(threads));
-        let s = ModelSession::load(&be, "resnet18_mini", 9).unwrap();
-        let l = s.num_qlayers();
-        let m = QuantizedModel::export(
-            &s.arch,
-            s.params(),
-            &mixed_bits(l, 1),
-            &BitAssignment::uniform(l, 8),
-        )
-        .unwrap();
-        let engine = DeployEngine::from_backend(&m, &be).unwrap();
-        logits.push(engine.infer_logits(&xs, 16).unwrap());
+    let restore = kernel::selected();
+    let mut logits: Vec<(usize, &'static str, Vec<f32>)> = Vec::new();
+    for kk in kernel::available_kernels() {
+        kernel::set_kernel(kk).expect("listed kernel is available");
+        for threads in [1usize, 3] {
+            let be =
+                NativeBackend::with_dataset_parallelism(ds.clone(), Parallelism::new(threads));
+            let s = ModelSession::load(&be, "resnet18_mini", 9).unwrap();
+            let l = s.num_qlayers();
+            let m = QuantizedModel::export(
+                &s.arch,
+                s.params(),
+                &mixed_bits(l, 1),
+                &BitAssignment::uniform(l, 8),
+            )
+            .unwrap();
+            let engine = DeployEngine::from_backend(&m, &be).unwrap();
+            logits.push((threads, kk.name(), engine.infer_logits(&xs, 16).unwrap()));
+        }
     }
-    for (a, b) in logits[0].iter().zip(&logits[1]) {
-        assert_eq!(a.to_bits(), b.to_bits(), "thread-count dependence");
+    kernel::set_kernel(restore.kind).expect("restore previously selected kernel");
+    let (t0, k0, first) = &logits[0];
+    for (t, k, l) in &logits[1..] {
+        for (a, b) in first.iter().zip(l) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "({t0} threads, {k0}) vs ({t} threads, {k}) logits diverge"
+            );
+        }
     }
 }
 

@@ -20,12 +20,21 @@
 //! panels — layout drift between trainer and deploy is a test failure
 //! here before it is an accuracy bug in serving.
 
-use sigmaquant::deploy::igemm;
+use sigmaquant::deploy::igemm::{self, IPackScratch};
 use sigmaquant::runtime::native::gemm::{self, PackScratch};
-use sigmaquant::runtime::native::kernel::{self, Acc};
+use sigmaquant::runtime::native::graph::{zoo, Node};
+use sigmaquant::runtime::native::kernel::{self, available_kernels, set_kernel, Acc, KernelKind};
 use sigmaquant::runtime::native::ops::{self, Conv2d};
 use sigmaquant::util::prop::{check, Gen};
 use sigmaquant::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Serializes the forced-kernel tests: they flip the process-global
+/// kernel selection, and while every selectable kernel is bit-identical
+/// (so concurrent flips can never corrupt *results*), a concurrent flip
+/// could silently turn a "forced scalar" baseline into a SIMD run and
+/// mask the very bug the comparison exists to catch.
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
 
 /// One randomized convolution parity case.
 #[derive(Clone, Debug)]
@@ -445,4 +454,172 @@ fn i16_panel_layout_is_pinned_to_the_pre_refactor_packing() {
     // ...and that layout is the literal strided pixel gather: output
     // positions (0,0),(0,1),(1,0),(1,1) read pixels (0,0),(0,2),(2,0),(2,2)
     assert_eq!(generic, vec![0, 4, 16, 20, 0, 0, 1, 5, 17, 21, 0, 0]);
+}
+
+fn randq(n: usize, lo: i32, hi: i32, rng: &mut Rng) -> Vec<i16> {
+    (0..n).map(|_| (lo + rng.below((hi - lo + 1) as usize) as i32) as i16).collect()
+}
+
+/// Row-major naive i32 GEMM — the dispatch-free oracle the forced-kernel
+/// tests compare against (it never routes through the kernel core, so a
+/// SIMD bug cannot leak into its own baseline).
+fn igemm_naive(m: usize, n: usize, k: usize, a: &[i16], b: &[i16]) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += i32::from(a[i * k + kk]) * i32::from(b[kk * n + j]);
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Pack + igemm under the currently forced kernel.
+fn igemm_packed(m: usize, n: usize, k: usize, a: &[i16], b: &[i16]) -> Vec<i32> {
+    let mut ap = vec![0i16; igemm::packed_a_len(m, k)];
+    let mut bp = vec![0i16; igemm::packed_b_len(k, n)];
+    igemm::ipack_a(m, k, a, &mut ap);
+    igemm::ipack_b(k, n, b, &mut bp);
+    let mut c = vec![0i32; m * n];
+    igemm::igemm(m, n, k, &ap, &bp, &mut c, n);
+    c
+}
+
+/// Every available kernel (scalar + whatever the host's CPU offers)
+/// reproduces the dispatch-free naive i32 GEMM *exactly* over random
+/// shapes spanning the MR/NR tails and odd k — the per-kernel form of
+/// the random-shape suite (CI additionally re-runs the whole test binary
+/// under `SIGMAQUANT_KERNEL=scalar`, exercising the env override path).
+#[test]
+fn i16_gemm_matches_naive_under_every_available_kernel_over_random_shapes() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let kernels = available_kernels();
+    let restore = kernel::selected();
+    check(0x516D4_u64, 60, &DenseGen, |case| {
+        let DenseCase { rows: m, cin: k, cout: n, seed } = *case;
+        let mut rng = Rng::new(seed);
+        let a = randq(m * k, 0, 255, &mut rng);
+        let b = randq(k * n, -127, 127, &mut rng);
+        let want = igemm_naive(m, n, k, &a, &b);
+        for kk in &kernels {
+            set_kernel(*kk).map_err(|e| e.to_string())?;
+            let got = igemm_packed(m, n, k, &a, &b);
+            if got != want {
+                return Err(format!("kernel {} diverges from naive at ({m},{n},{k})", kk.name()));
+            }
+        }
+        Ok(())
+    });
+    set_kernel(restore.kind).expect("restore previously selected kernel");
+}
+
+/// The satellite-3 pin: forced-SIMD output is **bitwise** equal to
+/// forced-scalar on every zoo conv/dense shape and on explicit MR/NR
+/// tail geometries. Scalar baselines are computed while the scalar
+/// kernel is held forced under [`KERNEL_LOCK`], then each SIMD kernel
+/// recomputes the identical calls. Trivially passes (kernel list ==
+/// [scalar]) on hosts without SIMD — which is itself the zero-behavior-
+/// change claim.
+#[test]
+fn forced_simd_equals_forced_scalar_on_zoo_shapes_and_tile_tails() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let restore = kernel::selected();
+    let simd: Vec<KernelKind> =
+        available_kernels().into_iter().filter(|k| *k != KernelKind::Scalar).collect();
+    let mut rng = Rng::new(0x51D3);
+
+    // zoo conv shapes at a small row block; zoo dense shapes
+    let mut conv_shapes: Vec<(usize, usize, usize, usize, usize, usize, bool)> = Vec::new();
+    let mut dense_shapes: Vec<(usize, usize)> = Vec::new();
+    for arch in zoo() {
+        for (vid, node) in arch.nodes.iter().enumerate() {
+            match node {
+                Node::Conv { input, k, stride, same, q, .. } => {
+                    let (h, w, cin) = arch.shapes[*input].hwc();
+                    let cout = arch.spec.qlayers[*q].out_channels;
+                    let sh = (h, w, cin, cout, *k, *stride, *same);
+                    if !conv_shapes.contains(&sh) {
+                        conv_shapes.push(sh);
+                    }
+                }
+                Node::Dense { input, .. } => {
+                    let sh = (arch.shapes[*input].numel(), arch.shapes[vid].numel());
+                    if !dense_shapes.contains(&sh) {
+                        dense_shapes.push(sh);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    assert!(!conv_shapes.is_empty() && !dense_shapes.is_empty(), "zoo yielded no shapes");
+
+    let rows = 3usize; // odd row block: exercises the batch dimension too
+    for &(h, w, cin, cout, k, stride, same) in &conv_shapes {
+        let cv = Conv2d::new(h, w, cin, cout, k, stride, same);
+        let x = randq(rows * h * w * cin, 0, 255, &mut rng);
+        let kern = randq(k * k * cin * cout, -127, 127, &mut rng);
+        let kdim = gemm::conv_kdim(&cv);
+        let mut wpack = vec![0i16; igemm::packed_b_len(kdim, cout)];
+        igemm::ipack_b(kdim, cout, &kern, &mut wpack);
+        let mut ps = IPackScratch::default();
+        ps.ensure(0, igemm::packed_a_len(cv.oh * cv.ow, kdim), 0);
+        let out_len = rows * cv.oh * cv.ow * cout;
+        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        let mut want = vec![0i32; out_len];
+        igemm::iconv_forward(&cv, rows, &x, &wpack, &mut want, &mut ps);
+        for kk in &simd {
+            set_kernel(*kk).expect("listed kernel is available");
+            let mut got = vec![0i32; out_len];
+            igemm::iconv_forward(&cv, rows, &x, &wpack, &mut got, &mut ps);
+            assert_eq!(
+                got,
+                want,
+                "{} != scalar on conv {h}x{w}x{cin}-{cout}k{k}s{stride}",
+                kk.name()
+            );
+        }
+    }
+    for &(cin, cout) in &dense_shapes {
+        let a = randq(rows * cin, 0, 255, &mut rng);
+        let kern = randq(cin * cout, -127, 127, &mut rng);
+        let mut wpack = vec![0i16; igemm::packed_b_len(cin, cout)];
+        igemm::ipack_b(cin, cout, &kern, &mut wpack);
+        let mut ps = IPackScratch::default();
+        ps.ensure(0, igemm::packed_a_len(rows, cin), 0);
+        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        let mut want = vec![0i32; rows * cout];
+        igemm::idense_forward(rows, cin, cout, &a, &wpack, &mut want, &mut ps);
+        for kk in &simd {
+            set_kernel(*kk).expect("listed kernel is available");
+            let mut got = vec![0i32; rows * cout];
+            igemm::idense_forward(rows, cin, cout, &a, &wpack, &mut got, &mut ps);
+            assert_eq!(got, want, "{} != scalar on dense {cin}-{cout}", kk.name());
+        }
+    }
+
+    // explicit MR/NR tile-tail matrix: every boundary alignment of the
+    // 6×16 tile (full, one-short, one-past, multiple panels) × odd and
+    // even k (the AVX2 kernel pairs k-steps; k = 1/odd hits its zero-
+    // padded tail every panel)
+    for &m in &[1usize, 5, 6, 7, 12, 13] {
+        for &n in &[1usize, 15, 16, 17, 32, 33] {
+            for &k in &[1usize, 2, 3, 9] {
+                let a = randq(m * k, 0, 255, &mut rng);
+                let b = randq(k * n, -127, 127, &mut rng);
+                set_kernel(KernelKind::Scalar).expect("scalar always available");
+                let want = igemm_packed(m, n, k, &a, &b);
+                assert_eq!(want, igemm_naive(m, n, k, &a, &b), "scalar oracle at ({m},{n},{k})");
+                for kk in &simd {
+                    set_kernel(*kk).expect("listed kernel is available");
+                    let got = igemm_packed(m, n, k, &a, &b);
+                    assert_eq!(got, want, "{} != scalar at ({m},{n},{k})", kk.name());
+                }
+            }
+        }
+    }
+    set_kernel(restore.kind).expect("restore previously selected kernel");
 }
