@@ -15,7 +15,13 @@
 //!   `DeployEngine::evaluate` in images/sec (the PR-5 serve-path
 //!   batching; argmax- and bit-parity-checked before timing — the
 //!   `deploy_tput_*` rows, tracked by the `scripts/bench_compare` gate
-//!   in quick mode like every other row here).
+//!   in quick mode like every other row here);
+//! * **static single-pass**: the same session exported dynamic (v1) and
+//!   calibrated static (v2) — `deploy_eval_static` vs
+//!   `deploy_eval_dynamic` ns/img with the zero-extra-pass structure
+//!   asserted via `PassCounts` before timing, plus a fused-tick serve
+//!   section (`serve_fused_*` req/s + p50/p99 rows, responses
+//!   bit-checked against the serial static oracle).
 //!
 //! Run via `cargo bench --bench bench_deploy`; pass `-- --quick` for the
 //! CI smoke mode (two archs, one batch). Emits `results/BENCH_deploy.json`
@@ -421,6 +427,176 @@ fn main() {
         assert_eq!(st.errored, 0, "{arch}: serve errors: {st:?}");
         assert_eq!(st.rejected, 0, "{arch}: closed-loop clients never overflow: {st:?}");
         assert_eq!(st.accepted, st.completed, "{arch}: dropped requests: {st:?}");
+    }
+
+    // --- static single-pass path vs dynamic (PR-8 calibration) ---
+    // Same trained session exported twice: once dynamic (v1 artifact),
+    // once calibrated static (v2 — frozen ranges + running-stats BN).
+    // Before timing: the static engine's pass structure is asserted
+    // (zero range scans, zero BN stat passes — the single-pass claim,
+    // checked structurally via PassCounts) and static-vs-dynamic argmax
+    // agreement is sanity-bounded (calibration drift; the pinned
+    // envelope lives in rust/tests/static_artifact.rs). The paired rows
+    // then show the static path strictly cheaper per image.
+    println!("\n# static single-pass vs dynamic ({tp_n} samples, {tp_threads} threads)");
+    for arch in &tp_archs {
+        let mut session = ModelSession::load(&mt, arch, 7).expect("load arch");
+        session.enable_bn_tracking();
+        let fb = BitAssignment::raw(vec![32; session.num_qlayers()]);
+        let tbatch = session.dataset().train_batch;
+        for step in 0..if quick { 2 } else { 6 } {
+            let (x, y) = data.train_batch(400 + step, tbatch);
+            session.train_step(&x, &y, &fb, &fb, 0.05).expect("train step");
+        }
+        let layers = session.num_qlayers();
+        let cycle: Vec<u8> = (0..layers).map(|i| [8u8, 6, 4, 2][i % 4]).collect();
+        let wbits = BitAssignment::new(cycle).expect("cycle bits are valid");
+        let a8 = BitAssignment::uniform(layers, 8);
+        let dyn_model =
+            QuantizedModel::export(&session.arch, session.params(), &wbits, &a8).expect("export");
+        let mut cx: Vec<f32> = Vec::new();
+        for i in 0..4u64 {
+            cx.extend_from_slice(&data.train_batch(500 + i, tbatch).0);
+        }
+        let stat_model =
+            QuantizedModel::export_calibrated(&session, &mt, &wbits, &a8, &cx, tbatch)
+                .expect("calibrated export");
+        let eng_dyn = DeployEngine::from_backend(&dyn_model, &mt).expect("dynamic engine");
+        let eng_stat = DeployEngine::from_backend(&stat_model, &mt).expect("static engine");
+        assert!(eng_stat.is_static() && !eng_dyn.is_static(), "{arch}: path selection");
+        eng_stat.reset_pass_counts();
+        let ls = eng_stat.infer_logits(&txs[..b * img], b).expect("static logits");
+        let pc = eng_stat.pass_counts();
+        assert_eq!(pc.range_scans, 0, "{arch}: static path ran a range scan: {pc:?}");
+        assert_eq!(pc.stat_passes, 0, "{arch}: static path ran a BN stat pass: {pc:?}");
+        let ld = eng_dyn.infer_logits(&txs[..b * img], b).expect("dynamic logits");
+        let agree = argmax(&ls, classes)
+            .into_iter()
+            .zip(argmax(&ld, classes))
+            .filter(|(s, d)| s == d)
+            .count();
+        assert!(
+            agree * 2 >= b,
+            "{arch}: static vs dynamic argmax agreement collapsed ({agree}/{b})"
+        );
+        let t_dyn = bench(iters, budget_ms, || {
+            eng_dyn.evaluate(&txs, &tys).expect("dynamic eval");
+        });
+        let t_stat = bench(iters, budget_ms, || {
+            eng_stat.evaluate(&txs, &tys).expect("static eval");
+        });
+        let ns_dyn = t_dyn.mean_ns / tp_n as f64;
+        let ns_stat = t_stat.mean_ns / tp_n as f64;
+        println!(
+            "{arch:<16} mixed  | {ns_stat:>9.1} ns/img static | {ns_dyn:>9.1} ns/img dynamic ({:.2}x) | calibrated on {} images | argmax {agree}/{b}",
+            ns_dyn / ns_stat,
+            eng_stat.calibration_samples(),
+        );
+        report.add(&format!("deploy_eval_static/{arch}/mixed"), tp_threads, ns_stat);
+        report.add(&format!("deploy_eval_dynamic/{arch}/mixed"), tp_threads, ns_dyn);
+        // deterministic stamp (like the bytes_* rows): how many images
+        // calibrated the static artifact these rows ran
+        report.add(
+            &format!("deploy_calib_samples/{arch}/mixed"),
+            tp_threads,
+            eng_stat.calibration_samples() as f64,
+        );
+
+        // --- fused serve ticks on the static model ---
+        // Closed-loop clients against a 2-worker daemon serving the
+        // static artifact: coalesced tick groups run as ONE forward.
+        // Parity probes before timing (served bits == serial static
+        // oracle — fusion is bit-invisible), zero-drop audit after.
+        let oracle = DeployEngine::from_backend(&stat_model, &backend).expect("oracle engine");
+        let daemon = ServeDaemon::new(
+            ServeConfig { queue_cap: 128, max_batch: 8, workers: 2 },
+            Parallelism::new(tp_threads),
+        );
+        let handle = daemon.handle();
+        handle.deploy(arch, &eng_stat).expect("deploy static");
+        let mut parity: Vec<Result<Response, String>> = Vec::new();
+        let mut client_err: Option<String> = None;
+        std::thread::scope(|s| {
+            let server = s.spawn(|| daemon.run());
+            for i in 0..4usize {
+                let x = &txs[i * img..(i + 1) * img];
+                parity.push(
+                    handle
+                        .submit(arch, x.to_vec())
+                        .map_err(|e| e.to_string())
+                        .and_then(|t| t.wait().map_err(|e| e.to_string())),
+                );
+            }
+            for clients in [4usize, 8] {
+                if client_err.is_some() {
+                    break;
+                }
+                let t0 = std::time::Instant::now();
+                let mut lats: Vec<u64> = Vec::with_capacity(clients * sv_per);
+                let joins: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let h = handle.clone();
+                        let txs = &txs;
+                        s.spawn(move || -> Result<Vec<u64>, String> {
+                            let mut l = Vec::with_capacity(sv_per);
+                            for r in 0..sv_per {
+                                let i = (c * sv_per + r) % tp_n;
+                                let x = txs[i * img..(i + 1) * img].to_vec();
+                                let q0 = std::time::Instant::now();
+                                h.submit(arch, x)
+                                    .map_err(|e| e.to_string())?
+                                    .wait()
+                                    .map_err(|e| e.to_string())?;
+                                l.push(q0.elapsed().as_nanos() as u64);
+                            }
+                            Ok(l)
+                        })
+                    })
+                    .collect();
+                for j in joins {
+                    match j.join() {
+                        Ok(Ok(l)) => lats.extend(l),
+                        Ok(Err(e)) => client_err = Some(e),
+                        Err(_) => client_err = Some("client thread panicked".to_string()),
+                    }
+                }
+                if client_err.is_some() {
+                    break;
+                }
+                let total_ns = t0.elapsed().as_nanos() as f64;
+                lats.sort_unstable();
+                let n = lats.len();
+                let p50 = lats[n / 2] as f64;
+                let p99 = lats[((n * 99) / 100).min(n - 1)] as f64;
+                let rps = 1e9 * n as f64 / total_ns;
+                println!(
+                    "{arch:<16} c{clients:<2}    | {rps:>9.1} req/s fused-capable | p50 {:>8.1} µs | p99 {:>8.1} µs",
+                    p50 / 1e3,
+                    p99 / 1e3,
+                );
+                report.add(&format!("serve_fused_req/{arch}"), clients, total_ns / n as f64);
+                report.add(&format!("serve_fused_p50/{arch}"), clients, p50);
+                report.add(&format!("serve_fused_p99/{arch}"), clients, p99);
+            }
+            handle.shutdown();
+            server.join().expect("server thread");
+        });
+        assert!(client_err.is_none(), "{arch}: fused-serve client failed: {client_err:?}");
+        for (i, r) in parity.into_iter().enumerate() {
+            let r = r.expect("parity probe");
+            let want =
+                oracle.infer_logits(&txs[i * img..(i + 1) * img], 1).expect("oracle logits");
+            for (a, o) in r.logits.iter().zip(&want) {
+                assert_eq!(a.to_bits(), o.to_bits(), "{arch}: fused-serve logits vs oracle");
+            }
+        }
+        let st = handle.stats();
+        assert_eq!(st.errored, 0, "{arch}: fused-serve errors: {st:?}");
+        assert_eq!(st.accepted, st.completed, "{arch}: dropped requests: {st:?}");
+        println!(
+            "{arch:<16} ticks  | {} groups, {} fused into one forward",
+            st.ticks, st.fused
+        );
     }
 
     if !quick {

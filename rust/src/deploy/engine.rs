@@ -38,11 +38,34 @@
 //! intermediate value has no other consumer — the zoo's
 //! `conv → bn → relu` blocks become *one* node that goes straight from
 //! i32 accumulators to the normalized, activated f32 output without
-//! materializing the conv result. BN batch statistics are recomputed per
-//! batch (the zoo trains with batch-stat BN and keeps no running
-//! averages, so a static fold does not exist — DESIGN.md §10 discusses
-//! this); only the O(channels) affine is frozen. Dense nodes fuse a
-//! trailing ReLU the same way.
+//! materializing the conv result. Dense nodes fuse a trailing ReLU the
+//! same way.
+//!
+//! # Dynamic vs. static execution
+//!
+//! A classic (version-1) artifact runs the **dynamic** path: activation
+//! ranges are re-derived per batch (one scan over each GEMM input) and
+//! fused BN recomputes batch statistics (two reduction passes over the
+//! requantized accumulators) — three extra passes per layer beyond the
+//! GEMM + epilogue.
+//!
+//! A **calibrated static** artifact
+//! ([`QuantizedModel::export_calibrated`], DESIGN.md §12) carries
+//! frozen per-layer activation ranges and the trainer's running BN
+//! statistics, so at load the engine precomputes everything (the
+//! internal `FoldedLayer` table): the quantizer lattice `(levels, Δ_a,
+//! zp)` per layer, and BN folded to an exact per-channel affine `y·g +
+//! h` that merges into the requantization factors. The static forward
+//! is then quantize → integer GEMM → **one** `epilogue_map` pass over
+//! the i32 accumulators — no range scan, no stat passes — with all
+//! requant scales load-time constants. [`PassCounts`] exposes the pass
+//! structure so tests assert it instead of trusting this comment, and
+//! because the static path has *no cross-row reduction anywhere*, each
+//! sample's logits are exactly independent of batch composition — the
+//! property the serve daemon's tick fusion ([`super::serve`]) relies
+//! on. The observe mode in between (static BN fold + dynamic ranges,
+//! recording observed min/max) is what `export_calibrated` runs its
+//! calibration batches through.
 //!
 //! # Determinism and parallelism
 //!
@@ -83,6 +106,68 @@ const MIN_PARALLEL_WORK: usize = 16 * 1024;
 /// batches are grouped, so results are bit-identical at any width (the
 /// same contract as `ModelSession::evaluate`).
 const MAX_EVAL_PIPELINE: usize = 8;
+
+/// How the engine derives per-layer quantizer + BN state (see the
+/// module docs): `Dynamic` re-derives both per batch, `Observe` freezes
+/// BN from running stats while recording dynamic ranges (the
+/// calibration pass of [`QuantizedModel::export_calibrated`]), `Static`
+/// freezes everything at load.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Dynamic,
+    Observe,
+    Static,
+}
+
+/// Frozen activation-quantizer lattice of one layer (static mode):
+/// exactly the constants the dynamic path derives per batch, computed
+/// once at load from the calibrated range.
+#[derive(Clone, Copy)]
+struct QuantConsts {
+    levels: f32,
+    scale_a: f32,
+    zp: f32,
+}
+
+/// Per-layer constants of the observe/static paths, precomputed at
+/// load. Running-stats BN collapses to the exact per-channel affine
+/// `y·g + h` with `g = γ/√(var_r + ε)` and `h = β − μ_r·g`, which
+/// merges into the requantization epilogue: the per-channel factor
+/// becomes `Δ_a·Δ_w[c]·g[c]` and the additive term
+/// `bias[c]·g[c] + h[c]` — one map pass over the accumulators total.
+struct FoldedLayer {
+    /// `Δ_w[c]·g[c]` (`g ≡ 1` without BN). Observe mode multiplies the
+    /// batch's dynamic `Δ_a` in per forward.
+    wg: Vec<f32>,
+    /// `bias[c]·g[c] + h[c]` (`h ≡ 0` without BN).
+    hb: Vec<f32>,
+    /// Frozen quantizer constants — `Some` only in static mode.
+    quant: Option<QuantConsts>,
+    /// Fully folded requant factor `Δ_a·Δ_w[c]·g[c]` (static mode;
+    /// empty otherwise) — the "requant scales are load-time constants"
+    /// half of the static contract.
+    fc: Vec<f32>,
+}
+
+/// Structural pass counters over one engine's forwards: how many times
+/// each kind of extra pass ran over GEMM inputs / i32 accumulators.
+/// The static-path acceptance test asserts `range_scans == 0 &&
+/// stat_passes == 0` *structurally* instead of trusting the module
+/// docs. Counters live in the engine's own scratch — read them after
+/// driving [`DeployEngine::infer_logits`] directly (the pipelined
+/// [`DeployEngine::evaluate`] runs batches on forked engines whose
+/// scratches hold their own counts).
+#[derive(Default, Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PassCounts {
+    /// Dynamic activation-range scans over a GEMM node's input tensor.
+    pub range_scans: u64,
+    /// BN batch-statistic reduction passes over requantized i32
+    /// accumulators (two per fused-BN node on the dynamic path).
+    pub stat_passes: u64,
+    /// Requantization map passes over i32 accumulators (exactly one per
+    /// GEMM node on every path).
+    pub map_passes: u64,
+}
 
 /// Fused execution recipe of one integer conv/dense node.
 struct GemmPlan {
@@ -144,14 +229,19 @@ struct DeployScratch {
     bn_inv: Vec<f32>,
     /// Per-partition integer packing scratch.
     parts: Vec<IPackScratch>,
+    /// Running per-qlayer `(min, max)` of observe-mode forwards
+    /// (`(∞, −∞)` until the layer has seen a batch); unused elsewhere.
+    observed: Vec<(f32, f32)>,
+    /// Structural pass counters (see [`PassCounts`]).
+    passes: PassCounts,
 }
 
 impl DeployScratch {
-    /// An empty arena for an engine over `nodes` SSA values with a
-    /// `max_cout`-channel epilogue — the single constructor both the
-    /// load path and [`DeployEngine::fork`] use, so the two can never
-    /// drift on sizing.
-    fn new(nodes: usize, max_cout: usize) -> DeployScratch {
+    /// An empty arena for an engine over `nodes` SSA values, a
+    /// `max_cout`-channel epilogue and `layers` quantizable layers —
+    /// the single constructor both the load path and
+    /// [`DeployEngine::fork`] use, so the two can never drift on sizing.
+    fn new(nodes: usize, max_cout: usize, layers: usize) -> DeployScratch {
         DeployScratch {
             batch: 0,
             acts: vec![Vec::new(); nodes],
@@ -162,6 +252,8 @@ impl DeployScratch {
             bn_mean: vec![0.0; max_cout],
             bn_inv: vec![0.0; max_cout],
             parts: Vec::new(),
+            observed: vec![(f32::INFINITY, f32::NEG_INFINITY); layers],
+            passes: PassCounts::default(),
         }
     }
 }
@@ -317,6 +409,16 @@ struct EngineCore {
     /// Largest GEMM-node channel count (sizes the per-channel epilogue
     /// scratch of every engine over this core).
     max_cout: usize,
+    /// Dynamic / observe / static execution (module docs).
+    mode: Mode,
+    /// Per-qlayer folded constants (empty in dynamic mode).
+    folded: Vec<FoldedLayer>,
+    /// Frozen `(g, h)` affine per *unfused* BN node in observe/static
+    /// mode (`out = x·g + h`, indexed by SSA value id). The zoo always
+    /// fuses its BNs; this keeps generality for graphs that don't.
+    static_bn: Vec<Option<(Vec<f32>, Vec<f32>)>>,
+    /// Calibration-set size baked into a static artifact (0 otherwise).
+    calib_samples: u64,
 }
 
 /// Forward-only integer executor over one frozen [`QuantizedModel`]:
@@ -340,13 +442,49 @@ pub struct DeployEngine {
 
 impl DeployEngine {
     /// Build an engine over an explicit graph + dataset + pool handle.
+    /// A model carrying a calibration loads onto the static single-pass
+    /// path; one without runs dynamically.
     pub fn new(
         model: &QuantizedModel,
         arch: Arc<NativeArch>,
         dataset: DatasetSpec,
         par: Parallelism,
     ) -> Result<DeployEngine> {
+        Self::build(model, arch, dataset, par, None)
+    }
+
+    /// The calibration-pass engine of
+    /// [`QuantizedModel::export_calibrated`]: BN frozen from `bn_stats`
+    /// exactly as the static path will fold it, activation ranges still
+    /// dynamic *and recorded* ([`DeployEngine::observed_ranges`]) — so
+    /// the observed ranges calibrate the very activation distribution
+    /// static inference produces. Drive it through
+    /// [`DeployEngine::infer_logits`] (not the pipelined `evaluate`,
+    /// whose forks would scatter the observations).
+    pub(crate) fn observe(
+        model: &QuantizedModel,
+        bn_stats: &[(u32, Vec<f32>, Vec<f32>)],
+        arch: Arc<NativeArch>,
+        dataset: DatasetSpec,
+        par: Parallelism,
+    ) -> Result<DeployEngine> {
+        Self::build(model, arch, dataset, par, Some(bn_stats))
+    }
+
+    fn build(
+        model: &QuantizedModel,
+        arch: Arc<NativeArch>,
+        dataset: DatasetSpec,
+        par: Parallelism,
+        observe_stats: Option<&[(u32, Vec<f32>, Vec<f32>)]>,
+    ) -> Result<DeployEngine> {
         model.validate(&arch.spec)?;
+        let empty_stats: &[(u32, Vec<f32>, Vec<f32>)] = &[];
+        let (mode, bn_stats, ranges, calib_samples) = match (observe_stats, &model.calibration) {
+            (Some(s), _) => (Mode::Observe, s, None, 0),
+            (None, Some(c)) => (Mode::Static, c.bn_stats.as_slice(), Some(c.ranges.as_slice()), c.samples),
+            (None, None) => (Mode::Dynamic, empty_stats, None, 0),
+        };
         let n = arch.nodes.len();
         let mut conv_dims = vec![None; n];
         for (vid, node) in arch.nodes.iter().enumerate() {
@@ -506,7 +644,91 @@ impl DeployEngine {
                 max_cout = max_cout.max(arch.shapes[vid].channels());
             }
         }
-        let scratch = DeployScratch::new(n, max_cout);
+        // observe/static: fold running-stats BN into per-channel (g, h)
+        // affines and merge them with the dequant scales — the requant
+        // constants the single-pass epilogue reads (FoldedLayer docs).
+        // Static mode additionally freezes the quantizer lattice from
+        // the calibrated ranges; this is the one place in the deploy
+        // layer that turns a range into a scale/zero-point.
+        let stats_for = |idx: usize| -> Result<(&Vec<f32>, &Vec<f32>)> {
+            for (i, mean, var) in bn_stats {
+                if *i as usize == idx {
+                    return Ok((mean, var));
+                }
+            }
+            bail!(
+                "no running BN statistics for scale param {idx} ({}) — train with \
+                 ModelSession::enable_bn_tracking() and export via export_calibrated",
+                arch.spec.params[idx].name
+            )
+        };
+        // (g, h) of one BN node: g = γ/√(var_r + ε), h = β − μ_r·g, the
+        // exact affine batch-free form of running-stats BN (f64 inverse
+        // sqrt, matching the trainer's precision)
+        let gh_fold = |scale_idx: usize, bias_idx: usize| -> Result<(Vec<f32>, Vec<f32>)> {
+            let (mu, var) = stats_for(scale_idx)?;
+            let gamma = &fparams[scale_idx];
+            let beta = &fparams[bias_idx];
+            let mut g = vec![0.0f32; gamma.len()];
+            let mut h = vec![0.0f32; gamma.len()];
+            for c in 0..gamma.len() {
+                let inv = 1.0 / ((var[c] as f64) + ops::BN_EPS).sqrt();
+                g[c] = ((gamma[c] as f64) * inv) as f32;
+                h[c] = ((beta[c] as f64) - (mu[c] as f64) * inv * (gamma[c] as f64)) as f32;
+            }
+            Ok((g, h))
+        };
+        let mut folded: Vec<FoldedLayer> = Vec::new();
+        let mut static_bn: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; n];
+        if mode != Mode::Dynamic {
+            let nl = model.layers.len();
+            let mut by_q: Vec<Option<FoldedLayer>> = (0..nl).map(|_| None).collect();
+            for (vid, step) in plan.iter().enumerate() {
+                let Step::Gemm(g) = step else { continue };
+                let cout = arch.shapes[vid].channels();
+                let (gv, hv) = match g.bn {
+                    Some((si, bi)) => gh_fold(si, bi)?,
+                    None => (vec![1.0; cout], vec![0.0; cout]),
+                };
+                let dqw = &model.layers[g.q].scales;
+                let wg: Vec<f32> = (0..cout).map(|c| dqw[c] * gv[c]).collect();
+                let hb: Vec<f32> = match g.bias {
+                    Some(i) => {
+                        let b0 = &fparams[i];
+                        (0..cout).map(|c| b0[c] * gv[c] + hv[c]).collect()
+                    }
+                    None => hv,
+                };
+                let quant = ranges.map(|rg| {
+                    let (amin, amax) = rg[g.q];
+                    let ab = model.abits.bits[g.q];
+                    let levels = ((1u64 << ab) - 1) as f32;
+                    let scale_a = (amax - amin).max(1e-8) / levels;
+                    let zp = (-amin / scale_a).round_ties_even();
+                    QuantConsts { levels, scale_a, zp }
+                });
+                let fc = match &quant {
+                    Some(qc) => wg.iter().map(|&w| qc.scale_a * w).collect(),
+                    None => Vec::new(),
+                };
+                by_q[g.q] = Some(FoldedLayer { wg, hb, quant, fc });
+            }
+            folded = by_q
+                .into_iter()
+                .enumerate()
+                .map(|(q, f)| {
+                    f.ok_or_else(|| {
+                        anyhow::anyhow!("quantizable layer {q} has no conv/dense node in the graph")
+                    })
+                })
+                .collect::<Result<_>>()?;
+            for (vid, node) in arch.nodes.iter().enumerate() {
+                if let (Step::Direct, Node::Bn { scale, bias, .. }) = (&plan[vid], node) {
+                    static_bn[vid] = Some(gh_fold(*scale, *bias)?);
+                }
+            }
+        }
+        let scratch = DeployScratch::new(n, max_cout, model.layers.len());
         Ok(DeployEngine {
             core: Arc::new(EngineCore {
                 arch,
@@ -520,6 +742,10 @@ impl DeployEngine {
                 max_in,
                 max_out,
                 max_cout,
+                mode,
+                folded,
+                static_bn,
+                calib_samples,
             }),
             par,
             pipeline_eval: true,
@@ -575,6 +801,49 @@ impl DeployEngine {
             .filter(|s| matches!(s, Step::Gemm(g) if g.bn.is_some()))
             .count()
     }
+
+    /// Whether this engine runs the static single-pass path (loaded
+    /// from a calibrated artifact). Static engines produce per-sample
+    /// logits independent of batch composition, which is what lets the
+    /// serve daemon fuse a tick's requests into one forward.
+    pub fn is_static(&self) -> bool {
+        self.core.mode == Mode::Static
+    }
+
+    /// Calibration-set size (images) baked into a static artifact;
+    /// 0 on the dynamic path.
+    pub fn calibration_samples(&self) -> u64 {
+        self.core.calib_samples
+    }
+
+    /// Structural pass counters accumulated by this engine's own
+    /// forwards since the last [`DeployEngine::reset_pass_counts`]
+    /// (see [`PassCounts`] for what counts and the fork caveat).
+    pub fn pass_counts(&self) -> PassCounts {
+        self.scratch.borrow().passes
+    }
+
+    /// Zero the [`PassCounts`] of this engine's scratch.
+    pub fn reset_pass_counts(&self) {
+        self.scratch.borrow_mut().passes = PassCounts::default();
+    }
+
+    /// Observed per-qlayer activation ranges of an observe-mode engine
+    /// ([`DeployEngine::observe`]); fails if any layer has not seen a
+    /// calibration batch yet.
+    pub(crate) fn observed_ranges(&self) -> Result<Vec<(f32, f32)>> {
+        let scr = self.scratch.borrow();
+        scr.observed
+            .iter()
+            .enumerate()
+            .map(|(q, &(lo, hi))| {
+                if !lo.is_finite() || !hi.is_finite() || lo > hi {
+                    bail!("layer {q} observed no activations — run at least one calibration batch");
+                }
+                Ok((lo, hi))
+            })
+            .collect()
+    }
 }
 
 /// Shared, immutable view of one loaded model: the frozen
@@ -599,7 +868,11 @@ impl CoreHandle {
             core: self.core.clone(),
             par: self.par.clone(),
             pipeline_eval: false,
-            scratch: RefCell::new(DeployScratch::new(self.core.arch.nodes.len(), self.core.max_cout)),
+            scratch: RefCell::new(DeployScratch::new(
+                self.core.arch.nodes.len(),
+                self.core.max_cout,
+                self.core.panels.len(),
+            )),
             eval_forks: RefCell::new(Vec::new()),
         }
     }
@@ -622,6 +895,13 @@ impl CoreHandle {
 
     pub fn arch_name(&self) -> &str {
         &self.core.arch.spec.name
+    }
+
+    /// [`DeployEngine::is_static`] without minting an engine — the
+    /// serve workers consult this per tick to decide whether a model's
+    /// coalesced requests may fuse into one forward.
+    pub fn is_static(&self) -> bool {
+        self.core.mode == Mode::Static
     }
 }
 
@@ -671,8 +951,12 @@ impl EngineCore {
         scr.batch = batch;
     }
 
-    /// One integer conv/dense node: dynamic act-quant → integer GEMM →
-    /// fused requantize(+BN)(+ReLU) epilogue, fanned over `par`.
+    /// One integer conv/dense node: act-quant → integer GEMM → fused
+    /// requantize(+BN)(+ReLU) epilogue, fanned over `par`. The dynamic
+    /// path derives the quantizer range per batch and BN from batch
+    /// stats; observe/static read the load-time `FoldedLayer` constants
+    /// instead (static also skips the range scan — the whole epilogue
+    /// is then the one `epilogue_map` at the end).
     fn run_gemm(&self, par: &Parallelism, scr: &mut DeployScratch, vid: usize, g: &GemmPlan, batch: usize) {
         let shapes = &self.arch.shapes;
         let node = &self.arch.nodes[vid];
@@ -685,18 +969,35 @@ impl EngineCore {
         let cout = shapes[vid].channels();
         let rows_total = batch * out_st / cout;
         let chunks = partition_rows(batch);
-        let DeployScratch { acts, qcode, acc, fc, yb, bn_mean, bn_inv, parts, .. } = scr;
+        let DeployScratch { acts, qcode, acc, fc, yb, bn_mean, bn_inv, parts, observed, passes, .. } =
+            scr;
 
-        // 1. per-tensor dynamic range (min/max is exact, so one serial
-        //    pass equals the trainer's partitioned reduction)
+        // 1. per-tensor activation range: frozen on the static path,
+        //    derived per batch otherwise (min/max is exact, so one
+        //    serial pass equals the trainer's partitioned reduction)
         let ab = self.abits[g.q];
-        let levels = ((1u64 << ab) - 1) as f32;
-        let (amin, amax) = {
-            let xin: &[f32] = &acts[input][..batch * in_st];
-            act_minmax(xin)
+        let fold = match self.mode {
+            Mode::Dynamic => None,
+            Mode::Observe | Mode::Static => Some(&self.folded[g.q]),
         };
-        let scale_a = (amax - amin).max(1e-8) / levels;
-        let zp = (-amin / scale_a).round_ties_even();
+        let (levels, scale_a, zp) = if let Some(qc) = fold.and_then(|f| f.quant.as_ref()) {
+            (qc.levels, qc.scale_a, qc.zp)
+        } else {
+            let levels = ((1u64 << ab) - 1) as f32;
+            let (amin, amax) = {
+                let xin: &[f32] = &acts[input][..batch * in_st];
+                act_minmax(xin)
+            };
+            passes.range_scans += 1;
+            if self.mode == Mode::Observe {
+                let o = &mut observed[g.q];
+                o.0 = o.0.min(amin);
+                o.1 = o.1.max(amax);
+            }
+            let scale_a = (amax - amin).max(1e-8) / levels;
+            let zp = (-amin / scale_a).round_ties_even();
+            (levels, scale_a, zp)
+        };
 
         // 2. quantize the input rows to *uncentered* codes (disjoint
         //    rows) — the zero point is corrected in the epilogue, which
@@ -775,15 +1076,28 @@ impl EngineCore {
         let zp64 = zp as f64;
         let wsum: &[i32] = &self.panels[g.q].wsum;
         debug_assert_eq!(wsum.len(), m_pos * cout);
-        for (o, &s) in fc[..cout].iter_mut().zip(&self.panels[g.q].scales) {
-            *o = scale_a * s;
-        }
-        match g.bias {
-            Some(i) => yb[..cout].copy_from_slice(&self.fparams[i]),
-            None => yb[..cout].fill(0.0),
-        }
-        let fc_ref: &[f32] = &fc[..cout];
-        let yb_ref: &[f32] = &yb[..cout];
+        let (fc_ref, yb_ref): (&[f32], &[f32]) = match fold {
+            // static: requant scale and folded bias are load-time constants
+            Some(f) if f.quant.is_some() => (f.fc.as_slice(), f.hb.as_slice()),
+            // observe: BN is folded, but the activation scale is still
+            // the batch-derived one, so fc is rebuilt per batch
+            Some(f) => {
+                for (o, &w) in fc[..cout].iter_mut().zip(&f.wg) {
+                    *o = scale_a * w;
+                }
+                (&fc[..cout], f.hb.as_slice())
+            }
+            None => {
+                for (o, &s) in fc[..cout].iter_mut().zip(&self.panels[g.q].scales) {
+                    *o = scale_a * s;
+                }
+                match g.bias {
+                    Some(i) => yb[..cout].copy_from_slice(&self.fparams[i]),
+                    None => yb[..cout].fill(0.0),
+                }
+                (&fc[..cout], &yb[..cout])
+            }
+        };
         let relu = g.relu;
         let requant = move |ri: usize, a: i32, c: usize| -> f32 {
             let ws = wsum[(ri % m_pos) * cout + c];
@@ -795,7 +1109,20 @@ impl EngineCore {
         let acc_ref: &[i32] = &acc[..rows_total * cout];
         let out = &mut acts[g.out_vid][..rows_total * cout];
         match g.bn {
+            // with a fold present BN lives inside fc/yb, so the whole
+            // epilogue is this single pass over the i32 accumulators
+            _ if fold.is_some() => {
+                passes.map_passes += 1;
+                epilogue_map(par, par_ok, &row_chunks, acc_ref, out, cout, requant, |_, v| {
+                    if relu {
+                        v.max(0.0)
+                    } else {
+                        v
+                    }
+                });
+            }
             None => {
+                passes.map_passes += 1;
                 epilogue_map(par, par_ok, &row_chunks, acc_ref, out, cout, requant, |_, v| {
                     if relu {
                         v.max(0.0)
@@ -808,6 +1135,8 @@ impl EngineCore {
                 // batch statistics over the requantized values, two-stage
                 // like the trainer's BN (f64 partials merged in partition
                 // order)
+                passes.stat_passes += 2;
+                passes.map_passes += 1;
                 let m = rows_total as f64;
                 let mut mu = epilogue_sums(par, par_ok, &row_chunks, acc_ref, cout, requant, |_, y| y);
                 for v in mu.iter_mut() {
@@ -854,18 +1183,29 @@ impl EngineCore {
                 let c = shapes[vid].channels();
                 let rows_total = batch * shapes[vid].numel() / c;
                 let (xin, out) = io(acts, *input, vid, rows_total * c);
-                let mut mean = vec![0.0f32; c];
-                let mut inv = vec![0.0f32; c];
-                ops::bn_forward(
-                    rows_total,
-                    c,
-                    xin,
-                    &self.fparams[*scale],
-                    &self.fparams[*bias],
-                    out,
-                    &mut mean,
-                    &mut inv,
-                );
+                if let Some((g, h)) = &self.static_bn[vid] {
+                    // calibrated: affine with frozen running stats, no
+                    // batch statistics pass
+                    for pos in 0..rows_total {
+                        for ch in 0..c {
+                            out[pos * c + ch] = xin[pos * c + ch] * g[ch] + h[ch];
+                        }
+                    }
+                } else {
+                    scr.passes.stat_passes += 2;
+                    let mut mean = vec![0.0f32; c];
+                    let mut inv = vec![0.0f32; c];
+                    ops::bn_forward(
+                        rows_total,
+                        c,
+                        xin,
+                        &self.fparams[*scale],
+                        &self.fparams[*bias],
+                        out,
+                        &mut mean,
+                        &mut inv,
+                    );
+                }
             }
             Node::Relu { input } => {
                 let n = batch * shapes[vid].numel();

@@ -15,6 +15,23 @@
 //! F × param:  u32 manifest param index | u64 len | len × f32
 //! ```
 //!
+//! Version 2 (a *calibrated static* artifact,
+//! [`QuantizedModel::export_calibrated`]) appends one section after the
+//! version-1 payload:
+//!
+//! ```text
+//! u32 R (== L) | R × (f32 range_min, f32 range_max)
+//! u32 B | B × (u32 bn_scale_param_idx | u64 len | len × f32 mean
+//!              | len × f32 var)
+//! u64 calibration_samples
+//! ```
+//!
+//! The version byte is 2 *only* when the calibration section is present:
+//! an uncalibrated model serializes byte-identically to every version-1
+//! artifact ever written, and version-1 artifacts keep loading (with
+//! `calibration: None` — the engine then runs its dynamic path). No
+//! format break in either direction.
+//!
 //! The writer emits fields in one fixed order and the bit-packed
 //! payloads forbid dirty trailing bits, so serialize → deserialize →
 //! serialize is byte-identical — the round-trip invariant the deploy
@@ -23,7 +40,7 @@
 //! truncated artifact fails loudly.
 
 use super::bitpack::{packed_byte_len, BitPacked};
-use super::model::{PackedLayer, QuantizedModel};
+use super::model::{Calibration, PackedLayer, QuantizedModel};
 use crate::manifest::ArchSpec;
 use crate::quant::BitAssignment;
 use anyhow::{bail, Context, Result};
@@ -31,13 +48,18 @@ use std::io::Read;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"SQDM";
-const VERSION: u16 = 1;
+/// Classic dynamic artifact.
+const VERSION_DYNAMIC: u16 = 1;
+/// Dynamic payload + trailing calibration section.
+const VERSION_CALIBRATED: u16 = 2;
 
-/// Serialize to the version-1 byte layout.
+/// Serialize to the versioned byte layout (version 1, or version 2 when
+/// the model carries a calibration).
 pub fn serialize(m: &QuantizedModel) -> Vec<u8> {
+    let version = if m.calibration.is_some() { VERSION_CALIBRATED } else { VERSION_DYNAMIC };
     let mut out = Vec::new();
     out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     let name = m.arch_name.as_bytes();
     out.extend_from_slice(&(name.len() as u16).to_le_bytes());
     out.extend_from_slice(name);
@@ -60,6 +82,25 @@ pub fn serialize(m: &QuantizedModel) -> Vec<u8> {
         for &x in v {
             out.extend_from_slice(&x.to_le_bytes());
         }
+    }
+    if let Some(cal) = &m.calibration {
+        out.extend_from_slice(&(cal.ranges.len() as u32).to_le_bytes());
+        for &(lo, hi) in &cal.ranges {
+            out.extend_from_slice(&lo.to_le_bytes());
+            out.extend_from_slice(&hi.to_le_bytes());
+        }
+        out.extend_from_slice(&(cal.bn_stats.len() as u32).to_le_bytes());
+        for (idx, mean, var) in &cal.bn_stats {
+            out.extend_from_slice(&idx.to_le_bytes());
+            out.extend_from_slice(&(mean.len() as u64).to_le_bytes());
+            for &x in mean {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            for &x in var {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&cal.samples.to_le_bytes());
     }
     out
 }
@@ -100,8 +141,10 @@ pub fn deserialize(bytes: &[u8], arch: &ArchSpec) -> Result<QuantizedModel> {
         bail!("bad magic (not a SigmaQuant deployment artifact)");
     }
     let version = r.u16()?;
-    if version != VERSION {
-        bail!("artifact version {version}, this build reads {VERSION}");
+    if !(VERSION_DYNAMIC..=VERSION_CALIBRATED).contains(&version) {
+        bail!(
+            "artifact version {version}, this build reads {VERSION_DYNAMIC}..={VERSION_CALIBRATED}"
+        );
     }
     let name_len = r.u16()? as usize;
     let name = std::str::from_utf8(r.take(name_len)?)
@@ -159,10 +202,43 @@ pub fn deserialize(bytes: &[u8], arch: &ArchSpec) -> Result<QuantizedModel> {
         }
         float_params.push((idx, r.f32s(len)?));
     }
+    let calibration = if version >= VERSION_CALIBRATED {
+        let nr = r.u32()? as usize;
+        if nr != l {
+            bail!("calibration section has {nr} ranges vs {l} layers");
+        }
+        let mut ranges = Vec::with_capacity(nr);
+        for _ in 0..nr {
+            let raw = r.f32s(2)?;
+            ranges.push((raw[0], raw[1]));
+        }
+        let nb = r.u32()? as usize;
+        let mut bn_stats = Vec::with_capacity(nb);
+        for _ in 0..nb {
+            let idx = r.u32()?;
+            let len = r.u64()? as usize;
+            // same rule as the float params: manifest-validate before
+            // length math on attacker-controlled sizes
+            let spec = arch
+                .params
+                .get(idx as usize)
+                .ok_or_else(|| anyhow::anyhow!("calibration BN index {idx} out of range"))?;
+            if len != spec.size {
+                bail!("calibration BN stats at {idx}: {len} elems vs manifest {}", spec.size);
+            }
+            let mean = r.f32s(len)?;
+            let var = r.f32s(len)?;
+            bn_stats.push((idx, mean, var));
+        }
+        let samples = r.u64()?;
+        Some(Calibration { ranges, bn_stats, samples })
+    } else {
+        None
+    };
     if !r.buf.is_empty() {
         bail!("{} trailing bytes after the artifact payload", r.buf.len());
     }
-    let m = QuantizedModel { arch_name: name, wbits, abits, layers, float_params };
+    let m = QuantizedModel { arch_name: name, wbits, abits, layers, float_params, calibration };
     m.validate(arch)?;
     Ok(m)
 }
@@ -177,8 +253,10 @@ pub fn peek_arch_name(bytes: &[u8]) -> Result<String> {
         bail!("bad magic (not a SigmaQuant deployment artifact)");
     }
     let version = r.u16()?;
-    if version != VERSION {
-        bail!("artifact version {version}, this build reads {VERSION}");
+    if !(VERSION_DYNAMIC..=VERSION_CALIBRATED).contains(&version) {
+        bail!(
+            "artifact version {version}, this build reads {VERSION_DYNAMIC}..={VERSION_CALIBRATED}"
+        );
     }
     let name_len = r.u16()? as usize;
     Ok(std::str::from_utf8(r.take(name_len)?)

@@ -23,17 +23,19 @@
 //!   forward drivers, zero local packer/micro-kernel copies (CI greps
 //!   this invariant), so the deployed layout can never drift from the
 //!   one the QAT search simulated.
-//! * [`engine`] — the interpreter: dynamic per-tensor activation
-//!   quantization, partition-parallel integer GEMMs, fused epilogues;
-//!   bit-identical at every thread count, with multi-batch serving
-//!   pipelined over cached forked engines (bit-identical to the serial
-//!   loop).
+//! * [`engine`] — the interpreter: per-tensor activation quantization
+//!   (ranges dynamic per batch, or frozen from calibration for static
+//!   single-pass execution — DESIGN.md §12), partition-parallel integer
+//!   GEMMs, fused epilogues; bit-identical at every thread count, with
+//!   multi-batch serving pipelined over cached forked engines
+//!   (bit-identical to the serial loop).
 //! * [`serve`] — the long-running serving daemon (DESIGN.md §11):
 //!   bounded-queue submit/poll API with explicit back-pressure, a
-//!   multi-model registry routed by id, per-tick request coalescing,
-//!   and atomic hot-swap of a live model via `Arc` core replacement —
-//!   responses stay bit-identical to the serial engine and every
-//!   accepted request completes ([`serve::ServeStats`]).
+//!   multi-model registry routed by id, per-tick request coalescing
+//!   (fused into one forward batch for static models), and atomic
+//!   hot-swap of a live model via `Arc` core replacement — responses
+//!   stay bit-identical to the serial engine and every accepted request
+//!   completes ([`serve::ServeStats`]).
 //!
 //! The `deploy` and `serve` CLI subcommands and
 //! `benches/bench_deploy.rs` close the loop by running packed models on
@@ -53,9 +55,9 @@ pub mod model;
 pub mod serve;
 
 pub use bitpack::BitPacked;
-pub use engine::{argmax, CoreHandle, DeployEngine};
+pub use engine::{argmax, CoreHandle, DeployEngine, PassCounts};
 pub use format::{load_model, read_arch_name, save_model};
-pub use model::{PackedLayer, QuantizedModel};
+pub use model::{Calibration, PackedLayer, QuantizedModel};
 pub use serve::{
     Response, ServeConfig, ServeDaemon, ServeError, ServeHandle, ServeStats, SubmitError, Ticket,
 };

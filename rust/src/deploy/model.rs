@@ -22,8 +22,11 @@
 //! every zoo architecture.
 
 use super::bitpack::BitPacked;
-use crate::manifest::ArchSpec;
+use super::engine::DeployEngine;
+use crate::manifest::{ArchSpec, ParamKind};
 use crate::quant::{quantize_to_int, BitAssignment};
+use crate::runtime::backend::{Backend, ModelExecutor};
+use crate::runtime::{ModelSession, NativeBackend};
 use anyhow::{bail, Result};
 
 /// One quantizable layer frozen to integer codes.
@@ -54,6 +57,29 @@ impl PackedLayer {
     }
 }
 
+/// Frozen inference-time statistics of a *static* artifact
+/// ([`QuantizedModel::export_calibrated`], DESIGN.md §12): per-layer
+/// activation ranges observed on a calibration set, plus the trainer's
+/// running BN statistics. With both present the deploy engine derives
+/// every requantization scale at load and runs one pass over each
+/// layer's i32 accumulators — no range scan, no BN stat pass, and logits
+/// that no longer depend on batch composition (what unlocks serve-tick
+/// batch fusion, `super::serve`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// Per quantizable layer, the `(min, max)` of the layer's input
+    /// activation observed while running the calibration set. Stored
+    /// raw: the engine alone turns a range into a scale/zero-point
+    /// (`deploy/engine.rs` — the CI grep guard keeps it that way).
+    pub ranges: Vec<(f32, f32)>,
+    /// Running BN statistics per BN node as `(scale param manifest
+    /// index, mean, biased variance)` — keyed by the parameter index,
+    /// which is stable across graph renumbering.
+    pub bn_stats: Vec<(u32, Vec<f32>, Vec<f32>)>,
+    /// Number of calibration images the ranges were observed on.
+    pub samples: u64,
+}
+
 /// A frozen, deployable model: packed integer weights at the searched
 /// per-layer bitwidths plus the float "glue" parameters. Produced by
 /// [`QuantizedModel::export`], serialized by [`super::format`], executed
@@ -72,6 +98,12 @@ pub struct QuantizedModel {
     /// Non-quantized parameters as `(manifest param index, data)` pairs,
     /// ascending by index; kernels are omitted (they live in `layers`).
     pub float_params: Vec<(u32, Vec<f32>)>,
+    /// Frozen activation ranges + running BN stats of a *static*
+    /// artifact ([`QuantizedModel::export_calibrated`]); `None` for the
+    /// classic dynamic artifact. Serialized as the version-2 `.sqdm`
+    /// section — uncalibrated models keep the byte-identical version-1
+    /// layout.
+    pub calibration: Option<Calibration>,
 }
 
 impl QuantizedModel {
@@ -128,7 +160,66 @@ impl QuantizedModel {
             abits: abits.clone(),
             layers,
             float_params,
+            calibration: None,
         })
+    }
+
+    /// [`QuantizedModel::export`], then freeze the artifact *static*:
+    /// read the session's running BN statistics, run `calib_x` (flat
+    /// NHWC images, chunked into batches of `calib_batch`) through an
+    /// observation engine — frozen-BN fold, dynamic ranges — and record
+    /// each layer's observed input range into the artifact. The observe
+    /// pass sees exactly the activation distribution the static engine
+    /// will produce, so the frozen ranges calibrate the right tensors.
+    ///
+    /// BN-bearing architectures require
+    /// [`ModelSession::enable_bn_tracking`] *before* the training steps;
+    /// exporting without tracked statistics fails loudly rather than
+    /// folding the meaningless `(0, 1)` init.
+    pub fn export_calibrated<E: ModelExecutor>(
+        session: &ModelSession<E>,
+        backend: &NativeBackend,
+        wbits: &BitAssignment,
+        abits: &BitAssignment,
+        calib_x: &[f32],
+        calib_batch: usize,
+    ) -> Result<QuantizedModel> {
+        let mut m = Self::export(&session.arch, session.params(), wbits, abits)?;
+        let has_bn = session.arch.params.iter().any(|p| p.kind == ParamKind::BnScale);
+        let bn_stats = match session.bn_running_stats() {
+            Some(s) => s,
+            None if has_bn => bail!(
+                "static export of {:?} needs running BN statistics: call \
+                 ModelSession::enable_bn_tracking() before the training steps",
+                session.arch.name
+            ),
+            None => Vec::new(),
+        };
+        let img = backend.dataset().image_len();
+        if calib_batch == 0 {
+            bail!("calibration batch size must be positive");
+        }
+        if calib_x.is_empty() || calib_x.len() % img != 0 {
+            bail!(
+                "calibration set is {} floats, must be a positive multiple of image_len {img}",
+                calib_x.len()
+            );
+        }
+        let engine = DeployEngine::observe(
+            &m,
+            &bn_stats,
+            backend.arch_graph(&m.arch_name)?,
+            backend.dataset().clone(),
+            backend.parallelism(),
+        )?;
+        for chunk in calib_x.chunks(calib_batch * img) {
+            engine.infer_logits(chunk, chunk.len() / img)?;
+        }
+        let ranges = engine.observed_ranges()?;
+        let samples = (calib_x.len() / img) as u64;
+        m.calibration = Some(Calibration { ranges, bn_stats, samples });
+        m.validate(&session.arch)?;
+        Ok(m)
     }
 
     /// Exact packed weight payload in bytes (fractional when a layer's
@@ -187,6 +278,37 @@ impl QuantizedModel {
         for (i, v) in &self.float_params {
             if v.len() != arch.params[*i as usize].size {
                 bail!("float param {i}: {} elems vs manifest {}", v.len(), arch.params[*i as usize].size);
+            }
+        }
+        if let Some(cal) = &self.calibration {
+            if cal.ranges.len() != l {
+                bail!("calibration has {} ranges vs {l} quantizable layers", cal.ranges.len());
+            }
+            for (qi, &(lo, hi)) in cal.ranges.iter().enumerate() {
+                if !lo.is_finite() || !hi.is_finite() || lo > hi {
+                    bail!("layer {qi}: calibrated range [{lo}, {hi}] is not a finite interval");
+                }
+            }
+            for (idx, mean, var) in &cal.bn_stats {
+                let Some(p) = arch.params.get(*idx as usize) else {
+                    bail!("calibration BN stat index {idx} out of range");
+                };
+                if p.kind != ParamKind::BnScale {
+                    bail!("calibration BN stat index {idx} ({}) is not a BN scale", p.name);
+                }
+                if mean.len() != p.size || var.len() != p.size {
+                    bail!(
+                        "calibration BN stats at {idx}: {}/{} elems vs manifest {}",
+                        mean.len(),
+                        var.len(),
+                        p.size
+                    );
+                }
+                if mean.iter().any(|v| !v.is_finite())
+                    || var.iter().any(|v| !v.is_finite() || *v < 0.0)
+                {
+                    bail!("calibration BN stats at {idx} are not finite (or variance < 0)");
+                }
             }
         }
         Ok(())

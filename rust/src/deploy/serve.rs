@@ -20,16 +20,27 @@
 //!   never a re-pack — and coalesces up to `max_batch` queued requests
 //!   for the same model per tick (one lock round-trip and one registry
 //!   resolution for the group, warm panels across its requests).
-//! * **Bit-identical responses.** Each request executes as its *own*
-//!   forward batch. Dynamic per-tensor activation quantization and
-//!   batch-stat BN make logits a function of batch composition, so
-//!   fusing concurrent requests into one forward would change bits
-//!   with arrival timing; per-request execution on an engine that is
-//!   itself bit-identical at every thread count (DESIGN.md §8) makes
-//!   every response equal to a serial [`DeployEngine::evaluate`] /
-//!   `infer_logits` oracle on the same image bytes, regardless of
-//!   worker count or interleaving. `rust/tests/serve_loop.rs` pins
-//!   this at server threads 1/2/4.
+//! * **Bit-identical responses.** For a *dynamic* model each request
+//!   executes as its *own* forward batch: dynamic per-tensor activation
+//!   quantization and batch-stat BN make logits a function of batch
+//!   composition, so fusing concurrent requests into one forward would
+//!   change bits with arrival timing. Per-request execution on an
+//!   engine that is itself bit-identical at every thread count
+//!   (DESIGN.md §8) makes every response equal to a serial
+//!   [`DeployEngine::evaluate`] / `infer_logits` oracle on the same
+//!   image bytes, regardless of worker count or interleaving.
+//!   `rust/tests/serve_loop.rs` pins this at server threads 1/2/4.
+//! * **Tick fusion for static models.** A calibrated static artifact
+//!   ([`CoreHandle::is_static`], DESIGN.md §12) has *no cross-row
+//!   reduction anywhere* — ranges and BN are load-time constants — so
+//!   each sample's logits are exactly independent of batch composition.
+//!   For those models a worker concatenates its coalesced tick group
+//!   into **one** forward batch (one quantize/GEMM/epilogue sweep with
+//!   warm panels instead of one per request) and splits the logits back
+//!   per ticket; responses stay bit-identical to the per-request path,
+//!   which `rust/tests/static_artifact.rs` pins against a serial
+//!   oracle. [`ServeStats::fused`] counts fused ticks; dynamic models
+//!   keep the per-request path and `fused` stays 0.
 //! * **Hot-swap.** [`ServeHandle::deploy`] on a live id atomically
 //!   replaces the registry entry (an `Arc` swap) and bumps its
 //!   version. Workers resolve the entry *after* popping a group, so
@@ -196,6 +207,9 @@ pub struct ServeStats {
     pub swaps: u64,
     /// Worker ticks (coalesced groups processed).
     pub ticks: u64,
+    /// Ticks whose group ran as one fused forward batch (static models
+    /// with ≥ 2 coalesced requests; always 0 for dynamic models).
+    pub fused: u64,
     /// Deepest the bounded queue has been.
     pub queue_high_watermark: u64,
 }
@@ -221,6 +235,7 @@ struct Shared {
     errored: AtomicU64,
     swaps: AtomicU64,
     ticks: AtomicU64,
+    fused: AtomicU64,
     depth_hwm: AtomicU64,
 }
 
@@ -344,6 +359,7 @@ impl ServeHandle {
             errored: self.shared.errored.load(Ordering::SeqCst),
             swaps: self.shared.swaps.load(Ordering::SeqCst),
             ticks: self.shared.ticks.load(Ordering::SeqCst),
+            fused: self.shared.fused.load(Ordering::SeqCst),
             queue_high_watermark: self.shared.depth_hwm.load(Ordering::SeqCst),
         }
     }
@@ -382,6 +398,7 @@ impl ServeDaemon {
                 errored: AtomicU64::new(0),
                 swaps: AtomicU64::new(0),
                 ticks: AtomicU64::new(0),
+                fused: AtomicU64::new(0),
                 depth_hwm: AtomicU64::new(0),
             }),
             par,
@@ -409,10 +426,11 @@ impl ServeDaemon {
 
 /// One worker service: pop a request, coalesce same-model neighbors up
 /// to `max_batch`, resolve the model entry (post-pop, so swaps take
-/// effect here), run every request of the group as its own forward
-/// batch on a cached serial fork of the entry's core, fulfill the
-/// tickets. Exits when shutdown is signalled *and* the queue is empty —
-/// the drain that makes accepted = completed + errored.
+/// effect here), run the group on a cached serial fork of the entry's
+/// core — as ONE fused forward batch when the model is static, as one
+/// forward per request otherwise — and fulfill the tickets. Exits when
+/// shutdown is signalled *and* the queue is empty — the drain that
+/// makes accepted = completed + errored.
 fn worker_loop(shared: &Shared) {
     // engine cache: id → (registry version it was forked from, engine).
     // Re-forked when the version moves; dropping the old engine drops
@@ -475,11 +493,46 @@ fn worker_loop(shared: &Shared) {
             engines.insert(id.to_string(), (entry.version, entry.core.fork_serial()));
         }
         let engine = &engines.get(id).expect("cached or just forked").1;
+        if group.len() > 1 && entry.core.is_static() {
+            // static tick fusion: the static path has no cross-row
+            // reduction (ranges and BN are load-time constants), so one
+            // concatenated forward produces for each sample exactly the
+            // bits its own per-request forward would (module docs)
+            let images: usize = group.iter().map(|p| p.images).sum();
+            let mut x: Vec<f32> = Vec::with_capacity(images * entry.image_len);
+            for p in &group {
+                x.extend_from_slice(&p.x);
+            }
+            match engine.infer_logits(&x, images) {
+                Ok(all) => {
+                    shared.fused.fetch_add(1, Ordering::SeqCst);
+                    let mut off = 0usize;
+                    for p in &group {
+                        let n = p.images * entry.classes;
+                        let logits = all[off..off + n].to_vec();
+                        off += n;
+                        complete(
+                            shared,
+                            &p.ticket,
+                            Ok(Response { logits, images: p.images, version: entry.version }),
+                        );
+                    }
+                }
+                Err(e) => {
+                    // every ticket of the group must still complete
+                    let msg = e.to_string();
+                    for p in &group {
+                        complete(shared, &p.ticket, Err(ServeError::Engine(msg.clone())));
+                    }
+                }
+            }
+            continue;
+        }
         for p in &group {
             // one forward *per request*: dynamic activation ranges and
-            // batch-stat BN depend on batch composition, so this — not
-            // cross-request fusion — is what keeps every response
-            // bit-identical to the serial oracle (module docs)
+            // batch-stat BN depend on batch composition, so for dynamic
+            // models this — not cross-request fusion — is what keeps
+            // every response bit-identical to the serial oracle
             let res = match engine.infer_logits(&p.x, p.images) {
                 Ok(logits) => {
                     Ok(Response { logits, images: p.images, version: entry.version })

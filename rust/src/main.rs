@@ -41,12 +41,17 @@ COMMANDS
              --arch NAME  --bits N|a,b,... (default 8)  --abits N|a,b,...
              --search (run the two-phase search and deploy its result)
              --qat-steps N (fine-tune at the assignment first, default 16)
+             --calibrate N (freeze activation ranges + running-stats BN
+             from ~N calibration images into a static v2 artifact; the
+             engine then runs the single-pass path, default 0 = dynamic)
              --out FILE (default <results dir>/deploy/<arch>.sqdm)
   serve      start the bounded-queue multi-model serving daemon on packed
              artifacts and drive it with closed-loop synthetic clients;
              reports req/s, p50/p99 latency and the zero-drop audit
              --model ID=FILE[,ID=FILE...] (arch read from each artifact)
-             or --arch NAME (export on the fly; --bits/--abits/--qat-steps)
+             or --arch NAME (export on the fly; --bits/--abits/--qat-steps
+             and --calibrate N for a static artifact whose tick groups
+             fuse into one forward batch)
              --queue-cap N (default 64)  --max-batch N (default 8)
              --workers N (default 2)     --clients N (default 4)
              --requests N per client (default 64)
@@ -252,7 +257,13 @@ fn deploy(a: &Args, eval_n: usize, qat: usize) -> Result<()> {
     ctx.pretrain_steps = a.get_usize("pretrain-steps", 300);
     ctx.verbose = !a.flag("quiet");
     let arch = a.get_or("arch", "resnet18_mini");
+    let calibrate = a.get_usize("calibrate", 0);
     let (mut session, mut cursor) = ctx.pretrained_session(arch)?;
+    // running BN statistics accumulate over the QAT / search steps
+    // below, so tracking must be on before them
+    if calibrate > 0 {
+        session.enable_bn_tracking();
+    }
     let layers = session.num_qlayers();
 
     // the assignment: searched (--search) or given (--bits/--abits)
@@ -287,7 +298,23 @@ fn deploy(a: &Args, eval_n: usize, qat: usize) -> Result<()> {
     let ref_ns = t0.elapsed().as_nanos() as f64;
 
     // export → save → reload (round-trip checked) → engine
-    let model = QuantizedModel::export(&session.arch, session.params(), &wbits, &abits)?;
+    let model = if calibrate > 0 {
+        // calibration batches come from the training stream at the
+        // cursor (held-out w.r.t. the eval set), rounded up to whole
+        // train batches
+        let tb = backend.dataset().train_batch;
+        let mut cx: Vec<f32> = Vec::new();
+        let mut seen = 0usize;
+        while seen < calibrate {
+            let (x, _) = ctx.data.train_batch(cursor.next_batch, tb);
+            cursor.next_batch += 1;
+            cx.extend_from_slice(&x);
+            seen += tb;
+        }
+        QuantizedModel::export_calibrated(&session, &backend, &wbits, &abits, &cx, tb)?
+    } else {
+        QuantizedModel::export(&session.arch, session.params(), &wbits, &abits)?
+    };
     let measured = model.weight_bytes();
     let predicted = model_size_bytes(&session.arch, &wbits);
     if measured != predicted {
@@ -358,6 +385,14 @@ fn deploy(a: &Args, eval_n: usize, qat: usize) -> Result<()> {
         ppa.mean_cycles_per_mac, ppa.energy_vs_int8
     );
     println!("  fusion  : {} conv+BN epilogues folded", engine.fused_bn_count());
+    if engine.is_static() {
+        println!(
+            "  path    : static single-pass (calibrated on {} images; ranges + BN frozen)",
+            engine.calibration_samples()
+        );
+    } else {
+        println!("  path    : dynamic (per-batch ranges, batch-stat BN)");
+    }
     let sel = kernel::selected();
     println!("  kernel  : {} ({})", sel.kind.name(), sel.reason);
     println!("  artifact: {} (round-trip byte-identical)", out_path.display());
@@ -413,20 +448,42 @@ fn serve(a: &Args, qat: usize) -> Result<()> {
         ctx.pretrain_steps = a.get_usize("pretrain-steps", 300);
         ctx.verbose = !a.flag("quiet");
         let arch = a.get_or("arch", "alexnet_mini");
+        let calibrate = a.get_usize("calibrate", 0);
         let (mut session, mut cursor) = ctx.pretrained_session(arch)?;
+        if calibrate > 0 {
+            session.enable_bn_tracking();
+        }
         let layers = session.num_qlayers();
         let wbits = parse_bits(a.get_or("bits", "8"), layers)?;
         let abits = parse_bits(a.get_or("abits", "8"), layers)?;
         if qat > 0 {
             run_qat(&mut session, &ctx.data, &mut cursor, &wbits, &abits, 0.02, qat)?;
         }
-        let m = QuantizedModel::export(&session.arch, session.params(), &wbits, &abits)?;
+        let export = |session: &sigmaquant::runtime::ModelSession,
+                      cursor: &mut sigmaquant::coordinator::qat::TrainCursor|
+         -> Result<QuantizedModel> {
+            if calibrate > 0 {
+                let tb = backend.dataset().train_batch;
+                let mut cx: Vec<f32> = Vec::new();
+                let mut seen = 0usize;
+                while seen < calibrate {
+                    let (x, _) = ctx.data.train_batch(cursor.next_batch, tb);
+                    cursor.next_batch += 1;
+                    cx.extend_from_slice(&x);
+                    seen += tb;
+                }
+                QuantizedModel::export_calibrated(session, &backend, &wbits, &abits, &cx, tb)
+            } else {
+                QuantizedModel::export(&session.arch, session.params(), &wbits, &abits)
+            }
+        };
+        let m = export(&session, &mut cursor)?;
         engines.push((arch.to_string(), DeployEngine::from_backend(&m, &backend)?));
         if a.flag("swap") {
             // a re-trained v2 of the same model, exported BEFORE serving
             // starts — the mid-run swap itself is a registry operation
             run_qat(&mut session, &ctx.data, &mut cursor, &wbits, &abits, 0.02, 2)?;
-            let m2 = QuantizedModel::export(&session.arch, session.params(), &wbits, &abits)?;
+            let m2 = export(&session, &mut cursor)?;
             swap_engine = Some((arch.to_string(), DeployEngine::from_backend(&m2, &backend)?));
         }
     }
@@ -443,9 +500,10 @@ fn serve(a: &Args, qat: usize) -> Result<()> {
     for (id, engine) in &engines {
         let v = handle.deploy(id, engine)?;
         println!(
-            "registered {id:?} v{v} ({}, {} fused BN epilogues)",
+            "registered {id:?} v{v} ({}, {} fused BN epilogues, {} path)",
             engine.arch().name,
-            engine.fused_bn_count()
+            engine.fused_bn_count(),
+            if engine.is_static() { "static" } else { "dynamic" }
         );
     }
 
@@ -550,9 +608,10 @@ fn serve(a: &Args, qat: usize) -> Result<()> {
         cfg.queue_cap, st.queue_high_watermark, st.rejected
     );
     println!(
-        "  ticks   : {} coalesced groups ({:.2} requests/tick)",
+        "  ticks   : {} coalesced groups ({:.2} requests/tick, {} fused into one forward)",
         st.ticks,
-        st.completed as f64 / st.ticks.max(1) as f64
+        st.completed as f64 / st.ticks.max(1) as f64,
+        st.fused
     );
     for (id, v) in handle.models() {
         println!("  model   : {id:?} now v{v}");

@@ -118,6 +118,25 @@ pub trait ModelExecutor: Send {
     /// entry point, so parameter mutations routed through the session are
     /// always observed. Default: no-op.
     fn notify_params_changed(&self) {}
+
+    /// Opt this executor into momentum-tracked running BN statistics
+    /// (mean/variance EMAs updated on every training forward). Tracking is
+    /// off by default so normalization — which always uses batch stats —
+    /// and every bit-pinned trajectory stay byte-for-byte unchanged;
+    /// sessions enable it only when a calibrated static export is the
+    /// goal. Executors without BN support may ignore the call.
+    fn set_bn_tracking(&self, _on: bool) {}
+
+    /// Frozen running BN statistics accumulated while tracking was
+    /// enabled, keyed by the BN *scale* parameter's manifest index (stable
+    /// across graph renumbering): `(scale_param_idx, running_mean,
+    /// running_var)` per BN node, where `running_var` is the biased batch
+    /// variance EMA. `None` when tracking was never enabled or the
+    /// executor does not support it; an empty vec when tracking is on but
+    /// the architecture has no BN nodes.
+    fn bn_running_stats(&self) -> Option<Vec<(u32, Vec<f32>, Vec<f32>)>> {
+        None
+    }
 }
 
 impl<T: ModelExecutor + ?Sized> ModelExecutor for Box<T> {
@@ -157,6 +176,12 @@ impl<T: ModelExecutor + ?Sized> ModelExecutor for Box<T> {
     }
     fn notify_params_changed(&self) {
         (**self).notify_params_changed()
+    }
+    fn set_bn_tracking(&self, on: bool) {
+        (**self).set_bn_tracking(on)
+    }
+    fn bn_running_stats(&self) -> Option<Vec<(u32, Vec<f32>, Vec<f32>)>> {
+        (**self).bn_running_stats()
     }
 }
 

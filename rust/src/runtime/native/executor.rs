@@ -74,6 +74,12 @@ use std::sync::Arc;
 
 /// SGD momentum coefficient (mirrors `model.py::MOMENTUM`).
 const MOMENTUM: f32 = 0.9;
+/// Running-BN EMA coefficient (PyTorch convention:
+/// `running = (1-m)·running + m·batch`). Only consulted when a session
+/// opts into tracking via [`ModelExecutor::set_bn_tracking`]; the
+/// *normalization* always uses batch statistics, so enabling tracking
+/// never perturbs a training trajectory.
+const BN_MOMENTUM: f64 = 0.1;
 /// Global-norm gradient clip (mirrors `model.py::GRAD_CLIP`).
 const GRAD_CLIP: f64 = 1.0;
 /// Ops whose estimated work (≈ multiply-accumulates or touched
@@ -100,6 +106,17 @@ struct Scratch {
     /// Saved BN batch statistics per BN node (mean, 1/σ).
     bn_mean: Vec<Vec<f32>>,
     bn_inv: Vec<Vec<f32>>,
+    /// Momentum-tracked running BN statistics per BN node (mean, biased
+    /// variance), updated only on *training* forwards while `track_bn`
+    /// is set. Kept in f64 so long EMAs don't accumulate rounding.
+    run_mean: Vec<Vec<f64>>,
+    run_var: Vec<Vec<f64>>,
+    /// False until the first tracked training forward: that forward
+    /// *copies* the batch stats instead of EMA-ing away from the (0, 1)
+    /// init, which would dominate the estimate after few train steps.
+    bn_primed: bool,
+    /// Running-stats tracking opt-in ([`ModelExecutor::set_bn_tracking`]).
+    track_bn: bool,
     /// Parameter gradients (manifest order).
     pgrads: Vec<Vec<f32>>,
     /// Per-partition gradient shards: one `kernel+bias`-sized arena per
@@ -285,6 +302,26 @@ impl NativeExecutor {
                     _ => Vec::new(),
                 })
                 .collect(),
+            run_mean: arch
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(vid, node)| match node {
+                    Node::Bn { .. } => vec![0.0; arch.shapes[vid].channels()],
+                    _ => Vec::new(),
+                })
+                .collect(),
+            run_var: arch
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(vid, node)| match node {
+                    Node::Bn { .. } => vec![1.0; arch.shapes[vid].channels()],
+                    _ => Vec::new(),
+                })
+                .collect(),
+            bn_primed: false,
+            track_bn: false,
             pgrads: arch.spec.params.iter().map(|p| vec![0.0; p.size]).collect(),
             // shards + parts are grown to the batch's partition count by
             // ensure_batch on first use
@@ -352,6 +389,14 @@ impl NativeExecutor {
     /// Interpret the graph forward. Activations land in `scr.acts`;
     /// conv/dense quantized inputs/weights are retained for backward.
     /// Each op fans out over the fixed batch-row partition.
+    ///
+    /// `update_bn` marks a *training* forward: when the session has
+    /// opted into running-BN tracking, each BN node's batch mean /
+    /// biased variance are folded into the running EMAs. Evaluation
+    /// forwards always pass `false` so eval batches never leak into the
+    /// calibration statistics. Normalization itself uses batch stats
+    /// either way — tracked and untracked forwards are bit-identical.
+    #[allow(clippy::too_many_arguments)]
     fn forward(
         &self,
         scr: &mut Scratch,
@@ -360,12 +405,29 @@ impl NativeExecutor {
         batch: usize,
         wbits: &BitAssignment,
         abits: &BitAssignment,
+        update_bn: bool,
     ) {
         let shapes = &self.arch.shapes;
         let par = &self.par;
         let chunks = partition_rows(batch);
         let epoch = scr.wepoch;
-        let Scratch { acts, qact, qw, qscales, bn_mean, bn_inv, wpack, wtag, parts, .. } = scr;
+        let Scratch {
+            acts,
+            qact,
+            qw,
+            qscales,
+            bn_mean,
+            bn_inv,
+            run_mean,
+            run_var,
+            bn_primed,
+            track_bn,
+            wpack,
+            wtag,
+            parts,
+            ..
+        } = scr;
+        let track = update_bn && *track_bn;
         acts[0][..x.len()].copy_from_slice(x);
         for vid in 1..self.arch.nodes.len() {
             match &self.arch.nodes[vid] {
@@ -484,6 +546,19 @@ impl NativeExecutor {
                     for s in &vars {
                         for (acc, &v) in var.iter_mut().zip(s) {
                             *acc += v;
+                        }
+                    }
+                    if track {
+                        let (rm, rv) = (&mut run_mean[vid], &mut run_var[vid]);
+                        for ch in 0..c {
+                            let bv = var[ch] / m; // biased batch variance
+                            if *bn_primed {
+                                rm[ch] = (1.0 - BN_MOMENTUM) * rm[ch] + BN_MOMENTUM * mu[ch];
+                                rv[ch] = (1.0 - BN_MOMENTUM) * rv[ch] + BN_MOMENTUM * bv;
+                            } else {
+                                rm[ch] = mu[ch];
+                                rv[ch] = bv;
+                            }
                         }
                     }
                     let mean = &mut bn_mean[vid];
@@ -611,6 +686,11 @@ impl NativeExecutor {
                     out[..n].copy_from_slice(xin);
                 }
             }
+        }
+        if track {
+            // after the first tracked forward every BN node holds a real
+            // (copied) estimate; subsequent forwards EMA from there
+            *bn_primed = true;
         }
     }
 
@@ -989,7 +1069,7 @@ impl NativeExecutor {
         let mut guard = self.scratch.borrow_mut();
         let scr = &mut *guard;
         self.ensure_batch(scr, batch);
-        self.forward(scr, params, x, batch, wbits, abits);
+        self.forward(scr, params, x, batch, wbits, abits, false);
         Ok(scr.acts[self.arch.out_id][..batch * classes].to_vec())
     }
 
@@ -1079,7 +1159,7 @@ impl ModelExecutor for NativeExecutor {
         let scr = &mut *guard;
         self.ensure_batch(scr, batch);
 
-        self.forward(scr, params, x, batch, wbits, abits);
+        self.forward(scr, params, x, batch, wbits, abits, true);
 
         // zero gradient buffers, then seed d loss/d logits
         for (vid, shape) in self.arch.shapes.iter().enumerate() {
@@ -1134,7 +1214,7 @@ impl ModelExecutor for NativeExecutor {
         let mut guard = self.scratch.borrow_mut();
         let scr = &mut *guard;
         self.ensure_batch(scr, batch);
-        self.forward(scr, params, x, batch, wbits, abits);
+        self.forward(scr, params, x, batch, wbits, abits, false);
         let (loss, acc) = ops::softmax_ce(
             batch,
             classes,
@@ -1159,5 +1239,33 @@ impl ModelExecutor for NativeExecutor {
 
     fn notify_params_changed(&self) {
         self.scratch.borrow_mut().wepoch += 1;
+    }
+
+    fn set_bn_tracking(&self, on: bool) {
+        self.scratch.borrow_mut().track_bn = on;
+    }
+
+    fn bn_running_stats(&self) -> Option<Vec<(u32, Vec<f32>, Vec<f32>)>> {
+        let scr = self.scratch.borrow();
+        if !scr.track_bn {
+            return None;
+        }
+        let mut out = Vec::new();
+        for (vid, node) in self.arch.nodes.iter().enumerate() {
+            if let Node::Bn { scale, .. } = node {
+                if !scr.bn_primed {
+                    // tracking was enabled but no training forward ran:
+                    // the EMAs still hold their (0, 1) init, which is not
+                    // a calibration — report "no stats" instead
+                    return None;
+                }
+                out.push((
+                    *scale as u32,
+                    scr.run_mean[vid].iter().map(|&v| v as f32).collect(),
+                    scr.run_var[vid].iter().map(|&v| v as f32).collect(),
+                ));
+            }
+        }
+        Some(out)
     }
 }

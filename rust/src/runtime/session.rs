@@ -212,6 +212,24 @@ impl<E: ModelExecutor> ModelSession<E> {
             .collect()
     }
 
+    /// Opt this session's executor into momentum-tracked running BN
+    /// statistics ([`ModelExecutor::set_bn_tracking`]). Call *before*
+    /// the training steps whose batches should feed the estimates;
+    /// normalization keeps using batch stats, so enabling tracking never
+    /// changes a trajectory. Required before
+    /// [`crate::deploy::QuantizedModel::export_calibrated`] on
+    /// BN-bearing architectures.
+    pub fn enable_bn_tracking(&self) {
+        self.exec.set_bn_tracking(true);
+    }
+
+    /// Frozen running BN statistics `(scale_param_idx, mean, var)` per BN
+    /// node, or `None` when tracking was never enabled (or no tracked
+    /// training forward has run). See [`ModelExecutor::bn_running_stats`].
+    pub fn bn_running_stats(&self) -> Option<Vec<(u32, Vec<f32>, Vec<f32>)>> {
+        self.exec.bn_running_stats()
+    }
+
     /// One SGD-with-momentum QAT step on a batch.
     pub fn train_step(
         &mut self,

@@ -22,6 +22,14 @@
 //! 6. **serving** — the pipelined multi-batch `DeployEngine::evaluate`
 //!    (PR-5 serve-path batching) is bit-identical to the serial
 //!    per-batch loop at threads 1/2/4, including over its cached forks.
+//!
+//! With `SIGMAQUANT_STATIC_ARTIFACT=1` (the CI rerun), the bit-identity
+//! pins (4) and (6) run on a calibrated *static* artifact instead of a
+//! dynamic one — the single-pass engine must honor the same determinism
+//! contract. The fake-quant parity envelopes stay dynamic-only: a
+//! static artifact's running-stats BN legitimately drifts from the
+//! reference's batch stats (that drift has its own pinned envelope in
+//! `rust/tests/static_artifact.rs`).
 
 use sigmaquant::data::SynthDataset;
 use sigmaquant::deploy::{argmax, format, DeployEngine, QuantizedModel};
@@ -51,6 +59,40 @@ fn small_backend(threads: usize) -> NativeBackend {
 fn mixed_bits(layers: usize, salt: usize) -> BitAssignment {
     let bits: Vec<u8> = (0..layers).map(|i| [2u8, 4, 6, 8][(i * 3 + salt) % 4]).collect();
     BitAssignment::new(bits).expect("mixed bits are valid")
+}
+
+/// The CI rerun switch: `SIGMAQUANT_STATIC_ARTIFACT=1` swaps the
+/// bit-identity pins onto a calibrated static artifact.
+fn static_mode() -> bool {
+    std::env::var("SIGMAQUANT_STATIC_ARTIFACT").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Export for the determinism pins: dynamic by default; with
+/// [`static_mode`] on, a short deterministic train burst (BN tracking
+/// enabled) followed by `export_calibrated` on fixed batches — every
+/// thread count / kernel repeats the identical sequence, so the
+/// cross-run bit comparison is still exact.
+fn export_for_identity(
+    s: &mut ModelSession,
+    be: &NativeBackend,
+    data: &SynthDataset,
+    wbits: &BitAssignment,
+    abits: &BitAssignment,
+) -> QuantizedModel {
+    if !static_mode() {
+        return QuantizedModel::export(&s.arch, s.params(), wbits, abits).unwrap();
+    }
+    s.enable_bn_tracking();
+    let tb = s.dataset().train_batch;
+    for step in 0..2u64 {
+        let (x, y) = data.train_batch(step, tb);
+        s.train_step(&x, &y, wbits, abits, 0.02).unwrap();
+    }
+    let mut cx: Vec<f32> = Vec::new();
+    for i in 0..2u64 {
+        cx.extend_from_slice(&data.train_batch(10 + i, tb).0);
+    }
+    QuantizedModel::export_calibrated(s, be, wbits, abits, &cx, tb).unwrap()
 }
 
 #[test]
@@ -197,16 +239,12 @@ fn engine_is_bit_identical_across_thread_counts_and_kernels() {
         for threads in [1usize, 3] {
             let be =
                 NativeBackend::with_dataset_parallelism(ds.clone(), Parallelism::new(threads));
-            let s = ModelSession::load(&be, "resnet18_mini", 9).unwrap();
+            let mut s = ModelSession::load(&be, "resnet18_mini", 9).unwrap();
             let l = s.num_qlayers();
-            let m = QuantizedModel::export(
-                &s.arch,
-                s.params(),
-                &mixed_bits(l, 1),
-                &BitAssignment::uniform(l, 8),
-            )
-            .unwrap();
+            let (wbits, abits) = (mixed_bits(l, 1), BitAssignment::uniform(l, 8));
+            let m = export_for_identity(&mut s, &be, &data, &wbits, &abits);
             let engine = DeployEngine::from_backend(&m, &be).unwrap();
+            assert_eq!(engine.is_static(), static_mode(), "path selection");
             logits.push((threads, kk.name(), engine.infer_logits(&xs, 16).unwrap()));
         }
     }
@@ -271,16 +309,12 @@ fn pipelined_evaluate_is_bit_identical_to_the_serial_loop() {
     let mut results: Vec<(u64, u64)> = Vec::new();
     for threads in [1usize, 2, 4] {
         let be = NativeBackend::with_dataset_parallelism(ds.clone(), Parallelism::new(threads));
-        let s = ModelSession::load(&be, "resnet18_mini", 9).unwrap();
+        let mut s = ModelSession::load(&be, "resnet18_mini", 9).unwrap();
         let l = s.num_qlayers();
-        let m = QuantizedModel::export(
-            &s.arch,
-            s.params(),
-            &mixed_bits(l, 2),
-            &BitAssignment::uniform(l, 8),
-        )
-        .unwrap();
+        let (wbits, abits) = (mixed_bits(l, 2), BitAssignment::uniform(l, 8));
+        let m = export_for_identity(&mut s, &be, &data, &wbits, &abits);
         let engine = DeployEngine::from_backend(&m, &be).unwrap();
+        assert_eq!(engine.is_static(), static_mode(), "path selection");
         // the explicit serial reference: per-batch eval_batch calls
         // merged in batch order — exactly the pre-pipeline loop
         let mut correct = 0.0f64;

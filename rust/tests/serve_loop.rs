@@ -19,7 +19,12 @@
 //!    accepted ticket before refusing new ones.
 //!
 //! CI runs this file with `--test-threads=1` so the concurrency
-//! schedules under test are not perturbed by sibling tests.
+//! schedules under test are not perturbed by sibling tests — once
+//! dynamic, and once with `SIGMAQUANT_STATIC_ARTIFACT=1`, which swaps
+//! every model under test to a calibrated static artifact so the whole
+//! suite reruns on the single-pass path (where workers fuse coalesced
+//! tick groups into one forward; the oracle comparisons don't change,
+//! because fusion is bit-invisible by contract).
 
 use sigmaquant::data::SynthDataset;
 use sigmaquant::deploy::{
@@ -45,11 +50,26 @@ fn mixed_bits(layers: usize, salt: usize) -> BitAssignment {
     BitAssignment::new(bits).expect("mixed bits are valid")
 }
 
+/// The CI rerun switch (mirrors deploy_parity.rs): with
+/// `SIGMAQUANT_STATIC_ARTIFACT=1`, [`trained_model`] exports calibrated
+/// static artifacts instead of dynamic ones.
+fn static_mode() -> bool {
+    std::env::var("SIGMAQUANT_STATIC_ARTIFACT").map(|v| v == "1").unwrap_or(false)
+}
+
 /// A briefly-trained packed model (training structures the weights so
-/// the logits under test are not degenerate).
+/// the logits under test are not degenerate). In [`static_mode`] the
+/// export is calibrated (BN tracking on through the same train burst,
+/// ranges frozen from fixed batches) — except at `steps == 0`, where
+/// there are no running statistics to freeze and the export stays
+/// dynamic.
 fn trained_model(be: &NativeBackend, arch: &str, seed: u64, steps: u64) -> QuantizedModel {
     let data = SynthDataset::new(be.dataset().clone(), seed ^ 0x5EED);
     let mut s = ModelSession::load(be, arch, seed).unwrap();
+    let calibrated = static_mode() && steps > 0;
+    if calibrated {
+        s.enable_bn_tracking();
+    }
     let l = s.num_qlayers();
     let wbits = mixed_bits(l, 1);
     let abits = BitAssignment::uniform(l, 8);
@@ -57,7 +77,16 @@ fn trained_model(be: &NativeBackend, arch: &str, seed: u64, steps: u64) -> Quant
         let (x, y) = data.train_batch(step, be.dataset().train_batch);
         s.train_step(&x, &y, &wbits, &abits, 0.02).unwrap();
     }
-    QuantizedModel::export(&s.arch, s.params(), &wbits, &abits).unwrap()
+    if calibrated {
+        let tb = be.dataset().train_batch;
+        let mut cx: Vec<f32> = Vec::new();
+        for i in 0..2u64 {
+            cx.extend_from_slice(&data.train_batch(100 + i, tb).0);
+        }
+        QuantizedModel::export_calibrated(&s, be, &wbits, &abits, &cx, tb).unwrap()
+    } else {
+        QuantizedModel::export(&s.arch, s.params(), &wbits, &abits).unwrap()
+    }
 }
 
 fn bits_eq(a: &[f32], b: &[f32]) -> bool {

@@ -1,0 +1,397 @@
+//! Calibrated static-artifact pins (DESIGN.md §12) — the PR-8 contract
+//! that dynamic single-model serving and static single-pass serving are
+//! two faces of one runtime:
+//!
+//! 1. **drift** — on every zoo architecture, a calibrated static
+//!    artifact's logits track the dynamic artifact exported from the
+//!    same session inside a pinned envelope, with majority argmax
+//!    agreement (frozen ranges + running-stats BN legitimately differ
+//!    from per-batch ranges + batch stats; a fold/scale formula error
+//!    shows up at O(1) and blows the envelope);
+//! 2. **format** — the calibrated artifact is a version-2 `.sqdm` whose
+//!    byte round-trip is exact, whose first bytes embed the version-1
+//!    payload unchanged, and which coexists with version 1: uncalibrated
+//!    exports still serialize byte-identical to version 1, version-1
+//!    bytes still load (`calibration: None`) and *provably* run the
+//!    dynamic path, and truncated/trailing/future-version artifacts are
+//!    rejected loudly;
+//! 3. **single-pass, structurally** — `PassCounts` (counted in the
+//!    engine scratch, not inferred from timing) pin the static path to
+//!    zero range scans and zero BN stat passes with exactly one requant
+//!    map pass per GEMM node, and the dynamic path to one range scan per
+//!    GEMM plus two stat passes per fused BN;
+//! 4. **determinism** — the static engine honors the same bit-identity
+//!    contract as the dynamic one (DESIGN.md §8): one logit vector
+//!    across thread counts 1/2/4 × every available i16 kernel;
+//! 5. **serve-tick fusion** — a pre-filled request backlog against a
+//!    static model runs as exactly ONE fused forward tick whose
+//!    responses are bit-identical to the serial per-request oracle, with
+//!    a zero-drop stats audit — and the same backlog against a dynamic
+//!    model still coalesces but never fuses (`fused == 0`).
+
+use sigmaquant::data::SynthDataset;
+use sigmaquant::deploy::{
+    argmax, format, DeployEngine, PassCounts, QuantizedModel, Response, ServeConfig, ServeDaemon,
+    ServeError,
+};
+use sigmaquant::manifest::DatasetSpec;
+use sigmaquant::quant::BitAssignment;
+use sigmaquant::runtime::native::default_dataset;
+use sigmaquant::runtime::native::kernel;
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
+use sigmaquant::util::pool::Parallelism;
+use std::thread;
+
+/// Pinned static-vs-dynamic drift envelope: per sample, every logit of
+/// the static path must sit within `0.5 · max(1, ‖dynamic logits‖∞)` of
+/// the dynamic path. Real drift (range freezing + running-vs-batch BN
+/// stats after a short train burst) is well inside this; a wrong
+/// zero-point, requant scale or BN fold lands at O(‖logits‖) and fails.
+const DRIFT_TOL: f32 = 0.5;
+
+fn small_backend(threads: usize) -> NativeBackend {
+    let ds = DatasetSpec { train_batch: 8, eval_batch: 16, ..default_dataset() };
+    NativeBackend::with_dataset_parallelism(ds, Parallelism::new(threads))
+}
+
+/// Deterministic mixed per-layer assignment covering all of {2,4,6,8}.
+fn mixed_bits(layers: usize, salt: usize) -> BitAssignment {
+    let bits: Vec<u8> = (0..layers).map(|i| [2u8, 4, 6, 8][(i * 3 + salt) % 4]).collect();
+    BitAssignment::new(bits).expect("mixed bits are valid")
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// One session, both exports: a short tracked train burst, then the
+/// dynamic artifact and the calibrated static artifact frozen from the
+/// *same* parameters (calibration on `calib_batches` fixed train
+/// batches disjoint from the train indices).
+fn dual_export(
+    be: &NativeBackend,
+    data: &SynthDataset,
+    arch: &str,
+    seed: u64,
+    salt: usize,
+    steps: u64,
+    calib_batches: u64,
+) -> (QuantizedModel, QuantizedModel) {
+    let mut s = ModelSession::load(be, arch, seed).unwrap();
+    s.enable_bn_tracking();
+    let l = s.num_qlayers();
+    let wbits = mixed_bits(l, salt);
+    let abits = BitAssignment::uniform(l, 8);
+    let tb = be.dataset().train_batch;
+    for step in 0..steps {
+        let (x, y) = data.train_batch(step, tb);
+        s.train_step(&x, &y, &wbits, &abits, 0.02).unwrap();
+    }
+    let dyn_m = QuantizedModel::export(&s.arch, s.params(), &wbits, &abits).unwrap();
+    let mut cx: Vec<f32> = Vec::new();
+    for i in 0..calib_batches {
+        cx.extend_from_slice(&data.train_batch(100 + i, tb).0);
+    }
+    let stat_m = QuantizedModel::export_calibrated(&s, be, &wbits, &abits, &cx, tb).unwrap();
+    (dyn_m, stat_m)
+}
+
+/// Pin 1: calibration drift stays inside the envelope on every zoo
+/// architecture, with majority argmax agreement.
+#[test]
+fn calibrated_static_logits_track_dynamic_logits_across_the_zoo() {
+    let be = small_backend(2);
+    let data = SynthDataset::new(be.dataset().clone(), 37);
+    let b = be.dataset().eval_batch;
+    let img = be.dataset().image_len();
+    let classes = be.dataset().classes;
+    let (xs, _ys) = data.eval_set(b);
+    for (ai, name) in be.arch_names().iter().enumerate() {
+        let (dyn_m, stat_m) = dual_export(&be, &data, name, 17, ai, 3, 2);
+        let e_dyn = DeployEngine::from_backend(&dyn_m, &be).unwrap();
+        let e_stat = DeployEngine::from_backend(&stat_m, &be).unwrap();
+        assert!(!e_dyn.is_static() && e_stat.is_static(), "{name}: path selection");
+        assert_eq!(
+            e_stat.calibration_samples(),
+            2 * be.dataset().train_batch as u64,
+            "{name}: stamped calibration-set size"
+        );
+        assert_eq!(e_dyn.calibration_samples(), 0, "{name}: dynamic has no calibration");
+        let ld = e_dyn.infer_logits(&xs, b).unwrap();
+        let ls = e_stat.infer_logits(&xs, b).unwrap();
+        assert_eq!(ld.len(), ls.len());
+        assert_eq!(ld.len(), b * classes);
+        assert_eq!(xs.len(), b * img);
+        for smp in 0..b {
+            let rd = &ld[smp * classes..(smp + 1) * classes];
+            let rs = &ls[smp * classes..(smp + 1) * classes];
+            let linf = rd.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let tol = DRIFT_TOL * linf.max(1.0);
+            for (c, (&a, &d)) in rd.iter().zip(rs).enumerate() {
+                assert!(d.is_finite(), "{name} sample {smp} class {c}: non-finite static logit");
+                assert!(
+                    (a - d).abs() <= tol,
+                    "{name} sample {smp} class {c}: dynamic {a} vs static {d} (tol {tol})"
+                );
+            }
+        }
+        let agree = argmax(&ld, classes)
+            .into_iter()
+            .zip(argmax(&ls, classes))
+            .filter(|(pd, ps)| pd == ps)
+            .count();
+        assert!(agree * 2 >= b, "{name}: static argmax agrees on only {agree}/{b} samples");
+    }
+}
+
+/// Pin 2: the version-2 format round-trips, embeds version 1, and never
+/// breaks version-1 artifacts.
+#[test]
+fn v2_artifact_round_trips_and_v1_artifacts_stay_loadable_and_dynamic() {
+    let be = small_backend(1);
+    let data = SynthDataset::new(be.dataset().clone(), 43);
+    let (dyn_m, stat_m) = dual_export(&be, &data, "resnet18_mini", 19, 2, 2, 2);
+    let arch = be.arch("resnet18_mini").unwrap();
+
+    // v2 value + byte round-trip
+    let v2 = format::serialize(&stat_m);
+    assert_eq!(u16::from_le_bytes([v2[4], v2[5]]), 2, "calibrated artifact is version 2");
+    let back = format::deserialize(&v2, arch).unwrap();
+    assert_eq!(back, stat_m, "v2 value round-trip");
+    assert_eq!(format::serialize(&back), v2, "v2 byte round-trip");
+    let cal = back.calibration.as_ref().expect("calibration survives the round-trip");
+    assert_eq!(cal.ranges.len(), stat_m.layers.len());
+    assert!(!cal.bn_stats.is_empty(), "resnet18_mini carries running BN stats");
+
+    // an uncalibrated export is byte-identical to version 1, and the v2
+    // layout is exactly that payload + the appended calibration section
+    let v1 = format::serialize(&dyn_m);
+    assert_eq!(u16::from_le_bytes([v1[4], v1[5]]), 1, "uncalibrated artifact stays version 1");
+    let mut stripped = stat_m.clone();
+    stripped.calibration = None;
+    assert_eq!(format::serialize(&stripped), v1, "same weights ⇒ same v1 bytes");
+    assert!(v2.len() > v1.len());
+    assert_eq!(&v2[6..v1.len()], &v1[6..], "v1 payload embedded unchanged in v2");
+
+    // v1 bytes keep loading — and provably run the dynamic path
+    let old = format::deserialize(&v1, arch).unwrap();
+    assert!(old.calibration.is_none(), "v1 loads with calibration: None");
+    assert_eq!(format::serialize(&old), v1, "v1 byte round-trip unchanged");
+    let e = DeployEngine::from_backend(&old, &be).unwrap();
+    assert!(!e.is_static());
+    let b = be.dataset().eval_batch;
+    let (xs, _ys) = data.eval_set(b);
+    e.infer_logits(&xs, b).unwrap();
+    assert!(e.pass_counts().range_scans > 0, "a v1 artifact must scan ranges dynamically");
+
+    // corruption fails loudly: truncated calibration tail, trailing
+    // garbage, a version this build does not read
+    assert!(format::deserialize(&v2[..v2.len() - 1], arch).is_err(), "truncated v2");
+    let mut trailing = v2.clone();
+    trailing.push(0);
+    assert!(format::deserialize(&trailing, arch).is_err(), "trailing bytes");
+    let mut future = v2.clone();
+    future[4] = 3;
+    assert!(format::deserialize(&future, arch).is_err(), "future version");
+
+    // and the filesystem round-trip
+    let path = std::env::temp_dir().join("sq_static_artifact.sqdm");
+    format::save_model(&path, &stat_m).unwrap();
+    let disk = format::load_model(&path, arch).unwrap();
+    assert_eq!(format::serialize(&disk), v2);
+    std::fs::remove_file(path).ok();
+}
+
+/// Pin 3: the single-pass claim, asserted structurally via the engine's
+/// own pass counters — on both epilogue shapes (alexnet_mini: no BN;
+/// resnet18_mini: fused BN).
+#[test]
+fn static_path_is_single_pass_structurally() {
+    let be = small_backend(2);
+    let data = SynthDataset::new(be.dataset().clone(), 47);
+    let b = be.dataset().eval_batch;
+    let (xs, _ys) = data.eval_set(b);
+    for name in ["alexnet_mini", "resnet18_mini"] {
+        let (dyn_m, stat_m) = dual_export(&be, &data, name, 23, 0, 2, 2);
+        let gemms = dyn_m.layers.len() as u64;
+        let e_dyn = DeployEngine::from_backend(&dyn_m, &be).unwrap();
+        let e_stat = DeployEngine::from_backend(&stat_m, &be).unwrap();
+
+        e_dyn.infer_logits(&xs, b).unwrap();
+        let pd = e_dyn.pass_counts();
+        assert_eq!(pd.range_scans, gemms, "{name}: dynamic scans every GEMM input once");
+        assert_eq!(pd.map_passes, gemms, "{name}: one requant map per GEMM");
+        let fused_bn = e_dyn.fused_bn_count() as u64;
+        assert!(
+            pd.stat_passes >= 2 * fused_bn,
+            "{name}: dynamic BN takes two stat passes per fused node ({pd:?})"
+        );
+        if name == "resnet18_mini" {
+            assert!(fused_bn > 0 && pd.stat_passes > 0, "{name}: BN arch exercises stat passes");
+        } else {
+            assert_eq!(pd.stat_passes, 0, "{name}: no BN, no stat passes");
+        }
+
+        e_stat.infer_logits(&xs, b).unwrap();
+        assert_eq!(
+            e_stat.pass_counts(),
+            PassCounts { range_scans: 0, stat_passes: 0, map_passes: gemms },
+            "{name}: static single-pass — no range scan, no stat pass, one map per GEMM"
+        );
+        // counters accumulate per forward and reset on demand
+        e_stat.infer_logits(&xs, b).unwrap();
+        assert_eq!(e_stat.pass_counts().map_passes, 2 * gemms, "{name}: counters accumulate");
+        e_stat.reset_pass_counts();
+        assert_eq!(e_stat.pass_counts(), PassCounts::default(), "{name}: counters reset");
+    }
+}
+
+/// Pin 4: the static engine honors the bit-identity contract — one
+/// logit vector across {1, 2, 4} threads × every available i16 kernel.
+/// The tracked train burst and calibration repeat identically per
+/// iteration (the trainer is itself bit-identical across thread counts,
+/// and kernels are exact-sum reorderings), so the frozen artifacts —
+/// and therefore the static logits — must agree bit for bit.
+#[test]
+fn static_engine_is_bit_identical_across_thread_counts_and_kernels() {
+    let ds = DatasetSpec { train_batch: 8, eval_batch: 16, ..default_dataset() };
+    let data = SynthDataset::new(ds.clone(), 53);
+    let (xs, _ys) = data.eval_set(16);
+    let restore = kernel::selected();
+    let mut logits: Vec<(usize, &'static str, Vec<f32>)> = Vec::new();
+    for kk in kernel::available_kernels() {
+        kernel::set_kernel(kk).expect("listed kernel is available");
+        for threads in [1usize, 2, 4] {
+            let be =
+                NativeBackend::with_dataset_parallelism(ds.clone(), Parallelism::new(threads));
+            let (_dyn_m, stat_m) = dual_export(&be, &data, "resnet18_mini", 29, 3, 2, 2);
+            let engine = DeployEngine::from_backend(&stat_m, &be).unwrap();
+            assert!(engine.is_static());
+            logits.push((threads, kk.name(), engine.infer_logits(&xs, 16).unwrap()));
+        }
+    }
+    kernel::set_kernel(restore.kind).expect("restore previously selected kernel");
+    let (t0, k0, first) = &logits[0];
+    for (t, k, l) in &logits[1..] {
+        for (a, b) in first.iter().zip(l) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "({t0} threads, {k0}) vs ({t} threads, {k}) static logits diverge"
+            );
+        }
+    }
+}
+
+/// Pin 5a: a pre-filled backlog against a static model is exactly ONE
+/// fused tick, bit-identical to the serial per-request oracle, at
+/// server worker counts 1/2/4, with a zero-drop audit. Pre-filling
+/// before `run()` makes fusion deterministic: the first worker to take
+/// the queue lock coalesces the whole backlog atomically.
+#[test]
+fn fused_tick_is_bit_identical_to_the_serial_oracle_with_zero_drops() {
+    let obe = small_backend(1);
+    let data = SynthDataset::new(obe.dataset().clone(), 59);
+    let img = obe.dataset().image_len();
+    let (_dyn_m, m) = dual_export(&obe, &data, "resnet18_mini", 31, 1, 3, 2);
+    let oracle = DeployEngine::from_backend(&m, &obe).unwrap();
+    assert!(oracle.is_static());
+
+    let (xs, _ys) = data.eval_set(8);
+    // mixed geometry: singles and 2-image batches, 8 images over 6
+    // requests — one coalesced group under max_batch = 8
+    let reqs: [(usize, usize); 6] = [(0, 1), (1, 1), (2, 2), (4, 1), (5, 1), (6, 2)];
+    let want: Vec<Vec<f32>> = reqs
+        .iter()
+        .map(|&(start, k)| oracle.infer_logits(&xs[start * img..(start + k) * img], k).unwrap())
+        .collect();
+
+    for workers in [1usize, 2, 4] {
+        let be = small_backend(workers);
+        let engine = DeployEngine::from_backend(&m, &be).unwrap();
+        let daemon = ServeDaemon::new(
+            ServeConfig { queue_cap: 16, max_batch: 8, workers },
+            Parallelism::new(workers),
+        );
+        let handle = daemon.handle();
+        handle.deploy("stat", &engine).unwrap();
+        let mut tickets = Vec::new();
+        for &(start, k) in &reqs {
+            tickets.push(handle.submit("stat", xs[start * img..(start + k) * img].to_vec()).unwrap());
+        }
+        assert!(tickets.iter().all(|t| !t.ready()), "nothing served before the daemon runs");
+        let mut got: Vec<Result<Response, ServeError>> = Vec::new();
+        thread::scope(|s| {
+            let server = s.spawn(|| daemon.run());
+            for t in tickets {
+                got.push(t.wait());
+            }
+            handle.shutdown();
+            server.join().expect("server thread");
+        });
+        for (i, r) in got.into_iter().enumerate() {
+            let r = r.expect("fused request completes");
+            assert_eq!(r.images, reqs[i].1, "workers {workers}: request {i} image count");
+            assert!(
+                bits_eq(&r.logits, &want[i]),
+                "workers {workers}: fused response {i} diverges from the serial oracle"
+            );
+        }
+        let st = handle.stats();
+        assert_eq!(st.ticks, 1, "workers {workers}: the backlog coalesces into one tick");
+        assert_eq!(st.fused, 1, "workers {workers}: and that tick runs as one fused forward");
+        assert_eq!(
+            (st.accepted, st.completed, st.errored),
+            (6, 6, 0),
+            "workers {workers}: zero-drop audit"
+        );
+    }
+}
+
+/// Pin 5b: the same backlog against a *dynamic* model still coalesces
+/// into one tick but never fuses — each request is its own forward,
+/// bit-identical to the oracle, and `fused` stays 0.
+#[test]
+fn dynamic_models_coalesce_but_never_fuse() {
+    let obe = small_backend(1);
+    let data = SynthDataset::new(obe.dataset().clone(), 61);
+    let img = obe.dataset().image_len();
+    let (dyn_m, _stat_m) = dual_export(&obe, &data, "resnet18_mini", 33, 1, 3, 2);
+    let oracle = DeployEngine::from_backend(&dyn_m, &obe).unwrap();
+    assert!(!oracle.is_static());
+
+    let (xs, _ys) = data.eval_set(6);
+    let reqs: [(usize, usize); 4] = [(0, 1), (1, 2), (3, 1), (4, 2)];
+    let want: Vec<Vec<f32>> = reqs
+        .iter()
+        .map(|&(start, k)| oracle.infer_logits(&xs[start * img..(start + k) * img], k).unwrap())
+        .collect();
+
+    let be = small_backend(2);
+    let engine = DeployEngine::from_backend(&dyn_m, &be).unwrap();
+    let daemon =
+        ServeDaemon::new(ServeConfig { queue_cap: 16, max_batch: 8, workers: 2 }, Parallelism::new(2));
+    let handle = daemon.handle();
+    handle.deploy("dyn", &engine).unwrap();
+    let mut tickets = Vec::new();
+    for &(start, k) in &reqs {
+        tickets.push(handle.submit("dyn", xs[start * img..(start + k) * img].to_vec()).unwrap());
+    }
+    let mut got: Vec<Result<Response, ServeError>> = Vec::new();
+    thread::scope(|s| {
+        let server = s.spawn(|| daemon.run());
+        for t in tickets {
+            got.push(t.wait());
+        }
+        handle.shutdown();
+        server.join().expect("server thread");
+    });
+    for (i, r) in got.into_iter().enumerate() {
+        let r = r.expect("request completes");
+        assert!(bits_eq(&r.logits, &want[i]), "dynamic response {i} diverges from the oracle");
+    }
+    let st = handle.stats();
+    assert_eq!(st.ticks, 1, "coalescing is model-agnostic");
+    assert_eq!(st.fused, 0, "dynamic models must never fuse");
+    assert_eq!((st.accepted, st.completed, st.errored), (4, 4, 0));
+}
