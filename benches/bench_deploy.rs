@@ -37,6 +37,7 @@ use sigmaquant::deploy::{
     argmax, format, DeployEngine, QuantizedModel, Response, ServeConfig, ServeDaemon,
 };
 use sigmaquant::hw::{model_ppa, ShiftAddConfig};
+use sigmaquant::obs;
 use sigmaquant::quant::{int8_size_bytes, model_size_bytes, BitAssignment};
 use sigmaquant::runtime::native::kernel::{selected, set_kernel, KernelKind};
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
@@ -597,6 +598,56 @@ fn main() {
             "{arch:<16} ticks  | {} groups, {} fused into one forward",
             st.ticks, st.fused
         );
+    }
+
+    // --- traced per-layer stage breakdown (crate::obs, PR-9) ---
+    // One fresh single-lane engine run with the span recorder ON: the
+    // per-layer quant / integer-GEMM / requant-epilogue wall-time split
+    // lands as layer/<name>/{quant,gemm,epilogue} rows (quick mode
+    // included). Tracing is scoped to this section — every timed row
+    // above ran with the recorder off, so the observation-only contract
+    // keeps the gated numbers untouched.
+    {
+        obs::set_enabled(true);
+        let mut session = ModelSession::load(&backend, "alexnet_mini", 7).expect("load arch");
+        let fb = BitAssignment::raw(vec![32; session.num_qlayers()]);
+        for step in 0..2u64 {
+            let (x, y) = data.train_batch(600 + step, session.dataset().train_batch);
+            session.train_step(&x, &y, &fb, &fb, 0.05).expect("train step");
+        }
+        let layers = session.num_qlayers();
+        let cycle: Vec<u8> = (0..layers).map(|i| [8u8, 6, 4, 2][i % 4]).collect();
+        let wbits = BitAssignment::new(cycle).expect("cycle bits are valid");
+        let a8 = BitAssignment::uniform(layers, 8);
+        let model = QuantizedModel::export(&session.arch, session.params(), &wbits, &a8)
+            .expect("export");
+        let engine = DeployEngine::from_backend(&model, &backend).expect("traced engine");
+        let batches = if quick { 2usize } else { 8 };
+        let avail = ys.len() / b;
+        for bi in 0..batches {
+            let x = &xs[(bi % avail) * b * img..][..b * img];
+            engine.infer_logits(x, b).expect("traced logits");
+        }
+        let stages = obs::layer_breakdown(&engine.take_trace());
+        obs::set_enabled(false);
+        println!(
+            "\n# per-layer stage breakdown (alexnet_mini/mixed, {batches} batches, traced)"
+        );
+        for l in &stages {
+            let per_img = |ns: u64| ns as f64 / l.images.max(1) as f64;
+            println!(
+                "layer {:<2} {:<20} {:<7} | quant {:>9.1} ns/img | gemm {:>9.1} | epilogue {:>9.1}",
+                l.layer,
+                l.name,
+                l.kernel,
+                per_img(l.quant_ns),
+                per_img(l.gemm_ns),
+                per_img(l.epilogue_ns),
+            );
+            report.add(&format!("layer/{}/quant", l.name), threads, per_img(l.quant_ns));
+            report.add(&format!("layer/{}/gemm", l.name), threads, per_img(l.gemm_ns));
+            report.add(&format!("layer/{}/epilogue", l.name), threads, per_img(l.epilogue_ns));
+        }
     }
 
     if !quick {

@@ -63,6 +63,11 @@ pub fn run_phase1(
     let mut zone = Zone::Iteration;
 
     for round in 1..=cfg.max_phase1_iters {
+        // round-level trace span (flat coordinator store, crate::obs);
+        // inert when tracing is off, dropped at the round's end
+        let mut round_span = crate::obs::coord_span("coord", "phase1_round");
+        round_span.attr("round", crate::obs::AttrVal::U64(round as u64));
+        round_span.attr("lambda", crate::obs::AttrVal::F64(lambda));
         // zone of the *current* point decides the mapping shift
         resource = sq.resource(session, &bits, &abits);
         let cur_zone = if round == 1 {
@@ -76,6 +81,7 @@ pub fn run_phase1(
             Zone::BitDecrease => -1,
             _ => 0,
         };
+        round_span.attr("shift", crate::obs::AttrVal::F64(shift as f64));
 
         let clustering = adaptive_kmeans(&sigmas, VALID_BITS.len(), lambda, cfg.seed);
         bits = BitAssignment::raw(

@@ -107,6 +107,11 @@ pub fn run_phase2(
             break; // early stop: too many consecutive rejected moves
         }
         rounds += 1;
+        // round-level trace span (flat coordinator store — candidate
+        // QAT bursts run concurrently on pool threads, so spans must
+        // not stack-parent; see crate::obs). Inert when tracing is off.
+        let mut round_span = crate::obs::coord_span("coord", "phase2_round");
+        round_span.attr("round", crate::obs::AttrVal::U64(rounds as u64));
 
         // -- step 1: measure sensitivity --------------------------------
         let weights = session.all_qlayer_weights();
@@ -217,6 +222,9 @@ pub fn run_phase2(
                 (best.acc, best.res, format!("{tried:?}"))
             }
         };
+        round_span.attr("dir", crate::obs::AttrVal::SStr(what));
+        round_span.attr("layers", crate::obs::AttrVal::Str(moved.clone()));
+        round_span.attr("accepted", crate::obs::AttrVal::Bool(chosen.is_some()));
         traj.push(TrajPoint {
             phase: "phase2",
             iter: rounds,

@@ -24,6 +24,11 @@ pub fn run_qat(
     lr: f32,
     steps: usize,
 ) -> Result<StepResult> {
+    // Coordinator spans are flat and mutex-merged (crate::obs::sink docs):
+    // phase 2 runs this concurrently on pool threads, so a stack-parented
+    // sink would interleave nondeterministically. Inert when tracing is off.
+    let mut span = crate::obs::coord_span("coord", "qat");
+    span.attr("steps", crate::obs::AttrVal::U64(steps as u64));
     let b = session.dataset().train_batch;
     let mut last = StepResult { loss: f32::NAN, acc: 0.0 };
     for _ in 0..steps {

@@ -134,6 +134,12 @@ impl SigmaQuant {
     ) -> Result<SearchOutcome> {
         let l = session.num_qlayers();
         let mut traj = Trajectory::default();
+        // Phase-level trace span over the whole search (inert when
+        // tracing is off; recorded into the flat coordinator store on
+        // drop — see crate::obs).
+        let mut search_span = crate::obs::coord_span("coord", "search");
+        search_span.attr("arch", crate::obs::AttrVal::Str(session.arch.name.clone()));
+        search_span.attr("layers", crate::obs::AttrVal::U64(l as u64));
 
         // ---- Alg. 1 lines 1-3: uniform INT8 start ----------------------
         let w8 = BitAssignment::uniform(l, 8);

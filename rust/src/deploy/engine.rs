@@ -83,6 +83,7 @@
 use super::igemm::{self, IPackScratch};
 use super::model::QuantizedModel;
 use crate::manifest::{ArchSpec, DatasetSpec};
+use crate::obs::{self, AttrVal, Event, TraceSink};
 use crate::runtime::backend::{Backend, EvalResult};
 use crate::runtime::native::fakequant::act_minmax;
 use crate::runtime::native::graph::{NativeArch, Node};
@@ -234,6 +235,11 @@ struct DeployScratch {
     observed: Vec<(f32, f32)>,
     /// Structural pass counters (see [`PassCounts`]).
     passes: PassCounts,
+    /// Per-lane trace sink ([`crate::obs`]): `Some` only when tracing
+    /// was enabled when this scratch was built, so the disabled path is
+    /// a single `None` branch — no clock read, no allocation
+    /// (observation-only contract, `rust/tests/obs_trace.rs`).
+    obs: Option<TraceSink>,
 }
 
 impl DeployScratch {
@@ -254,6 +260,7 @@ impl DeployScratch {
             parts: Vec::new(),
             observed: vec![(f32::INFINITY, f32::NEG_INFINITY); layers],
             passes: PassCounts::default(),
+            obs: obs::enabled().then(TraceSink::new),
         }
     }
 }
@@ -828,6 +835,32 @@ impl DeployEngine {
         self.scratch.borrow_mut().passes = PassCounts::default();
     }
 
+    /// Drain the buffered trace of this engine and its cached eval
+    /// forks, in deterministic lane order: this engine's own sink is
+    /// lane 0, eval forks follow in creation order (lanes 1..). Empty
+    /// when tracing was disabled at engine construction. Event `seq` /
+    /// `parent` links are lane-local.
+    pub fn take_trace(&self) -> Vec<(usize, Vec<Event>)> {
+        let mut lanes = Vec::new();
+        if let Some(sink) = self.scratch.borrow_mut().obs.as_mut() {
+            lanes.push((0, sink.drain()));
+        }
+        for (i, fork) in self.eval_forks.borrow().iter().enumerate() {
+            if let Some(sink) = fork.scratch.borrow_mut().obs.as_mut() {
+                lanes.push((i + 1, sink.drain()));
+            }
+        }
+        lanes
+    }
+
+    /// Remove this engine's trace sink. The serve daemon calls this on
+    /// the per-worker engine forks it mints: serve records at request
+    /// granularity into its own per-worker lanes, and an undrained
+    /// engine sink would otherwise grow for the lifetime of the daemon.
+    pub(crate) fn disable_own_trace(&self) {
+        self.scratch.borrow_mut().obs = None;
+    }
+
     /// Observed per-qlayer activation ranges of an observe-mode engine
     /// ([`DeployEngine::observe`]); fails if any layer has not seen a
     /// calibration batch yet.
@@ -969,8 +1002,40 @@ impl EngineCore {
         let cout = shapes[vid].channels();
         let rows_total = batch * out_st / cout;
         let chunks = partition_rows(batch);
-        let DeployScratch { acts, qcode, acc, fc, yb, bn_mean, bn_inv, parts, observed, passes, .. } =
-            scr;
+        let DeployScratch {
+            acts,
+            qcode,
+            acc,
+            fc,
+            yb,
+            bn_mean,
+            bn_inv,
+            parts,
+            observed,
+            passes,
+            obs,
+            ..
+        } = scr;
+
+        // Per-layer trace span, attributed to layer index/name/kind and
+        // the dispatched kernel; its quant/gemm/epilogue children carve
+        // up the stage times (obs is None ⇒ every gate below is one
+        // untaken branch).
+        let sp_layer = obs.as_mut().map(|s| {
+            let spec = &self.arch.spec.qlayers[g.q];
+            s.open(
+                "deploy",
+                "layer",
+                vec![
+                    ("layer", AttrVal::U64(g.q as u64)),
+                    ("layer_name", AttrVal::Str(spec.name.clone())),
+                    ("layer_kind", AttrVal::Str(spec.kind.clone())),
+                    ("kernel", AttrVal::SStr(kernel::selected().kind.name())),
+                    ("batch", AttrVal::U64(batch as u64)),
+                ],
+            )
+        });
+        let sp_quant = obs.as_mut().map(|s| s.open("deploy", "quant", vec![]));
 
         // 1. per-tensor activation range: frozen on the static path,
         //    derived per batch otherwise (min/max is exact, so one
@@ -1014,6 +1079,16 @@ impl EngineCore {
             }
             par.run_gated(batch * in_st >= MIN_PARALLEL_WORK, tasks);
         }
+        if let Some(sp) = sp_quant {
+            obs.as_mut().expect("sink opened the span").close(sp);
+        }
+        let sp_gemm = obs.as_mut().map(|s| {
+            s.open(
+                "deploy",
+                "gemm",
+                vec![("kernel", AttrVal::SStr(kernel::selected().kind.name()))],
+            )
+        });
 
         // 3. integer GEMM into the i32 accumulator (disjoint rows)
         let qc: &[i16] = &qcode[..batch * in_st];
@@ -1064,6 +1139,10 @@ impl EngineCore {
             }
             _ => unreachable!(),
         }
+        if let Some(sp) = sp_gemm {
+            obs.as_mut().expect("sink opened the span").close(sp);
+        }
+        let sp_epi = obs.as_mut().map(|s| s.open("deploy", "epilogue", vec![]));
 
         // 4. requantization epilogue. The zero-point correction
         //    `(S − zp·Σw)` centers the exact accumulator (integers in
@@ -1165,6 +1244,14 @@ impl EngineCore {
                 });
             }
         }
+        if let Some(sink) = obs.as_mut() {
+            if let Some(sp) = sp_epi {
+                sink.close(sp);
+            }
+            if let Some(sp) = sp_layer {
+                sink.close(sp);
+            }
+        }
     }
 
     /// One plain f32 node (pools, residual adds, concat, GAP — the glue
@@ -1258,6 +1345,10 @@ impl EngineCore {
     }
 
     fn forward(&self, par: &Parallelism, scr: &mut DeployScratch, x: &[f32], batch: usize) {
+        let sp = scr
+            .obs
+            .as_mut()
+            .map(|s| s.open("deploy", "forward", vec![("batch", AttrVal::U64(batch as u64))]));
         scr.acts[0][..x.len()].copy_from_slice(x);
         for vid in 1..self.arch.nodes.len() {
             match &self.plan[vid] {
@@ -1265,6 +1356,9 @@ impl EngineCore {
                 Step::Gemm(g) => self.run_gemm(par, scr, vid, g, batch),
                 Step::Direct => self.run_direct(scr, vid, batch),
             }
+        }
+        if let Some(sp) = sp {
+            scr.obs.as_mut().expect("sink opened the span").close(sp);
         }
     }
 }

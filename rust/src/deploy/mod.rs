@@ -59,5 +59,6 @@ pub use engine::{argmax, CoreHandle, DeployEngine, PassCounts};
 pub use format::{load_model, read_arch_name, save_model};
 pub use model::{Calibration, PackedLayer, QuantizedModel};
 pub use serve::{
-    Response, ServeConfig, ServeDaemon, ServeError, ServeHandle, ServeStats, SubmitError, Ticket,
+    ModelLatency, Response, ServeConfig, ServeDaemon, ServeError, ServeHandle, ServeStats,
+    SubmitError, Ticket,
 };

@@ -53,11 +53,21 @@
 //!   (`SubmitError::ShuttingDown`) but workers drain the queue before
 //!   exiting: every accepted request is completed or errored, never
 //!   dropped ([`ServeStats`] makes that auditable).
+//! * **Observability (opt-in).** With tracing enabled ([`crate::obs`],
+//!   `serve --trace`) each worker records per-request queue-wait and
+//!   service spans plus tick/fusion markers into its own lane
+//!   ([`ServeHandle::take_trace`] merges lanes by worker index), and
+//!   every served request lands in a per-(model, version) rolling
+//!   latency histogram surfaced as [`ServeStats::latency`]
+//!   (p50/p99/mean). All of it is observation-only — with tracing off
+//!   no clock is read and responses are bit-identical either way
+//!   (`rust/tests/obs_trace.rs`).
 
 use super::engine::{CoreHandle, DeployEngine};
+use crate::obs::{self, AttrVal, Event, LatencyHist, TraceSink};
 use crate::util::pool::{Parallelism, Task};
 use anyhow::Result;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -188,12 +198,33 @@ struct Pending {
     x: Vec<f32>,
     images: usize,
     ticket: Arc<TicketState>,
+    /// Enqueue timestamp ([`obs::now_ns`]) when tracing is on; 0 (and
+    /// never a clock read) otherwise. Source of the queue-wait spans
+    /// and the served-latency histograms.
+    t_enq_ns: u64,
+}
+
+/// Served-latency summary of one (model, registry version), read out of
+/// its rolling [`LatencyHist`] — only populated while tracing
+/// ([`crate::obs`]) is enabled, empty otherwise.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ModelLatency {
+    pub model: String,
+    /// Registry version the requests were served by.
+    pub version: u64,
+    /// Successfully served requests behind these percentiles.
+    pub served: u64,
+    /// Submit→response latency percentiles (log2-bucket floors, see
+    /// [`LatencyHist::percentile_ns`]) and mean.
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub mean_ns: u64,
 }
 
 /// Serving counters, all monotone; snapshot via [`ServeHandle::stats`].
 /// `accepted == completed + errored` after shutdown is the zero-drop
 /// invariant the serve tests assert.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ServeStats {
     /// Requests enqueued (their tickets will complete).
     pub accepted: u64,
@@ -212,6 +243,10 @@ pub struct ServeStats {
     pub fused: u64,
     /// Deepest the bounded queue has been.
     pub queue_high_watermark: u64,
+    /// Per-(model, version) served-latency summaries, key-sorted.
+    /// Populated only while tracing is enabled (observation-only:
+    /// without it no clock is read per request).
+    pub latency: Vec<ModelLatency>,
 }
 
 impl ServeStats {
@@ -219,6 +254,61 @@ impl ServeStats {
     pub fn in_flight(&self) -> u64 {
         self.accepted.saturating_sub(self.completed + self.errored)
     }
+
+    /// One-line machine-readable snapshot (the `serve --stats-every`
+    /// output): a JSON object that round-trips through
+    /// [`crate::util::json::parse`].
+    pub fn json_line(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::with_capacity(256);
+        let _ = write!(
+            s,
+            "{{\"accepted\":{},\"rejected\":{},\"completed\":{},\"errored\":{},\
+             \"in_flight\":{},\"swaps\":{},\"ticks\":{},\"fused\":{},\
+             \"queue_high_watermark\":{},\"latency\":[",
+            self.accepted,
+            self.rejected,
+            self.completed,
+            self.errored,
+            self.in_flight(),
+            self.swaps,
+            self.ticks,
+            self.fused,
+            self.queue_high_watermark
+        );
+        for (i, l) in self.latency.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "{{\"model\":\"{}\",\"version\":{},\"served\":{},\"p50_ns\":{},\
+                 \"p99_ns\":{},\"mean_ns\":{}}}",
+                crate::util::json::escape(&l.model),
+                l.version,
+                l.served,
+                l.p50_ns,
+                l.p99_ns,
+                l.mean_ns
+            );
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// Observability state of one daemon, present only when tracing was
+/// enabled at daemon construction ([`crate::obs::enabled`]) — the
+/// disabled serve path carries a `None` and never reads a clock.
+struct ServeObs {
+    /// Rolling served-latency histograms per (model id, registry
+    /// version). Mutex-guarded: touched once per *completed* request,
+    /// never inside the engine's hot loops.
+    hists: Mutex<BTreeMap<(String, u64), LatencyHist>>,
+    /// Per-worker trace lanes, each pushed exactly once when its worker
+    /// drains out; [`ServeHandle::take_trace`] sorts by worker index so
+    /// the merged order is deterministic regardless of exit timing.
+    lanes: Mutex<Vec<(usize, Vec<Event>)>>,
 }
 
 /// State shared by the daemon, its handles, and the workers.
@@ -237,6 +327,7 @@ struct Shared {
     ticks: AtomicU64,
     fused: AtomicU64,
     depth_hwm: AtomicU64,
+    obs: Option<ServeObs>,
 }
 
 /// Cheap, cloneable, `Send + Sync` client handle: register/swap models,
@@ -315,7 +406,9 @@ impl ServeHandle {
             )));
         }
         let ticket = Arc::new(TicketState { slot: Mutex::new(None), cv: Condvar::new() });
-        let pending = Pending { model: Arc::from(model), x, images, ticket: ticket.clone() };
+        let t_enq_ns = if self.shared.obs.is_some() { obs::now_ns() } else { 0 };
+        let pending =
+            Pending { model: Arc::from(model), x, images, ticket: ticket.clone(), t_enq_ns };
         {
             let mut q = self.shared.queue.lock().unwrap();
             // re-check under the queue lock: shutdown stores its flag
@@ -350,8 +443,30 @@ impl ServeHandle {
     }
 
     /// Consistent-enough snapshot of the serving counters (each counter
-    /// is individually exact and monotone).
+    /// is individually exact and monotone). The `latency` summaries are
+    /// read out of the rolling per-(model, version) histograms and are
+    /// only populated while tracing is enabled.
     pub fn stats(&self) -> ServeStats {
+        let latency = match &self.shared.obs {
+            Some(o) => o
+                .hists
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|((model, version), h)| {
+                    let (p50, p99) = h.p50_p99_ns();
+                    ModelLatency {
+                        model: model.clone(),
+                        version: *version,
+                        served: h.count(),
+                        p50_ns: p50,
+                        p99_ns: p99,
+                        mean_ns: h.mean_ns(),
+                    }
+                })
+                .collect(),
+            None => Vec::new(),
+        };
         ServeStats {
             accepted: self.shared.accepted.load(Ordering::SeqCst),
             rejected: self.shared.rejected.load(Ordering::SeqCst),
@@ -361,6 +476,23 @@ impl ServeHandle {
             ticks: self.shared.ticks.load(Ordering::SeqCst),
             fused: self.shared.fused.load(Ordering::SeqCst),
             queue_high_watermark: self.shared.depth_hwm.load(Ordering::SeqCst),
+            latency,
+        }
+    }
+
+    /// Drain the per-worker trace lanes buffered so far, sorted by
+    /// worker index (deterministic merge order regardless of worker
+    /// exit timing). Workers flush their lane when they drain out, so
+    /// call this after [`ServeDaemon::run`] has returned. Empty when
+    /// tracing was disabled at daemon construction.
+    pub fn take_trace(&self) -> Vec<(usize, Vec<Event>)> {
+        match &self.shared.obs {
+            Some(o) => {
+                let mut lanes = std::mem::take(&mut *o.lanes.lock().unwrap());
+                lanes.sort_by_key(|&(i, _)| i);
+                lanes
+            }
+            None => Vec::new(),
         }
     }
 
@@ -400,6 +532,10 @@ impl ServeDaemon {
                 ticks: AtomicU64::new(0),
                 fused: AtomicU64::new(0),
                 depth_hwm: AtomicU64::new(0),
+                obs: obs::enabled().then(|| ServeObs {
+                    hists: Mutex::new(BTreeMap::new()),
+                    lanes: Mutex::new(Vec::new()),
+                }),
             }),
             par,
         }
@@ -418,8 +554,9 @@ impl ServeDaemon {
     pub fn run(&self) {
         let workers = self.shared.cfg.workers.clamp(1, self.par.threads());
         let shared = &self.shared;
-        let tasks: Vec<Task<'_>> =
-            (0..workers).map(|_| Box::new(move || worker_loop(shared)) as Task<'_>).collect();
+        let tasks: Vec<Task<'_>> = (0..workers)
+            .map(|lane| Box::new(move || worker_loop(shared, lane)) as Task<'_>)
+            .collect();
         self.par.run_services(tasks);
     }
 }
@@ -431,12 +568,16 @@ impl ServeDaemon {
 /// forward per request otherwise — and fulfill the tickets. Exits when
 /// shutdown is signalled *and* the queue is empty — the drain that
 /// makes accepted = completed + errored.
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, lane: usize) {
     // engine cache: id → (registry version it was forked from, engine).
     // Re-forked when the version moves; dropping the old engine drops
     // the last reference to a swapped-out core once the registry no
     // longer holds it.
     let mut engines: HashMap<String, (u64, DeployEngine)> = HashMap::new();
+    // This worker's trace lane (None ⇒ every obs gate below is one
+    // untaken branch — no clock read, no allocation). Flushed exactly
+    // once, keyed by worker index, when the worker drains out.
+    let mut sink = shared.obs.as_ref().map(|_| TraceSink::new());
     loop {
         let group = {
             let mut q = shared.queue.lock().unwrap();
@@ -461,7 +602,7 @@ fn worker_loop(shared: &Shared) {
         };
         let group = match group {
             Some(g) => g,
-            None => return,
+            None => break,
         };
         shared.ticks.fetch_add(1, Ordering::SeqCst);
         let id: &str = &group[0].model;
@@ -485,12 +626,43 @@ fn worker_loop(shared: &Shared) {
                 continue;
             }
         };
+        if let Some(s) = sink.as_mut() {
+            // queue-wait spans (enqueue → pop, pre-timed) and the
+            // tick/coalesce marker for this group
+            let now = obs::now_ns();
+            for p in &group {
+                s.span_at(
+                    "serve",
+                    "queue_wait",
+                    p.t_enq_ns,
+                    now.saturating_sub(p.t_enq_ns),
+                    vec![
+                        ("model", AttrVal::Str(id.to_string())),
+                        ("images", AttrVal::U64(p.images as u64)),
+                    ],
+                );
+            }
+            s.instant(
+                "serve",
+                "tick",
+                vec![
+                    ("model", AttrVal::Str(id.to_string())),
+                    ("version", AttrVal::U64(entry.version)),
+                    ("requests", AttrVal::U64(group.len() as u64)),
+                ],
+            );
+        }
         let stale = match engines.get(id) {
             Some((v, _)) => *v != entry.version,
             None => true,
         };
         if stale {
-            engines.insert(id.to_string(), (entry.version, entry.core.fork_serial()));
+            let eng = entry.core.fork_serial();
+            // serve traces record at request granularity into this
+            // worker's lane; the engine's own per-layer sink would only
+            // grow for the daemon's lifetime
+            eng.disable_own_trace();
+            engines.insert(id.to_string(), (entry.version, eng));
         }
         let engine = &engines.get(id).expect("cached or just forked").1;
         if group.len() > 1 && entry.core.is_static() {
@@ -499,6 +671,19 @@ fn worker_loop(shared: &Shared) {
             // concatenated forward produces for each sample exactly the
             // bits its own per-request forward would (module docs)
             let images: usize = group.iter().map(|p| p.images).sum();
+            let sp = sink.as_mut().map(|s| {
+                s.open(
+                    "serve",
+                    "service",
+                    vec![
+                        ("model", AttrVal::Str(id.to_string())),
+                        ("version", AttrVal::U64(entry.version)),
+                        ("fused", AttrVal::Bool(true)),
+                        ("requests", AttrVal::U64(group.len() as u64)),
+                        ("images", AttrVal::U64(images as u64)),
+                    ],
+                )
+            });
             let mut x: Vec<f32> = Vec::with_capacity(images * entry.image_len);
             for p in &group {
                 x.extend_from_slice(&p.x);
@@ -516,6 +701,7 @@ fn worker_loop(shared: &Shared) {
                             &p.ticket,
                             Ok(Response { logits, images: p.images, version: entry.version }),
                         );
+                        record_latency(shared, id, entry.version, p.t_enq_ns);
                     }
                 }
                 Err(e) => {
@@ -526,6 +712,9 @@ fn worker_loop(shared: &Shared) {
                     }
                 }
             }
+            if let Some(sp) = sp {
+                sink.as_mut().expect("sink opened the span").close(sp);
+            }
             continue;
         }
         for p in &group {
@@ -533,14 +722,52 @@ fn worker_loop(shared: &Shared) {
             // batch-stat BN depend on batch composition, so for dynamic
             // models this — not cross-request fusion — is what keeps
             // every response bit-identical to the serial oracle
+            let sp = sink.as_mut().map(|s| {
+                s.open(
+                    "serve",
+                    "service",
+                    vec![
+                        ("model", AttrVal::Str(id.to_string())),
+                        ("version", AttrVal::U64(entry.version)),
+                        ("fused", AttrVal::Bool(false)),
+                        ("requests", AttrVal::U64(1)),
+                        ("images", AttrVal::U64(p.images as u64)),
+                    ],
+                )
+            });
             let res = match engine.infer_logits(&p.x, p.images) {
                 Ok(logits) => {
                     Ok(Response { logits, images: p.images, version: entry.version })
                 }
                 Err(e) => Err(ServeError::Engine(e.to_string())),
             };
+            let served = res.is_ok();
             complete(shared, &p.ticket, res);
+            if served {
+                record_latency(shared, id, entry.version, p.t_enq_ns);
+            }
+            if let Some(sp) = sp {
+                sink.as_mut().expect("sink opened the span").close(sp);
+            }
         }
+    }
+    if let (Some(o), Some(mut s)) = (shared.obs.as_ref(), sink) {
+        o.lanes.lock().unwrap().push((lane, s.drain()));
+    }
+}
+
+/// Record one successfully served request's submit→response latency
+/// into its (model, version) rolling histogram. No-op (no clock read)
+/// when tracing is off.
+fn record_latency(shared: &Shared, model: &str, version: u64, t_enq_ns: u64) {
+    if let Some(o) = &shared.obs {
+        let dur = obs::now_ns().saturating_sub(t_enq_ns);
+        o.hists
+            .lock()
+            .unwrap()
+            .entry((model.to_string(), version))
+            .or_default()
+            .record(dur);
     }
 }
 

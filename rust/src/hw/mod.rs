@@ -13,5 +13,5 @@ pub mod ppa;
 pub mod shift_add;
 
 pub use mac_models::{MacImpl, MAC_IMPLS};
-pub use ppa::{model_ppa, PpaReport};
+pub use ppa::{layer_cycles, model_ppa, PpaReport};
 pub use shift_add::{multiply_exact, weight_cycles, CycleCounter, ShiftAddConfig};

@@ -32,20 +32,15 @@ pub fn model_ppa(
     bits: &BitAssignment,
     cfg: ShiftAddConfig,
 ) -> PpaReport {
-    assert_eq!(weights.len(), arch.num_qlayers());
-    assert_eq!(bits.len(), arch.num_qlayers());
-    let counter = CycleCounter::new(cfg);
+    let per_layer = layer_cycles(arch, weights, bits, cfg);
     let mut cycles = 0.0;
     let mut energy = 0.0;
     for (i, q) in arch.qlayers.iter().enumerate() {
-        let b = bits.bits[i];
-        let ql = quantize_to_int(&weights[i], q.out_channels, b);
-        let uses = q.macs as f64 / q.weight_count as f64;
-        let layer_cycles = counter.layer_cycles(&ql.codes, uses);
-        cycles += layer_cycles;
+        let lc = per_layer[i];
+        cycles += lc;
         // per-MAC overhead + per-cycle switching + per-bit weight fetch
         energy += q.macs as f64
-            * shift_add_energy(layer_cycles / q.macs as f64, b as f64);
+            * shift_add_energy(lc / q.macs as f64, bits.bits[i] as f64);
     }
     let macs = arch.total_macs as f64;
     PpaReport {
@@ -56,6 +51,31 @@ pub fn model_ppa(
         energy_vs_int8: energy / macs,
         mean_cycles_per_mac: cycles / macs,
     }
+}
+
+/// Predicted shift-add cycles per quantizable layer — the exact
+/// per-layer terms [`model_ppa`] sums into `cycles`. The deploy CLI's
+/// `--trace` report joins these against the *measured* per-layer span
+/// breakdown so the PPA model's cycle shares can be compared with where
+/// the integer engine actually spends its time.
+pub fn layer_cycles(
+    arch: &ArchSpec,
+    weights: &[Vec<f32>],
+    bits: &BitAssignment,
+    cfg: ShiftAddConfig,
+) -> Vec<f64> {
+    assert_eq!(weights.len(), arch.num_qlayers());
+    assert_eq!(bits.len(), arch.num_qlayers());
+    let counter = CycleCounter::new(cfg);
+    arch.qlayers
+        .iter()
+        .enumerate()
+        .map(|(i, q)| {
+            let ql = quantize_to_int(&weights[i], q.out_channels, bits.bits[i]);
+            let uses = q.macs as f64 / q.weight_count as f64;
+            counter.layer_cycles(&ql.codes, uses)
+        })
+        .collect()
 }
 
 /// PPA of a fixed-cycle implementation (FP32/FP16/BF16/INT8 rows).

@@ -30,6 +30,10 @@
 //! * [`data`] — deterministic synthetic dataset.
 //! * [`experiments`], [`report`] — one module per paper table/figure
 //!   (EXPERIMENTS.md maps each to the paper).
+//! * [`obs`] — zero-overhead structured tracing: per-worker span sinks
+//!   with deterministic merge, log2-bucket latency histograms, JSONL
+//!   trace export (`deploy --trace` / `serve --trace`); observation-only
+//!   by construction so every bit-identity pin holds with tracing on.
 //! * [`util`] — zero-dependency substrates (JSON, RNG, CLI, prop-testing,
 //!   the deterministic worker pool).
 
@@ -52,6 +56,7 @@ pub mod deploy;
 pub mod experiments;
 pub mod hw;
 pub mod manifest;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -17,7 +17,8 @@ use sigmaquant::deploy::{
 use sigmaquant::experiments::common::{make_backend, Ctx};
 use sigmaquant::experiments::{ablation, fig3, fig4, fig5, table1,
                               table2, table3, table4, table5, table6};
-use sigmaquant::hw::{model_ppa, ShiftAddConfig};
+use sigmaquant::hw::{layer_cycles, model_ppa, ShiftAddConfig};
+use sigmaquant::obs;
 use sigmaquant::quant::{int8_size_bytes, model_size_bytes, BitAssignment};
 use sigmaquant::runtime::native::kernel;
 use sigmaquant::runtime::{Backend, NativeBackend};
@@ -45,6 +46,9 @@ COMMANDS
              from ~N calibration images into a static v2 artifact; the
              engine then runs the single-pass path, default 0 = dynamic)
              --out FILE (default <results dir>/deploy/<arch>.sqdm)
+             --trace (record structured spans: per-layer quant/gemm/
+             epilogue breakdown vs the PPA cycle model, trace written
+             to <results dir>/TRACE_deploy_<arch>.jsonl)
   serve      start the bounded-queue multi-model serving daemon on packed
              artifacts and drive it with closed-loop synthetic clients;
              reports req/s, p50/p99 latency and the zero-drop audit
@@ -57,6 +61,12 @@ COMMANDS
              --requests N per client (default 64)
              --swap (hot-swap the first model mid-run: a re-trained
              export with --arch, a re-loaded artifact with --model)
+             --trace (record per-request queue-wait/service spans to
+             <results dir>/TRACE_serve.jsonl; final report adds served
+             p50/p99 per model version)
+             --stats-every MS (print a machine-readable JSON stats
+             snapshot line every MS milliseconds while serving;
+             implies the rolling latency histograms)
   table1     sigma/KL vs bits on alexnet_mini
   table2     phase-1 vs final across the ResNet family [--archs a,b,...]
   table3     comparison vs baselines [--archs resnet50_mini,inception_mini]
@@ -243,6 +253,12 @@ fn parse_bits(spec: &str, layers: usize) -> Result<BitAssignment> {
 /// run it on eval batches, and report measured bytes / latency /
 /// accuracy next to the `quant/size.rs` + `hw/ppa.rs` predictions.
 fn deploy(a: &Args, eval_n: usize, qat: usize) -> Result<()> {
+    let trace = a.flag("trace");
+    if trace {
+        // before any engine/session construction: sinks snapshot the
+        // flag when they are built (see sigmaquant::obs)
+        obs::set_enabled(true);
+    }
     let par = match a.get("threads") {
         Some(_) => Parallelism::new(a.get_usize("threads", 1)),
         None => Parallelism::available(),
@@ -396,6 +412,55 @@ fn deploy(a: &Args, eval_n: usize, qat: usize) -> Result<()> {
     let sel = kernel::selected();
     println!("  kernel  : {} ({})", sel.kind.name(), sel.reason);
     println!("  artifact: {} (round-trip byte-identical)", out_path.display());
+
+    if trace {
+        // measured per-layer span breakdown vs the PPA cycle model's
+        // predicted shares — where the engine spends time vs where the
+        // shift-add model says the cycles go
+        let engine_lanes = engine.take_trace();
+        let rows = obs::layer_breakdown(&engine_lanes);
+        let pred = layer_cycles(
+            &session.arch,
+            &session.all_qlayer_weights(),
+            &wbits,
+            ShiftAddConfig::default(),
+        );
+        let meas_total: u64 = rows
+            .iter()
+            .map(|r| r.quant_ns + r.gemm_ns + r.epilogue_ns)
+            .sum();
+        let pred_total: f64 = pred.iter().sum();
+        println!("\n  per-layer (measured integer engine vs PPA cycle model):");
+        println!(
+            "  {:<4} {:<20} {:<7} {:>9} {:>9} {:>9} {:>7} {:>7}",
+            "idx", "layer", "kernel", "quant us", "gemm us", "epi us", "meas%", "ppa%"
+        );
+        for r in &rows {
+            let layer_ns = r.quant_ns + r.gemm_ns + r.epilogue_ns;
+            let ppa_pct = pred
+                .get(r.layer)
+                .map_or(0.0, |c| 100.0 * c / pred_total.max(1e-12));
+            println!(
+                "  {:<4} {:<20} {:<7} {:>9.1} {:>9.1} {:>9.1} {:>6.1}% {:>6.1}%",
+                r.layer,
+                r.name,
+                r.kernel,
+                r.quant_ns as f64 / 1e3,
+                r.gemm_ns as f64 / 1e3,
+                r.epilogue_ns as f64 / 1e3,
+                100.0 * layer_ns as f64 / (meas_total as f64).max(1.0),
+                ppa_pct
+            );
+        }
+        let mut lanes = vec![("coord".to_string(), obs::take_coord_events())];
+        lanes.extend(
+            engine_lanes.into_iter().map(|(i, evs)| (format!("engine/{i}"), evs)),
+        );
+        let trace_path = ctx.results_path(&format!("TRACE_deploy_{arch}.jsonl"));
+        obs::write_trace(&trace_path, &lanes)?;
+        let events: usize = lanes.iter().map(|(_, evs)| evs.len()).sum();
+        println!("  trace   : {} ({events} events)", trace_path.display());
+    }
     Ok(())
 }
 
@@ -405,6 +470,14 @@ fn deploy(a: &Args, eval_n: usize, qat: usize) -> Result<()> {
 /// percentiles, optional mid-run hot-swap, and the zero-drop audit
 /// (accepted == completed, nothing errored).
 fn serve(a: &Args, qat: usize) -> Result<()> {
+    let trace = a.flag("trace");
+    let stats_every = a.get_usize("stats-every", 0);
+    if trace || stats_every > 0 {
+        // before the daemon (and any engine) is built: the daemon's
+        // latency histograms and the workers' sinks check the flag at
+        // construction (see sigmaquant::obs)
+        obs::set_enabled(true);
+    }
     let par = match a.get("threads") {
         Some(_) => Parallelism::new(a.get_usize("threads", 1)),
         None => Parallelism::available(),
@@ -527,8 +600,24 @@ fn serve(a: &Args, qat: usize) -> Result<()> {
 
     let t0 = Instant::now();
     let mut latencies: Vec<f64> = Vec::with_capacity(total);
+    let stop = std::sync::atomic::AtomicBool::new(false);
     std::thread::scope(|s| -> Result<()> {
         let server = s.spawn(|| daemon.run());
+        // periodic machine-readable stats snapshots (--stats-every MS):
+        // one JSON line per tick, same schema as ServeStats::json_line
+        let monitor = (stats_every > 0).then(|| {
+            let h = handle.clone();
+            let stop = &stop;
+            s.spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::thread::sleep(std::time::Duration::from_millis(stats_every as u64));
+                    if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        break;
+                    }
+                    println!("{}", h.stats().json_line());
+                }
+            })
+        });
         let mut joins = Vec::with_capacity(clients);
         for c in 0..clients {
             let h = handle.clone();
@@ -586,8 +675,12 @@ fn serve(a: &Args, qat: usize) -> Result<()> {
                 Err(_) => fail = Some("client thread panicked".to_string()),
             }
         }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
         handle.shutdown();
         server.join().expect("server thread");
+        if let Some(m) = monitor {
+            m.join().expect("stats monitor thread");
+        }
         match fail {
             Some(e) => bail!("{e}"),
             None => Ok(()),
@@ -615,6 +708,31 @@ fn serve(a: &Args, qat: usize) -> Result<()> {
     );
     for (id, v) in handle.models() {
         println!("  model   : {id:?} now v{v}");
+    }
+    // served-latency percentiles per (model, version) — populated only
+    // when the recorder is on (--trace / --stats-every)
+    for ml in &st.latency {
+        println!(
+            "  served  : {:?} v{} n={} | p50 {:.1} us | p99 {:.1} us | mean {:.1} us",
+            ml.model,
+            ml.version,
+            ml.served,
+            ml.p50_ns as f64 / 1e3,
+            ml.p99_ns as f64 / 1e3,
+            ml.mean_ns as f64 / 1e3
+        );
+    }
+    if trace {
+        let lanes: Vec<_> = handle
+            .take_trace()
+            .into_iter()
+            .map(|(lane, evs)| (format!("worker/{lane}"), evs))
+            .collect();
+        let trace_path =
+            std::path::Path::new(a.get_or("results", "results")).join("TRACE_serve.jsonl");
+        obs::write_trace(&trace_path, &lanes)?;
+        let events: usize = lanes.iter().map(|(_, evs)| evs.len()).sum();
+        println!("  trace   : {} ({events} events)", trace_path.display());
     }
     if st.errored != 0 || st.accepted != st.completed {
         bail!(

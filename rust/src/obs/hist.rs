@@ -1,0 +1,204 @@
+//! Streaming log2-bucket latency histogram with exact-at-bucket
+//! percentile read-out.
+//!
+//! A sample of `ns` nanoseconds lands in bucket `⌊log2 ns⌋ + 1`
+//! (bucket 0 holds exactly the zero samples), i.e. bucket `b ≥ 1`
+//! covers `[2^(b-1), 2^b)`. Recording is O(1) with no allocation
+//! after construction; merging two histograms is a commutative
+//! element-wise add, so the merged distribution is independent of
+//! merge order — the property the deterministic-sink-merge test
+//! leans on.
+//!
+//! Percentiles are *exact at bucket resolution*: `percentile_ns(p)`
+//! returns precisely [`bucket_floor`] of the true order statistic
+//! `sorted[⌊(n-1)·p⌋]` (the same truncating nearest-rank rule the
+//! serve bench uses). That makes the read-out a testable equality
+//! against a sorted oracle, not an approximation bound.
+
+/// Number of buckets: one for zero plus one per possible leading-bit
+/// position of a `u64` sample.
+const BUCKETS: usize = 65;
+
+/// Largest power of two `≤ ns` (and `0` for `0`): the lower edge of
+/// the log2 bucket `ns` falls into. Public so tests can state the
+/// percentile-exactness pin (`hist.percentile_ns(p) ==
+/// bucket_floor(sorted[rank])`) without re-deriving bucket math.
+#[inline]
+pub fn bucket_floor(ns: u64) -> u64 {
+    if ns == 0 {
+        0
+    } else {
+        1u64 << (63 - ns.leading_zeros())
+    }
+}
+
+#[inline]
+fn bucket_index(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        64 - ns.leading_zeros() as usize
+    }
+}
+
+/// Fixed-size streaming histogram of nanosecond latencies.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHist {
+    counts: [u64; BUCKETS],
+    n: u64,
+    sum_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self { counts: [0; BUCKETS], n: 0, sum_ns: 0, min_ns: u64::MAX, max_ns: 0 }
+    }
+
+    /// Record one sample. O(1), allocation-free.
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        self.counts[bucket_index(ns)] += 1;
+        self.n += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Fold `other` into `self`. Element-wise adds only, so merge
+    /// order cannot change the result.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        if self.n == 0 {
+            0
+        } else {
+            self.sum_ns / self.n
+        }
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min_ns(&self) -> u64 {
+        if self.n == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Bucket floor of the order statistic at truncating nearest rank
+    /// `⌊(n-1)·p⌋` — exactly `bucket_floor(sorted[rank])`, the value a
+    /// sorted oracle would bucket to. Returns 0 when empty; `p` is
+    /// clamped to `[0, 1]`.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let p = p.clamp(0.0, 1.0);
+        let rank = ((self.n - 1) as f64 * p) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return if b == 0 { 0 } else { 1u64 << (b - 1) };
+            }
+        }
+        // Unreachable: seen == n > rank by the loop's end.
+        self.max_ns
+    }
+
+    /// Convenience pair used by the serve report: `(p50, p99)`.
+    pub fn p50_p99_ns(&self) -> (u64, u64) {
+        (self.percentile_ns(0.50), self.percentile_ns(0.99))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oracle(sorted: &[u64], p: f64) -> u64 {
+        let rank = ((sorted.len() - 1) as f64 * p) as usize;
+        bucket_floor(sorted[rank])
+    }
+
+    #[test]
+    fn bucket_floor_edges() {
+        assert_eq!(bucket_floor(0), 0);
+        assert_eq!(bucket_floor(1), 1);
+        assert_eq!(bucket_floor(2), 2);
+        assert_eq!(bucket_floor(3), 2);
+        assert_eq!(bucket_floor(1023), 512);
+        assert_eq!(bucket_floor(1024), 1024);
+        assert_eq!(bucket_floor(u64::MAX), 1u64 << 63);
+    }
+
+    #[test]
+    fn percentiles_match_sorted_oracle() {
+        let samples: Vec<u64> =
+            (0..500u64).map(|i| (i * 2654435761) % 1_000_000).collect();
+        let mut h = LatencyHist::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for &p in &[0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(h.percentile_ns(p), oracle(&sorted, p), "p={p}");
+        }
+        assert_eq!(h.count(), 500);
+        assert_eq!(h.min_ns(), sorted[0]);
+        assert_eq!(h.max_ns(), *sorted.last().unwrap());
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        for i in 0..100u64 {
+            a.record(i * 17 % 4096);
+            b.record(i * 31 % 65536);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.count(), 200);
+    }
+
+    #[test]
+    fn empty_hist_reads_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 0);
+    }
+}

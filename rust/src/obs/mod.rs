@@ -1,0 +1,115 @@
+//! Zero-overhead structured observability: spans, counters and
+//! streaming latency histograms for the deploy engine, the serve
+//! daemon and the coordinator (DESIGN.md §13).
+//!
+//! # Design
+//!
+//! The recorder is **observation-only** by construction: nothing it
+//! measures ever feeds back into a computation, a partition choice or
+//! a scheduling decision, so numeric results are bit-identical with
+//! tracing enabled or disabled at every thread count — the same
+//! contract as the trainer's BN tracking (DESIGN.md §12) and pinned by
+//! `rust/tests/obs_trace.rs`. When tracing is *disabled* the
+//! instrumentation collapses to a no-op: every call-site is gated on a
+//! sink that is `None` (one branch — no `Instant::now`, no
+//! allocation), so the hot paths the benches track do not move.
+//!
+//! Events buffer into **per-worker sinks** ([`TraceSink`]) owned by
+//! whatever already owns the thread-local state: the deploy engine's
+//! fork-local scratch arena, a serve worker's service loop, the
+//! coordinator's (driver-serial) global sink. Sinks are merged at
+//! flush time in deterministic partition order — engine lane 0 then
+//! eval forks ascending, serve lanes by worker index — never through
+//! shared mutable timing state on the hot path.
+//!
+//! Traces export as JSON-lines (`results/TRACE_<name>.jsonl`, one
+//! event per line via [`write_trace`], escaped with
+//! [`crate::util::json::escape`] so they re-parse through
+//! [`crate::util::json::parse`]); latency distributions aggregate into
+//! log2-bucket [`LatencyHist`]s whose percentile read-out is exact at
+//! bucket resolution (the returned value is precisely the bucket floor
+//! of the true order statistic — see [`LatencyHist::percentile_ns`]).
+//!
+//! Enable with `SIGMAQUANT_TRACE=1`, programmatically via
+//! [`set_enabled`], or through the `deploy --trace` / `serve --trace`
+//! CLI flags. Sinks snapshot the flag at construction time, so enable
+//! tracing *before* building the engines/daemons you want traced.
+
+mod hist;
+mod sink;
+mod trace;
+
+pub use hist::{bucket_floor, LatencyHist};
+pub use sink::{coord_span, take_coord_events, AttrVal, CoordSpan, Event, OpenSpan, TraceSink};
+pub use trace::{layer_breakdown, write_trace, LayerBreakdown};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Env var force-enabling the recorder (`1`/`true`/`on`); the CI trace
+/// rerun sets it to prove instrumentation never perturbs results.
+pub const TRACE_ENV: &str = "SIGMAQUANT_TRACE";
+
+/// `0` = undecided (read [`TRACE_ENV`] on first query), `1` = off,
+/// `2` = on. Relaxed suffices: the flag only gates whether sinks are
+/// *created*, never what any computation produces.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+fn init_state() -> u8 {
+    match std::env::var(TRACE_ENV) {
+        Ok(v) => {
+            let on = matches!(v.trim().to_ascii_lowercase().as_str(), "1" | "true" | "on");
+            if on {
+                2
+            } else {
+                1
+            }
+        }
+        Err(_) => 1,
+    }
+}
+
+/// Whether the recorder is on. One relaxed atomic load on the fast
+/// path (first call reads [`TRACE_ENV`] once).
+#[inline]
+pub fn enabled() -> bool {
+    let s = STATE.load(Ordering::Relaxed);
+    if s != 0 {
+        return s == 2;
+    }
+    let fresh = init_state();
+    STATE.store(fresh, Ordering::Relaxed);
+    fresh == 2
+}
+
+/// Force the recorder on or off (tests, benches, the `--trace` CLI
+/// flags). Overrides [`TRACE_ENV`]. Sinks created while the flag was
+/// in its previous state keep that state — they check at construction.
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Monotone process clock origin: every timestamp in a trace is
+/// nanoseconds since the first `now_ns` call, so spans from different
+/// sinks share one time base.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process trace epoch. Only call behind an
+/// enabled-gate: the disabled path must never reach a clock read.
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_ns_is_monotone() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,331 @@
+//! Per-worker event sinks: buffered spans and instant events with
+//! stack-based parenting, plus the mutex-guarded coordinator sink for
+//! driver-level phases whose bodies run on pool threads.
+
+use std::sync::Mutex;
+
+use super::now_ns;
+
+/// Attribute value attached to an event. Static strings avoid
+/// allocating for the common kernel/kind labels; owned strings carry
+/// model and layer names.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrVal {
+    U64(u64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+    SStr(&'static str),
+}
+
+impl From<u64> for AttrVal {
+    fn from(v: u64) -> Self {
+        AttrVal::U64(v)
+    }
+}
+impl From<usize> for AttrVal {
+    fn from(v: usize) -> Self {
+        AttrVal::U64(v as u64)
+    }
+}
+impl From<f64> for AttrVal {
+    fn from(v: f64) -> Self {
+        AttrVal::F64(v)
+    }
+}
+impl From<bool> for AttrVal {
+    fn from(v: bool) -> Self {
+        AttrVal::Bool(v)
+    }
+}
+impl From<String> for AttrVal {
+    fn from(v: String) -> Self {
+        AttrVal::Str(v)
+    }
+}
+impl From<&'static str> for AttrVal {
+    fn from(v: &'static str) -> Self {
+        AttrVal::SStr(v)
+    }
+}
+
+impl AttrVal {
+    /// Borrow the string content regardless of ownership flavor.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            AttrVal::Str(s) => Some(s),
+            AttrVal::SStr(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded event: a closed span (`span == true`, `dur_ns` set) or
+/// an instant marker. `seq` is unique *within one sink* and `parent`
+/// refers to the enclosing open span's `seq` in the same sink; lane
+/// identity is attached at write time by [`super::write_trace`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub parent: Option<u64>,
+    pub span: bool,
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub t_ns: u64,
+    pub dur_ns: u64,
+    pub attrs: Vec<(&'static str, AttrVal)>,
+}
+
+/// Token for an in-flight span opened on a [`TraceSink`]. Must be
+/// closed on the same sink, LIFO — the sink asserts the discipline.
+#[must_use = "an open span must be closed on its sink"]
+#[derive(Debug)]
+pub struct OpenSpan {
+    idx: usize,
+    seq: u64,
+}
+
+/// A per-worker event buffer. One sink per execution lane (engine
+/// scratch, engine fork, serve worker); never shared across threads,
+/// so recording is lock-free and allocation is amortized by the
+/// buffer. Drained lanes are merged in deterministic partition order
+/// by the owner at flush time.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    events: Vec<Event>,
+    stack: Vec<(usize, u64)>,
+    next_seq: u64,
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn alloc_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// Open a span at the current time, parented to the innermost
+    /// still-open span on this sink.
+    pub fn open(
+        &mut self,
+        cat: &'static str,
+        name: &'static str,
+        attrs: Vec<(&'static str, AttrVal)>,
+    ) -> OpenSpan {
+        let seq = self.alloc_seq();
+        let parent = self.stack.last().map(|&(_, s)| s);
+        let idx = self.events.len();
+        self.events.push(Event {
+            seq,
+            parent,
+            span: true,
+            cat,
+            name,
+            t_ns: now_ns(),
+            dur_ns: 0,
+            attrs,
+        });
+        self.stack.push((idx, seq));
+        OpenSpan { idx, seq }
+    }
+
+    /// Close the span, stamping its duration. Spans close LIFO.
+    pub fn close(&mut self, span: OpenSpan) {
+        let (idx, seq) = self.stack.pop().expect("close with no open span");
+        debug_assert_eq!((idx, seq), (span.idx, span.seq), "spans must close LIFO");
+        let ev = &mut self.events[idx];
+        ev.dur_ns = now_ns().saturating_sub(ev.t_ns);
+    }
+
+    /// Add an attribute to a still-open span (e.g. a result computed
+    /// inside the span body).
+    pub fn attr(&mut self, span: &OpenSpan, key: &'static str, val: AttrVal) {
+        self.events[span.idx].attrs.push((key, val));
+    }
+
+    /// Record an instant (zero-duration) event at the current time.
+    pub fn instant(
+        &mut self,
+        cat: &'static str,
+        name: &'static str,
+        attrs: Vec<(&'static str, AttrVal)>,
+    ) {
+        let seq = self.alloc_seq();
+        let parent = self.stack.last().map(|&(_, s)| s);
+        self.events.push(Event {
+            seq,
+            parent,
+            span: false,
+            cat,
+            name,
+            t_ns: now_ns(),
+            dur_ns: 0,
+            attrs,
+        });
+    }
+
+    /// Record an already-timed closed span (e.g. queue wait measured
+    /// between enqueue and pop timestamps taken elsewhere).
+    pub fn span_at(
+        &mut self,
+        cat: &'static str,
+        name: &'static str,
+        t_ns: u64,
+        dur_ns: u64,
+        attrs: Vec<(&'static str, AttrVal)>,
+    ) {
+        let seq = self.alloc_seq();
+        let parent = self.stack.last().map(|&(_, s)| s);
+        self.events.push(Event {
+            seq,
+            parent,
+            span: true,
+            cat,
+            name,
+            t_ns,
+            dur_ns,
+            attrs,
+        });
+    }
+
+    /// Number of buffered events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Take the buffered events, leaving the sink empty but reusable.
+    /// Sequence numbering continues, so repeated drains stay globally
+    /// ordered within the lane.
+    pub fn drain(&mut self) -> Vec<Event> {
+        debug_assert!(self.stack.is_empty(), "drain with open spans");
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// Coordinator events land in one process-global mutex-guarded store:
+/// phase-2 evaluates candidates concurrently on pool threads, so a
+/// stack-parented per-thread sink would interleave nondeterministically.
+/// Coordinator spans are therefore flat (`parent: None`), recorded
+/// whole at close, and ordered by a global sequence — contention is
+/// negligible because spans close at phase/QAT-burst granularity.
+static COORD: Mutex<(u64, Vec<Event>)> = Mutex::new((0, Vec::new()));
+
+fn coord_store() -> std::sync::MutexGuard<'static, (u64, Vec<Event>)> {
+    COORD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// RAII guard for a coordinator-level span. Inert (no clock read, no
+/// allocation beyond the guard itself) when tracing is disabled at
+/// construction; otherwise records one closed span on drop.
+#[derive(Debug)]
+pub struct CoordSpan {
+    armed: bool,
+    cat: &'static str,
+    name: &'static str,
+    t0: u64,
+    attrs: Vec<(&'static str, AttrVal)>,
+}
+
+impl CoordSpan {
+    /// Attach an attribute (no-op when the span is inert).
+    pub fn attr(&mut self, key: &'static str, val: AttrVal) {
+        if self.armed {
+            self.attrs.push((key, val));
+        }
+    }
+}
+
+impl Drop for CoordSpan {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let dur = now_ns().saturating_sub(self.t0);
+        let mut store = coord_store();
+        let seq = store.0;
+        store.0 += 1;
+        store.1.push(Event {
+            seq,
+            parent: None,
+            span: true,
+            cat: self.cat,
+            name: self.name,
+            t_ns: self.t0,
+            dur_ns: dur,
+            attrs: std::mem::take(&mut self.attrs),
+        });
+    }
+}
+
+/// Open a coordinator span; it records itself when dropped.
+pub fn coord_span(cat: &'static str, name: &'static str) -> CoordSpan {
+    let armed = super::enabled();
+    CoordSpan {
+        armed,
+        cat,
+        name,
+        t0: if armed { now_ns() } else { 0 },
+        attrs: Vec::new(),
+    }
+}
+
+/// Drain the global coordinator store (events in record order) and
+/// reset its sequence counter.
+pub fn take_coord_events() -> Vec<Event> {
+    let mut store = coord_store();
+    store.0 = 0;
+    std::mem::take(&mut store.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_parent() {
+        let mut s = TraceSink::new();
+        let outer = s.open("t", "outer", vec![]);
+        let inner = s.open("t", "inner", vec![("k", AttrVal::U64(7))]);
+        s.instant("t", "mark", vec![]);
+        s.close(inner);
+        s.close(outer);
+        let ev = s.drain();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].name, "outer");
+        assert_eq!(ev[0].parent, None);
+        assert_eq!(ev[1].name, "inner");
+        assert_eq!(ev[1].parent, Some(ev[0].seq));
+        assert_eq!(ev[2].name, "mark");
+        assert_eq!(ev[2].parent, Some(ev[1].seq));
+        assert!(ev[1].dur_ns <= ev[0].dur_ns + ev[1].t_ns.saturating_sub(ev[0].t_ns));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn span_at_records_pretimed() {
+        let mut s = TraceSink::new();
+        s.span_at("t", "wait", 100, 40, vec![("m", AttrVal::SStr("x"))]);
+        let ev = s.drain();
+        assert_eq!(ev[0].t_ns, 100);
+        assert_eq!(ev[0].dur_ns, 40);
+        assert!(ev[0].span);
+    }
+
+    #[test]
+    fn drain_keeps_seq_monotone() {
+        let mut s = TraceSink::new();
+        s.instant("t", "a", vec![]);
+        let first = s.drain();
+        s.instant("t", "b", vec![]);
+        let second = s.drain();
+        assert!(second[0].seq > first[0].seq);
+    }
+}

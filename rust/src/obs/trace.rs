@@ -1,0 +1,246 @@
+//! Trace export (JSON-lines) and per-layer span aggregation.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use super::sink::{AttrVal, Event};
+use crate::util::json::escape;
+
+fn push_attr_val(out: &mut String, v: &AttrVal) {
+    match v {
+        AttrVal::U64(u) => {
+            let _ = write!(out, "{u}");
+        }
+        AttrVal::F64(f) => {
+            let _ = write!(out, "{f}");
+        }
+        AttrVal::Bool(b) => {
+            let _ = write!(out, "{b}");
+        }
+        AttrVal::Str(s) => {
+            let _ = write!(out, "\"{}\"", escape(s));
+        }
+        AttrVal::SStr(s) => {
+            let _ = write!(out, "\"{}\"", escape(s));
+        }
+    }
+}
+
+/// Render one event as a JSON object (no trailing newline). Strings
+/// go through [`crate::util::json::escape`] so the line re-parses via
+/// [`crate::util::json::parse`].
+pub fn event_to_json(lane: &str, ev: &Event) -> String {
+    let mut out = String::with_capacity(128);
+    let _ = write!(
+        out,
+        "{{\"lane\":\"{}\",\"seq\":{},\"parent\":",
+        escape(lane),
+        ev.seq
+    );
+    match ev.parent {
+        Some(p) => {
+            let _ = write!(out, "{p}");
+        }
+        None => out.push_str("null"),
+    }
+    let _ = write!(
+        out,
+        ",\"kind\":\"{}\",\"cat\":\"{}\",\"name\":\"{}\",\"t_ns\":{},\"dur_ns\":{},\"attrs\":{{",
+        if ev.span { "span" } else { "event" },
+        escape(ev.cat),
+        escape(ev.name),
+        ev.t_ns,
+        ev.dur_ns
+    );
+    for (i, (k, v)) in ev.attrs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\"{}\":", escape(k));
+        push_attr_val(&mut out, v);
+    }
+    out.push_str("}}");
+    out
+}
+
+/// Write lanes of events as a JSONL trace, one event per line, lanes
+/// in the given (deterministic) slice order. Re-writing the same
+/// lanes produces byte-identical output.
+pub fn write_trace(path: &Path, lanes: &[(String, Vec<Event>)]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut buf = String::new();
+    for (lane, events) in lanes {
+        for ev in events {
+            buf.push_str(&event_to_json(lane, ev));
+            buf.push('\n');
+        }
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(buf.as_bytes())?;
+    f.flush()
+}
+
+/// Per-layer stage totals aggregated from an engine trace: wall time
+/// summed over every batch and lane, attributed to the dispatched
+/// kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerBreakdown {
+    /// Quantized-layer index within the plan.
+    pub layer: usize,
+    pub name: String,
+    pub kind: String,
+    /// Dispatched GEMM kernel name ("scalar" / "avx2" / "neon").
+    pub kernel: String,
+    /// Total activation-quantization (range scan + code pack) time.
+    pub quant_ns: u64,
+    /// Total integer GEMM time.
+    pub gemm_ns: u64,
+    /// Total requantization-epilogue time.
+    pub epilogue_ns: u64,
+    /// Number of layer spans (batch executions) aggregated.
+    pub batches: u64,
+    /// Total images across those batches.
+    pub images: u64,
+}
+
+fn attr_u64(ev: &Event, key: &str) -> Option<u64> {
+    ev.attrs.iter().find_map(|(k, v)| {
+        if *k == key {
+            if let AttrVal::U64(u) = v {
+                return Some(*u);
+            }
+        }
+        None
+    })
+}
+
+fn attr_str<'a>(ev: &'a Event, key: &str) -> Option<&'a str> {
+    ev.attrs
+        .iter()
+        .find_map(|(k, v)| if *k == key { v.as_str() } else { None })
+}
+
+/// Aggregate `layer` spans and their `quant`/`gemm`/`epilogue`
+/// children across every lane of an engine trace into per-layer stage
+/// totals, sorted by layer index.
+pub fn layer_breakdown(lanes: &[(usize, Vec<Event>)]) -> Vec<LayerBreakdown> {
+    use std::collections::BTreeMap;
+    let mut layers: BTreeMap<usize, LayerBreakdown> = BTreeMap::new();
+    for (_, events) in lanes {
+        // seq → layer index for this lane's "layer" spans, so stage
+        // children can find their parent layer.
+        let mut span_layer: BTreeMap<u64, usize> = BTreeMap::new();
+        for ev in events {
+            if ev.span && ev.name == "layer" {
+                let Some(idx) = attr_u64(ev, "layer") else { continue };
+                let idx = idx as usize;
+                span_layer.insert(ev.seq, idx);
+                let entry = layers.entry(idx).or_insert_with(|| LayerBreakdown {
+                    layer: idx,
+                    name: attr_str(ev, "layer_name").unwrap_or("").to_string(),
+                    kind: attr_str(ev, "layer_kind").unwrap_or("").to_string(),
+                    kernel: attr_str(ev, "kernel").unwrap_or("").to_string(),
+                    quant_ns: 0,
+                    gemm_ns: 0,
+                    epilogue_ns: 0,
+                    batches: 0,
+                    images: 0,
+                });
+                entry.batches += 1;
+                entry.images += attr_u64(ev, "batch").unwrap_or(0);
+            } else if ev.span {
+                let Some(parent) = ev.parent else { continue };
+                let Some(&idx) = span_layer.get(&parent) else { continue };
+                let entry = layers.get_mut(&idx).expect("parent layer seen first");
+                match ev.name {
+                    "quant" => entry.quant_ns += ev.dur_ns,
+                    "gemm" => entry.gemm_ns += ev.dur_ns,
+                    "epilogue" => entry.epilogue_ns += ev.dur_ns,
+                    _ => {}
+                }
+            }
+        }
+    }
+    layers.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        seq: u64,
+        parent: Option<u64>,
+        name: &'static str,
+        dur: u64,
+        attrs: Vec<(&'static str, AttrVal)>,
+    ) -> Event {
+        Event {
+            seq,
+            parent,
+            span: true,
+            cat: "deploy",
+            name,
+            t_ns: 0,
+            dur_ns: dur,
+            attrs,
+        }
+    }
+
+    #[test]
+    fn breakdown_sums_children_across_lanes() {
+        let layer_attrs = |idx: u64| {
+            vec![
+                ("layer", AttrVal::U64(idx)),
+                ("layer_name", AttrVal::Str(format!("conv{idx}"))),
+                ("layer_kind", AttrVal::SStr("conv")),
+                ("kernel", AttrVal::SStr("scalar")),
+                ("batch", AttrVal::U64(4)),
+            ]
+        };
+        let lane0 = vec![
+            ev(0, None, "layer", 100, layer_attrs(0)),
+            ev(1, Some(0), "quant", 10, vec![]),
+            ev(2, Some(0), "gemm", 60, vec![]),
+            ev(3, Some(0), "epilogue", 20, vec![]),
+        ];
+        let lane1 = vec![
+            ev(0, None, "layer", 90, layer_attrs(0)),
+            ev(1, Some(0), "gemm", 50, vec![]),
+        ];
+        let rows = layer_breakdown(&[(0, lane0), (1, lane1)]);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.layer, 0);
+        assert_eq!(r.name, "conv0");
+        assert_eq!(r.kernel, "scalar");
+        assert_eq!(r.quant_ns, 10);
+        assert_eq!(r.gemm_ns, 110);
+        assert_eq!(r.epilogue_ns, 20);
+        assert_eq!(r.batches, 2);
+        assert_eq!(r.images, 8);
+    }
+
+    #[test]
+    fn event_json_escapes_strings() {
+        let e = Event {
+            seq: 3,
+            parent: Some(1),
+            span: false,
+            cat: "serve",
+            name: "tick",
+            t_ns: 5,
+            dur_ns: 0,
+            attrs: vec![("model", AttrVal::Str("a\"b\\c".to_string()))],
+        };
+        let line = event_to_json("serve/0", &e);
+        assert!(line.contains("\"model\":\"a\\\"b\\\\c\""));
+        assert!(line.contains("\"parent\":1"));
+        assert!(line.contains("\"kind\":\"event\""));
+    }
+}

@@ -62,6 +62,29 @@ impl Json {
     }
 }
 
+/// Escape a string for embedding inside a JSON string literal (the
+/// surrounding quotes are the caller's). The one writer-side primitive
+/// shared by every JSON emitter in the crate (`BenchReport::write`,
+/// trace export), guaranteeing emitted strings round-trip through
+/// [`parse`] — quotes, backslashes and control characters included.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Parse error with byte offset for debugging malformed manifests.
 #[derive(Debug)]
 pub struct JsonError {
@@ -306,5 +329,14 @@ mod tests {
     fn missing_key_is_null() {
         let v = parse(r#"{"a":1}"#).unwrap();
         assert!(v.get("nope").is_null());
+    }
+
+    #[test]
+    fn escape_round_trips_through_parse() {
+        let nasty = "a\"b\\c\nd\te\u{1}f/unicode é";
+        let literal = format!("\"{}\"", escape(nasty));
+        assert_eq!(parse(&literal).unwrap(), Json::Str(nasty.to_string()));
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("\u{1}"), "\\u0001");
     }
 }

@@ -14,6 +14,7 @@ pub struct Timing {
     pub median_ns: f64,
     pub min_ns: f64,
     pub p95_ns: f64,
+    pub p99_ns: f64,
 }
 
 impl Timing {
@@ -52,12 +53,16 @@ fn summarize(samples_ns: &mut [f64]) -> Timing {
     samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = samples_ns.len();
     let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    // Clamp the percentile index: the old `% n` wrapped a full-percentile
+    // index back to samples[0], reporting the *minimum* as the tail.
+    let pct = |p: f64| samples_ns[((n as f64 * p) as usize).min(n - 1)];
     Timing {
         iters: n,
         mean_ns: mean,
         median_ns: samples_ns[n / 2],
         min_ns: samples_ns[0],
-        p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+        p95_ns: pct(0.95),
+        p99_ns: pct(0.99),
     }
 }
 
@@ -95,17 +100,22 @@ impl BenchReport {
         std::fs::create_dir_all(&dir)?;
         let path = dir.join(format!("BENCH_{}.json", self.name));
         let mut f = std::fs::File::create(&path)?;
-        writeln!(f, "{{\n  \"bench\": \"{}\",", self.name)?;
+        // All interpolated strings go through the shared writer-side
+        // escaper so an op name with quotes/backslashes can't emit a
+        // report that fails its own round-trip test.
+        let esc = crate::util::json::escape;
+        writeln!(f, "{{\n  \"bench\": \"{}\",", esc(self.name))?;
         if let Some((kname, kreason)) = &self.kernel {
-            writeln!(f, "  \"kernel\": \"{kname}\",")?;
-            writeln!(f, "  \"kernel_reason\": \"{kreason}\",")?;
+            writeln!(f, "  \"kernel\": \"{}\",", esc(kname))?;
+            writeln!(f, "  \"kernel_reason\": \"{}\",", esc(kreason))?;
         }
         writeln!(f, "  \"rows\": [")?;
         for (i, (op, threads, ns)) in self.rows.iter().enumerate() {
             let comma = if i + 1 == self.rows.len() { "" } else { "," };
             writeln!(
                 f,
-                "    {{\"op\": \"{op}\", \"threads\": {threads}, \"ns_per_iter\": {ns:.1}}}{comma}"
+                "    {{\"op\": \"{}\", \"threads\": {threads}, \"ns_per_iter\": {ns:.1}}}{comma}",
+                esc(op)
             )?;
         }
         writeln!(f, "  ]\n}}")?;
@@ -157,5 +167,20 @@ mod tests {
         assert!(t.iters >= 10);
         assert!(t.min_ns <= t.median_ns);
         assert!(t.median_ns <= t.p95_ns);
+        assert!(t.p95_ns <= t.p99_ns);
+    }
+
+    #[test]
+    fn bench_report_escapes_hostile_op_names() {
+        let mut r = BenchReport::new("unit_test_escape");
+        r.set_kernel("scalar", "reason \"quoted\"");
+        r.add("op \"x\"\\path", 2, 5.0);
+        let path = r.write().expect("write report");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let parsed = crate::util::json::parse(&text).expect("valid json");
+        let rows = parsed.get("rows").as_arr().expect("rows array");
+        assert_eq!(rows[0].get("op").as_str(), Some("op \"x\"\\path"));
+        assert_eq!(parsed.get("kernel_reason").as_str(), Some("reason \"quoted\""));
+        let _ = std::fs::remove_file(path);
     }
 }

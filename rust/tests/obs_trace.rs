@@ -1,0 +1,380 @@
+//! Observability contract pins (`crate::obs`, DESIGN.md §13).
+//!
+//! The one non-negotiable invariant: instrumentation is
+//! **observation-only**. Tracing may buffer spans, histograms and
+//! counters, but it must never move a result bit — so the heart of
+//! this suite is trace-on vs trace-off bit-identity for the deploy
+//! engine (pipelined `evaluate`) and the serve daemon, at thread
+//! counts 1/2/4, on dynamic AND calibrated static artifacts. Around
+//! that pin:
+//!
+//! * JSONL export re-parses line-by-line through `util::json::parse`,
+//!   with span nesting intact (every `gemm` child points at a `layer`
+//!   span in its own lane) and the summed GEMM time attributed to the
+//!   dispatched kernel name;
+//! * `LatencyHist` percentiles are exact at bucket resolution against
+//!   a sorted oracle, including after merging per-worker partials in
+//!   any order;
+//! * per-worker sinks merge in deterministic lane order, and
+//!   re-exporting the same lanes is byte-identical;
+//! * coordinator spans land flat (no stack parenting) in the global
+//!   store — the shape that stays deterministic while phase-2
+//!   candidates evaluate concurrently.
+//!
+//! The recorder flag (`obs::set_enabled`) is process-global, so every
+//! test that flips it serializes on a file-local mutex and restores
+//! "off" before releasing it.
+
+use sigmaquant::coordinator::qat::{run_qat, TrainCursor};
+use sigmaquant::data::SynthDataset;
+use sigmaquant::deploy::{DeployEngine, QuantizedModel, ServeConfig, ServeDaemon};
+use sigmaquant::manifest::DatasetSpec;
+use sigmaquant::obs::{self, bucket_floor, LatencyHist};
+use sigmaquant::quant::BitAssignment;
+use sigmaquant::runtime::native::{default_dataset, kernel};
+use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
+use sigmaquant::util::json;
+use sigmaquant::util::pool::Parallelism;
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+/// Serializes tests that flip the process-global recorder flag
+/// (poison-recovering so one failed test doesn't cascade).
+static FLAG_LOCK: Mutex<()> = Mutex::new(());
+
+fn flag_lock() -> std::sync::MutexGuard<'static, ()> {
+    FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn small_backend(threads: usize) -> NativeBackend {
+    let ds = DatasetSpec { train_batch: 8, eval_batch: 16, ..default_dataset() };
+    NativeBackend::with_dataset_parallelism(ds, Parallelism::new(threads))
+}
+
+/// Deterministic mixed per-layer assignment covering all of {2,4,6,8}.
+fn mixed_bits(layers: usize) -> BitAssignment {
+    let bits: Vec<u8> = (0..layers).map(|i| [2u8, 4, 6, 8][(i * 3 + 1) % 4]).collect();
+    BitAssignment::new(bits).expect("mixed bits are valid")
+}
+
+/// One briefly-trained session exported twice: `("dynamic", v1)` and
+/// `("static", v2)` — the observation-only contract must hold on both
+/// execution paths.
+fn trained_models(
+    be: &NativeBackend,
+    arch: &str,
+    seed: u64,
+) -> Vec<(&'static str, QuantizedModel)> {
+    let data = SynthDataset::new(be.dataset().clone(), seed ^ 0x5EED);
+    let mut s = ModelSession::load(be, arch, seed).unwrap();
+    s.enable_bn_tracking();
+    let l = s.num_qlayers();
+    let wbits = mixed_bits(l);
+    let abits = BitAssignment::uniform(l, 8);
+    for step in 0..4u64 {
+        let (x, y) = data.train_batch(step, be.dataset().train_batch);
+        s.train_step(&x, &y, &wbits, &abits, 0.02).unwrap();
+    }
+    let dynamic = QuantizedModel::export(&s.arch, s.params(), &wbits, &abits).unwrap();
+    let tb = be.dataset().train_batch;
+    let mut cx: Vec<f32> = Vec::new();
+    for i in 0..2u64 {
+        cx.extend_from_slice(&data.train_batch(100 + i, tb).0);
+    }
+    let stat = QuantizedModel::export_calibrated(&s, be, &wbits, &abits, &cx, tb).unwrap();
+    vec![("dynamic", dynamic), ("static", stat)]
+}
+
+/// Pin 1 (deploy): accuracy/loss/logits bits are identical with the
+/// recorder on and off, at engine thread counts 1/2/4, on dynamic and
+/// static artifacts — and the disabled engine buffers nothing.
+#[test]
+fn deploy_results_bit_identical_trace_on_off_at_threads_1_2_4() {
+    let _g = flag_lock();
+    let be1 = small_backend(1);
+    let models = trained_models(&be1, "alexnet_mini", 7);
+    let b = be1.dataset().eval_batch;
+    let img = be1.dataset().image_len();
+    let (xs, ys) = SynthDataset::new(be1.dataset().clone(), 17).eval_set(2 * b);
+    for (label, m) in &models {
+        for threads in [1usize, 2, 4] {
+            let be = small_backend(threads);
+            obs::set_enabled(false);
+            let eng_off = DeployEngine::from_backend(m, &be).unwrap();
+            let off = eng_off.evaluate(&xs, &ys).unwrap();
+            let logits_off = eng_off.infer_logits(&xs[..b * img], b).unwrap();
+            assert!(
+                eng_off.take_trace().is_empty(),
+                "{label}/t{threads}: disabled engine buffered trace events"
+            );
+            obs::set_enabled(true);
+            let eng_on = DeployEngine::from_backend(m, &be).unwrap();
+            let on = eng_on.evaluate(&xs, &ys).unwrap();
+            let logits_on = eng_on.infer_logits(&xs[..b * img], b).unwrap();
+            let lanes = eng_on.take_trace();
+            obs::set_enabled(false);
+            assert_eq!(
+                off.accuracy.to_bits(),
+                on.accuracy.to_bits(),
+                "{label}/t{threads}: accuracy moved with tracing"
+            );
+            assert_eq!(
+                off.loss.to_bits(),
+                on.loss.to_bits(),
+                "{label}/t{threads}: loss moved with tracing"
+            );
+            assert_eq!(logits_off.len(), logits_on.len());
+            for (a, o) in logits_off.iter().zip(&logits_on) {
+                assert_eq!(
+                    a.to_bits(),
+                    o.to_bits(),
+                    "{label}/t{threads}: logit bits moved with tracing"
+                );
+            }
+            let events: usize = lanes.iter().map(|(_, e)| e.len()).sum();
+            assert!(events > 0, "{label}/t{threads}: traced engine recorded nothing");
+            assert!(
+                lanes.windows(2).all(|w| w[0].0 < w[1].0),
+                "{label}/t{threads}: lanes out of order: {:?}",
+                lanes.iter().map(|(i, _)| *i).collect::<Vec<_>>()
+            );
+        }
+    }
+}
+
+/// Pin 2 (serve): response logits are bit-identical with the recorder
+/// on and off at worker counts 1/2/4 on both artifact kinds; with it
+/// on, per-(model, version) latency summaries cover every completed
+/// request, the stats snapshot line re-parses, and the drained lanes
+/// are worker-index-sorted. With it off, nothing is buffered.
+#[test]
+fn serve_responses_bit_identical_trace_on_off() {
+    let _g = flag_lock();
+    let be1 = small_backend(1);
+    let models = trained_models(&be1, "alexnet_mini", 9);
+    let img = be1.dataset().image_len();
+    let pool_n = 16usize;
+    let (xs, _ys) = SynthDataset::new(be1.dataset().clone(), 23).eval_set(pool_n);
+    for (label, m) in &models {
+        for workers in [1usize, 2, 4] {
+            let mut runs: Vec<Vec<Vec<f32>>> = Vec::new();
+            for traced in [false, true] {
+                obs::set_enabled(traced);
+                let be = small_backend(workers);
+                let engine = DeployEngine::from_backend(m, &be).unwrap();
+                let daemon = ServeDaemon::new(
+                    ServeConfig { queue_cap: 32, max_batch: 4, workers },
+                    Parallelism::new(workers),
+                );
+                let handle = daemon.handle();
+                handle.deploy("m", &engine).unwrap();
+                let mut got: Vec<Vec<f32>> = Vec::new();
+                std::thread::scope(|s| {
+                    let server = s.spawn(|| daemon.run());
+                    for n in 0..12usize {
+                        let k = [1usize, 2, 1, 3][n % 4];
+                        let i = (n * 5) % (pool_n - k);
+                        let x = xs[i * img..(i + k) * img].to_vec();
+                        got.push(handle.submit("m", x).unwrap().wait().unwrap().logits);
+                    }
+                    handle.shutdown();
+                    server.join().expect("server thread");
+                });
+                let st = handle.stats();
+                assert_eq!(st.completed, 12, "{label}/w{workers}: drop audit");
+                if traced {
+                    assert_eq!(
+                        st.latency.iter().map(|l| l.served).sum::<u64>(),
+                        st.completed,
+                        "{label}/w{workers}: latency summaries miss requests: {st:?}"
+                    );
+                    let parsed = json::parse(&st.json_line()).expect("stats line parses");
+                    assert_eq!(parsed.get("completed").as_u64(), Some(st.completed));
+                    assert_eq!(
+                        parsed.get("latency").as_arr().map(<[json::Json]>::len),
+                        Some(st.latency.len())
+                    );
+                    let lanes = handle.take_trace();
+                    assert!(!lanes.is_empty(), "{label}/w{workers}: no trace lanes");
+                    assert!(
+                        lanes.windows(2).all(|w| w[0].0 < w[1].0),
+                        "{label}/w{workers}: lanes not sorted by worker index"
+                    );
+                } else {
+                    assert!(st.latency.is_empty(), "{label}/w{workers}: latency without tracing");
+                    assert!(
+                        handle.take_trace().is_empty(),
+                        "{label}/w{workers}: trace events without tracing"
+                    );
+                }
+                obs::set_enabled(false);
+                runs.push(got);
+            }
+            for (a, b) in runs[0].iter().zip(&runs[1]) {
+                assert_eq!(a.len(), b.len(), "{label}/w{workers}: response shape moved");
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{label}/w{workers}: served logits moved with tracing"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Pin 3 (export): every trace line re-parses through `util::json`,
+/// `gemm` spans nest under `layer` spans of the same lane and carry
+/// the dispatched kernel name, the aggregated per-layer GEMM time is
+/// non-zero, and re-writing the same lanes is byte-identical.
+#[test]
+fn trace_jsonl_round_trips_with_kernel_attribution() {
+    let _g = flag_lock();
+    obs::set_enabled(true);
+    let be = small_backend(2);
+    let models = trained_models(&be, "alexnet_mini", 11);
+    let engine = DeployEngine::from_backend(&models[0].1, &be).unwrap();
+    obs::set_enabled(false);
+    let b = be.dataset().eval_batch;
+    let img = be.dataset().image_len();
+    let (xs, _ys) = SynthDataset::new(be.dataset().clone(), 29).eval_set(2 * b);
+    for bi in 0..2 {
+        engine.infer_logits(&xs[bi * b * img..(bi + 1) * b * img], b).unwrap();
+    }
+    let lanes_raw = engine.take_trace();
+
+    let sel = kernel::selected().kind.name();
+    let rows = obs::layer_breakdown(&lanes_raw);
+    assert!(!rows.is_empty(), "no layer spans aggregated");
+    let mut gemm_total = 0u64;
+    for r in &rows {
+        assert_eq!(r.kernel, sel, "layer {} attributed to the wrong kernel", r.layer);
+        assert_eq!(r.batches, 2, "layer {} span count", r.layer);
+        assert_eq!(r.images, 2 * b as u64, "layer {} image count", r.layer);
+        gemm_total += r.gemm_ns;
+    }
+    assert!(gemm_total > 0, "summed GEMM time is zero across {} layers", rows.len());
+
+    let lanes: Vec<(String, Vec<_>)> =
+        lanes_raw.into_iter().map(|(i, e)| (format!("engine/{i}"), e)).collect();
+    let dir = std::env::temp_dir().join(format!("sigmaquant_obs_trace_{}", std::process::id()));
+    let path = dir.join("TRACE_test.jsonl");
+    obs::write_trace(&path, &lanes).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut layer_seqs: HashSet<(String, u64)> = HashSet::new();
+    let mut gemm_seen = 0usize;
+    for line in text.lines() {
+        let v = json::parse(line).expect("every trace line parses via util::json");
+        let lane = v.get("lane").as_str().expect("lane field").to_string();
+        match v.get("name").as_str().expect("name field") {
+            "layer" => {
+                assert_eq!(v.get("kind").as_str(), Some("span"));
+                layer_seqs.insert((lane, v.get("seq").as_u64().expect("seq")));
+            }
+            "gemm" => {
+                gemm_seen += 1;
+                let parent = v.get("parent").as_u64().expect("gemm span has a parent");
+                assert!(
+                    layer_seqs.contains(&(lane, parent)),
+                    "gemm span not parented to a layer span of its lane"
+                );
+                assert_eq!(v.get("attrs").get("kernel").as_str(), Some(sel));
+            }
+            _ => {}
+        }
+    }
+    assert!(gemm_seen > 0, "no gemm spans in the export");
+
+    let path2 = dir.join("TRACE_test_rewrite.jsonl");
+    obs::write_trace(&path2, &lanes).unwrap();
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        std::fs::read(&path2).unwrap(),
+        "re-exporting the same lanes is not byte-identical"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Pin 4 (histograms): percentile read-out equals the bucket floor of
+/// the sorted oracle's order statistic — including after merging
+/// per-worker partials, in any merge order.
+#[test]
+fn histogram_percentiles_exact_vs_sorted_oracle_after_merge() {
+    let samples: Vec<u64> =
+        (0..1000u64).map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 44).collect();
+    let mut parts = [LatencyHist::new(), LatencyHist::new(), LatencyHist::new()];
+    for (i, &s) in samples.iter().enumerate() {
+        parts[i % 3].record(s);
+    }
+    let mut h = LatencyHist::new();
+    for p in &parts {
+        h.merge(p);
+    }
+    let mut sorted = samples.clone();
+    sorted.sort_unstable();
+    for &p in &[0.0, 0.1, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+        let rank = ((sorted.len() - 1) as f64 * p) as usize;
+        assert_eq!(h.percentile_ns(p), bucket_floor(sorted[rank]), "p={p}");
+    }
+    assert_eq!(h.count(), 1000);
+    assert_eq!(h.min_ns(), sorted[0]);
+    assert_eq!(h.max_ns(), *sorted.last().unwrap());
+    let mut rev = LatencyHist::new();
+    for p in parts.iter().rev() {
+        rev.merge(p);
+    }
+    assert_eq!(rev, h, "merge order changed the distribution");
+}
+
+/// Pin 5 (coordinator): QAT bursts record flat spans (no parent) into
+/// the global store while enabled, and the inert guard records nothing
+/// — QAT numerics identical either way.
+#[test]
+fn coordinator_spans_record_flat_and_only_when_enabled() {
+    let _g = flag_lock();
+    let be = small_backend(2);
+    let data = SynthDataset::new(be.dataset().clone(), 31);
+    let wbits; // filled from the first session below
+    let run = |seed: u64| {
+        let mut s = ModelSession::load(&be, "alexnet_mini", seed).unwrap();
+        let l = s.num_qlayers();
+        let w = mixed_bits(l);
+        let a = BitAssignment::uniform(l, 8);
+        let mut cursor = TrainCursor::default();
+        let r = run_qat(&mut s, &data, &mut cursor, &w, &a, 0.02, 3).unwrap();
+        (r.loss, w)
+    };
+
+    obs::set_enabled(false);
+    let _ = obs::take_coord_events(); // drop residue from earlier traced tests
+    let (loss_off, w) = run(13);
+    wbits = w;
+    assert!(
+        obs::take_coord_events().is_empty(),
+        "disabled coordinator guard recorded spans"
+    );
+
+    obs::set_enabled(true);
+    let (loss_on, _) = run(13);
+    let events = obs::take_coord_events();
+    obs::set_enabled(false);
+    assert_eq!(
+        loss_off.to_bits(),
+        loss_on.to_bits(),
+        "QAT loss moved with tracing (wbits [{}])",
+        wbits.summary()
+    );
+    assert!(
+        events.iter().any(|e| e.cat == "coord" && e.name == "qat"),
+        "no qat span in the coordinator store"
+    );
+    for e in &events {
+        assert_eq!(e.parent, None, "coordinator spans must be flat: {e:?}");
+        assert!(e.span, "coordinator store holds only closed spans");
+    }
+    assert!(
+        events.windows(2).all(|w| w[0].seq < w[1].seq),
+        "coordinator store sequence not monotone"
+    );
+}
