@@ -39,7 +39,7 @@ use sigmaquant::deploy::{
 use sigmaquant::hw::{model_ppa, ShiftAddConfig};
 use sigmaquant::obs;
 use sigmaquant::quant::{int8_size_bytes, model_size_bytes, BitAssignment};
-use sigmaquant::runtime::native::kernel::{selected, set_kernel, KernelKind};
+use sigmaquant::runtime::native::kernel::{selected, set_kernel, ElemType, KernelKind};
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 use sigmaquant::util::pool::Parallelism;
 use sigmaquant::util::timer::{bench, BenchReport};
@@ -82,11 +82,17 @@ fn main() {
     };
     let eval_n = if quick { 128 } else { 256 };
     let threads = 1usize; // single-lane timings; results are thread-count-invariant
-    let sel = selected();
+    let sel = selected(ElemType::I16);
+    let sel_f32 = selected(ElemType::F32);
     println!("# bench_deploy — packed integer engine vs fake-quant reference ({eval_n} samples)");
-    println!("# i16 kernel: {} ({})", sel.kind.name(), sel.reason);
+    println!("# i16 kernel: {} ({}); f32 kernel: {} ({})", sel.kind.name(), sel.reason, sel_f32.kind.name(), sel_f32.reason);
     let mut report = BenchReport::new("deploy");
-    report.set_kernel(sel.kind.name(), sel.reason);
+    report.set_kernel("i16", sel.kind.name(), sel.reason);
+    report.set_kernel("f32", sel_f32.kind.name(), sel_f32.reason);
+    // deploy rows run the i16 engine unless re-tagged below (the f32
+    // fake-quant reference rows and the kernel-independent byte/count
+    // stamps)
+    report.set_elem(Some("i16"));
     let mut rows: Vec<Row> = Vec::new();
 
     let backend = NativeBackend::with_parallelism(Parallelism::new(threads));
@@ -177,9 +183,12 @@ fn main() {
                 ys.len(),
             );
             report.add(&format!("deploy_eval/{arch}/{label}"), threads, ns_dep);
+            report.set_elem(Some("f32")); // fake-quant reference = trainer kernels
             report.add(&format!("fakequant_eval/{arch}/{label}"), threads, ns_ref);
+            report.set_elem(None); // byte sizes are kernel-independent
             report.add(&format!("bytes_measured/{arch}/{label}"), threads, bytes);
             report.add(&format!("bytes_predicted/{arch}/{label}"), threads, predicted);
+            report.set_elem(Some("i16"));
             rows.push(Row {
                 arch: arch.to_string(),
                 label,
@@ -214,12 +223,12 @@ fn main() {
         let model =
             QuantizedModel::export(&session.arch, session.params(), &wbits, &a8).expect("export");
         let engine = DeployEngine::from_backend(&model, &backend).expect("engine");
-        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        set_kernel(ElemType::I16, KernelKind::Scalar).expect("scalar always available");
         let rs = engine.evaluate(&xs, &ys).expect("scalar eval");
         let t_s = bench(iters, budget_ms, || {
             engine.evaluate(&xs, &ys).expect("scalar eval");
         });
-        set_kernel(sel.kind).expect("previously selected kernel");
+        set_kernel(ElemType::I16, sel.kind).expect("previously selected kernel");
         let rd = engine.evaluate(&xs, &ys).expect("dispatched eval");
         assert_eq!(rs.accuracy.to_bits(), rd.accuracy.to_bits(), "kernel accuracy bits");
         assert_eq!(rs.loss.to_bits(), rd.loss.to_bits(), "kernel loss bits");
@@ -497,11 +506,13 @@ fn main() {
         report.add(&format!("deploy_eval_dynamic/{arch}/mixed"), tp_threads, ns_dyn);
         // deterministic stamp (like the bytes_* rows): how many images
         // calibrated the static artifact these rows ran
+        report.set_elem(None);
         report.add(
             &format!("deploy_calib_samples/{arch}/mixed"),
             tp_threads,
             eng_stat.calibration_samples() as f64,
         );
+        report.set_elem(Some("i16"));
 
         // --- fused serve ticks on the static model ---
         // Closed-loop clients against a 2-worker daemon serving the

@@ -18,17 +18,20 @@
 //! blocked-over-naive speedup across PRs. The full (non-quick) run also
 //! prints the README's before/after throughput table in markdown.
 //!
-//! The i16 deploy kernel is measured twice per shape — forced scalar vs
-//! the dispatched SIMD kernel (`igemm_fwd/<shape>/scalar` vs `…/simd`)
-//! — with the outputs cross-checked **bitwise** first (exact i32
-//! accumulation makes any kernel order-identical). The dispatched ISA +
-//! reason is printed in the header and stamped into the JSON as
-//! `"kernel"`, so `scripts/bench_compare` never diffs rows across ISAs.
+//! Both SIMD micro-kernels are measured twice per shape — forced scalar
+//! vs the dispatched SIMD kernel (`gemm_fwd/<shape>/{scalar,simd}` for
+//! the f32 trainer tile, `igemm_fwd/<shape>/{scalar,simd}` for the i16
+//! deploy tile) — with the outputs cross-checked **bitwise** first (the
+//! i16 tiles by exact i32 accumulation, the f32 tiles by the §9
+//! accumulation-order contract). The dispatched ISA + reason is printed
+//! in the header and stamped into the JSON per element type
+//! (`"kernel_f32"` / `"kernel_i16"`), with each row tagged `"elem"`, so
+//! `scripts/bench_compare` never diffs rows across ISAs.
 
 use sigmaquant::deploy::igemm::{self, IPackScratch};
 use sigmaquant::runtime::native::gemm::{self, PackScratch};
 use sigmaquant::runtime::native::graph::{zoo, Node};
-use sigmaquant::runtime::native::kernel::{selected, set_kernel, KernelKind};
+use sigmaquant::runtime::native::kernel::{selected, set_kernel, ElemType, KernelKind};
 use sigmaquant::runtime::native::ops::Conv2d;
 use sigmaquant::util::rng::Rng;
 use sigmaquant::util::timer::{bench, BenchReport};
@@ -79,11 +82,15 @@ fn randq(n: usize, lo: i32, hi: i32, seed: u64) -> Vec<i16> {
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let (iters, budget_ms) = if quick { (1, 1.0) } else { (10, 300.0) };
-    let sel = selected();
+    let sel_f32 = selected(ElemType::F32);
+    let sel = selected(ElemType::I16);
     println!("# bench_gemm — blocked im2col/GEMM core vs retained naive loops (zoo shapes, {ROWS}-row blocks)");
+    println!("# f32 kernel: {} ({})", sel_f32.kind.name(), sel_f32.reason);
     println!("# i16 kernel: {} ({})", sel.kind.name(), sel.reason);
     let mut report = BenchReport::new("gemm");
-    report.set_kernel(sel.kind.name(), sel.reason);
+    report.set_kernel("f32", sel_f32.kind.name(), sel_f32.reason);
+    report.set_kernel("i16", sel.kind.name(), sel.reason);
+    report.set_elem(Some("f32"));
 
     // unique conv shapes over the whole zoo: (h, w, cin, cout, k, stride, same)
     let mut conv_shapes: BTreeSet<(usize, usize, usize, usize, usize, usize, bool)> = BTreeSet::new();
@@ -252,11 +259,102 @@ fn main() {
         report.add(&format!("dense_bwd/{label}/blocked"), 1, t_bb.mean_ns);
     }
 
+    // ---- f32 trainer kernel: forced scalar vs the dispatched SIMD ----
+    // Bitwise cross-checked before timing (the §9 accumulation-order
+    // contract makes the f32 SIMD tiles chain-identical to the scalar
+    // core); ns rows land under ISA-independent op names, the
+    // "kernel_f32" stamp carries the ISA so bench_compare only diffs
+    // within one.
+    println!(
+        "\n# f32 trainer kernel — forced scalar vs dispatched `{}` (zoo shapes, {ROWS}-row blocks)",
+        sel_f32.kind.name()
+    );
+    let mut fspeedups: Vec<f64> = Vec::new();
+    for &(h, w, cin, cout, k, stride, same) in &conv_shapes {
+        let cv = Conv2d::new(h, w, cin, cout, k, stride, same);
+        let label = format!("conv{h}x{w}x{cin}-{cout}k{k}s{stride}{}", if same { "p" } else { "v" });
+        let mut x = randv(ROWS * h * w * cin, 51);
+        sparsify(&mut x, 57);
+        let kern = randv(k * k * cin * cout, 52);
+        let kdim = gemm::conv_kdim(&cv);
+        let mut wpack = vec![0.0f32; gemm::packed_b_len(kdim, cout)];
+        gemm::pack_b(kdim, cout, &kern, &mut wpack);
+        let mut ps = PackScratch::default();
+        let (col, apack, bpack) = gemm::conv_scratch_sizes(&cv);
+        ps.ensure(col, apack, bpack);
+        let out_len = ROWS * cv.oh * cv.ow * cout;
+        let mut out_s = vec![0.0f32; out_len];
+        let mut out_d = vec![0.0f32; out_len];
+
+        set_kernel(ElemType::F32, KernelKind::Scalar).expect("scalar always available");
+        gemm::conv_forward(&cv, ROWS, &x, &wpack, &mut out_s, &mut ps);
+        set_kernel(ElemType::F32, sel_f32.kind).expect("previously selected kernel");
+        gemm::conv_forward(&cv, ROWS, &x, &wpack, &mut out_d, &mut ps);
+        assert_bits_eq(&out_s, &out_d, &label);
+
+        set_kernel(ElemType::F32, KernelKind::Scalar).expect("scalar always available");
+        let t_s = bench(iters, budget_ms, || {
+            gemm::conv_forward(&cv, ROWS, &x, &wpack, &mut out_s, &mut ps);
+        });
+        set_kernel(ElemType::F32, sel_f32.kind).expect("previously selected kernel");
+        let t_d = bench(iters, budget_ms, || {
+            gemm::conv_forward(&cv, ROWS, &x, &wpack, &mut out_d, &mut ps);
+        });
+        println!(
+            "{label:<24} f32 {:>9.1}us -> {:>9.1}us ({:.2}x)",
+            t_s.mean_ns / 1e3,
+            t_d.mean_ns / 1e3,
+            t_s.mean_ns / t_d.mean_ns,
+        );
+        report.add(&format!("gemm_fwd/{label}/scalar"), 1, t_s.mean_ns);
+        report.add(&format!("gemm_fwd/{label}/simd"), 1, t_d.mean_ns);
+        fspeedups.push(t_s.mean_ns / t_d.mean_ns);
+    }
+    for &(cin, cout) in &dense_shapes {
+        let label = format!("dense{cin}-{cout}");
+        let mut a = randv(ROWS * cin, 61);
+        sparsify(&mut a, 67);
+        let kern = randv(cin * cout, 62);
+        let bias = randv(cout, 63);
+        let mut wpack = vec![0.0f32; gemm::packed_b_len(cin, cout)];
+        gemm::pack_b(cin, cout, &kern, &mut wpack);
+        let mut ps = PackScratch::default();
+        let (apack, bpack) = gemm::dense_scratch_sizes(ROWS, cin, cout);
+        ps.ensure(0, apack, bpack);
+        let mut out_s = vec![0.0f32; ROWS * cout];
+        let mut out_d = vec![0.0f32; ROWS * cout];
+
+        set_kernel(ElemType::F32, KernelKind::Scalar).expect("scalar always available");
+        gemm::dense_forward(ROWS, cin, cout, &a, &wpack, &bias, &mut out_s, &mut ps);
+        set_kernel(ElemType::F32, sel_f32.kind).expect("previously selected kernel");
+        gemm::dense_forward(ROWS, cin, cout, &a, &wpack, &bias, &mut out_d, &mut ps);
+        assert_bits_eq(&out_s, &out_d, &label);
+
+        set_kernel(ElemType::F32, KernelKind::Scalar).expect("scalar always available");
+        let t_s = bench(iters, budget_ms, || {
+            gemm::dense_forward(ROWS, cin, cout, &a, &wpack, &bias, &mut out_s, &mut ps);
+        });
+        set_kernel(ElemType::F32, sel_f32.kind).expect("previously selected kernel");
+        let t_d = bench(iters, budget_ms, || {
+            gemm::dense_forward(ROWS, cin, cout, &a, &wpack, &bias, &mut out_d, &mut ps);
+        });
+        println!(
+            "{label:<24} f32 {:>9.1}us -> {:>9.1}us ({:.2}x)",
+            t_s.mean_ns / 1e3,
+            t_d.mean_ns / 1e3,
+            t_s.mean_ns / t_d.mean_ns,
+        );
+        report.add(&format!("gemm_fwd/{label}/scalar"), 1, t_s.mean_ns);
+        report.add(&format!("gemm_fwd/{label}/simd"), 1, t_d.mean_ns);
+        fspeedups.push(t_s.mean_ns / t_d.mean_ns);
+    }
+
     // ---- i16 deploy kernel: forced scalar vs the dispatched SIMD ----
     // Bitwise cross-checked before timing (exact i32 accumulation makes
     // every selectable kernel order-identical); ns rows land under
-    // ISA-independent op names, the file-level "kernel" tag carries the
-    // ISA so bench_compare only diffs within one.
+    // ISA-independent op names, the "kernel_i16" stamp carries the ISA
+    // so bench_compare only diffs within one.
+    report.set_elem(Some("i16"));
     println!(
         "\n# i16 deploy kernel — forced scalar vs dispatched `{}` (zoo shapes, {ROWS}-row blocks)",
         sel.kind.name()
@@ -276,17 +374,17 @@ fn main() {
         let mut out_s = vec![0i32; out_len];
         let mut out_d = vec![0i32; out_len];
 
-        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        set_kernel(ElemType::I16, KernelKind::Scalar).expect("scalar always available");
         igemm::iconv_forward(&cv, ROWS, &x, &wpack, &mut out_s, &mut ps);
-        set_kernel(sel.kind).expect("previously selected kernel");
+        set_kernel(ElemType::I16, sel.kind).expect("previously selected kernel");
         igemm::iconv_forward(&cv, ROWS, &x, &wpack, &mut out_d, &mut ps);
         assert_eq!(out_s, out_d, "{label}: dispatched i16 kernel != scalar");
 
-        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        set_kernel(ElemType::I16, KernelKind::Scalar).expect("scalar always available");
         let t_s = bench(iters, budget_ms, || {
             igemm::iconv_forward(&cv, ROWS, &x, &wpack, &mut out_s, &mut ps);
         });
-        set_kernel(sel.kind).expect("previously selected kernel");
+        set_kernel(ElemType::I16, sel.kind).expect("previously selected kernel");
         let t_d = bench(iters, budget_ms, || {
             igemm::iconv_forward(&cv, ROWS, &x, &wpack, &mut out_d, &mut ps);
         });
@@ -311,17 +409,17 @@ fn main() {
         let mut out_s = vec![0i32; ROWS * cout];
         let mut out_d = vec![0i32; ROWS * cout];
 
-        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        set_kernel(ElemType::I16, KernelKind::Scalar).expect("scalar always available");
         igemm::idense_forward(ROWS, cin, cout, &a, &wpack, &mut out_s, &mut ps);
-        set_kernel(sel.kind).expect("previously selected kernel");
+        set_kernel(ElemType::I16, sel.kind).expect("previously selected kernel");
         igemm::idense_forward(ROWS, cin, cout, &a, &wpack, &mut out_d, &mut ps);
         assert_eq!(out_s, out_d, "{label}: dispatched i16 kernel != scalar");
 
-        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        set_kernel(ElemType::I16, KernelKind::Scalar).expect("scalar always available");
         let t_s = bench(iters, budget_ms, || {
             igemm::idense_forward(ROWS, cin, cout, &a, &wpack, &mut out_s, &mut ps);
         });
-        set_kernel(sel.kind).expect("previously selected kernel");
+        set_kernel(ElemType::I16, sel.kind).expect("previously selected kernel");
         let t_d = bench(iters, budget_ms, || {
             igemm::idense_forward(ROWS, cin, cout, &a, &wpack, &mut out_d, &mut ps);
         });
@@ -338,6 +436,18 @@ fn main() {
     if !speedups.is_empty() {
         let gmean = (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp();
         println!("conv geometric-mean blocked speedup: {gmean:.2}x over {} measurements", speedups.len());
+    }
+    if !fspeedups.is_empty() {
+        let gmean = (fspeedups.iter().map(|s| s.ln()).sum::<f64>() / fspeedups.len() as f64).exp();
+        if sel_f32.kind == KernelKind::Scalar {
+            println!("f32 gemm: no SIMD kernel on this host — dispatched == scalar (geomean {gmean:.2}x, expect ~1)");
+        } else {
+            println!(
+                "f32 gemm geometric-mean `{}` speedup over scalar: {gmean:.2}x over {} shapes (target >= 1.5x)",
+                sel_f32.kind.name(),
+                fspeedups.len()
+            );
+        }
     }
     if !ispeedups.is_empty() {
         let gmean = (ispeedups.iter().map(|s| s.ln()).sum::<f64>() / ispeedups.len() as f64).exp();

@@ -11,6 +11,7 @@
 
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::BitAssignment;
+use sigmaquant::runtime::native::kernel::{selected, ElemType};
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 use sigmaquant::util::pool::Parallelism;
 use sigmaquant::util::timer::{bench, BenchReport};
@@ -19,8 +20,12 @@ use std::time::Instant;
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let (iters, budget_ms) = if quick { (1, 1.0) } else { (5, 2000.0) };
+    let sel_f32 = selected(ElemType::F32);
     println!("# bench_runtime — native backend execution latency per architecture");
+    println!("# f32 kernel: {} ({})", sel_f32.kind.name(), sel_f32.reason);
     let mut report = BenchReport::new("runtime");
+    report.set_kernel("f32", sel_f32.kind.name(), sel_f32.reason);
+    report.set_elem(Some("f32")); // every row is trainer (f32) GEMM time
     let thread_counts = [1usize, 4];
     let archs = ["alexnet_mini", "resnet18_mini", "resnet34_mini", "inception_mini"];
     for arch in archs {

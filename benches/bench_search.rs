@@ -12,6 +12,7 @@ use sigmaquant::coordinator::zones::Targets;
 use sigmaquant::coordinator::{SearchConfig, SearchOutcome, SigmaQuant};
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::int8_size_bytes;
+use sigmaquant::runtime::native::kernel::{selected, ElemType};
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 use sigmaquant::util::pool::Parallelism;
 use sigmaquant::util::timer::BenchReport;
@@ -48,8 +49,12 @@ fn run_search(threads: usize, quick: bool) -> (f64, f64, SearchOutcome) {
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    let sel_f32 = selected(ElemType::F32);
     println!("# bench_search — end-to-end two-phase search (alexnet_mini, native)");
+    println!("# f32 kernel: {} ({})", sel_f32.kind.name(), sel_f32.reason);
     let mut report = BenchReport::new("search");
+    report.set_kernel("f32", sel_f32.kind.name(), sel_f32.reason);
+    report.set_elem(Some("f32")); // search/QAT rows are trainer (f32) GEMM time
     let thread_counts = [1usize, 4];
     let mut totals = Vec::new();
     let mut outcomes: Vec<SearchOutcome> = Vec::new();

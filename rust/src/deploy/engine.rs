@@ -529,7 +529,7 @@ impl DeployEngine {
             );
             if bound > i32::MAX as i64 {
                 let spec = &arch.spec.qlayers[q];
-                let sel = kernel::selected();
+                let sel = kernel::selected(kernel::ElemType::I16);
                 bail!(
                     "deploy load rejected: layer {q} ({}, {}) at a{ab}/w{wb} has a \
                      worst-case i32 accumulator of {bound} (= kdim {kdim} × (2^{ab}−1) × \
@@ -1030,7 +1030,7 @@ impl EngineCore {
                     ("layer", AttrVal::U64(g.q as u64)),
                     ("layer_name", AttrVal::Str(spec.name.clone())),
                     ("layer_kind", AttrVal::Str(spec.kind.clone())),
-                    ("kernel", AttrVal::SStr(kernel::selected().kind.name())),
+                    ("kernel", AttrVal::SStr(kernel::selected(kernel::ElemType::I16).kind.name())),
                     ("batch", AttrVal::U64(batch as u64)),
                 ],
             )
@@ -1086,7 +1086,7 @@ impl EngineCore {
             s.open(
                 "deploy",
                 "gemm",
-                vec![("kernel", AttrVal::SStr(kernel::selected().kind.name()))],
+                vec![("kernel", AttrVal::SStr(kernel::selected(kernel::ElemType::I16).kind.name()))],
             )
         });
 

@@ -409,7 +409,7 @@ fn deploy(a: &Args, eval_n: usize, qat: usize) -> Result<()> {
     } else {
         println!("  path    : dynamic (per-batch ranges, batch-stat BN)");
     }
-    let sel = kernel::selected();
+    let sel = kernel::selected(kernel::ElemType::I16);
     println!("  kernel  : {} ({})", sel.kind.name(), sel.reason);
     println!("  artifact: {} (round-trip byte-identical)", out_path.display());
 
@@ -568,7 +568,7 @@ fn serve(a: &Args, qat: usize) -> Result<()> {
     };
     let daemon = ServeDaemon::new(cfg, par);
     let handle = daemon.handle();
-    let sel = kernel::selected();
+    let sel = kernel::selected(kernel::ElemType::I16);
     println!("integer kernel: {} ({})", sel.kind.name(), sel.reason);
     for (id, engine) in &engines {
         let v = handle.deploy(id, engine)?;

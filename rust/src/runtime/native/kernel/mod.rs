@@ -23,9 +23,12 @@
 //!   with the [`Acc`] seeding modes that reproduce every caller's
 //!   accumulation chain;
 //! * **SIMD dispatch** ([`simd`]): explicit AVX2/NEON instantiations of
-//!   the i16 tile, selected once per process by CPU feature detection
-//!   (override: `SIGMAQUANT_KERNEL`), bit-identical to the scalar loop
-//!   because exact i32 accumulation is reassociation-free.
+//!   both tiles, selected once per process *per element type* by CPU
+//!   feature detection (override: `SIGMAQUANT_KERNEL`, with scoped
+//!   `f32=`/`i16=` forms), bit-identical to the scalar loop — the i16
+//!   tiles because exact i32 accumulation is reassociation-free, the
+//!   f32 tiles because they obey the §9 f32 accumulation-order
+//!   contract (lane-per-column, mul-then-add, unsplit k loop).
 //!
 //! # The genericization argument
 //!
@@ -66,7 +69,9 @@ pub use micro::{conv_forward, dense_forward, gemm, Acc};
 pub use pack::{
     im2col_packed, im2col_packed_t, pack_a, pack_a_t, pack_a_unit, pack_a_t_unit, pack_b, pack_b_t,
 };
-pub use simd::{available_kernels, selected, set_kernel, KernelKind, Selection, KERNEL_ENV};
+pub use simd::{
+    available_kernels, selected, set_kernel, ElemType, KernelKind, Selection, KERNEL_ENV,
+};
 
 use crate::runtime::native::ops::Conv2d;
 
@@ -104,10 +109,15 @@ pub trait PanelElem: Copy + Default + Send + Sync + 'static {
     /// `acc[MR][NR] ⊕= Apanel ⊗ Bpanel` k extent with an explicit SIMD
     /// kernel and return `true`, or return `false` (the default) to run
     /// the generic scalar loop. An override must be **bit-identical** to
-    /// the scalar chains — the i16 instantiation qualifies anywhere
-    /// (exact i32 arithmetic is reassociation-free, see
-    /// [`simd`]), an f32 AVX-512/SVE tile would have to reproduce the
-    /// §9 no-FMA chain order exactly to plug in here.
+    /// the scalar chains. Two routes qualify: exactness (the i16
+    /// instantiation — i32 arithmetic is reassociation-free, any
+    /// summation order works, see [`simd`]) or chain preservation (the
+    /// f32 instantiation — the tile must obey the §9 f32
+    /// accumulation-order contract, DESIGN.md: one SIMD lane per output
+    /// column so no chain reassociates, `mul` then `add` per k step so
+    /// products round before adding — never FMA — and an unsplit
+    /// ascending k loop). A future f32 AVX-512/SVE tile plugs in here
+    /// under the same contract.
     #[inline(always)]
     fn simd_micro_kernel(
         _k: usize,
@@ -134,6 +144,15 @@ impl PanelElem for f32 {
     #[inline(always)]
     fn acc_add(a: f32, b: f32) -> f32 {
         a + b
+    }
+
+    #[inline(always)]
+    fn simd_micro_kernel(k: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) -> bool {
+        // bit-identical by the §9 f32 accumulation-order contract: the
+        // tiles vectorize across the NR columns (one lane per output
+        // element's chain) with mul-then-add rounding per k step, so
+        // per lane they execute literally the scalar chain above
+        simd::mac_tile_f32(k, ap, bp, acc)
     }
 }
 

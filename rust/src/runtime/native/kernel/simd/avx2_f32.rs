@@ -1,0 +1,87 @@
+//! AVX2 f32 micro-kernel: the lane-per-column mul-then-add tile
+//! (`_mm256_add_ps` of `_mm256_mul_ps` — explicitly never the fused
+//! fmadd form).
+//!
+//! One `MR × NR` tile is held as 12 YMM accumulators (`MR = 6` rows ×
+//! two f32×8 halves of the `NR = 16` columns), fed `NR` B operands per
+//! k-step from two contiguous 256-bit loads of the k-major B panel and
+//! `MR` broadcast A operands (`_mm256_set1_ps`) from the
+//! `MR`-interleaved A panel — the packed layout was sized for exactly
+//! this register file (§9), so the kernel reads the panels as-is.
+//!
+//! # Why the bits match the scalar core
+//!
+//! Floating-point addition does not associate, so unlike the i16 tiles
+//! this kernel earns bit-identity *by preserving the chain*, per the §9
+//! f32 accumulation-order contract (DESIGN.md, "The f32
+//! accumulation-order contract"):
+//!
+//! * **lane-per-column** — SIMD lane `j` of row `i` holds exactly
+//!   `acc[i][j]` and nothing else; vectorization is across the NR
+//!   columns, never across k, so no chain is ever split or
+//!   reassociated;
+//! * **round-then-add** — each k step computes
+//!   `_mm256_mul_ps` (one f32 rounding) then `_mm256_add_ps` (one f32
+//!   rounding), the same two roundings as the scalar
+//!   `acc + a * b`; the fused contraction (a single rounding) is never
+//!   emitted — Rust only contracts through the explicit fused
+//!   intrinsic or method, neither of which appears here;
+//! * **unsplit k loop** — one pass, `kk` ascending, no tail special
+//!   case, so per lane the tile executes *literally* the scalar chain.
+//!
+//! Per IEEE-754, packed `mul`/`add` round each lane exactly like their
+//! scalar counterparts (same round-to-nearest-even, denormals
+//! included), so equality holds bit-for-bit, not within tolerance.
+//! `rust/tests/gemm_parity.rs` pins forced-AVX2 == forced-scalar across
+//! the zoo shapes and the random-shape suite.
+
+use super::super::{MR, NR};
+use core::arch::x86_64::*;
+
+/// Runtime CPU support for this kernel.
+pub(super) fn available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// `acc[MR][NR] += Apanel ⊗ Bpanel` over the full k extent — the AVX2
+/// instantiation of the scalar core's tile loop, bit-identical by the
+/// §9 chain-preservation contract. Panics (rather than reading out of
+/// bounds) on short panels; the generic driver always passes
+/// exact-length panel slices.
+#[inline]
+pub(super) fn mac_tile(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    assert!(apanel.len() >= k * MR && bpanel.len() >= k * NR, "short panel");
+    // SAFETY: panel bounds asserted above; the dispatcher selects this
+    // kernel only after `is_x86_feature_detected!("avx2")`.
+    unsafe { mac_tile_avx2(k, apanel, bpanel, acc) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn mac_tile_avx2(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    let ap = apanel.as_ptr();
+    let bp = bpanel.as_ptr();
+    // 6 rows × 2 halves = 12 live accumulator registers, natural column
+    // order (no swizzle: unlike madd there is no lane permutation)
+    let mut lo = [_mm256_setzero_ps(); MR];
+    let mut hi = [_mm256_setzero_ps(); MR];
+    for i in 0..MR {
+        lo[i] = _mm256_loadu_ps(acc[i].as_ptr());
+        hi[i] = _mm256_loadu_ps(acc[i].as_ptr().add(8));
+    }
+    for kk in 0..k {
+        // one k-major B row = columns [0..8) and [8..16)
+        let blo = _mm256_loadu_ps(bp.add(kk * NR));
+        let bhi = _mm256_loadu_ps(bp.add(kk * NR + 8));
+        for i in 0..MR {
+            let av = _mm256_set1_ps(*ap.add(kk * MR + i));
+            // mul rounds the product, add rounds the sum — the scalar
+            // chain's two roundings, per lane, in the same k order
+            lo[i] = _mm256_add_ps(lo[i], _mm256_mul_ps(av, blo));
+            hi[i] = _mm256_add_ps(hi[i], _mm256_mul_ps(av, bhi));
+        }
+    }
+    for i in 0..MR {
+        _mm256_storeu_ps(acc[i].as_mut_ptr(), lo[i]);
+        _mm256_storeu_ps(acc[i].as_mut_ptr().add(8), hi[i]);
+    }
+}

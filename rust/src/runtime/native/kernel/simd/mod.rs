@@ -2,57 +2,108 @@
 //! (DESIGN.md §9, "SIMD dispatch").
 //!
 //! The generic scalar tile loop in [`super::micro`] is the semantic
-//! oracle; this module holds explicit SIMD instantiations of the i16
-//! tile and the one-time selection logic that picks between them:
+//! oracle; this module holds explicit SIMD instantiations of both
+//! element types' tiles and the per-element-type selection logic that
+//! picks between them:
 //!
-//! * `avx2` (x86_64; the module is cfg-gated, hence no doc link): the
-//!   2-way packed dot — `_mm256_madd_epi16` + `_mm256_add_epi32`,
-//!   selected when `is_x86_feature_detected!` reports AVX2;
-//! * `neon` (aarch64): the `vmlal_s16` widening MAC, baseline on
-//!   aarch64 so selected unconditionally;
-//! * scalar everywhere else — **zero behavior change**, because i16
-//!   products accumulate exactly in i32 and integer addition is
-//!   associative and commutative: every kernel here is *bit-identical*
-//!   to the scalar core by construction, not by tolerance. (That is
-//!   also why the f32 trainer tile stays scalar: its no-FMA
-//!   accumulation chains are bit-pinned and re-association would move
-//!   results. The dispatch hook, [`super::PanelElem::simd_micro_kernel`],
-//!   is element-generic so f32 AVX-512/SVE tiles can opt in later with
-//!   their own chain argument.)
+//! * `avx2` / `avx2_f32` (x86_64; the modules are cfg-gated, hence no
+//!   doc links): the i16 2-way packed dot (`_mm256_madd_epi16` +
+//!   `_mm256_add_epi32`) and the f32 lane-per-column tile
+//!   (`_mm256_add_ps` of `_mm256_mul_ps` — explicitly never the fused
+//!   form), selected when `is_x86_feature_detected!` reports AVX2;
+//! * `neon` / `neon_f32` (aarch64): the `vmlal_s16` widening MAC and
+//!   the f32 `vaddq_f32`-of-`vmulq_f32` tile, baseline on aarch64 so
+//!   selected unconditionally;
+//! * scalar everywhere else — **zero behavior change**.
+//!
+//! Every selectable kernel is *bit-identical* to the scalar core by
+//! construction, not by tolerance — but for two different reasons. The
+//! i16 tiles are free to reassociate: i16 products accumulate exactly
+//! in i32, and integer addition is associative and commutative, so any
+//! summation order produces the same bits. The f32 tiles are **not**
+//! free to reassociate: they are bit-identical because they obey the §9
+//! f32 accumulation-order contract — lanes map one-to-one onto output
+//! columns so every element's k-chain stays a single sequential chain,
+//! products round to f32 before each add (`mul` then `add`, never FMA),
+//! and the k loop is never split. See the module docs of the `*_f32`
+//! tiles and DESIGN.md §9 "The f32 accumulation-order contract".
 //!
 //! # Selection
 //!
-//! [`selected`] resolves once per process: the `SIGMAQUANT_KERNEL` env
-//! override (`scalar` | `avx2` | `neon`) wins if set — and *panics* on
-//! an unknown or unavailable value, because a silent fallback would
-//! invalidate forced-kernel CI runs — otherwise CPU feature detection
-//! picks the best available ISA. The cached choice lives in one
-//! `AtomicU8`; [`set_kernel`] lets tests and benches switch kernels
+//! Selection is **per element type** ([`ElemType`]): the f32 trainer
+//! kernel and the i16 deploy kernel are chosen — and overridden —
+//! independently, each cached in its own `AtomicU8`. [`selected`]
+//! resolves once per process per element type: the `SIGMAQUANT_KERNEL`
+//! env override wins if set — and *panics* on an unknown or
+//! unavailable value, because a silent fallback would invalidate
+//! forced-kernel CI runs — otherwise CPU feature detection picks the
+//! best available ISA. The override grammar:
+//!
+//! * `scalar` | `avx2` | `neon` — unscoped, forces **both** element
+//!   types (the pre-existing meaning, unchanged);
+//! * `f32=<kernel>` / `i16=<kernel>`, comma-separated — scoped, forces
+//!   only the named element type(s); the other falls back to
+//!   detection. E.g. `SIGMAQUANT_KERNEL=f32=scalar` pins the trainer
+//!   to the oracle while the deploy path keeps its dispatched SIMD.
+//!
+//! [`set_kernel`] lets tests and benches switch a kernel
 //! programmatically (env mutation in a threaded test binary is a race,
 //! a global switch between bit-identical kernels is benign).
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx2_f32;
 #[cfg(target_arch = "aarch64")]
 mod neon;
+#[cfg(target_arch = "aarch64")]
+mod neon_f32;
 
 use super::{MR, NR};
 use std::sync::atomic::{AtomicU8, Ordering};
 
-/// Env var forcing the kernel choice: `scalar` | `avx2` | `neon`.
-/// Unknown or unavailable values abort at first kernel use (fail-fast:
-/// a forced-kernel test run must never silently measure the wrong ISA).
+/// Env var forcing the kernel choice: `scalar` | `avx2` | `neon`
+/// (both element types), or scoped `f32=<kernel>` / `i16=<kernel>`
+/// forms, comma-separated. Unknown or unavailable values abort at
+/// first kernel use (fail-fast: a forced-kernel test run must never
+/// silently measure the wrong ISA).
 pub const KERNEL_ENV: &str = "SIGMAQUANT_KERNEL";
 
-/// An i16 micro-kernel implementation the dispatcher can select.
+/// The two panel element types the dispatcher selects kernels for —
+/// the f32 trainer GEMMs and the i16 deploy GEMMs run through
+/// independent selections (and independent `SIGMAQUANT_KERNEL` scopes).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ElemType {
+    /// The f32 trainer instantiation (search, QAT, fake-quant eval).
+    F32,
+    /// The i16 deploy instantiation (serving, integer inference).
+    I16,
+}
+
+impl ElemType {
+    /// The scope name used in `SIGMAQUANT_KERNEL` and in bench-report
+    /// stamps (`kernel_f32` / `kernel_i16`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::F32 => "f32",
+            ElemType::I16 => "i16",
+        }
+    }
+}
+
+/// A micro-kernel implementation the dispatcher can select (each ISA
+/// name covers both element types' tiles — selecting `avx2` for
+/// [`ElemType::F32`] means the `avx2_f32` tile).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum KernelKind {
     /// The generic scalar tile loop in [`super::micro`] — the oracle,
     /// available everywhere.
     Scalar,
-    /// The `avx2` tile: 2-way packed dot (`madd_epi16`), x86_64 with AVX2.
+    /// The `avx2` tiles: i16 2-way packed dot (`madd_epi16`) / f32
+    /// lane-per-column mul-then-add, x86_64 with AVX2.
     Avx2,
-    /// The `neon` tile: widening MAC (`vmlal_s16`), aarch64 baseline.
+    /// The `neon` tiles: i16 widening MAC (`vmlal_s16`) / f32
+    /// lane-per-column mul-then-add, aarch64 baseline.
     Neon,
 }
 
@@ -78,7 +129,8 @@ impl KernelKind {
     }
 
     /// Whether this kernel can run on the current host (compile target
-    /// *and* runtime CPU features).
+    /// *and* runtime CPU features). Both element types' tiles ship for
+    /// every SIMD ISA, so availability is element-independent.
     pub fn available(self) -> bool {
         match self {
             KernelKind::Scalar => true,
@@ -105,29 +157,40 @@ impl KernelKind {
 /// error report.
 #[derive(Clone, Copy, Debug)]
 pub struct Selection {
-    /// The kernel every i16 GEMM tile now runs through.
+    /// The kernel this element type's GEMM tiles now run through.
     pub kind: KernelKind,
     /// How it was chosen (detection / baseline / override).
     pub reason: &'static str,
 }
 
-const REASONS: [&str; 5] = [
+const REASONS: [&str; 6] = [
     "avx2 detected at runtime",
     "aarch64 baseline",
     "no simd feature available",
     "SIGMAQUANT_KERNEL override",
     "programmatic override",
+    "SIGMAQUANT_KERNEL scoped override",
 ];
 const R_DETECT_AVX2: u8 = 0;
 const R_BASELINE_NEON: u8 = 1;
 const R_NO_SIMD: u8 = 2;
 const R_ENV: u8 = 3;
 const R_SET: u8 = 4;
+const R_ENV_SCOPED: u8 = 5;
 
-/// Cached selection: `0` = undecided, else `1 + kind + 4·reason`.
-/// Relaxed ordering suffices — every encodable state is a valid,
-/// bit-identical kernel, so racing initializers/raw switches are benign.
-static STATE: AtomicU8 = AtomicU8::new(0);
+/// Cached selections, one per element type: `0` = undecided, else
+/// `1 + kind + 4·reason`. Relaxed ordering suffices — every encodable
+/// state is a valid, bit-identical kernel, so racing initializers/raw
+/// switches are benign.
+static STATE_F32: AtomicU8 = AtomicU8::new(0);
+static STATE_I16: AtomicU8 = AtomicU8::new(0);
+
+fn state(elem: ElemType) -> &'static AtomicU8 {
+    match elem {
+        ElemType::F32 => &STATE_F32,
+        ElemType::I16 => &STATE_I16,
+    }
+}
 
 fn encode(kind: KernelKind, reason: u8) -> u8 {
     1 + kind as u8 + 4 * reason
@@ -151,45 +214,96 @@ fn detect() -> (KernelKind, u8) {
     }
 }
 
-fn init() -> u8 {
+/// One element type's parsed `SIGMAQUANT_KERNEL` choice: the forced
+/// kernel plus whether it came from the unscoped or a scoped form.
+type EnvChoice = Option<(KernelKind, u8)>;
+
+/// Parse a `SIGMAQUANT_KERNEL` value into per-element choices
+/// `(f32, i16)`. Pure (no env read, no panic) so the grammar is unit-
+/// testable; `init` turns `Err` into the fail-fast panic.
+fn parse_env(val: &str) -> Result<(EnvChoice, EnvChoice), String> {
+    if !val.contains('=') {
+        // unscoped: one kernel name, forced for both element types
+        let kind = KernelKind::from_name(val)
+            .ok_or_else(|| format!("unknown kernel {val:?} (valid: scalar | avx2 | neon)"))?;
+        return Ok((Some((kind, R_ENV)), Some((kind, R_ENV))));
+    }
+    let mut f32_choice: EnvChoice = None;
+    let mut i16_choice: EnvChoice = None;
+    for entry in val.split(',') {
+        let entry = entry.trim();
+        let (scope, name) = entry.split_once('=').ok_or_else(|| {
+            format!(
+                "entry {entry:?} is not of the form f32=<kernel> or i16=<kernel> \
+                 (scoped and unscoped forms cannot be mixed)"
+            )
+        })?;
+        let kind = KernelKind::from_name(name)
+            .ok_or_else(|| format!("unknown kernel {name:?} in entry {entry:?} (valid: scalar | avx2 | neon)"))?;
+        let slot = match scope.trim().to_ascii_lowercase().as_str() {
+            "f32" => &mut f32_choice,
+            "i16" => &mut i16_choice,
+            other => return Err(format!("unknown element scope {other:?} (valid: f32 | i16)")),
+        };
+        if slot.is_some() {
+            return Err(format!("element scope {:?} given twice", scope.trim()));
+        }
+        *slot = Some((kind, R_ENV_SCOPED));
+    }
+    Ok((f32_choice, i16_choice))
+}
+
+fn init(elem: ElemType) -> u8 {
     let (kind, reason) = match std::env::var(KERNEL_ENV) {
         Ok(v) => {
-            let kind = KernelKind::from_name(&v).unwrap_or_else(|| {
-                panic!("{KERNEL_ENV}={v:?}: unknown kernel (valid: scalar | avx2 | neon)")
-            });
-            assert!(
-                kind.available(),
-                "{KERNEL_ENV}={v:?}: kernel `{}` is not available on this host",
-                kind.name()
-            );
-            (kind, R_ENV)
+            let (f32_choice, i16_choice) =
+                parse_env(&v).unwrap_or_else(|e| panic!("{KERNEL_ENV}={v:?}: {e}"));
+            let choice = match elem {
+                ElemType::F32 => f32_choice,
+                ElemType::I16 => i16_choice,
+            };
+            match choice {
+                Some((kind, reason)) => {
+                    assert!(
+                        kind.available(),
+                        "{KERNEL_ENV}={v:?}: kernel `{}` is not available on this host",
+                        kind.name()
+                    );
+                    (kind, reason)
+                }
+                None => detect(),
+            }
         }
         Err(_) => detect(),
     };
     encode(kind, reason)
 }
 
-/// The kernel every i16 GEMM tile dispatches to, resolved once per
-/// process (env override, else CPU feature detection) and cached.
-pub fn selected() -> Selection {
-    let state = STATE.load(Ordering::Relaxed);
-    if state != 0 {
-        return decode(state);
+/// The kernel this element type's GEMM tiles dispatch to, resolved once
+/// per process per element type (env override, else CPU feature
+/// detection) and cached.
+pub fn selected(elem: ElemType) -> Selection {
+    let state = state(elem);
+    let cur = state.load(Ordering::Relaxed);
+    if cur != 0 {
+        return decode(cur);
     }
-    let fresh = init();
-    STATE.store(fresh, Ordering::Relaxed);
+    let fresh = init(elem);
+    state.store(fresh, Ordering::Relaxed);
     decode(fresh)
 }
 
-/// Force the kernel programmatically (tests / benches): errors if the
-/// kernel is not available on this host. Safe to call at any time from
-/// any thread — all selectable kernels are bit-identical, so in-flight
-/// GEMMs finishing on the previous kernel produce the same bits.
-pub fn set_kernel(kind: KernelKind) -> Result<(), String> {
+/// Force one element type's kernel programmatically (tests / benches):
+/// errors if the kernel is not available on this host. Safe to call at
+/// any time from any thread — all selectable kernels are bit-identical,
+/// so in-flight GEMMs finishing on the previous kernel produce the same
+/// bits.
+pub fn set_kernel(elem: ElemType, kind: KernelKind) -> Result<(), String> {
     if !kind.available() {
         return Err(format!(
-            "kernel `{}` is not available on this host (available: {})",
+            "kernel `{}` is not available on this host for {} (available: {})",
             kind.name(),
+            elem.name(),
             available_kernels()
                 .iter()
                 .map(|k| k.name())
@@ -197,12 +311,14 @@ pub fn set_kernel(kind: KernelKind) -> Result<(), String> {
                 .join(", ")
         ));
     }
-    STATE.store(encode(kind, R_SET), Ordering::Relaxed);
+    state(elem).store(encode(kind, R_SET), Ordering::Relaxed);
     Ok(())
 }
 
 /// Every kernel that can run on this host (always contains
 /// [`KernelKind::Scalar`]) — what forced-kernel test loops iterate.
+/// Element-independent: each SIMD ISA ships tiles for both element
+/// types, so the same list applies to f32 and i16 selection.
 pub fn available_kernels() -> Vec<KernelKind> {
     [KernelKind::Scalar, KernelKind::Avx2, KernelKind::Neon]
         .into_iter()
@@ -214,7 +330,7 @@ pub fn available_kernels() -> Vec<KernelKind> {
 /// selected SIMD tile and returns `true`, or returns `false` to send
 /// the caller down the generic scalar loop.
 pub(super) fn mac_tile_i16(k: usize, ap: &[i16], bp: &[i16], acc: &mut [[i32; NR]; MR]) -> bool {
-    match selected().kind {
+    match selected(ElemType::I16).kind {
         KernelKind::Scalar => false,
         #[cfg(target_arch = "x86_64")]
         KernelKind::Avx2 => {
@@ -224,6 +340,27 @@ pub(super) fn mac_tile_i16(k: usize, ap: &[i16], bp: &[i16], acc: &mut [[i32; NR
         #[cfg(target_arch = "aarch64")]
         KernelKind::Neon => {
             neon::mac_tile(k, ap, bp, acc);
+            true
+        }
+        #[allow(unreachable_patterns)]
+        _ => false,
+    }
+}
+
+/// The f32 dispatch entry the [`super::PanelElem`] hook calls — same
+/// shape as [`mac_tile_i16`], routing to the chain-preserving f32 tiles
+/// (§9 f32 accumulation-order contract).
+pub(super) fn mac_tile_f32(k: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) -> bool {
+    match selected(ElemType::F32).kind {
+        KernelKind::Scalar => false,
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => {
+            avx2_f32::mac_tile(k, ap, bp, acc);
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => {
+            neon_f32::mac_tile(k, ap, bp, acc);
             true
         }
         #[allow(unreachable_patterns)]
@@ -243,6 +380,8 @@ mod tests {
         assert_eq!(KernelKind::from_name(" AVX2 "), Some(KernelKind::Avx2));
         assert_eq!(KernelKind::from_name("avx512"), None);
         assert_eq!(KernelKind::from_name(""), None);
+        assert_eq!(ElemType::F32.name(), "f32");
+        assert_eq!(ElemType::I16.name(), "i16");
     }
 
     #[test]
@@ -264,38 +403,77 @@ mod tests {
         }
     }
 
-    /// One sequential test owns all global-state assertions (other tests
-    /// in this binary may run GEMMs concurrently — that is benign, but
-    /// *asserting* on the global from two tests at once would race).
     #[test]
-    fn set_kernel_forces_and_rejects_unavailable() {
-        let before = STATE.load(Ordering::Relaxed);
-        for k in available_kernels() {
-            set_kernel(k).unwrap();
-            let sel = selected();
-            assert_eq!(sel.kind, k);
-            assert_eq!(sel.reason, REASONS[R_SET as usize]);
-        }
-        for k in [KernelKind::Avx2, KernelKind::Neon] {
-            if !k.available() {
-                let err = set_kernel(k).unwrap_err();
-                assert!(err.contains(k.name()), "{err}");
-                assert!(err.contains("scalar"), "{err}");
-            }
-        }
-        // restore whatever was decided (or undecided) before this test
-        STATE.store(before, Ordering::Relaxed);
+    fn env_grammar_parses_unscoped_and_scoped_forms() {
+        // unscoped: one kernel forces both element types
+        assert_eq!(
+            parse_env("scalar").unwrap(),
+            (Some((KernelKind::Scalar, R_ENV)), Some((KernelKind::Scalar, R_ENV)))
+        );
+        assert_eq!(
+            parse_env("avx2").unwrap(),
+            (Some((KernelKind::Avx2, R_ENV)), Some((KernelKind::Avx2, R_ENV)))
+        );
+        // scoped: only the named element type is forced
+        assert_eq!(parse_env("f32=scalar").unwrap(), (Some((KernelKind::Scalar, R_ENV_SCOPED)), None));
+        assert_eq!(parse_env("i16=neon").unwrap(), (None, Some((KernelKind::Neon, R_ENV_SCOPED))));
+        assert_eq!(
+            parse_env("i16=avx2, f32=scalar").unwrap(),
+            (Some((KernelKind::Scalar, R_ENV_SCOPED)), Some((KernelKind::Avx2, R_ENV_SCOPED)))
+        );
+        // rejected forms: unknown kernel / scope, duplicates, mixing
+        assert!(parse_env("avx512").is_err());
+        assert!(parse_env("f32=avx512").is_err());
+        assert!(parse_env("i8=scalar").is_err());
+        assert!(parse_env("f32=scalar,f32=avx2").is_err());
+        assert!(parse_env("f32=scalar,avx2").is_err());
+        assert!(parse_env("").is_err());
     }
 
-    /// Unit-level bit-identity: the SIMD tile (when one is compiled in
-    /// and the CPU supports it) equals the scalar reference on the raw
-    /// panel interface, across odd/even k and a seeded accumulator —
-    /// calling the arch module directly, so this test never touches the
-    /// global dispatch state. The full-GEMM and whole-engine versions of
-    /// this assertion live in `rust/tests/gemm_parity.rs` /
-    /// `deploy_parity.rs`.
+    /// One sequential test owns all global-state assertions (other tests
+    /// in this binary may run GEMMs concurrently — that is benign, but
+    /// *asserting* on the globals from two tests at once would race).
     #[test]
-    fn simd_tile_matches_scalar_reference() {
+    fn set_kernel_is_per_element_type_and_rejects_unavailable() {
+        let before_f32 = STATE_F32.load(Ordering::Relaxed);
+        let before_i16 = STATE_I16.load(Ordering::Relaxed);
+        for elem in [ElemType::F32, ElemType::I16] {
+            for k in available_kernels() {
+                set_kernel(elem, k).unwrap();
+                let sel = selected(elem);
+                assert_eq!(sel.kind, k);
+                assert_eq!(sel.reason, REASONS[R_SET as usize]);
+            }
+            for k in [KernelKind::Avx2, KernelKind::Neon] {
+                if !k.available() {
+                    let err = set_kernel(elem, k).unwrap_err();
+                    assert!(err.contains(k.name()), "{err}");
+                    assert!(err.contains("scalar"), "{err}");
+                }
+            }
+        }
+        // the two selections are independent: forcing one must not move
+        // the other
+        set_kernel(ElemType::F32, KernelKind::Scalar).unwrap();
+        let i16_before = selected(ElemType::I16).kind;
+        for k in available_kernels() {
+            set_kernel(ElemType::F32, k).unwrap();
+            assert_eq!(selected(ElemType::I16).kind, i16_before, "i16 moved with f32");
+        }
+        // restore whatever was decided (or undecided) before this test
+        STATE_F32.store(before_f32, Ordering::Relaxed);
+        STATE_I16.store(before_i16, Ordering::Relaxed);
+    }
+
+    /// Unit-level bit-identity for the i16 tile: the SIMD tile (when one
+    /// is compiled in and the CPU supports it) equals the scalar
+    /// reference on the raw panel interface, across odd/even k and a
+    /// seeded accumulator — calling the arch module directly, so this
+    /// test never touches the global dispatch state. The full-GEMM and
+    /// whole-engine versions of this assertion live in
+    /// `rust/tests/gemm_parity.rs` / `deploy_parity.rs`.
+    #[test]
+    fn i16_simd_tile_matches_scalar_reference() {
         fn host_simd_tile(k: usize, ap: &[i16], bp: &[i16], acc: &mut [[i32; NR]; MR]) -> bool {
             #[cfg(target_arch = "x86_64")]
             if avx2::available() {
@@ -337,6 +515,74 @@ mod tests {
             let mut got = seed;
             if host_simd_tile(k, &ap, &bp, &mut got) {
                 assert_eq!(got, want, "k={k}");
+            }
+        }
+    }
+
+    /// Unit-level **bitwise** identity for the f32 tile: per lane, the
+    /// SIMD tile must execute literally the scalar chain — mul-then-add
+    /// per k step in ascending order — so on arbitrary float data
+    /// (sparsified, denormal-scaled, seeded accumulators) the result
+    /// bits are equal, not merely close. Direct arch-module call; no
+    /// global dispatch state involved.
+    #[test]
+    fn f32_simd_tile_is_bitwise_the_scalar_chain() {
+        fn host_simd_tile(k: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) -> bool {
+            #[cfg(target_arch = "x86_64")]
+            if avx2_f32::available() {
+                avx2_f32::mac_tile(k, ap, bp, acc);
+                return true;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if neon_f32::available() {
+                neon_f32::mac_tile(k, ap, bp, acc);
+                return true;
+            }
+            let _ = (k, ap, bp, acc);
+            false
+        }
+        let mut rng = 0xF32_CAFEu32;
+        let mut next = move || {
+            rng = rng.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+            ((rng >> 8) as i32 % 2048) as f32 / 512.0 - 1.0
+        };
+        for (case, k) in [1usize, 2, 3, 7, 8, 27, 45, 144].into_iter().enumerate() {
+            let scale = if case % 3 == 0 { 1.0e-38f32 } else { 1.0 };
+            let ap: Vec<f32> = (0..k * MR)
+                .map(|i| if i % 3 == 0 { 0.0 } else { next() * scale })
+                .collect();
+            let bp: Vec<f32> = (0..k * NR).map(|_| next()).collect();
+            let mut seed = [[0.0f32; NR]; MR];
+            if case % 2 == 0 {
+                for row in seed.iter_mut() {
+                    for v in row.iter_mut() {
+                        *v = next();
+                    }
+                }
+            }
+            // scalar reference: the exact generic-loop chain order
+            let mut want = seed;
+            for kk in 0..k {
+                for i in 0..MR {
+                    let av = ap[kk * MR + i];
+                    for j in 0..NR {
+                        want[i][j] += av * bp[kk * NR + j];
+                    }
+                }
+            }
+            let mut got = seed;
+            if host_simd_tile(k, &ap, &bp, &mut got) {
+                for i in 0..MR {
+                    for j in 0..NR {
+                        assert_eq!(
+                            got[i][j].to_bits(),
+                            want[i][j].to_bits(),
+                            "k={k} lane ({i},{j}): {} vs {}",
+                            got[i][j],
+                            want[i][j]
+                        );
+                    }
+                }
             }
         }
     }

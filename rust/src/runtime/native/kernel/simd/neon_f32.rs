@@ -1,0 +1,86 @@
+//! NEON f32 micro-kernel: the lane-per-column mul-then-add tile
+//! (`vaddq_f32` of `vmulq_f32` — explicitly not the fused or
+//! contractible multiply-accumulate forms, which may emit a single
+//! rounding).
+//!
+//! One `MR × NR` tile is held as 24 of the 32 NEON v-registers (`MR = 6`
+//! rows × four f32×4 quarters of the `NR = 16` columns), fed `NR` B
+//! operands per k-step from four contiguous 128-bit loads of the
+//! k-major B panel and `MR` broadcast A operands (`vdupq_n_f32`) from
+//! the `MR`-interleaved A panel — the packed layout was sized for
+//! exactly this register file (§9), so the kernel reads the panels
+//! as-is.
+//!
+//! # Why the bits match the scalar core
+//!
+//! Same argument as the AVX2 f32 tile, per the §9 f32
+//! accumulation-order contract (DESIGN.md, "The f32 accumulation-order
+//! contract"): lane `j` of row `i` holds exactly `acc[i][j]`
+//! (lane-per-column — chains never split or reassociate), each k step
+//! is `vmulq_f32` then `vaddq_f32` — two roundings, exactly the scalar
+//! `acc + a * b`; the fused NEON MAC intrinsics are deliberately
+//! avoided because they are specified to (or may) contract to a single
+//! rounding — and the k loop runs once, ascending, untail-split. Per
+//! IEEE-754 the packed ops round per lane exactly like scalar f32
+//! (round-to-nearest-even, denormals included), so the tile result is
+//! **bit-identical** to the scalar core's. `rust/tests/gemm_parity.rs`
+//! pins forced-NEON == forced-scalar across the zoo shapes and the
+//! random-shape suite.
+//!
+//! NEON is baseline on `aarch64` (this module only compiles there), so
+//! there is no runtime feature probe to fail: dispatch selects this
+//! kernel unconditionally unless overridden.
+
+use super::super::{MR, NR};
+use core::arch::aarch64::*;
+
+/// NEON is architecturally guaranteed on aarch64.
+pub(super) fn available() -> bool {
+    true
+}
+
+/// `acc[MR][NR] += Apanel ⊗ Bpanel` over the full k extent — the NEON
+/// instantiation of the scalar core's tile loop, bit-identical by the
+/// §9 chain-preservation contract. Panics (rather than reading out of
+/// bounds) on short panels; the generic driver always passes
+/// exact-length panel slices.
+#[inline]
+pub(super) fn mac_tile(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    assert!(apanel.len() >= k * MR && bpanel.len() >= k * NR, "short panel");
+    // SAFETY: panel bounds asserted above; NEON is baseline on aarch64.
+    unsafe { mac_tile_neon(k, apanel, bpanel, acc) }
+}
+
+unsafe fn mac_tile_neon(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    let ap = apanel.as_ptr();
+    let bp = bpanel.as_ptr();
+    // 6 rows × 4 quarters = 24 live accumulator registers, natural
+    // column order
+    let mut c = [[vdupq_n_f32(0.0); 4]; MR];
+    for i in 0..MR {
+        for q in 0..4 {
+            c[i][q] = vld1q_f32(acc[i].as_ptr().add(4 * q));
+        }
+    }
+    for kk in 0..k {
+        // one k-major B row = four column quarters
+        let b0 = vld1q_f32(bp.add(kk * NR));
+        let b1 = vld1q_f32(bp.add(kk * NR + 4));
+        let b2 = vld1q_f32(bp.add(kk * NR + 8));
+        let b3 = vld1q_f32(bp.add(kk * NR + 12));
+        for i in 0..MR {
+            let av = vdupq_n_f32(*ap.add(kk * MR + i));
+            // mul rounds the product, add rounds the sum — the scalar
+            // chain's two roundings, per lane, in the same k order
+            c[i][0] = vaddq_f32(c[i][0], vmulq_f32(av, b0));
+            c[i][1] = vaddq_f32(c[i][1], vmulq_f32(av, b1));
+            c[i][2] = vaddq_f32(c[i][2], vmulq_f32(av, b2));
+            c[i][3] = vaddq_f32(c[i][3], vmulq_f32(av, b3));
+        }
+    }
+    for i in 0..MR {
+        for q in 0..4 {
+            vst1q_f32(acc[i].as_mut_ptr().add(4 * q), c[i][q]);
+        }
+    }
+}

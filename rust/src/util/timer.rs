@@ -71,27 +71,46 @@ fn summarize(samples_ns: &mut [f64]) -> Timing {
 /// across PRs (and across `--threads` values).
 pub struct BenchReport {
     name: &'static str,
-    rows: Vec<(String, usize, f64)>,
-    /// Dispatched integer-kernel ISA + selection reason, stamped as
-    /// top-level `"kernel"` / `"kernel_reason"` fields so
-    /// `scripts/bench_compare` only compares baselines within one ISA.
-    kernel: Option<(String, String)>,
+    rows: Vec<(String, usize, f64, Option<String>)>,
+    /// Dispatched kernels per element type (`(elem, isa, reason)`),
+    /// stamped as top-level `"kernel_<elem>"` / `"kernel_<elem>_reason"`
+    /// fields — one pair per element type the bench exercised — so
+    /// `scripts/bench_compare` only compares each element type's rows
+    /// within one ISA.
+    kernels: Vec<(String, String, String)>,
+    /// The element type tag applied to rows added from here on (see
+    /// [`BenchReport::set_elem`]).
+    elem: Option<String>,
 }
 
 impl BenchReport {
     pub fn new(name: &'static str) -> BenchReport {
-        BenchReport { name, rows: Vec::new(), kernel: None }
+        BenchReport { name, rows: Vec::new(), kernels: Vec::new(), elem: None }
     }
 
-    /// Record the dispatched integer kernel (ISA name + selection
-    /// reason) this run's rows were measured under.
-    pub fn set_kernel(&mut self, name: &str, reason: &str) {
-        self.kernel = Some((name.to_string(), reason.to_string()));
+    /// Record the kernel (ISA name + selection reason) one element
+    /// type's rows were measured under — once per element type the
+    /// bench's GEMMs run through (`"f32"`, `"i16"`). Re-stamping an
+    /// element type overwrites its previous entry.
+    pub fn set_kernel(&mut self, elem: &str, name: &str, reason: &str) {
+        self.kernels.retain(|(e, _, _)| e != elem);
+        self.kernels.push((elem.to_string(), name.to_string(), reason.to_string()));
     }
 
-    /// Record one measurement: op name, thread count, ns per iteration.
+    /// Tag all subsequently [`add`](BenchReport::add)ed rows with an
+    /// element type (`Some("f32")` / `Some("i16")`), or `None` for rows
+    /// that are kernel-independent (byte sizes, queue latencies).
+    /// Tagged rows are compared by `scripts/bench_compare` only when
+    /// *their* element type's kernel matches the baseline's.
+    pub fn set_elem(&mut self, elem: Option<&str>) {
+        self.elem = elem.map(str::to_string);
+    }
+
+    /// Record one measurement: op name, thread count, ns per iteration
+    /// (tagged with the current [`set_elem`](BenchReport::set_elem)
+    /// element type, if any).
     pub fn add(&mut self, op: &str, threads: usize, ns_per_iter: f64) {
-        self.rows.push((op.to_string(), threads, ns_per_iter));
+        self.rows.push((op.to_string(), threads, ns_per_iter, self.elem.clone()));
     }
 
     /// Serialize to `results/BENCH_<name>.json`; returns the path.
@@ -105,16 +124,20 @@ impl BenchReport {
         // report that fails its own round-trip test.
         let esc = crate::util::json::escape;
         writeln!(f, "{{\n  \"bench\": \"{}\",", esc(self.name))?;
-        if let Some((kname, kreason)) = &self.kernel {
-            writeln!(f, "  \"kernel\": \"{}\",", esc(kname))?;
-            writeln!(f, "  \"kernel_reason\": \"{}\",", esc(kreason))?;
+        for (elem, kname, kreason) in &self.kernels {
+            writeln!(f, "  \"kernel_{}\": \"{}\",", esc(elem), esc(kname))?;
+            writeln!(f, "  \"kernel_{}_reason\": \"{}\",", esc(elem), esc(kreason))?;
         }
         writeln!(f, "  \"rows\": [")?;
-        for (i, (op, threads, ns)) in self.rows.iter().enumerate() {
+        for (i, (op, threads, ns, elem)) in self.rows.iter().enumerate() {
             let comma = if i + 1 == self.rows.len() { "" } else { "," };
+            let elem_field = match elem {
+                Some(e) => format!(", \"elem\": \"{}\"", esc(e)),
+                None => String::new(),
+            };
             writeln!(
                 f,
-                "    {{\"op\": \"{}\", \"threads\": {threads}, \"ns_per_iter\": {ns:.1}}}{comma}",
+                "    {{\"op\": \"{}\", \"threads\": {threads}, \"ns_per_iter\": {ns:.1}{elem_field}}}{comma}",
                 esc(op)
             )?;
         }
@@ -143,19 +166,32 @@ mod tests {
     }
 
     #[test]
-    fn bench_report_stamps_the_dispatched_kernel() {
+    fn bench_report_stamps_the_dispatched_kernel_per_element_type() {
         let mut r = BenchReport::new("unit_test_kernel");
-        r.set_kernel("avx2", "avx2 detected at runtime");
+        r.set_kernel("i16", "avx2", "avx2 detected at runtime");
+        r.set_kernel("f32", "neon", "aarch64 baseline");
+        r.set_kernel("f32", "scalar", "programmatic override"); // re-stamp wins
+        r.set_elem(Some("i16"));
         r.add("op_a", 1, 10.0);
+        r.set_elem(None);
+        r.add("op_bytes", 1, 3.0);
         let path = r.write().expect("write report");
         let text = std::fs::read_to_string(&path).expect("read back");
         let parsed = crate::util::json::parse(&text).expect("valid json");
-        assert_eq!(parsed.get("kernel").as_str(), Some("avx2"));
+        assert_eq!(parsed.get("kernel_i16").as_str(), Some("avx2"));
         assert_eq!(
-            parsed.get("kernel_reason").as_str(),
+            parsed.get("kernel_i16_reason").as_str(),
             Some("avx2 detected at runtime")
         );
-        assert_eq!(parsed.get("rows").as_arr().map(|r| r.len()), Some(1));
+        assert_eq!(parsed.get("kernel_f32").as_str(), Some("scalar"));
+        assert_eq!(
+            parsed.get("kernel_f32_reason").as_str(),
+            Some("programmatic override")
+        );
+        let rows = parsed.get("rows").as_arr().expect("rows array");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("elem").as_str(), Some("i16"));
+        assert_eq!(rows[1].get("elem").as_str(), None);
         let _ = std::fs::remove_file(path);
     }
 
@@ -173,14 +209,14 @@ mod tests {
     #[test]
     fn bench_report_escapes_hostile_op_names() {
         let mut r = BenchReport::new("unit_test_escape");
-        r.set_kernel("scalar", "reason \"quoted\"");
+        r.set_kernel("i16", "scalar", "reason \"quoted\"");
         r.add("op \"x\"\\path", 2, 5.0);
         let path = r.write().expect("write report");
         let text = std::fs::read_to_string(&path).expect("read back");
         let parsed = crate::util::json::parse(&text).expect("valid json");
         let rows = parsed.get("rows").as_arr().expect("rows array");
         assert_eq!(rows[0].get("op").as_str(), Some("op \"x\"\\path"));
-        assert_eq!(parsed.get("kernel_reason").as_str(), Some("reason \"quoted\""));
+        assert_eq!(parsed.get("kernel_i16_reason").as_str(), Some("reason \"quoted\""));
         let _ = std::fs::remove_file(path);
     }
 }

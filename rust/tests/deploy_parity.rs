@@ -232,10 +232,10 @@ fn engine_is_bit_identical_across_thread_counts_and_kernels() {
     let ds = DatasetSpec { train_batch: 8, eval_batch: 16, ..default_dataset() };
     let data = SynthDataset::new(ds.clone(), 23);
     let (xs, _ys) = data.eval_set(16);
-    let restore = kernel::selected();
+    let restore = kernel::selected(kernel::ElemType::I16);
     let mut logits: Vec<(usize, &'static str, Vec<f32>)> = Vec::new();
     for kk in kernel::available_kernels() {
-        kernel::set_kernel(kk).expect("listed kernel is available");
+        kernel::set_kernel(kernel::ElemType::I16, kk).expect("listed kernel is available");
         for threads in [1usize, 3] {
             let be =
                 NativeBackend::with_dataset_parallelism(ds.clone(), Parallelism::new(threads));
@@ -248,7 +248,7 @@ fn engine_is_bit_identical_across_thread_counts_and_kernels() {
             logits.push((threads, kk.name(), engine.infer_logits(&xs, 16).unwrap()));
         }
     }
-    kernel::set_kernel(restore.kind).expect("restore previously selected kernel");
+    kernel::set_kernel(kernel::ElemType::I16, restore.kind).expect("restore previously selected kernel");
     let (t0, k0, first) = &logits[0];
     for (t, k, l) in &logits[1..] {
         for (a, b) in first.iter().zip(l) {

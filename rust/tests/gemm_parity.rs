@@ -19,11 +19,20 @@
 //! data) and pins the i16 panel layout against literal pre-refactor
 //! panels — layout drift between trainer and deploy is a test failure
 //! here before it is an accuracy bug in serving.
+//!
+//! Since PR 10 both element types have SIMD tiles behind the per-element
+//! dispatch, so the forced-kernel suites run twice over: the i16 tests
+//! pin every kernel against the dispatch-free integer oracle (exactness
+//! argument), and the f32 mirrors pin forced-SIMD == forced-scalar ==
+//! naive **bitwise** on the same zoo shapes, random shapes, and MR/NR
+//! tile tails (the §9 f32 accumulation-order contract).
 
 use sigmaquant::deploy::igemm::{self, IPackScratch};
 use sigmaquant::runtime::native::gemm::{self, PackScratch};
 use sigmaquant::runtime::native::graph::{zoo, Node};
-use sigmaquant::runtime::native::kernel::{self, available_kernels, set_kernel, Acc, KernelKind};
+use sigmaquant::runtime::native::kernel::{
+    self, available_kernels, set_kernel, Acc, ElemType, KernelKind,
+};
 use sigmaquant::runtime::native::ops::{self, Conv2d};
 use sigmaquant::util::prop::{check, Gen};
 use sigmaquant::util::rng::Rng;
@@ -230,10 +239,9 @@ impl Gen for DenseGen {
     }
 }
 
-#[test]
-fn blocked_dense_is_bitwise_equal_to_naive_over_random_shapes() {
-    check(0xDE45E_u64, 80, &DenseGen, |case| {
-        let DenseCase { rows, cin, cout, seed } = *case;
+fn dense_parity(case: &DenseCase) -> Result<(), String> {
+    let DenseCase { rows, cin, cout, seed } = *case;
+    {
         let mut rng = Rng::new(seed);
         let mut a = randv(rows * cin, &mut rng);
         sparsify(&mut a, &mut rng);
@@ -270,7 +278,12 @@ fn blocked_dense_is_bitwise_equal_to_naive_over_random_shapes() {
         bits_eq(&da_n, &da_b).map_err(|e| format!("backward da: {e}"))?;
         bits_eq(&dk_n, &dk_b).map_err(|e| format!("backward dk: {e}"))?;
         bits_eq(&db_n, &db_b).map_err(|e| format!("backward db: {e}"))
-    });
+    }
+}
+
+#[test]
+fn blocked_dense_is_bitwise_equal_to_naive_over_random_shapes() {
+    check(0xDE45E_u64, 80, &DenseGen, dense_parity);
 }
 
 /// The executor's partition decomposition (disjoint row blocks + zeroed
@@ -497,7 +510,7 @@ fn igemm_packed(m: usize, n: usize, k: usize, a: &[i16], b: &[i16]) -> Vec<i32> 
 fn i16_gemm_matches_naive_under_every_available_kernel_over_random_shapes() {
     let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let kernels = available_kernels();
-    let restore = kernel::selected();
+    let restore = kernel::selected(ElemType::I16);
     check(0x516D4_u64, 60, &DenseGen, |case| {
         let DenseCase { rows: m, cin: k, cout: n, seed } = *case;
         let mut rng = Rng::new(seed);
@@ -505,7 +518,7 @@ fn i16_gemm_matches_naive_under_every_available_kernel_over_random_shapes() {
         let b = randq(k * n, -127, 127, &mut rng);
         let want = igemm_naive(m, n, k, &a, &b);
         for kk in &kernels {
-            set_kernel(*kk).map_err(|e| e.to_string())?;
+            set_kernel(ElemType::I16, *kk).map_err(|e| e.to_string())?;
             let got = igemm_packed(m, n, k, &a, &b);
             if got != want {
                 return Err(format!("kernel {} diverges from naive at ({m},{n},{k})", kk.name()));
@@ -513,7 +526,7 @@ fn i16_gemm_matches_naive_under_every_available_kernel_over_random_shapes() {
         }
         Ok(())
     });
-    set_kernel(restore.kind).expect("restore previously selected kernel");
+    set_kernel(ElemType::I16, restore.kind).expect("restore previously selected kernel");
 }
 
 /// The satellite-3 pin: forced-SIMD output is **bitwise** equal to
@@ -526,7 +539,7 @@ fn i16_gemm_matches_naive_under_every_available_kernel_over_random_shapes() {
 #[test]
 fn forced_simd_equals_forced_scalar_on_zoo_shapes_and_tile_tails() {
     let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
-    let restore = kernel::selected();
+    let restore = kernel::selected(ElemType::I16);
     let simd: Vec<KernelKind> =
         available_kernels().into_iter().filter(|k| *k != KernelKind::Scalar).collect();
     let mut rng = Rng::new(0x51D3);
@@ -568,11 +581,11 @@ fn forced_simd_equals_forced_scalar_on_zoo_shapes_and_tile_tails() {
         let mut ps = IPackScratch::default();
         ps.ensure(0, igemm::packed_a_len(cv.oh * cv.ow, kdim), 0);
         let out_len = rows * cv.oh * cv.ow * cout;
-        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        set_kernel(ElemType::I16, KernelKind::Scalar).expect("scalar always available");
         let mut want = vec![0i32; out_len];
         igemm::iconv_forward(&cv, rows, &x, &wpack, &mut want, &mut ps);
         for kk in &simd {
-            set_kernel(*kk).expect("listed kernel is available");
+            set_kernel(ElemType::I16, *kk).expect("listed kernel is available");
             let mut got = vec![0i32; out_len];
             igemm::iconv_forward(&cv, rows, &x, &wpack, &mut got, &mut ps);
             assert_eq!(
@@ -590,11 +603,11 @@ fn forced_simd_equals_forced_scalar_on_zoo_shapes_and_tile_tails() {
         igemm::ipack_b(cin, cout, &kern, &mut wpack);
         let mut ps = IPackScratch::default();
         ps.ensure(0, igemm::packed_a_len(rows, cin), 0);
-        set_kernel(KernelKind::Scalar).expect("scalar always available");
+        set_kernel(ElemType::I16, KernelKind::Scalar).expect("scalar always available");
         let mut want = vec![0i32; rows * cout];
         igemm::idense_forward(rows, cin, cout, &a, &wpack, &mut want, &mut ps);
         for kk in &simd {
-            set_kernel(*kk).expect("listed kernel is available");
+            set_kernel(ElemType::I16, *kk).expect("listed kernel is available");
             let mut got = vec![0i32; rows * cout];
             igemm::idense_forward(rows, cin, cout, &a, &wpack, &mut got, &mut ps);
             assert_eq!(got, want, "{} != scalar on dense {cin}-{cout}", kk.name());
@@ -610,16 +623,176 @@ fn forced_simd_equals_forced_scalar_on_zoo_shapes_and_tile_tails() {
             for &k in &[1usize, 2, 3, 9] {
                 let a = randq(m * k, 0, 255, &mut rng);
                 let b = randq(k * n, -127, 127, &mut rng);
-                set_kernel(KernelKind::Scalar).expect("scalar always available");
+                set_kernel(ElemType::I16, KernelKind::Scalar).expect("scalar always available");
                 let want = igemm_packed(m, n, k, &a, &b);
                 assert_eq!(want, igemm_naive(m, n, k, &a, &b), "scalar oracle at ({m},{n},{k})");
                 for kk in &simd {
-                    set_kernel(*kk).expect("listed kernel is available");
+                    set_kernel(ElemType::I16, *kk).expect("listed kernel is available");
                     let got = igemm_packed(m, n, k, &a, &b);
                     assert_eq!(got, want, "{} != scalar at ({m},{n},{k})", kk.name());
                 }
             }
         }
     }
-    set_kernel(restore.kind).expect("restore previously selected kernel");
+    set_kernel(ElemType::I16, restore.kind).expect("restore previously selected kernel");
+}
+
+/// The f32 mirror of the per-kernel random-shape suite: under every
+/// available f32 kernel, the full conv/dense forward+backward parity
+/// check (vs the dispatch-free naive loops) must hold **bitwise** — the
+/// strongest form of the §9 f32 accumulation-order contract, since the
+/// naive reference never routes through the kernel core. Trivially
+/// collapses to one scalar pass on hosts without SIMD.
+#[test]
+fn f32_conv_and_dense_match_naive_under_every_available_kernel_over_random_shapes() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let restore = kernel::selected(ElemType::F32);
+    for kk in available_kernels() {
+        set_kernel(ElemType::F32, kk).expect("listed kernel is available");
+        check(0xF32C0_u64, 25, &ConvGen, conv_parity);
+        check(0xF32DE_u64, 40, &DenseGen, dense_parity);
+    }
+    set_kernel(ElemType::F32, restore.kind).expect("restore previously selected kernel");
+}
+
+/// Row-major naive f32 GEMM in the §9 chain order (per output element:
+/// ascending k, product rounded then added) — the dispatch-free oracle
+/// for the f32 tile-tail matrix below.
+fn fgemm_naive(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Pack + f32 gemm through the generic core under the currently forced
+/// f32 kernel.
+fn fgemm_packed(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut ap = vec![0.0f32; kernel::packed_a_len(m, k)];
+    let mut bp = vec![0.0f32; kernel::packed_b_len(k, n)];
+    kernel::pack_a(m, k, a, &mut ap);
+    kernel::pack_b(k, n, b, &mut bp);
+    let mut c = vec![0.0f32; m * n];
+    kernel::gemm(m, n, k, &ap, &bp, &mut c, n, Acc::Store);
+    c
+}
+
+/// The f32 mirror of the zoo-shape pin: forced-SIMD f32 output is
+/// **bitwise** equal to forced-scalar on every zoo conv/dense shape and
+/// on the explicit MR/NR tile-tail matrix, on normal-float data (the
+/// chain-preservation argument needs no integer-exactness crutch).
+/// Trivially passes on hosts without SIMD — the zero-behavior-change
+/// claim for the f32 dispatch split.
+#[test]
+fn f32_forced_simd_equals_forced_scalar_on_zoo_shapes_and_tile_tails() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let restore = kernel::selected(ElemType::F32);
+    let simd: Vec<KernelKind> =
+        available_kernels().into_iter().filter(|k| *k != KernelKind::Scalar).collect();
+    let mut rng = Rng::new(0xF32_51D3);
+
+    let mut conv_shapes: Vec<(usize, usize, usize, usize, usize, usize, bool)> = Vec::new();
+    let mut dense_shapes: Vec<(usize, usize)> = Vec::new();
+    for arch in zoo() {
+        for (vid, node) in arch.nodes.iter().enumerate() {
+            match node {
+                Node::Conv { input, k, stride, same, q, .. } => {
+                    let (h, w, cin) = arch.shapes[*input].hwc();
+                    let cout = arch.spec.qlayers[*q].out_channels;
+                    let sh = (h, w, cin, cout, *k, *stride, *same);
+                    if !conv_shapes.contains(&sh) {
+                        conv_shapes.push(sh);
+                    }
+                }
+                Node::Dense { input, .. } => {
+                    let sh = (arch.shapes[*input].numel(), arch.shapes[vid].numel());
+                    if !dense_shapes.contains(&sh) {
+                        dense_shapes.push(sh);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    assert!(!conv_shapes.is_empty() && !dense_shapes.is_empty(), "zoo yielded no shapes");
+
+    let rows = 3usize; // odd row block: exercises the batch dimension too
+    for &(h, w, cin, cout, k, stride, same) in &conv_shapes {
+        let cv = Conv2d::new(h, w, cin, cout, k, stride, same);
+        let mut x = randv(rows * h * w * cin, &mut rng);
+        sparsify(&mut x, &mut rng);
+        let kern = randv(k * k * cin * cout, &mut rng);
+        let kdim = gemm::conv_kdim(&cv);
+        let mut wpack = vec![0.0f32; gemm::packed_b_len(kdim, cout)];
+        gemm::pack_b(kdim, cout, &kern, &mut wpack);
+        let mut ps = PackScratch::default();
+        let (col, apack, bpack) = gemm::conv_scratch_sizes(&cv);
+        ps.ensure(col, apack, bpack);
+        let out_len = rows * cv.oh * cv.ow * cout;
+        set_kernel(ElemType::F32, KernelKind::Scalar).expect("scalar always available");
+        let mut want = vec![0.0f32; out_len];
+        gemm::conv_forward(&cv, rows, &x, &wpack, &mut want, &mut ps);
+        for kk in &simd {
+            set_kernel(ElemType::F32, *kk).expect("listed kernel is available");
+            let mut got = vec![0.0f32; out_len];
+            gemm::conv_forward(&cv, rows, &x, &wpack, &mut got, &mut ps);
+            bits_eq(&want, &got).unwrap_or_else(|e| {
+                panic!("{} != scalar on conv {h}x{w}x{cin}-{cout}k{k}s{stride}: {e}", kk.name())
+            });
+        }
+    }
+    for &(cin, cout) in &dense_shapes {
+        let mut a = randv(rows * cin, &mut rng);
+        sparsify(&mut a, &mut rng);
+        let kern = randv(cin * cout, &mut rng);
+        let bias = randv(cout, &mut rng);
+        let mut wpack = vec![0.0f32; gemm::packed_b_len(cin, cout)];
+        gemm::pack_b(cin, cout, &kern, &mut wpack);
+        let mut ps = PackScratch::default();
+        let (apack, bpack) = gemm::dense_scratch_sizes(rows, cin, cout);
+        ps.ensure(0, apack, bpack);
+        set_kernel(ElemType::F32, KernelKind::Scalar).expect("scalar always available");
+        let mut want = vec![0.0f32; rows * cout];
+        gemm::dense_forward(rows, cin, cout, &a, &wpack, &bias, &mut want, &mut ps);
+        for kk in &simd {
+            set_kernel(ElemType::F32, *kk).expect("listed kernel is available");
+            let mut got = vec![0.0f32; rows * cout];
+            gemm::dense_forward(rows, cin, cout, &a, &wpack, &bias, &mut got, &mut ps);
+            bits_eq(&want, &got).unwrap_or_else(|e| {
+                panic!("{} != scalar on dense {cin}-{cout}: {e}", kk.name())
+            });
+        }
+    }
+
+    // explicit MR/NR tile-tail matrix: every boundary alignment of the
+    // 6×16 tile (full, one-short, one-past, multiple panels) × small and
+    // odd k — the f32 tiles have no k pairing, but the panel *tails*
+    // (zero-filled rows/columns) must stay bit-neutral per lane
+    for &m in &[1usize, 5, 6, 7, 12, 13] {
+        for &n in &[1usize, 15, 16, 17, 32, 33] {
+            for &k in &[1usize, 2, 3, 9] {
+                let mut a = randv(m * k, &mut rng);
+                sparsify(&mut a, &mut rng);
+                let b = randv(k * n, &mut rng);
+                set_kernel(ElemType::F32, KernelKind::Scalar).expect("scalar always available");
+                let want = fgemm_packed(m, n, k, &a, &b);
+                bits_eq(&fgemm_naive(m, n, k, &a, &b), &want)
+                    .unwrap_or_else(|e| panic!("scalar oracle at ({m},{n},{k}): {e}"));
+                for kk in &simd {
+                    set_kernel(ElemType::F32, *kk).expect("listed kernel is available");
+                    let got = fgemm_packed(m, n, k, &a, &b);
+                    bits_eq(&want, &got)
+                        .unwrap_or_else(|e| panic!("{} != scalar at ({m},{n},{k}): {e}", kk.name()));
+                }
+            }
+        }
+    }
+    set_kernel(ElemType::F32, restore.kind).expect("restore previously selected kernel");
 }

@@ -18,14 +18,35 @@ use sigmaquant::coordinator::{SearchConfig, SearchOutcome, SigmaQuant};
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::int8_size_bytes;
 use sigmaquant::runtime::native::fakequant::{fake_quant_act, fake_quant_weight};
+use sigmaquant::runtime::native::kernel::{self, available_kernels, set_kernel, ElemType};
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
+use std::sync::Mutex;
+
+/// Serializes the two forced-kernel golden sweeps below: both flip the
+/// process-global f32 kernel selection, and interleaved flips would
+/// blur which kernel a failing case actually ran under.
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
 
 /// Golden vectors derived by hand from the ref.py weight oracle
 /// (symmetric per-channel abs-max, Q = 2^(b-1)-1, round-half-to-even):
 /// fanin-major (3, 2) matrix with channel abs-maxes 7.0 and 2.0. Values
 /// are chosen away from rounding ties so f32 evaluation is unambiguous.
+/// Re-run under every available forced f32 kernel: the quantizers are
+/// scalar code, so the golden bits must be invariant to the trainer
+/// GEMM kernel selection (a kernel choice leaking into the fake-quant
+/// path would break the deploy lattice claim).
 #[test]
 fn weight_fake_quant_matches_ref_py_golden_values() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let restore = kernel::selected(ElemType::F32);
+    for kk in available_kernels() {
+        set_kernel(ElemType::F32, kk).expect("listed kernel is available");
+        weight_goldens(kk.name());
+    }
+    set_kernel(ElemType::F32, restore.kind).expect("restore previously selected kernel");
+}
+
+fn weight_goldens(kernel_name: &str) {
     let w: [f32; 6] = [1.0, -0.5, 3.25, 0.25, -7.0, 2.0];
     let cases: [(u8, [f32; 6]); 4] = [
         (2, [0.0, 0.0, 0.0, 0.0, -7.0, 2.0]),
@@ -43,7 +64,7 @@ fn weight_fake_quant_matches_ref_py_golden_values() {
         for (i, (g, e)) in got.iter().zip(&want).enumerate() {
             assert!(
                 (g - e).abs() <= 1e-5 * e.abs().max(1e-3),
-                "bits={bits} idx={i}: native {g} vs ref.py {e}"
+                "kernel={kernel_name} bits={bits} idx={i}: native {g} vs ref.py {e}"
             );
         }
     }
@@ -51,9 +72,19 @@ fn weight_fake_quant_matches_ref_py_golden_values() {
 
 /// Golden vectors from the ref.py activation oracle (asymmetric
 /// per-tensor min-max, 2^b - 1 levels, rounded zero-point): range
-/// [-1.5, 2.5] so scale = 4/(2^b - 1).
+/// [-1.5, 2.5] so scale = 4/(2^b - 1). Forced-kernel sweep as above.
 #[test]
 fn act_fake_quant_matches_ref_py_golden_values() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let restore = kernel::selected(ElemType::F32);
+    for kk in available_kernels() {
+        set_kernel(ElemType::F32, kk).expect("listed kernel is available");
+        act_goldens(kk.name());
+    }
+    set_kernel(ElemType::F32, restore.kind).expect("restore previously selected kernel");
+}
+
+fn act_goldens(kernel_name: &str) {
     let a: [f32; 5] = [-1.5, -0.25, 0.0, 0.5, 2.5];
     let cases: [(u8, [f32; 5]); 3] = [
         (2, [-1.333_333_4, 0.0, 0.0, 0.0, 2.666_666_7]),
@@ -66,7 +97,7 @@ fn act_fake_quant_matches_ref_py_golden_values() {
         for (i, (g, e)) in got.iter().zip(&want).enumerate() {
             assert!(
                 (g - e).abs() <= 1e-5 * e.abs().max(1e-3),
-                "bits={bits} idx={i}: native {g} vs ref.py {e}"
+                "kernel={kernel_name} bits={bits} idx={i}: native {g} vs ref.py {e}"
             );
         }
     }

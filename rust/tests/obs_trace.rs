@@ -244,7 +244,7 @@ fn trace_jsonl_round_trips_with_kernel_attribution() {
     }
     let lanes_raw = engine.take_trace();
 
-    let sel = kernel::selected().kind.name();
+    let sel = kernel::selected(kernel::ElemType::I16).kind.name();
     let rows = obs::layer_breakdown(&lanes_raw);
     assert!(!rows.is_empty(), "no layer spans aggregated");
     let mut gemm_total = 0u64;

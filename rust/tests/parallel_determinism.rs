@@ -10,10 +10,19 @@ use sigmaquant::coordinator::zones::Targets;
 use sigmaquant::coordinator::{SearchConfig, SearchOutcome, SigmaQuant};
 use sigmaquant::data::SynthDataset;
 use sigmaquant::quant::{int8_size_bytes, BitAssignment};
+use sigmaquant::runtime::native::kernel::{self, available_kernels, set_kernel, ElemType, KernelKind};
 use sigmaquant::runtime::{Backend, ModelSession, NativeBackend};
 use sigmaquant::util::pool::Parallelism;
+use std::sync::Mutex;
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Serializes the forced-kernel search sweep against any future test in
+/// this binary that also flips the process-global f32 kernel selection
+/// (flips are benign for result bits — every selectable kernel is
+/// bit-identical — but a concurrent flip would blur *which* kernel a
+/// failing sweep leg actually ran).
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
 
 fn backend(threads: usize) -> NativeBackend {
     NativeBackend::with_parallelism(Parallelism::new(threads))
@@ -67,13 +76,33 @@ fn assert_outcomes_identical(a: &SearchOutcome, b: &SearchOutcome, what: &str) {
     }
 }
 
+/// The PR 10 acceptance pin: one forced-scalar single-thread search is
+/// the reference, and every (available f32 kernel × thread count) cell
+/// must reproduce it bit-for-bit — worker-count invariance (§8) and the
+/// §9 f32 accumulation-order contract, composed through the full
+/// two-phase search. On hosts without SIMD the kernel loop collapses to
+/// scalar and this is exactly the old thread-sweep test.
 #[test]
-fn search_outcome_is_bit_identical_across_thread_counts() {
+fn search_outcome_is_bit_identical_across_thread_counts_and_f32_kernels() {
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let restore = kernel::selected(ElemType::F32);
+    set_kernel(ElemType::F32, KernelKind::Scalar).expect("scalar always available");
     let reference = tiny_search(THREAD_COUNTS[0], 11);
-    for &threads in &THREAD_COUNTS[1..] {
-        let o = tiny_search(threads, 11);
-        assert_outcomes_identical(&reference, &o, &format!("threads=1 vs {threads}"));
+    for kk in available_kernels() {
+        set_kernel(ElemType::F32, kk).expect("listed kernel is available");
+        for &threads in &THREAD_COUNTS {
+            if kk == KernelKind::Scalar && threads == THREAD_COUNTS[0] {
+                continue; // the reference cell itself
+            }
+            let o = tiny_search(threads, 11);
+            assert_outcomes_identical(
+                &reference,
+                &o,
+                &format!("scalar/threads=1 vs {}/threads={threads}", kk.name()),
+            );
+        }
     }
+    set_kernel(ElemType::F32, restore.kind).expect("restore previously selected kernel");
 }
 
 /// Train + evaluate bit-parity at the session level, on an arch that
